@@ -1,0 +1,103 @@
+//! Inference-efficiency comparison (paper §4.4, Table 4 analog): dense vs
+//! compressed-2:4 vs ARMOR-factorized matvec/matmul timing plus storage
+//! accounting, on a gate-proj-shaped layer.
+//!
+//!     cargo run --release --example inference_speed
+
+use armor::armor::{prune_matrix, ArmorConfig};
+use armor::bench::{bench, black_box};
+use armor::sparsity::{nm_mask_from_importance, Compressed24};
+use armor::tensor::Matrix;
+use armor::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(0);
+    // gate_proj-like shape for the tiny model family, scaled up a bit so the
+    // timing is meaningful: 512 × 1024.
+    let (d_out, d_in) = (512usize, 1024usize);
+    let batch = 64usize;
+    let w = Matrix::randn(d_out, d_in, &mut rng);
+    let x_sq_norms: Vec<f32> = (0..d_in).map(|_| rng.next_f32() + 0.1).collect();
+
+    // --- three deployment forms ---
+    let dense = w.clone();
+    let imp = Matrix::from_fn(d_out, d_in, |r, c| w[(r, c)].abs() * x_sq_norms[c].sqrt());
+    let mask = nm_mask_from_importance(&imp, 2, 4);
+    let sparse = Compressed24::compress(&w, &mask).unwrap();
+
+    let cfg = ArmorConfig { d_block: 32, n_iters: 20, ..Default::default() };
+    let armor_fact = prune_matrix(&w, &x_sq_norms, &cfg, &mut rng).factorization;
+    let armor_core = armor_fact.compress_core().unwrap();
+
+    let xs = Matrix::randn(d_in, batch, &mut rng);
+    let x1: Vec<f32> = (0..d_in).map(|_| rng.next_gaussian()).collect();
+
+    println!("Inference efficiency — {d_out}x{d_in} layer, batch {batch} (Table 4 analog)\n");
+
+    // --- batched mat-mat (the paper's batched MatVec column) ---
+    let r_dense = bench("dense matmul", 2, 30, 10.0, || {
+        black_box(dense.matmul(&xs));
+    });
+    let r_sparse = bench("2:4 compressed matmul", 2, 30, 10.0, || {
+        black_box(sparse.matmul(&xs));
+    });
+    let a = &armor_fact.a;
+    let b = &armor_fact.b;
+    let r_armor = bench("ARMOR factorized matmul", 2, 30, 10.0, || {
+        // y = A (S (B x)))
+        let bx = b.matmul_right(&xs);
+        let sx = armor_core.matmul(&bx);
+        black_box(a.matmul_right(&sx));
+    });
+
+    // --- single matvec ---
+    let v_dense = bench("dense matvec", 5, 200, 5.0, || {
+        black_box(armor::linalg::matvec(&dense, &x1));
+    });
+    let v_sparse = bench("2:4 matvec", 5, 200, 5.0, || {
+        black_box(sparse.matvec(&x1));
+    });
+    let v_armor = bench("ARMOR matvec", 5, 200, 5.0, || {
+        let bx = b.matvec(&x1);
+        let sx = armor_core.matvec(&bx);
+        black_box(a.matvec(&sx));
+    });
+
+    for r in [&r_dense, &r_sparse, &r_armor, &v_dense, &v_sparse, &v_armor] {
+        println!("{}", r.line());
+    }
+
+    let dense_bytes = d_out * d_in * 4;
+    let sparse_bytes = sparse.storage_bytes();
+    let armor_bytes = armor_fact.storage_bytes();
+
+    println!("\n| Form  | batched matmul (ms) | speedup | matvec (ms) | speedup | size (KiB) |");
+    println!("|---|---|---|---|---|---|");
+    println!(
+        "| Dense | {:.3} | 1.00x | {:.4} | 1.00x | {} |",
+        r_dense.mean_ms,
+        v_dense.mean_ms,
+        dense_bytes / 1024
+    );
+    println!(
+        "| 2:4   | {:.3} | {:.2}x | {:.4} | {:.2}x | {} |",
+        r_sparse.mean_ms,
+        r_dense.mean_ms / r_sparse.mean_ms,
+        v_sparse.mean_ms,
+        v_dense.mean_ms / v_sparse.mean_ms,
+        sparse_bytes / 1024
+    );
+    println!(
+        "| ARMOR | {:.3} | {:.2}x | {:.4} | {:.2}x | {} |",
+        r_armor.mean_ms,
+        r_dense.mean_ms / r_armor.mean_ms,
+        v_armor.mean_ms,
+        v_dense.mean_ms / v_armor.mean_ms,
+        armor_bytes / 1024
+    );
+    println!(
+        "\nARMOR wrapper flop overhead: {:.2}% → expected speedup ≈ {:.2}x of 2:4's",
+        armor_fact.wrapper_overhead() * 100.0,
+        1.0 / (1.0 + armor_fact.wrapper_overhead())
+    );
+}

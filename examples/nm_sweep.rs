@@ -1,0 +1,74 @@
+//! N:M and unstructured sparsity sweep (paper §4.5, Table 6 analog):
+//! ARMOR vs NoWag-P at 50% unstructured, 4:8, 5:8, 6:8, and 2:4.
+//!
+//!     cargo run --release --example nm_sweep [-- --iters 60]
+
+use armor::armor::variants::{nm_config, unstructured_config};
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, format_markdown_table, prune_model, PruneJob, TableRow};
+use armor::data::{sample_calibration, tokenize};
+use armor::eval::perplexity;
+use armor::model::GptModel;
+use armor::sparsity::Pattern;
+use armor::util::cli::Args;
+use armor::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> armor::Result<()> {
+    let args = Args::parse();
+    let model = GptModel::load(Path::new(&args.get_or("model", "artifacts/model/tiny.tsr")))?;
+    let corpus_dir = args.get_or("corpus-dir", "artifacts/corpus");
+    let iters = args.get_usize("iters", 60);
+    let eval_seqs = args.get_usize("eval-seqs", 10);
+
+    let train = std::fs::read_to_string(Path::new(&corpus_dir).join("train.txt"))?;
+    let mut rng = Pcg64::seed_from_u64(1);
+    let calib = sample_calibration(&tokenize(&train), model.cfg.max_seq, 12, &mut rng);
+    let stats = calibrate(&model, &calib, false);
+    let wiki = std::fs::read_to_string(Path::new(&corpus_dir).join("wiki_like.txt"))?;
+    let web = std::fs::read_to_string(Path::new(&corpus_dir).join("web_like.txt"))?;
+
+    let patterns: Vec<(Pattern, &str)> = vec![
+        (Pattern::unstructured(0.5), "50%"),
+        (Pattern::NM { n: 2, m: 4 }, "2:4"),
+        (Pattern::NM { n: 4, m: 8 }, "4:8"),
+        (Pattern::NM { n: 5, m: 8 }, "5:8"),
+        (Pattern::NM { n: 6, m: 8 }, "6:8"),
+    ];
+
+    let mut rows = Vec::new();
+    for (pattern, label) in patterns {
+        for (mname, method) in [
+            ("NoWag-P", Method::NoWagP),
+            (
+                "ARMOR",
+                Method::Armor(match pattern {
+                    Pattern::NM { n, m } => nm_config(n, m, 32, iters, 3),
+                    Pattern::Unstructured { .. } => unstructured_config(0.5, 32, iters, 3),
+                }),
+            ),
+        ] {
+            let job = PruneJob { method, pattern, seed: 3, use_xla: false };
+            let (pruned, report) = prune_model(&model, &stats, &job, None);
+            let ppl_wiki = perplexity(&pruned, &wiki, model.cfg.max_seq, eval_seqs);
+            let ppl_web = perplexity(&pruned, &web, model.cfg.max_seq, eval_seqs);
+            println!(
+                "{mname:<8} {label:<4} wiki {ppl_wiki:7.3}  web {ppl_web:7.3}  err {:9.3}",
+                report.total_weighted_err
+            );
+            rows.push(TableRow::new(
+                &format!("{mname} ({label})"),
+                vec![format!("{ppl_wiki:.3}"), format!("{ppl_web:.3}")],
+            ));
+        }
+    }
+    println!(
+        "{}",
+        format_markdown_table(
+            "ARMOR vs NoWag-P across sparsity patterns (Table 6 analog)",
+            &["Wiki-like (↓)", "Web-like (↓)"],
+            &rows
+        )
+    );
+    Ok(())
+}

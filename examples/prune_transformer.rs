@@ -1,0 +1,118 @@
+//! End-to-end driver (the DESIGN.md §4 headline experiment): load the
+//! build-time-trained tiny GPT, capture calibration statistics, prune every
+//! linear with Dense / Wanda / NoWag-P / SparseGPT / ARMOR at 2:4, and
+//! report perplexity on both held-out splits plus the 7-task suite —
+//! Tables 1–3 in one run.
+//!
+//!     cargo run --release --example prune_transformer [-- --iters 120 --xla]
+
+use armor::armor::{ArmorConfig, ContinuousOpt};
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, format_markdown_table, prune_model, PruneJob, TableRow};
+use armor::data::{sample_calibration, tokenize};
+use armor::eval::{evaluate_tasks, perplexity, TASK_NAMES};
+use armor::model::GptModel;
+use armor::sparsity::Pattern;
+use armor::util::cli::Args;
+use armor::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> armor::Result<()> {
+    let args = Args::parse();
+    let model_path = args.get_or("model", "artifacts/model/tiny.tsr");
+    let corpus_dir = args.get_or("corpus-dir", "artifacts/corpus");
+    let iters = args.get_usize("iters", 120);
+    let eval_seqs = args.get_usize("eval-seqs", 12);
+    let task_n = args.get_usize("task-n", 12);
+
+    anyhow::ensure!(
+        Path::new(&model_path).exists(),
+        "model not found at {model_path} — run `make artifacts` first"
+    );
+    let model = GptModel::load(Path::new(&model_path))?;
+    println!(
+        "loaded model: {} params, {} layers\n",
+        model.cfg.param_count(),
+        model.cfg.n_layers
+    );
+
+    // Calibration: 16 held-out training sequences through the dense model.
+    let train_text = std::fs::read_to_string(Path::new(&corpus_dir).join("train.txt"))?;
+    let tokens = tokenize(&train_text);
+    let mut rng = Pcg64::seed_from_u64(0xCA11B);
+    let calib_seqs = sample_calibration(&tokens, model.cfg.max_seq, 16, &mut rng);
+    println!("calibrating on {} sequences...", calib_seqs.len());
+    let stats = calibrate(&model, &calib_seqs, true);
+
+    let wiki = std::fs::read_to_string(Path::new(&corpus_dir).join("wiki_like.txt"))?;
+    let web = std::fs::read_to_string(Path::new(&corpus_dir).join("web_like.txt"))?;
+
+    let rt = if args.flag("xla") {
+        Some(armor::runtime::Runtime::load(Path::new(&args.get_or("artifacts", "artifacts")))?)
+    } else {
+        None
+    };
+
+    let armor_cfg = ArmorConfig {
+        d_block: args.get_usize("d-block", 32),
+        n_iters: iters,
+        optimizer: ContinuousOpt::Adam { lr: 1e-3 },
+        ..Default::default()
+    };
+
+    let methods: Vec<Method> = vec![
+        Method::Dense,
+        Method::Wanda,
+        Method::NoWagP,
+        Method::SparseGpt,
+        Method::Armor(armor_cfg),
+    ];
+
+    let mut ppl_rows = Vec::new();
+    let mut task_rows = Vec::new();
+    for method in methods {
+        let label = method.label();
+        let t0 = std::time::Instant::now();
+        let job = PruneJob { method, pattern: Pattern::TWO_FOUR, seed: 7, use_xla: rt.is_some() };
+        let (pruned, report) = prune_model(&model, &stats, &job, rt.as_ref());
+        let ppl_wiki = perplexity(&pruned, &wiki, model.cfg.max_seq, eval_seqs);
+        let ppl_web = perplexity(&pruned, &web, model.cfg.max_seq, eval_seqs);
+        let tasks = evaluate_tasks(&pruned, task_n, 99);
+        let mean_acc = tasks.iter().map(|(_, a)| a).sum::<f64>() / tasks.len() as f64;
+        println!(
+            "{label:<12} wiki-ppl {ppl_wiki:7.3}  web-ppl {ppl_web:7.3}  mean-task {mean_acc:5.1}%  (+o {:.2}%)  [{:.0}s]",
+            report.wrapper_overhead * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+        let sparsity_label = if label == "Dense" {
+            "0".to_string()
+        } else if report.wrapper_overhead > 0.0 {
+            format!("2:4+{:.2}%", report.wrapper_overhead * 100.0)
+        } else {
+            "2:4".to_string()
+        };
+        ppl_rows.push(TableRow::new(
+            &label,
+            vec![sparsity_label.clone(), format!("{ppl_wiki:.3}"), format!("{ppl_web:.3}")],
+        ));
+        let mut cells = vec![sparsity_label];
+        cells.extend(tasks.iter().map(|(_, a)| format!("{a:.1}")));
+        task_rows.push(TableRow::new(&label, cells));
+    }
+
+    println!(
+        "{}",
+        format_markdown_table(
+            "Perplexity (Table 3 analog)",
+            &["Sparsity", "Wiki-like (↓)", "Web-like (↓)"],
+            &ppl_rows
+        )
+    );
+    let mut task_header = vec!["Sparsity"];
+    task_header.extend(TASK_NAMES);
+    println!(
+        "{}",
+        format_markdown_table("Task accuracy % (Tables 1–2 analog)", &task_header, &task_rows)
+    );
+    Ok(())
+}

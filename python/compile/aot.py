@@ -1,0 +1,156 @@
+"""AOT lowering: JAX/Pallas Layer-2 graphs → HLO **text** artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced (manifest.json describes all of them):
+- `cont_steps_{dout}x{din}_b{db}`  — K fused Adam steps on (A, B, W')
+- `proxy_loss_{dout}x{din}_b{db}`  — Pallas-kernel proxy loss evaluation
+- `mask_init_{dout}x{din}`         — Pallas top-2:4 NoWag-P mask init
+- `gpt_nll_{tag}`                  — per-sequence mean NLL for fast eval
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+K_STEPS = 10  # Adam steps fused per PJRT call
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_cont_steps(d_out: int, d_in: int, db: int):
+    nbo, nbi = d_out // db, d_in // db
+    fn = functools.partial(M.armor_cont_steps, k_steps=K_STEPS)
+    specs = [
+        f32(nbo, db, db),  # a
+        f32(nbi, db, db),  # b
+        f32(d_out, d_in),  # wp
+        f32(d_out, d_in),  # mask
+        f32(d_out, d_in),  # w_bar
+        f32(d_in),         # d
+        f32(nbo, db, db), f32(nbo, db, db),  # ma, va
+        f32(nbi, db, db), f32(nbi, db, db),  # mb, vb
+        f32(d_out, d_in), f32(d_out, d_in),  # mw, vw
+        f32(),             # t0
+        f32(),             # lr
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    in_shapes = [list(s.shape) for s in specs]
+    out_shapes = in_shapes[:3] + in_shapes[6:13] + [[]]
+    return lowered, in_shapes, out_shapes
+
+
+def lower_proxy_loss(d_out: int, d_in: int, db: int):
+    nbo, nbi = d_out // db, d_in // db
+    specs = [f32(nbo, db, db), f32(nbi, db, db), f32(d_out, d_in), f32(d_out, d_in),
+             f32(d_out, d_in), f32(d_in)]
+    lowered = jax.jit(M.proxy_loss_pallas).lower(*specs)
+    return lowered, [list(s.shape) for s in specs], [[]]
+
+
+def lower_mask_init(d_out: int, d_in: int):
+    specs = [f32(d_out, d_in), f32(d_in)]
+    lowered = jax.jit(M.armor_init).lower(*specs)
+    return lowered, [list(s.shape) for s in specs], [[d_out, d_in]]
+
+
+def lower_gpt_nll(cfg: dict, batch: int, seq: int):
+    params_spec = {
+        k: jax.ShapeDtypeStruct(v.shape, jnp.float32)
+        for k, v in M.init_params(cfg, jax.random.PRNGKey(0)).items()
+    }
+    names = sorted(params_spec)
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return M.batch_nll(params, cfg, args[-1])
+
+    specs = [params_spec[k] for k in names] + [
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    in_shapes = [list(s.shape) for s in specs]
+    return lowered, in_shapes, [[batch]], names
+
+
+def prunable_shapes(cfg: dict) -> list[tuple[int, int]]:
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    return sorted({(d, d), (dff, d), (d, dff)})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="../configs/tiny.json")
+    ap.add_argument("--d-block", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=8)
+    ap.add_argument("--skip-gpt", action="store_true", help="only ARMOR artifacts")
+    args = ap.parse_args()
+
+    with open(args.config) as f:
+        cfg = json.load(f)
+    os.makedirs(args.out_dir, exist_ok=True)
+    db = args.d_block
+
+    artifacts = []
+
+    def emit(name: str, lowered, in_shapes, out_shapes, meta: dict):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name,
+            "path": path,
+            "input_shapes": in_shapes,
+            "output_shapes": out_shapes,
+            "meta": meta,
+        })
+        print(f"[aot] {name}: {len(text)} chars", flush=True)
+
+    for d_out, d_in in prunable_shapes(cfg):
+        assert d_out % db == 0 and d_in % db == 0, f"d_block {db} must divide {(d_out, d_in)}"
+        lowered, ins, outs = lower_cont_steps(d_out, d_in, db)
+        emit(f"cont_steps_{d_out}x{d_in}_b{db}", lowered, ins, outs,
+             {"d_block": db, "k_steps": K_STEPS, "kind": "cont_steps"})
+        lowered, ins, outs = lower_proxy_loss(d_out, d_in, db)
+        emit(f"proxy_loss_{d_out}x{d_in}_b{db}", lowered, ins, outs,
+             {"d_block": db, "kind": "proxy_loss"})
+        lowered, ins, outs = lower_mask_init(d_out, d_in)
+        emit(f"mask_init_{d_out}x{d_in}", lowered, ins, outs, {"kind": "mask_init"})
+
+    if not args.skip_gpt:
+        seq = cfg["max_seq"]
+        lowered, ins, outs, names = lower_gpt_nll(cfg, args.eval_batch, seq)
+        emit(f"gpt_nll_b{args.eval_batch}", lowered, ins, outs,
+             {"kind": "gpt_nll", "param_names": names, "batch": args.eval_batch, "seq": seq})
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": artifacts, "config": cfg}, f, indent=1)
+    print(f"[aot] wrote {len(artifacts)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: fused ARMOR reconstruction `Ŵ = A · core · B`.
+
+The grid iterates over (block-row i, block-col j); each step streams one
+`db × db` core tile plus the two matching wrapper blocks HBM→VMEM and runs
+two `db × db` MXU matmuls — the TPU analog of the paper's per-threadblock
+tiling (DESIGN.md §Hardware-Adaptation). With db ≤ 128 each operand fits a
+single MXU tile.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is asserted against `ref.armor_matmul_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, s_ref, b_ref, o_ref):
+    a = a_ref[0]  # (db, db) wrapper block A_i
+    s = s_ref[...]  # (db, db) core tile
+    b = b_ref[0]  # (db, db) wrapper block B_j
+    o_ref[...] = a @ s @ b
+
+
+def armor_matmul(a_blocks: jax.Array, core: jax.Array, b_blocks: jax.Array) -> jax.Array:
+    """`A · core · B` with block-diagonal A, B given as stacked blocks.
+
+    a_blocks: (nbo, db, db); core: (d_out, d_in); b_blocks: (nbi, db, db).
+    """
+    nbo, db, _ = a_blocks.shape
+    nbi = b_blocks.shape[0]
+    d_out, d_in = core.shape
+    assert d_out == nbo * db and d_in == nbi * db, (core.shape, a_blocks.shape, b_blocks.shape)
+    return pl.pallas_call(
+        _kernel,
+        grid=(nbo, nbi),
+        in_specs=[
+            pl.BlockSpec((1, db, db), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((db, db), lambda i, j: (i, j)),
+            pl.BlockSpec((1, db, db), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((db, db), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,
+    )(a_blocks.astype(jnp.float32), core.astype(jnp.float32), b_blocks.astype(jnp.float32))
+
+
+def masked_armor_matmul(a_blocks, w_prime, mask, b_blocks):
+    """Convenience wrapper applying the binary mask before reconstruction
+    (the `W' ⊙ M` of paper Eq. 1), fused into the same lowered HLO."""
+    return armor_matmul(a_blocks, w_prime * mask, b_blocks)

@@ -1,0 +1,41 @@
+"""Layer-1 Pallas kernel: N:M top-N mask initialization (paper Eq. 3).
+
+Branch-free rank-by-comparison inside each M-wide group: an entry is kept
+when fewer than N entries rank above it (strictly greater importance, or
+equal importance at a lower column index — matching the Rust tie-break)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(n: int, m: int, imp_ref, o_ref):
+    imp = imp_ref[...]  # (tr, cols)
+    tr, cols = imp.shape
+    g = imp.reshape(tr, cols // m, m)
+    idx = jnp.arange(m)
+    greater = g[..., None, :] > g[..., :, None]
+    equal_lower = (g[..., None, :] == g[..., :, None]) & (idx[None, :] < idx[:, None])
+    rank = jnp.sum(greater | equal_lower, axis=-1)
+    o_ref[...] = (rank < n).astype(jnp.float32).reshape(tr, cols)
+
+
+def mask_topk_nm(importance: jax.Array, n: int, m: int, tile_rows: int = 32) -> jax.Array:
+    """0/1 float mask keeping the top-`n` of every `m` consecutive columns."""
+    rows, cols = importance.shape
+    assert cols % m == 0, f"cols {cols} not divisible by M={m}"
+    tr = min(tile_rows, rows)
+    while rows % tr != 0:
+        tr -= 1
+    return pl.pallas_call(
+        functools.partial(_kernel, n, m),
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(importance.astype(jnp.float32))

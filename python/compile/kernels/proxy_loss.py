@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: the NoWag weighted squared-Frobenius proxy loss
+(paper Eq. 2), as a tiled grid reduction.
+
+Each grid step loads one `(tr × d_in)` row panel of `w_bar`/`w_hat` plus the
+activation weights `d`, reduces it on the VPU, and accumulates into a single
+scalar output block (revisited across the sequential grid — the standard
+Pallas reduction idiom)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(wbar_ref, what_ref, d_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    diff = wbar_ref[...] - what_ref[...]
+    o_ref[0, 0] += jnp.sum(diff * diff * d_ref[0][None, :])
+
+
+def proxy_loss(w_bar: jax.Array, w_hat: jax.Array, d: jax.Array, tile_rows: int = 32) -> jax.Array:
+    """`Σ_ij (w_bar − w_hat)²_ij d_j` → scalar (shape (1, 1) squeezed)."""
+    rows, cols = w_bar.shape
+    tr = min(tile_rows, rows)
+    while rows % tr != 0:
+        tr -= 1
+    grid = (rows // tr,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(
+        w_bar.astype(jnp.float32),
+        w_hat.astype(jnp.float32),
+        d.reshape(1, -1).astype(jnp.float32),
+    )
+    return out[0, 0]

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes and dtypes with hypothesis and asserts each Pallas kernel
+matches its oracle to float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def armor_matmul_ref(a_blocks, core, b_blocks):
+    """Reconstruct `Ŵ = A · core · B` with block-diagonal A, B.
+
+    a_blocks: (nbo, db, db), core: (d_out, d_in), b_blocks: (nbi, db, db).
+    """
+    nbo, db, _ = a_blocks.shape
+    nbi = b_blocks.shape[0]
+    s = core.reshape(nbo, db, nbi, db)
+    # A_i @ S[i, :, j, :] @ B_j  for every block pair
+    out = jnp.einsum("ipq,iqjr,jrs->ipjs", a_blocks, s, b_blocks)
+    return out.reshape(nbo * db, nbi * db)
+
+
+def proxy_loss_ref(w_bar, w_hat, d):
+    """NoWag proxy loss: Σ_ij (w_bar − w_hat)²_ij d_j  (paper Eq. 2)."""
+    diff = (w_bar - w_hat).astype(jnp.float32)
+    return jnp.sum(diff * diff * d[None, :].astype(jnp.float32))
+
+
+def mask_topk_nm_ref(importance, n, m):
+    """Top-n-of-m mask per row group (paper Eq. 3), ties broken by lower
+    column index — matching `sparsity::nm_mask_from_importance`."""
+    rows, cols = importance.shape
+    g = importance.reshape(rows, cols // m, m)
+    idx = jnp.arange(m)
+    # rank = #entries strictly greater, plus #equal entries with lower index
+    greater = g[..., None, :] > g[..., :, None]  # [r, grp, t, u]: imp_u > imp_t
+    equal_lower = (g[..., None, :] == g[..., :, None]) & (idx[None, :] < idx[:, None])
+    rank = jnp.sum(greater | equal_lower, axis=-1)
+    mask = (rank < n).astype(jnp.float32)
+    return mask.reshape(rows, cols)
+
+
+def group_ls_ref(e, a_col, u_rows, d, cur_vals, combos):
+    """Closed-form mask-sweep least squares for one selected sparse group
+    (paper Eq. 7–9). All-jnp reference for the `sparse_group_ls` kernel.
+
+    e:        (db, db)  block residual  E = W̄blk − (A S B)blk
+    a_col:    (db,)     A^{(i)}_{:, i'}
+    u_rows:   (m, db)   the m rows of B^{(j)} touched by the group
+    d:        (db,)     activation weights for the block's columns
+    cur_vals: (m,)      current core values of the group
+    combos:   (C, n)    integer index combinations (C(m,n) of them)
+
+    Returns (best_combo_idx, best_vals (n,), gains (C,)).
+    """
+    a_sq = jnp.sum(a_col * a_col)
+    # v = ΔWᵀ a = Eᵀ a + ‖a‖² Σ_t s_t u_t
+    v = e.T @ a_col + a_sq * (cur_vals @ u_rows)
+    # weighted grams
+    g_full = jnp.einsum("td,d,ud->tu", u_rows, d, u_rows)  # (m, m)
+    r_full = u_rows @ (d * v)  # (m,)
+
+    gains = []
+    vals_all = []
+    for c in range(combos.shape[0]):
+        combo = combos[c]
+        gs = g_full[jnp.ix_(combo, combo)]
+        rs = r_full[combo]
+        w = jnp.linalg.pinv(gs, rtol=1e-10) @ rs
+        gain = jnp.where(a_sq > 1e-30, rs @ w / a_sq, 0.0)
+        vals = jnp.where(a_sq > 1e-30, w / a_sq, jnp.zeros_like(w))
+        gains.append(gain)
+        vals_all.append(vals)
+    gains = jnp.stack(gains)
+    vals_all = jnp.stack(vals_all)
+    best = jnp.argmax(gains)
+    return best, vals_all[best], gains
+
+
+def nowag_normalize_ref(w, eps=1e-12):
+    """Row/column normalization (paper §3.2), matching `normalize/mod.rs`."""
+    r1 = jnp.sqrt(jnp.sum(w * w, axis=0))
+    r1 = jnp.where(r1 <= eps, 1.0, r1)
+    w1 = w / r1[None, :]
+    r2 = jnp.sqrt(jnp.sum(w1 * w1, axis=1))
+    r2 = jnp.where(r2 <= eps, 1.0, r2)
+    w_bar = w1 / r2[:, None]
+    return w_bar, r1, r2

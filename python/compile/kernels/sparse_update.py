@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: the batched sparse-group least-squares sweep —
+the algorithmic hot spot of the ARMOR sparse-core update (paper Eq. 7–9,
+Appendix B.1).
+
+One grid step = one (i, j) block's selected group: load the block residual
+`E`, the wrapper column `a`, the M touched B-rows `u`, the activation
+weights `d`, and the current group values; form the M×M weighted Gram and
+the M-vector of weighted correlations; solve the 2-variable closed form for
+every C(M, 2) candidate mask; emit per-candidate gains and values. The
+host-side driver (Rust, or `ref.group_ls_ref` in tests) takes the argmax.
+
+The 2×2 solve is branch-free via the adjugate with a damped determinant —
+the Pallas-friendly equivalent of `linalg::solve_sym2x2_pinv`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(combos: tuple[tuple[int, int], ...], e_ref, a_ref, u_ref, d_ref, s_ref,
+            gains_ref, vals_ref):
+    e = e_ref[0]  # (db, db)
+    a = a_ref[0]  # (db,)
+    u = u_ref[0]  # (m, db)
+    d = d_ref[0]  # (db,)
+    cur = s_ref[0]  # (m,)
+
+    a_sq = jnp.sum(a * a)
+    v = e.T @ a + a_sq * (cur @ u)  # (db,)
+    g_full = jnp.einsum("td,d,ud->tu", u, d, u)  # (m, m)
+    r_full = u @ (d * v)  # (m,)
+
+    for c, (i1, i2) in enumerate(combos):
+        g00 = g_full[i1, i1]
+        g01 = g_full[i1, i2]
+        g11 = g_full[i2, i2]
+        r0 = r_full[i1]
+        r1 = r_full[i2]
+        scale = jnp.maximum(jnp.maximum(jnp.abs(g00), jnp.abs(g11)), 1e-30)
+        det = g00 * g11 - g01 * g01
+        ok = det > 1e-10 * scale * scale
+        inv_det = jnp.where(ok, 1.0 / jnp.where(ok, det, 1.0), 0.0)
+        w0 = (g11 * r0 - g01 * r1) * inv_det
+        w1 = (g00 * r1 - g01 * r0) * inv_det
+        # degenerate fallback: diagonal solve (covers rank-1 G approximately)
+        w0 = jnp.where(ok, w0, jnp.where(g00 > 1e-30 * scale, r0 / jnp.maximum(g00, 1e-30), 0.0))
+        w1 = jnp.where(ok, w1, 0.0)
+        denom = jnp.where(a_sq > 1e-30, a_sq, 1.0)
+        gain = jnp.where(a_sq > 1e-30, (r0 * w0 + r1 * w1) / denom, 0.0)
+        gains_ref[0, c] = gain
+        vals_ref[0, c, 0] = jnp.where(a_sq > 1e-30, w0 / denom, 0.0)
+        vals_ref[0, c, 1] = jnp.where(a_sq > 1e-30, w1 / denom, 0.0)
+
+
+def sparse_group_ls(e, a_cols, u_rows, d, cur_vals, m: int = 4):
+    """Batched mask sweep over `nb` selected groups.
+
+    e:        (nb, db, db) block residuals
+    a_cols:   (nb, db)     wrapper columns
+    u_rows:   (nb, m, db)  touched B rows
+    d:        (nb, db)     activation weights
+    cur_vals: (nb, m)      current group values
+    Returns (gains (nb, C), vals (nb, C, 2)) for the C = C(m,2) masks in
+    lexicographic order.
+    """
+    nb, db, _ = e.shape
+    combos = tuple((i, j) for i in range(m) for j in range(i + 1, m))
+    ncomb = len(combos)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_kernel, combos),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, db, db), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, db), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, db), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, db), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ncomb), lambda i: (i, 0)),
+            pl.BlockSpec((1, ncomb, 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, ncomb), f32),
+            jax.ShapeDtypeStruct((nb, ncomb, 2), f32),
+        ],
+        interpret=True,
+    )(e.astype(f32), a_cols.astype(f32), u_rows.astype(f32), d.astype(f32), cur_vals.astype(f32))

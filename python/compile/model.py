@@ -1,0 +1,215 @@
+"""Layer-2 JAX compute graphs.
+
+Two families, both AOT-lowered to HLO text by `aot.py`:
+
+1. **ARMOR optimizer steps** — `armor_cont_steps` runs K fused Adam steps on
+   (A, B, W') under a fixed mask (paper §3.3.1, joint-Adam variant). The
+   gradients come from `jax.grad` of the jnp proxy loss; the reported loss is
+   computed through the Layer-1 Pallas kernels (`kernels.armor_matmul` +
+   `kernels.proxy_loss`) so the kernels lower into the same HLO module.
+
+2. **The tiny GPT** — forward / per-sequence NLL, mirroring
+   `rust/src/model/gpt.rs` exactly (pre-LN, learned positions, tanh-GELU,
+   tied head) so build-time-trained weights run natively in Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# --------------------------------------------------------------------------
+# ARMOR Layer-2 graphs
+# --------------------------------------------------------------------------
+
+
+def proxy_loss_jnp(a_blocks, b_blocks, w_prime, mask, w_bar, d):
+    """Differentiable proxy loss (paper Eq. 2) in plain jnp."""
+    nbo, db, _ = a_blocks.shape
+    nbi = b_blocks.shape[0]
+    core = (w_prime * mask).reshape(nbo, db, nbi, db)
+    w_hat = jnp.einsum("ipq,iqjr,jrs->ipjs", a_blocks, core, b_blocks).reshape(
+        nbo * db, nbi * db
+    )
+    diff = w_bar - w_hat
+    return jnp.sum(diff * diff * d[None, :])
+
+
+def proxy_loss_pallas(a_blocks, b_blocks, w_prime, mask, w_bar, d):
+    """Proxy loss evaluated through the Layer-1 Pallas kernels."""
+    w_hat = kernels.masked_armor_matmul(a_blocks, w_prime, mask, b_blocks)
+    return kernels.proxy_loss(w_bar, w_hat, d)
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def armor_cont_steps(a, b, wp, mask, w_bar, d, ma, va, mb, vb, mw, vw, t0, lr, *, k_steps: int):
+    """K fused joint-Adam steps (the hot path the Rust runtime calls).
+
+    Shapes: a (nbo,db,db), b (nbi,db,db), wp/mask/w_bar (d_out,d_in),
+    d (d_in,), moments matching their parameters, t0/lr scalars.
+    Returns updated (a, b, wp, moments..., t, loss) — loss computed through
+    the Pallas kernels after the final step.
+    """
+
+    grad_fn = jax.grad(proxy_loss_jnp, argnums=(0, 1, 2))
+
+    def adam(p, g, m, v, t):
+        m = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+        mhat = m / (1 - ADAM_B1**t)
+        vhat = v / (1 - ADAM_B2**t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+    def body(_, state):
+        a, b, wp, ma, va, mb, vb, mw, vw, t = state
+        ga, gb, gw = grad_fn(a, b, wp, mask, w_bar, d)
+        gw = gw * mask  # ∇W' = G ⊙ M
+        t = t + 1.0
+        a, ma, va = adam(a, ga, ma, va, t)
+        b, mb, vb = adam(b, gb, mb, vb, t)
+        wp, mw, vw = adam(wp, gw, mw, vw, t)
+        return (a, b, wp, ma, va, mb, vb, mw, vw, t)
+
+    state = (a, b, wp, ma, va, mb, vb, mw, vw, t0)
+    state = jax.lax.fori_loop(0, k_steps, body, state)
+    a, b, wp, ma, va, mb, vb, mw, vw, t = state
+    loss = proxy_loss_pallas(a, b, wp, mask, w_bar, d)
+    return a, b, wp, ma, va, mb, vb, mw, vw, t, loss
+
+
+def armor_init(w_bar, d, *, n: int = 2, m: int = 4):
+    """NoWag-P mask init (paper Eq. 3) through the Pallas top-N kernel."""
+    importance = w_bar * w_bar * d[None, :]
+    return kernels.mask_topk_nm(importance, n, m)
+
+
+# --------------------------------------------------------------------------
+# Tiny GPT (must mirror rust/src/model/gpt.rs bit-for-bit in structure)
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: dict, key) -> dict:
+    """Random init. cfg keys: vocab, d_model, n_layers, n_heads, d_ff,
+    max_seq, optional moe {n_experts, top_k}."""
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    std_w = 1.0 / d**0.5
+    p = {}
+    key, *ks = jax.random.split(key, 3)
+    p["tok_embed"] = 0.05 * jax.random.normal(ks[0], (cfg["vocab"], d))
+    p["pos_embed"] = 0.05 * jax.random.normal(ks[1], (cfg["max_seq"], d))
+    for l in range(cfg["n_layers"]):
+        for nm in ["ln1.g", "ln2.g"]:
+            p[f"l{l}.{nm}"] = jnp.ones((d,))
+        for nm in ["ln1.b", "ln2.b"]:
+            p[f"l{l}.{nm}"] = jnp.zeros((d,))
+        for w in ["wq", "wk", "wv", "wo"]:
+            key, k1 = jax.random.split(key)
+            p[f"l{l}.attn.{w}"] = std_w * jax.random.normal(k1, (d, d))
+        if cfg.get("moe"):
+            ne = cfg["moe"]["n_experts"]
+            key, k1 = jax.random.split(key)
+            p[f"l{l}.moe.router"] = std_w * jax.random.normal(k1, (ne, d))
+            for e in range(ne):
+                key, k1, k2 = jax.random.split(key, 3)
+                p[f"l{l}.moe.e{e}.up"] = std_w * jax.random.normal(k1, (dff, d))
+                p[f"l{l}.moe.e{e}.down"] = (1.0 / dff**0.5) * jax.random.normal(k2, (d, dff))
+        else:
+            key, k1, k2 = jax.random.split(key, 3)
+            p[f"l{l}.mlp.up"] = std_w * jax.random.normal(k1, (dff, d))
+            p[f"l{l}.mlp.down"] = (1.0 / dff**0.5) * jax.random.normal(k2, (d, dff))
+    p["ln_f.g"] = jnp.ones((d,))
+    p["ln_f.b"] = jnp.zeros((d,))
+    return p
+
+
+def _layer_norm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _gelu(x):
+    c = 0.7978845608
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _attention(q, k, v, n_heads):
+    """q,k,v: (S, d). Causal multi-head attention."""
+    s, d = q.shape
+    hd = d // n_heads
+    q = q.reshape(s, n_heads, hd).transpose(1, 0, 2)  # (h, s, hd)
+    k = k.reshape(s, n_heads, hd).transpose(1, 0, 2)
+    v = v.reshape(s, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hid,hjd->hij", q, k) / hd**0.5
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hij,hjd->hid", probs, v)  # (h, s, hd)
+    return ctx.transpose(1, 0, 2).reshape(s, d)
+
+
+def forward(params: dict, cfg: dict, tokens):
+    """Logits for one sequence of token ids (S,) → (S, vocab)."""
+    s = tokens.shape[0]
+    x = params["tok_embed"][tokens] + params["pos_embed"][:s]
+    for l in range(cfg["n_layers"]):
+        xn = _layer_norm(x, params[f"l{l}.ln1.g"], params[f"l{l}.ln1.b"])
+        q = xn @ params[f"l{l}.attn.wq"].T
+        k = xn @ params[f"l{l}.attn.wk"].T
+        v = xn @ params[f"l{l}.attn.wv"].T
+        ctx = _attention(q, k, v, cfg["n_heads"])
+        x = x + ctx @ params[f"l{l}.attn.wo"].T
+        xn2 = _layer_norm(x, params[f"l{l}.ln2.g"], params[f"l{l}.ln2.b"])
+        if cfg.get("moe"):
+            x = x + _moe_mlp(params, cfg, l, xn2)
+        else:
+            h = _gelu(xn2 @ params[f"l{l}.mlp.up"].T)
+            x = x + h @ params[f"l{l}.mlp.down"].T
+    xf = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return xf @ params["tok_embed"].T
+
+
+def _moe_mlp(params, cfg, l, xn):
+    """Top-1 (switch) MoE with softmax gate — dense compute formulation
+    (every expert runs, outputs gated by the routing one-hot; identical math
+    to the Rust sparse routing)."""
+    ne = cfg["moe"]["n_experts"]
+    logits = xn @ params[f"l{l}.moe.router"].T  # (s, ne)
+    probs = jax.nn.softmax(logits, axis=-1)
+    best = jnp.argmax(logits, axis=-1)  # (s,)
+    gate = jnp.take_along_axis(probs, best[:, None], axis=-1)  # (s, 1)
+    onehot = jax.nn.one_hot(best, ne)  # (s, ne)
+    out = jnp.zeros_like(xn)
+    for e in range(ne):
+        h = _gelu(xn @ params[f"l{l}.moe.e{e}.up"].T)
+        ye = h @ params[f"l{l}.moe.e{e}.down"].T
+        out = out + onehot[:, e : e + 1] * ye
+    return gate * out
+
+
+def seq_nll(params: dict, cfg: dict, tokens):
+    """Mean next-token NLL of one sequence (S,) → scalar."""
+    logits = forward(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    return -jnp.mean(jnp.take_along_axis(logp, tgt[:, None], axis=-1))
+
+
+def batch_nll(params: dict, cfg: dict, tokens_batch):
+    """(B, S) → (B,) per-sequence mean NLL (the eval artifact)."""
+    return jax.vmap(lambda t: seq_nll(params, cfg, t))(tokens_batch)
+
+
+def batch_loss(params: dict, cfg: dict, tokens_batch):
+    return jnp.mean(batch_nll(params, cfg, tokens_batch))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_key",))
+def _noop(cfg_key):  # pragma: no cover - placeholder to keep jit import hot
+    return jnp.zeros(())

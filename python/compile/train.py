@@ -1,0 +1,114 @@
+"""Build-time training of the tiny GPT on the synthetic corpus.
+
+Runs ONCE during `make artifacts` (never at serving/pruning time). The
+trained weights are exported as a `.tsr` bundle that the Rust runtime loads
+natively. Training data comes from `artifacts/corpus/train.txt`, generated
+by `armor gen-corpus` so Python and Rust see the same bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .tsr import save_tsr
+
+
+def load_corpus(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        data = f.read()
+    return np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+
+
+def make_batches(tokens: np.ndarray, batch: int, seq: int, n_steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    starts_max = len(tokens) - seq - 1
+    for _ in range(n_steps):
+        starts = rng.integers(0, starts_max, size=batch)
+        yield np.stack([tokens[s : s + seq] for s in starts])
+
+
+def train(
+    cfg: dict,
+    corpus_path: str,
+    out_path: str,
+    *,
+    steps: int = 250,
+    batch: int = 8,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 25,
+) -> dict:
+    """Train and export; returns summary metrics."""
+    tokens = load_corpus(corpus_path)
+    seq = cfg["max_seq"]
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    names = sorted(params)
+
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, t: M.batch_loss(p, cfg, t)))
+
+    # plain Adam
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    history = []
+    t_start = time.time()
+    for step, tb in enumerate(make_batches(tokens, batch, seq, steps, seed + 1), start=1):
+        loss, grads = loss_grad(params, jnp.asarray(tb))
+        for k in names:
+            g = grads[k]
+            m[k] = b1 * m[k] + (1 - b1) * g
+            v[k] = b2 * v[k] + (1 - b2) * g * g
+            mhat = m[k] / (1 - b1**step)
+            vhat = v[k] / (1 - b2**step)
+            params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        if step % log_every == 0 or step == 1:
+            history.append({"step": step, "loss": float(loss)})
+            print(f"[train] step {step:5d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t_start:.0f}s)", flush=True)
+
+    # held-out NLL for the Rust cross-check
+    rng = np.random.default_rng(seed + 2)
+    starts = rng.integers(0, len(tokens) - seq - 1, size=8)
+    eval_batch = jnp.asarray(np.stack([tokens[s : s + seq] for s in starts]))
+    eval_nll = float(M.batch_loss(params, cfg, eval_batch))
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    tensors = {k: np.asarray(val) for k, val in params.items()}
+    meta = {
+        "config": cfg,
+        "train_steps": steps,
+        "final_train_loss": history[-1]["loss"] if history else None,
+        "eval_nll": eval_nll,
+        "history": history,
+    }
+    save_tsr(out_path, tensors, meta)
+    print(f"[train] saved {out_path}  eval_nll={eval_nll:.4f}")
+    return meta
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="../configs/tiny.json")
+    ap.add_argument("--corpus", default="../artifacts/corpus/train.txt")
+    ap.add_argument("--out", default="../artifacts/model/tiny.tsr")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("ARMOR_TRAIN_STEPS", 250)))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    with open(args.config) as f:
+        cfg = json.load(f)
+    train(cfg, args.corpus, args.out, steps=args.steps, batch=args.batch, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""`.tsr` tensor-bundle format, mirroring `rust/src/io/tsr.rs`.
+
+Layout: magic b"TSR1" | u64-LE header length | JSON header | f32-LE payload.
+Header: {"tensors": {name: {"shape": [...], "offset": elems}}, "meta": {...}}
+Tensors are concatenated in sorted-name order (BTreeMap order on the Rust
+side) — the writer here enforces the same ordering.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"TSR1"
+
+
+def save_tsr(path: str, tensors: dict[str, np.ndarray], meta: dict | None = None) -> None:
+    """Write a bundle. Tensors are converted to float32."""
+    names = sorted(tensors)
+    header_tensors: dict[str, dict] = {}
+    offset = 0
+    arrays = []
+    for name in names:
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        header_tensors[name] = {"shape": list(arr.shape), "offset": offset}
+        offset += arr.size
+        arrays.append(arr)
+    header = json.dumps({"tensors": header_tensors, "meta": meta or {}}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for arr in arrays:
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_tsr(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Read a bundle, returning (tensors, meta)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path} is not a TSR1 bundle")
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        payload = np.frombuffer(f.read(), dtype="<f4")
+    tensors = {}
+    for name, spec in header["tensors"].items():
+        shape = spec["shape"]
+        n = int(np.prod(shape)) if shape else 1
+        off = spec["offset"]
+        tensors[name] = payload[off : off + n].reshape(shape).copy()
+    return tensors, header.get("meta", {})

@@ -1,0 +1,175 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# armor_matmul
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nbo=st.integers(1, 3),
+    nbi=st.integers(1, 3),
+    db=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_armor_matmul_matches_ref(nbo, nbi, db, seed):
+    a = rand(seed, nbo, db, db)
+    s = rand(seed + 1, nbo * db, nbi * db)
+    b = rand(seed + 2, nbi, db, db)
+    got = kernels.armor_matmul(a, s, b)
+    want = ref.armor_matmul_ref(a, s, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_armor_matmul_identity_wrappers():
+    db, nbo, nbi = 8, 2, 3
+    eye = jnp.broadcast_to(jnp.eye(db), (nbo, db, db))
+    eye_b = jnp.broadcast_to(jnp.eye(db), (nbi, db, db))
+    s = rand(0, nbo * db, nbi * db)
+    np.testing.assert_allclose(kernels.armor_matmul(eye, s, eye_b), s, rtol=1e-5)
+
+
+def test_masked_armor_matmul_zeroes_masked():
+    db = 4
+    a = rand(1, 2, db, db)
+    b = rand(2, 2, db, db)
+    wp = rand(3, 8, 8)
+    mask = jnp.zeros((8, 8), dtype=jnp.float32)
+    out = kernels.masked_armor_matmul(a, wp, mask, b)
+    np.testing.assert_allclose(out, jnp.zeros((8, 8)), atol=1e-7)
+
+
+# --------------------------------------------------------------------- #
+# proxy_loss
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([4, 8, 32, 33]),
+    cols=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 10_000),
+)
+def test_proxy_loss_matches_ref(rows, cols, seed):
+    wb = rand(seed, rows, cols)
+    wh = rand(seed + 1, rows, cols)
+    d = jnp.abs(rand(seed + 2, cols)) + 0.1
+    got = kernels.proxy_loss(wb, wh, d)
+    want = ref.proxy_loss_ref(wb, wh, d)
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+def test_proxy_loss_zero_at_exact_match():
+    w = rand(5, 16, 32)
+    d = jnp.ones(32)
+    assert float(kernels.proxy_loss(w, w, d)) == 0.0
+
+
+def test_proxy_loss_weighting():
+    wb = jnp.ones((1, 4))
+    wh = jnp.zeros((1, 4))
+    d = jnp.array([1.0, 2.0, 3.0, 4.0])
+    assert float(kernels.proxy_loss(wb, wh, d)) == pytest.approx(10.0)
+
+
+# --------------------------------------------------------------------- #
+# mask_topk_nm
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([1, 4, 16]),
+    groups=st.integers(1, 6),
+    nm=st.sampled_from([(2, 4), (1, 4), (3, 4), (4, 8), (6, 8)]),
+    seed=st.integers(0, 10_000),
+)
+def test_mask_topk_matches_ref(rows, groups, nm, seed):
+    n, m = nm
+    imp = jnp.abs(rand(seed, rows, groups * m))
+    got = kernels.mask_topk_nm(imp, n, m)
+    want = ref.mask_topk_nm_ref(imp, n, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # structural constraint
+    per_group = np.asarray(got).reshape(rows, groups, m).sum(-1)
+    assert (per_group == n).all()
+
+
+def test_mask_topk_tie_break_prefers_lower_index():
+    imp = jnp.array([[1.0, 1.0, 1.0, 1.0]])
+    got = np.asarray(kernels.mask_topk_nm(imp, 2, 4))
+    np.testing.assert_array_equal(got, [[1.0, 1.0, 0.0, 0.0]])
+
+
+def test_mask_topk_keeps_largest():
+    imp = jnp.array([[0.1, 0.9, 0.5, 0.2, 1.0, 0.0, 0.3, 0.7]])
+    got = np.asarray(kernels.mask_topk_nm(imp, 2, 4))
+    np.testing.assert_array_equal(got, [[0, 1, 1, 0, 1, 0, 0, 1]])
+
+
+# --------------------------------------------------------------------- #
+# sparse_group_ls
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    db=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_sparse_group_ls_matches_ref(nb, db, seed):
+    m = 4
+    e = rand(seed, nb, db, db)
+    a_cols = rand(seed + 1, nb, db)
+    u = rand(seed + 2, nb, m, db)
+    d = jnp.abs(rand(seed + 3, nb, db)) + 0.1
+    cur = rand(seed + 4, nb, m)
+    gains, vals = kernels.sparse_group_ls(e, a_cols, u, d, cur, m=m)
+
+    combos = jnp.array([(i, j) for i in range(m) for j in range(i + 1, m)])
+    for blk in range(nb):
+        best_ref, vals_ref, gains_ref = ref.group_ls_ref(
+            e[blk], a_cols[blk], u[blk], d[blk], cur[blk], combos
+        )
+        np.testing.assert_allclose(gains[blk], gains_ref, rtol=1e-3, atol=1e-3)
+        best_kernel = int(jnp.argmax(gains[blk]))
+        # the winning mask's values must match the oracle's LS solution
+        np.testing.assert_allclose(
+            vals[blk, best_kernel], np.asarray(vals_ref), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_sparse_group_ls_gain_is_loss_reduction():
+    """Applying the winning (mask, values) must reduce the block proxy loss
+    by exactly the reported gain (Eq. 8)."""
+    db, m = 8, 4
+    key = 77
+    e = rand(key, 1, db, db)
+    a_col = rand(key + 1, 1, db)
+    u = rand(key + 2, 1, m, db)
+    d = jnp.abs(rand(key + 3, 1, db)) + 0.1
+    cur = jnp.zeros((1, m))  # group currently zeroed ⇒ ΔW = E
+    gains, vals = kernels.sparse_group_ls(e, a_col, u, d, cur, m=m)
+    best = int(jnp.argmax(gains[0]))
+    combos = [(i, j) for i in range(m) for j in range(i + 1, m)]
+    i1, i2 = combos[best]
+    w = vals[0, best]
+    # ΔW = E; new residual = E − a (w0·u_{i1} + w1·u_{i2})
+    contrib = jnp.outer(a_col[0], w[0] * u[0, i1] + w[1] * u[0, i2])
+    before = jnp.sum(e[0] ** 2 * d[0][None, :])
+    after = jnp.sum((e[0] - contrib) ** 2 * d[0][None, :])
+    np.testing.assert_allclose(before - after, gains[0, best], rtol=1e-3)

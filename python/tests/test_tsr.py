@@ -1,0 +1,48 @@
+"""`.tsr` bundle format tests (the Python half of the Rust↔Python contract)."""
+
+import numpy as np
+import pytest
+
+from compile.tsr import load_tsr, save_tsr
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "b.tsr")
+    tensors = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "bias": np.array([1.0, -2.0], dtype=np.float32),
+    }
+    save_tsr(path, tensors, {"step": 7})
+    loaded, meta = load_tsr(path)
+    np.testing.assert_array_equal(loaded["w"], tensors["w"])
+    np.testing.assert_array_equal(loaded["bias"], tensors["bias"])
+    assert meta["step"] == 7
+
+
+def test_sorted_order_layout(tmp_path):
+    """Offsets must follow sorted-name order (matching Rust's BTreeMap)."""
+    path = str(tmp_path / "b.tsr")
+    save_tsr(path, {"zz": np.ones(3), "aa": np.ones(2)})
+    import json, struct
+
+    with open(path, "rb") as f:
+        f.read(4)
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+    assert header["tensors"]["aa"]["offset"] == 0
+    assert header["tensors"]["zz"]["offset"] == 2
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.tsr")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        load_tsr(path)
+
+
+def test_f64_input_downcast(tmp_path):
+    path = str(tmp_path / "b.tsr")
+    save_tsr(path, {"x": np.array([1.5, 2.5], dtype=np.float64)})
+    loaded, _ = load_tsr(path)
+    assert loaded["x"].dtype == np.float32

@@ -1,0 +1,91 @@
+//! §Perf bench: the optimizer hot path, native vs XLA-artifact execution,
+//! plus the micro-kernels that dominate it (GEMM, blockdiag apply,
+//! sparse-core step). Drives the EXPERIMENTS.md §Perf before/after log.
+
+use armor::armor::{initialize, sparse_core_step, ArmorConfig, ArmorOptimizer, SelectionHeuristic};
+use armor::bench::{bench, bench_header, black_box, scaled, ExperimentCtx};
+use armor::runtime::ArmorXlaOptimizer;
+use armor::sparsity::Pattern;
+use armor::tensor::Matrix;
+use armor::util::rng::Pcg64;
+
+fn main() {
+    bench_header("§Perf", "optimizer hot path: native vs XLA, micro-kernels");
+    let mut rng = Pcg64::seed_from_u64(0);
+    let (d_out, d_in, db) = (512usize, 128usize, 32usize);
+    let w = Matrix::randn(d_out, d_in, &mut rng);
+    let d: Vec<f32> = (0..d_in).map(|_| rng.next_f32() + 0.1).collect();
+    let cfg = ArmorConfig { d_block: db, n_iters: 0, ..Default::default() };
+
+    // ---- micro-kernels ----
+    let a = Matrix::randn(256, 256, &mut rng);
+    let b = Matrix::randn(256, 256, &mut rng);
+    let r = bench("gemm 256x256x256", 2, scaled(50), 10.0, || {
+        black_box(a.matmul(&b));
+    });
+    println!("{}  ({:.2} GFLOP/s)", r.line(), 2.0 * 256f64.powi(3) / (r.mean_ms / 1e3) / 1e9);
+
+    let (fact, problem, _) = initialize(&w, &d, db, Pattern::TWO_FOUR);
+    let r = bench("proxy loss + residual", 2, scaled(50), 10.0, || {
+        black_box(problem.loss(&fact.a, &fact.core(), &fact.b));
+    });
+    println!("{}", r.line());
+
+    let r = bench("grad_a + grad_b + grad_core", 2, scaled(30), 10.0, || {
+        let s = fact.core();
+        black_box(problem.grad_a(&fact.a, &s, &fact.b));
+        black_box(problem.grad_b(&fact.a, &s, &fact.b));
+        black_box(problem.grad_core(&fact.a, &s, &fact.b));
+    });
+    println!("{}", r.line());
+
+    {
+        let mut fact2 = fact.clone();
+        let mut srng = Pcg64::seed_from_u64(1);
+        let r = bench("sparse_core_step (all blocks)", 2, scaled(30), 10.0, || {
+            sparse_core_step(&mut fact2, &problem, 2, 4, SelectionHeuristic::L1Random, &mut srng);
+        });
+        println!("{}", r.line());
+    }
+
+    // ---- end-to-end optimizer step: native vs XLA ----
+    let steps = scaled(20);
+    let t0 = std::time::Instant::now();
+    let mut native = ArmorOptimizer::new(&w, &d, &cfg, Pcg64::seed_from_u64(2));
+    for _ in 0..steps {
+        native.step();
+    }
+    let native_per_iter = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    println!(
+        "\nnative BCD iteration ({d_out}x{d_in}, db={db}):      {native_per_iter:8.2} ms/iter (loss {:.4})",
+        native.current_loss()
+    );
+
+    if let Some(ctx) = ExperimentCtx::load_with(2, false) {
+        if let Some(rt) = &ctx.runtime {
+            match ArmorXlaOptimizer::new(rt, &w, &d, &cfg, Pcg64::seed_from_u64(2)) {
+                Ok(mut xla) => {
+                    // warm the executable cache
+                    xla.step().unwrap();
+                    let t0 = std::time::Instant::now();
+                    let macro_steps = scaled(10);
+                    for _ in 0..macro_steps {
+                        xla.step().unwrap();
+                    }
+                    let k = xla.k_steps;
+                    let per_adam =
+                        t0.elapsed().as_secs_f64() * 1e3 / (macro_steps * k) as f64;
+                    println!(
+                        "XLA cont_steps path ({k} fused Adam steps/call): {per_adam:8.2} ms/Adam-step (loss {:.4})",
+                        xla.current_loss()
+                    );
+                    println!(
+                        "speedup vs native continuous+sparse iteration:   {:8.2}x",
+                        native_per_iter / per_adam
+                    );
+                }
+                Err(e) => println!("[perf] XLA path unavailable: {e}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Table 3 reproduction: Wikitext2/C4-analog perplexity of Dense /
+//! SparseGPT / Wanda / NoWag-P / ARMOR at 2:4 sparsity.
+//!
+//! Paper shape to reproduce: ARMOR's ppl gap to dense is roughly half the
+//! best baseline's; update-free methods (Wanda, NoWag-P) trail SparseGPT.
+
+use armor::armor::ArmorConfig;
+use armor::baselines::Method;
+use armor::bench::{bench_header, scaled, ExperimentCtx};
+use armor::coordinator::{format_markdown_table, prune_model, PruneJob, TableRow};
+use armor::sparsity::Pattern;
+
+fn main() {
+    bench_header("Table 3", "2:4 perplexity across pruning methods");
+    let Some(ctx) = ExperimentCtx::load() else { return };
+    let iters = scaled(100);
+    let eval_seqs = scaled(10);
+
+    let armor_cfg = ArmorConfig { d_block: 32, n_iters: iters, ..Default::default() };
+    let methods = vec![
+        Method::Dense,
+        Method::SparseGpt,
+        Method::Wanda,
+        Method::NoWagP,
+        Method::Armor(armor_cfg),
+    ];
+
+    let mut rows = Vec::new();
+    let mut dense_ppl = (0.0, 0.0);
+    for method in methods {
+        let label = method.label();
+        let use_xla = matches!(method, Method::Armor(_)) && ctx.runtime.is_some();
+        let job = PruneJob { method, pattern: Pattern::TWO_FOUR, seed: 7, use_xla };
+        let t0 = std::time::Instant::now();
+        let (pruned, report) = prune_model(&ctx.model, &ctx.stats, &job, ctx.runtime.as_ref());
+        let (wiki, web) = ctx.eval_ppl(&pruned, eval_seqs);
+        if label == "Dense" {
+            dense_ppl = (wiki, web);
+        }
+        let sparsity = if label == "Dense" {
+            "0%".into()
+        } else if report.wrapper_overhead > 0.0 {
+            format!("2:4+{:.1}%", report.wrapper_overhead * 100.0)
+        } else {
+            "2:4".into()
+        };
+        println!(
+            "{label:<12} {sparsity:<12} wiki {wiki:7.3}  web {web:7.3}  gap {:+6.1}%/{:+6.1}%  [{:.0}s]",
+            100.0 * (wiki - dense_ppl.0) / dense_ppl.0,
+            100.0 * (web - dense_ppl.1) / dense_ppl.1,
+            t0.elapsed().as_secs_f64()
+        );
+        rows.push(TableRow::new(
+            &label,
+            vec![sparsity, format!("{wiki:.3}"), format!("{web:.3}")],
+        ));
+    }
+    println!(
+        "{}",
+        format_markdown_table(
+            "Table 3 analog: perplexity at 2:4",
+            &["Sparsity", "Wiki-like (↓)", "Web-like (↓)"],
+            &rows
+        )
+    );
+}

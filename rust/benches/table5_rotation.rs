@@ -1,0 +1,42 @@
+//! Table 5 reproduction: ARMOR vs rotation-based comparators
+//! (RotPruner / DenoiseRotator analog = block-Hadamard rotate-then-prune
+//! with NoWag-P or SparseGPT as the inner pruner).
+//!
+//! Paper shape to reproduce: ARMOR beats the Wanda/NoWag-based rotation
+//! variant and is competitive with the SparseGPT-based one, while keeping a
+//! *tunable* (not fixed) overhead.
+
+use armor::armor::ArmorConfig;
+use armor::baselines::{Method, RotationBase};
+use armor::bench::{bench_header, scaled, ExperimentCtx};
+use armor::coordinator::{format_markdown_table, prune_model, PruneJob, TableRow};
+use armor::sparsity::Pattern;
+
+fn main() {
+    bench_header("Table 5", "rotation-based baselines vs ARMOR at 2:4");
+    let Some(ctx) = ExperimentCtx::load() else { return };
+    let iters = scaled(100);
+    let eval_seqs = scaled(10);
+
+    let methods = vec![
+        Method::Dense,
+        Method::Rotation(RotationBase::NoWag),
+        Method::Rotation(RotationBase::SparseGpt),
+        Method::Armor(ArmorConfig { d_block: 32, n_iters: iters, ..Default::default() }),
+    ];
+
+    let mut rows = Vec::new();
+    for method in methods {
+        let label = method.label();
+        let use_xla = matches!(method, Method::Armor(_)) && ctx.runtime.is_some();
+        let job = PruneJob { method, pattern: Pattern::TWO_FOUR, seed: 11, use_xla };
+        let (pruned, report) = prune_model(&ctx.model, &ctx.stats, &job, ctx.runtime.as_ref());
+        let (wiki, _) = ctx.eval_ppl(&pruned, eval_seqs);
+        println!("{label:<24} wiki-ppl {wiki:7.3}  err {:9.3}", report.total_weighted_err);
+        rows.push(TableRow::new(&label, vec![format!("{wiki:.3}")]));
+    }
+    println!(
+        "{}",
+        format_markdown_table("Table 5 analog: rotation methods vs ARMOR", &["Wiki-like (↓)"], &rows)
+    );
+}

@@ -1,0 +1,131 @@
+//! The ARMOR factorization `Ŵ = A · (W' ⊙ M) · B` (paper Eq. 1).
+
+use crate::sparsity::{Compressed24, Mask};
+use crate::tensor::{BlockDiag, Matrix};
+
+/// Learnable parameters `θ = (A, B, W', M)` of one pruned layer.
+#[derive(Clone, Debug)]
+pub struct ArmorFactorization {
+    pub a: BlockDiag,
+    pub b: BlockDiag,
+    pub w_prime: Matrix,
+    pub mask: Mask,
+    pub d_block: usize,
+}
+
+impl ArmorFactorization {
+    pub fn d_out(&self) -> usize {
+        self.w_prime.rows
+    }
+    pub fn d_in(&self) -> usize {
+        self.w_prime.cols
+    }
+
+    /// The sparse core `S = W' ⊙ M`.
+    pub fn core(&self) -> Matrix {
+        self.mask.apply(&self.w_prime)
+    }
+
+    /// Densified reconstruction `Ŵ = A S B` (tests / native eval).
+    pub fn reconstruct(&self) -> Matrix {
+        self.a.matmul_right(&self.b.matmul_left(&self.core()))
+    }
+
+    /// Apply to activations: `y = Ŵ x = A (S (B x))` — the inference order
+    /// that keeps everything O(d·d_block) + one sparse matvec.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let bx = self.b.matvec(x);
+        let sx = crate::linalg::matvec(&self.core(), &bx);
+        self.a.matvec(&sx)
+    }
+
+    /// Inference-ready form: compressed 2:4 core + wrappers. Errors if the
+    /// mask is not 2:4 (N:M/unstructured variants keep the dense-masked core).
+    pub fn compress_core(&self) -> crate::Result<Compressed24> {
+        Compressed24::compress(&self.w_prime, &self.mask)
+    }
+
+    /// Parameter overhead of the wrappers relative to the original dense
+    /// layer: `(|A| + |B|) / (d_out · d_in)` — the paper's "+o%" columns.
+    pub fn wrapper_overhead(&self) -> f64 {
+        let wrappers = (self.a.param_count() + self.b.param_count()) as f64;
+        wrappers / (self.d_out() as f64 * self.d_in() as f64)
+    }
+
+    /// Total stored bytes in deployed (compressed-2:4) form.
+    pub fn storage_bytes(&self) -> usize {
+        let wrappers = (self.a.param_count() + self.b.param_count()) * 4;
+        match self.compress_core() {
+            Ok(c) => wrappers + c.storage_bytes(),
+            // non-2:4 core: dense values for kept entries + 1 bit/entry bitmap
+            Err(_) => {
+                wrappers
+                    + self.mask.count_ones() * 4
+                    + (self.mask.rows * self.mask.cols).div_ceil(8)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::nm_mask_from_importance;
+    use crate::util::rng::Pcg64;
+
+    fn sample(seed: u64) -> ArmorFactorization {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let d_block = 4;
+        let (d_out, d_in) = (8, 16);
+        let mut a = BlockDiag::identity(d_out, d_block);
+        let mut b = BlockDiag::identity(d_in, d_block);
+        for blk in a.blocks.iter_mut().chain(b.blocks.iter_mut()) {
+            *blk = blk.add(&Matrix::randn_scaled(d_block, d_block, 0.2, &mut rng));
+        }
+        let w_prime = Matrix::randn(d_out, d_in, &mut rng);
+        let mask = nm_mask_from_importance(&w_prime.hadamard(&w_prime), 2, 4);
+        ArmorFactorization { a, b, w_prime, mask, d_block }
+    }
+
+    #[test]
+    fn matvec_matches_dense_reconstruction() {
+        let f = sample(0);
+        let mut rng = Pcg64::seed_from_u64(7);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_gaussian()).collect();
+        let dense = f.reconstruct();
+        let want = crate::linalg::matvec(&dense, &x);
+        let got = f.matvec(&x);
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn overhead_formula() {
+        let f = sample(1);
+        // |A| = 2 blocks · 16, |B| = 4 blocks · 16 → 96 / 128
+        assert!((f.wrapper_overhead() - 96.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storage_counts_compressed_core() {
+        let f = sample(2);
+        let bytes = f.storage_bytes();
+        let wrapper_bytes = (32 + 64) * 4;
+        let core_bytes = f.compress_core().unwrap().storage_bytes();
+        assert_eq!(bytes, wrapper_bytes + core_bytes);
+    }
+
+    #[test]
+    fn core_respects_mask() {
+        let f = sample(3);
+        let core = f.core();
+        for r in 0..8 {
+            for c in 0..16 {
+                if !f.mask.get(r, c) {
+                    assert_eq!(core[(r, c)], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! ARMOR initialization (paper Eq. 3): `A = I`, `B = I`, `W' = W̄`, and `M`
+//! the top-N-of-M mask under the importance score `I_ij = W̄²_ij ‖X_j‖²` —
+//! i.e. exactly the NoWag-P pruning result, which makes NoWag-P both the
+//! starting point and (via Theorem 3.1) a performance floor.
+
+use crate::armor::ArmorFactorization;
+use crate::normalize::{nowag_normalize, Normalized};
+use crate::proxy::ProxyProblem;
+use crate::sparsity::{mask_from_importance, Pattern};
+use crate::tensor::{BlockDiag, Matrix};
+
+/// Build the initial factorization and the proxy problem for a layer.
+///
+/// Returns `(θ₀, problem, normalization)` — the normalization scales are kept
+/// so the caller can fold them back into `A`/`B` after optimization.
+pub fn initialize(
+    w: &Matrix,
+    x_sq_norms: &[f32],
+    d_block: usize,
+    pattern: Pattern,
+) -> (ArmorFactorization, ProxyProblem, Normalized) {
+    assert_eq!(w.cols, x_sq_norms.len(), "x_sq_norms must have d_in entries");
+    let norm = nowag_normalize(w);
+    let importance = importance_scores(&norm.w_bar, x_sq_norms);
+    let mask = mask_from_importance(&importance, pattern);
+    let fact = ArmorFactorization {
+        a: BlockDiag::identity(w.rows, d_block),
+        b: BlockDiag::identity(w.cols, d_block),
+        w_prime: norm.w_bar.clone(),
+        mask,
+        d_block,
+    };
+    let problem = ProxyProblem::new(norm.w_bar.clone(), x_sq_norms.to_vec());
+    (fact, problem, norm)
+}
+
+/// NoWag importance `I_ij = W̄²_ij · ‖X_j‖²`.
+pub fn importance_scores(w_bar: &Matrix, x_sq_norms: &[f32]) -> Matrix {
+    let mut imp = w_bar.hadamard(w_bar);
+    imp.scale_cols(x_sq_norms);
+    imp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn init_is_nowag_p() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(8, 16, &mut rng);
+        let d: Vec<f32> = (0..16).map(|_| rng.next_f32() + 0.1).collect();
+        let (f, p, _) = initialize(&w, &d, 4, Pattern::TWO_FOUR);
+        // A, B identity; W' = W̄
+        assert!(f.a.to_dense().max_abs_diff(&Matrix::eye(8)) < 1e-7);
+        assert!(f.b.to_dense().max_abs_diff(&Matrix::eye(16)) < 1e-7);
+        assert_eq!(f.w_prime, p.w_bar);
+        assert!(f.mask.satisfies_nm(2, 4));
+        // initial loss = plain masked loss (identity wrappers)
+        let l = p.loss(&f.a, &f.core(), &f.b);
+        assert!((l - p.loss_plain(&f.core())).abs() < 1e-9);
+    }
+
+    /// The 2:4 init mask is per-group optimal for the element-wise proxy
+    /// loss: any other valid 2:4 mask (with W'=W̄) has ≥ loss.
+    #[test]
+    fn init_mask_is_groupwise_optimal() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(4, 8, &mut rng);
+        let d: Vec<f32> = (0..8).map(|_| rng.next_f32() + 0.1).collect();
+        let (f, p, _) = initialize(&w, &d, 4, Pattern::TWO_FOUR);
+        let base = p.loss_plain(&f.core());
+        // try 50 random alternative 2:4 masks
+        for _ in 0..50 {
+            let rand_imp = Matrix::randn(4, 8, &mut rng);
+            let alt = crate::sparsity::nm_mask_from_importance(&rand_imp, 2, 4);
+            let alt_loss = p.loss_plain(&alt.apply(&p.w_bar));
+            assert!(alt_loss >= base - 1e-9, "{alt_loss} < {base}");
+        }
+    }
+
+    #[test]
+    fn importance_matches_formula() {
+        let w_bar = Matrix::from_vec(1, 4, vec![1.0, -2.0, 3.0, 0.5]);
+        let d = vec![2.0, 1.0, 0.0, 4.0];
+        let imp = importance_scores(&w_bar, &d);
+        assert_eq!(imp.data, vec![2.0, 4.0, 0.0, 1.0]);
+    }
+}

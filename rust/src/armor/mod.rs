@@ -1,0 +1,73 @@
+//! The ARMOR algorithm (paper §3): factorization, initialization, the
+//! continuous (A, B, W') update, the greedy sparse-core update, and the
+//! block-coordinate-descent driver tying them together.
+
+mod continuous;
+mod factorization;
+mod init;
+mod optimizer;
+mod sparse_core;
+pub mod variants;
+
+pub use continuous::{beta_smooth_lrs, AdamState, ContinuousOpt};
+pub use factorization::ArmorFactorization;
+pub use init::initialize;
+pub use optimizer::{ArmorOptimizer, IterRecord, PruneResult};
+pub use sparse_core::{sparse_core_step, SelectionHeuristic};
+
+use crate::sparsity::Pattern;
+
+/// Hyperparameters for one ARMOR pruning run (paper Appendix H defaults,
+/// scaled to this testbed — see DESIGN.md §6).
+#[derive(Clone, Debug)]
+pub struct ArmorConfig {
+    /// Block size of the `A`/`B` wrappers (paper: 128; small models: 16–64).
+    pub d_block: usize,
+    /// BCD iterations (paper: 20 000; here: hundreds by default).
+    pub n_iters: usize,
+    /// Continuous-step optimizer. Paper uses joint Adam in practice and
+    /// sequential GD with β-smoothness learning rates for the theory.
+    pub optimizer: ContinuousOpt,
+    /// Sparse-group selection heuristic (paper: L1Random).
+    pub heuristic: SelectionHeuristic,
+    /// Sparsity pattern of the core (paper headline: 2:4).
+    pub pattern: Pattern,
+    /// Whether to run the discrete sparse-core update. Automatically
+    /// disabled for unstructured patterns (paper §4.5).
+    pub sparse_update: bool,
+    /// Record a loss-history point every `record_every` iterations.
+    pub record_every: usize,
+    /// RNG seed for group selection.
+    pub seed: u64,
+}
+
+impl Default for ArmorConfig {
+    fn default() -> ArmorConfig {
+        ArmorConfig {
+            d_block: 32,
+            n_iters: 300,
+            optimizer: ContinuousOpt::Adam { lr: 1e-3 },
+            heuristic: SelectionHeuristic::L1Random,
+            pattern: Pattern::TWO_FOUR,
+            sparse_update: true,
+            record_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// One-call convenience: prune a single weight matrix with ARMOR.
+///
+/// `x_sq_norms` are the activation column statistics `d_j = ‖X_j‖²` from the
+/// calibration pass. Returns the optimized factorization (denormalized, ready
+/// for inference) together with loss diagnostics.
+pub fn prune_matrix(
+    w: &crate::tensor::Matrix,
+    x_sq_norms: &[f32],
+    cfg: &ArmorConfig,
+    rng: &mut crate::util::rng::Pcg64,
+) -> PruneResult {
+    let mut opt = ArmorOptimizer::new(w, x_sq_norms, cfg, rng.fork(0xA4A0));
+    opt.run(cfg.n_iters);
+    opt.finish()
+}

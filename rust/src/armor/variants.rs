@@ -1,0 +1,89 @@
+//! Pattern variants (paper §4.5): general N:M and unstructured sparsity.
+//!
+//! The core optimizer already handles both; this module provides the
+//! experiment-facing configuration helpers used by the Table 6 bench and the
+//! `nm_sweep` example.
+
+use crate::armor::{ArmorConfig, ContinuousOpt};
+use crate::sparsity::Pattern;
+
+/// Config for a general N:M run. The paper ran N:M extensions with fewer
+/// iterations than the 2:4 headline (2 000 vs 20 000); the ratio here is
+/// preserved through `iters`.
+pub fn nm_config(n: usize, m: usize, d_block: usize, iters: usize, seed: u64) -> ArmorConfig {
+    ArmorConfig {
+        d_block,
+        n_iters: iters,
+        pattern: Pattern::NM { n, m },
+        sparse_update: true,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Config for unstructured sparsity: continuous-only (the sparse-core sweep
+/// is combinatorially intractable without group structure — paper §4.5).
+pub fn unstructured_config(
+    keep_frac: f32,
+    d_block: usize,
+    iters: usize,
+    seed: u64,
+) -> ArmorConfig {
+    ArmorConfig {
+        d_block,
+        n_iters: iters,
+        pattern: Pattern::unstructured(keep_frac),
+        sparse_update: false,
+        optimizer: ContinuousOpt::Adam { lr: 1e-3 },
+        seed,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Pcg64;
+
+    /// Table 6 shape on a single random layer: ARMOR(pattern) improves over
+    /// NoWag-P(pattern) = its own init, for every pattern.
+    #[test]
+    fn all_patterns_beat_their_init() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(16, 32, &mut rng);
+        let d: Vec<f32> = (0..32).map(|_| rng.next_f32() + 0.1).collect();
+        let cfgs = vec![
+            nm_config(2, 4, 8, 30, 1),
+            nm_config(4, 8, 8, 30, 1),
+            nm_config(5, 8, 8, 30, 1),
+            nm_config(6, 8, 8, 30, 1),
+            unstructured_config(0.5, 8, 30, 1),
+        ];
+        for cfg in cfgs {
+            let res = crate::armor::prune_matrix(&w, &d, &cfg, &mut rng);
+            assert!(
+                res.final_loss <= res.initial_loss,
+                "{:?}: {} -> {}",
+                cfg.pattern,
+                res.initial_loss,
+                res.final_loss
+            );
+        }
+    }
+
+    /// Denser patterns (6:8) start from a lower loss than sparser ones (4:8).
+    #[test]
+    fn denser_patterns_lower_floor() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(16, 32, &mut rng);
+        let d: Vec<f32> = (0..32).map(|_| rng.next_f32() + 0.1).collect();
+        let mut inits = Vec::new();
+        for (n, m) in [(4, 8), (5, 8), (6, 8)] {
+            let cfg = nm_config(n, m, 8, 0, 1);
+            let res = crate::armor::prune_matrix(&w, &d, &cfg, &mut rng);
+            inits.push(res.initial_loss);
+        }
+        assert!(inits[0] > inits[1] && inits[1] > inits[2], "{inits:?}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Magnitude pruning: importance `|W_ij|`, no weight update. The classical
+//! weight-update-free floor every pruning paper reports.
+
+use crate::sparsity::{mask_from_importance, Pattern};
+use crate::tensor::Matrix;
+
+/// Prune by absolute magnitude under the given pattern.
+pub fn magnitude_prune(w: &Matrix, pattern: Pattern) -> Matrix {
+    let importance = Matrix::from_fn(w.rows, w.cols, |r, c| w[(r, c)].abs());
+    mask_from_importance(&importance, pattern).apply(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_largest_per_group() {
+        let w = Matrix::from_vec(1, 4, vec![0.1, -5.0, 2.0, 0.3]);
+        let out = magnitude_prune(&w, Pattern::TWO_FOUR);
+        assert_eq!(out.data, vec![0.0, -5.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn density_matches_pattern() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(32, 64, &mut rng);
+        let out = magnitude_prune(&w, Pattern::TWO_FOUR);
+        let nz = out.data.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nz, 32 * 64 / 2);
+    }
+
+    #[test]
+    fn unpruned_weights_unchanged() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(8, 16, &mut rng);
+        let out = magnitude_prune(&w, Pattern::TWO_FOUR);
+        for i in 0..w.data.len() {
+            assert!(out.data[i] == 0.0 || out.data[i] == w.data[i]);
+        }
+    }
+}

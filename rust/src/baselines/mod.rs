@@ -1,0 +1,269 @@
+//! Baseline pruners the paper compares against (§4 "Baselines"):
+//! magnitude, Wanda, NoWag-P, SparseGPT, plus a rotation-based comparator
+//! standing in for RotPruner / DenoiseRotator (Table 5).
+//!
+//! All baselines and ARMOR share one entry point, [`prune_layer`], so the
+//! coordinator and the bench harness treat methods uniformly.
+
+mod magnitude;
+mod nowag_p;
+mod rotation;
+mod sparsegpt;
+mod wanda;
+
+pub use magnitude::magnitude_prune;
+pub use nowag_p::nowag_p_prune;
+pub use rotation::{hadamard_matrix, rotation_prune, RotationBase};
+pub use sparsegpt::sparsegpt_prune;
+pub use wanda::wanda_prune;
+
+use crate::armor::{ArmorConfig, ArmorFactorization};
+use crate::sparsity::Pattern;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Calibration statistics for one linear layer, captured by running the
+/// dense model over the calibration set.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// `d_j = ‖X_j‖²` — squared activation column norms (Wanda / NoWag /
+    /// ARMOR).
+    pub x_sq_norms: Vec<f32>,
+    /// Hessian sketch `H = X Xᵀ` (SparseGPT, rotation). `None` if the
+    /// capture ran in norms-only mode.
+    pub gram: Option<Matrix>,
+    /// number of calibration tokens accumulated
+    pub n_samples: usize,
+}
+
+impl CalibStats {
+    /// Uniform stats (no calibration data — degenerate but well-defined).
+    pub fn uniform(d_in: usize) -> CalibStats {
+        CalibStats { x_sq_norms: vec![1.0; d_in], gram: None, n_samples: 0 }
+    }
+
+    /// From raw activation rows (n × d_in), computing both norms and Gram.
+    pub fn from_activations(x: &Matrix) -> CalibStats {
+        let gram = x.transpose().matmul(x);
+        let x_sq_norms = (0..x.cols).map(|j| gram[(j, j)]).collect();
+        CalibStats { x_sq_norms, gram: Some(gram), n_samples: x.rows }
+    }
+}
+
+/// Which pruning method to run.
+#[derive(Clone, Debug)]
+pub enum Method {
+    Dense,
+    Magnitude,
+    Wanda,
+    NoWagP,
+    SparseGpt,
+    /// rotate-then-prune comparator; base selects the inner pruner
+    Rotation(RotationBase),
+    Armor(ArmorConfig),
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Dense => "Dense".into(),
+            Method::Magnitude => "Magnitude".into(),
+            Method::Wanda => "Wanda".into(),
+            Method::NoWagP => "NoWag-P".into(),
+            Method::SparseGpt => "SparseGPT".into(),
+            Method::Rotation(b) => format!("{}+Rotation", b.label()),
+            Method::Armor(_) => "ARMOR".into(),
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str, armor_cfg: &ArmorConfig) -> Option<Method> {
+        match s {
+            "dense" => Some(Method::Dense),
+            "magnitude" => Some(Method::Magnitude),
+            "wanda" => Some(Method::Wanda),
+            "nowag" | "nowag-p" => Some(Method::NoWagP),
+            "sparsegpt" => Some(Method::SparseGpt),
+            "rotation" | "rotation-nowag" => Some(Method::Rotation(RotationBase::NoWag)),
+            "rotation-sparsegpt" => Some(Method::Rotation(RotationBase::SparseGpt)),
+            "armor" => Some(Method::Armor(armor_cfg.clone())),
+            _ => None,
+        }
+    }
+}
+
+/// A pruned layer in deployable form.
+#[derive(Clone, Debug)]
+pub struct PrunedLayer {
+    pub w_hat: Matrix,
+    pub method: String,
+    pub pattern: Pattern,
+    /// data-aware reconstruction error `Σ (W−Ŵ)²_ij d_j` against the
+    /// *original* (unnormalized) weights — comparable across methods
+    pub weighted_err: f64,
+    /// deployed storage bytes (compressed core + any wrappers)
+    pub storage_bytes: usize,
+    /// ARMOR factorization if the method produces one
+    pub armor: Option<ArmorFactorization>,
+}
+
+/// Data-aware reconstruction error against the original weights.
+pub fn weighted_error(w: &Matrix, w_hat: &Matrix, d: &[f32]) -> f64 {
+    assert_eq!(w.shape(), w_hat.shape());
+    let mut e = 0.0f64;
+    for r in 0..w.rows {
+        let wr = w.row(r);
+        let hr = w_hat.row(r);
+        for c in 0..w.cols {
+            let diff = (wr[c] - hr[c]) as f64;
+            e += diff * diff * d[c] as f64;
+        }
+    }
+    e
+}
+
+/// Storage bytes of a plain masked matrix under `pattern` (2:4 compressed
+/// when applicable, else values + bitmap).
+pub fn masked_storage_bytes(w_hat: &Matrix, pattern: Pattern) -> usize {
+    let total = w_hat.rows * w_hat.cols;
+    match pattern {
+        Pattern::NM { n: 2, m: 4 } => total / 2 * 4 + (total / 4).div_ceil(2),
+        Pattern::NM { n, m } => total * n / m * 4 + total.div_ceil(8),
+        Pattern::Unstructured { .. } => {
+            let kept = w_hat.data.iter().filter(|&&x| x != 0.0).count();
+            kept * 4 + total.div_ceil(8)
+        }
+    }
+}
+
+/// Unified pruning entry point used by the coordinator.
+pub fn prune_layer(
+    w: &Matrix,
+    stats: &CalibStats,
+    method: &Method,
+    pattern: Pattern,
+    rng: &mut Pcg64,
+) -> PrunedLayer {
+    let d = &stats.x_sq_norms;
+    let (w_hat, armor, storage) = match method {
+        Method::Dense => (w.clone(), None, w.rows * w.cols * 4),
+        Method::Magnitude => {
+            let wh = magnitude_prune(w, pattern);
+            let st = masked_storage_bytes(&wh, pattern);
+            (wh, None, st)
+        }
+        Method::Wanda => {
+            let wh = wanda_prune(w, d, pattern);
+            let st = masked_storage_bytes(&wh, pattern);
+            (wh, None, st)
+        }
+        Method::NoWagP => {
+            let wh = nowag_p_prune(w, d, pattern);
+            let st = masked_storage_bytes(&wh, pattern);
+            (wh, None, st)
+        }
+        Method::SparseGpt => {
+            let wh = sparsegpt_prune(w, stats, pattern);
+            let st = masked_storage_bytes(&wh, pattern);
+            (wh, None, st)
+        }
+        Method::Rotation(base) => {
+            let wh = rotation_prune(w, stats, pattern, *base);
+            // rotation carries a fixed dense-rotation overhead per layer
+            let st = masked_storage_bytes(&wh, pattern) + rotation::rotation_overhead_bytes(w.cols);
+            (wh, None, st)
+        }
+        Method::Armor(cfg) => {
+            let mut cfg = cfg.clone();
+            cfg.pattern = pattern;
+            if matches!(pattern, Pattern::Unstructured { .. }) {
+                cfg.sparse_update = false;
+            }
+            let res = crate::armor::prune_matrix(w, d, &cfg, rng);
+            let st = res.factorization.storage_bytes();
+            (res.w_hat(), Some(res.factorization), st)
+        }
+    };
+    PrunedLayer {
+        weighted_err: weighted_error(w, &w_hat, d),
+        storage_bytes: storage,
+        method: method.label(),
+        pattern,
+        w_hat,
+        armor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(seed: u64) -> (Matrix, CalibStats) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let w = Matrix::randn(16, 32, &mut rng);
+        let x = Matrix::randn(64, 32, &mut rng);
+        (w, CalibStats::from_activations(&x))
+    }
+
+    #[test]
+    fn calib_stats_norms_match_gram_diag() {
+        let (_, stats) = setup(0);
+        let g = stats.gram.as_ref().unwrap();
+        for j in 0..32 {
+            assert!((stats.x_sq_norms[j] - g[(j, j)]).abs() < 1e-3);
+        }
+    }
+
+    /// Every method produces a finite result and ARMOR has the lowest
+    /// weighted error (it optimizes exactly this objective family).
+    #[test]
+    fn method_ordering_on_random_layer() {
+        let (w, stats) = setup(1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let armor_cfg = ArmorConfig { d_block: 8, n_iters: 60, ..Default::default() };
+        let mut errs = std::collections::BTreeMap::new();
+        for method in [
+            Method::Magnitude,
+            Method::Wanda,
+            Method::NoWagP,
+            Method::SparseGpt,
+            Method::Armor(armor_cfg),
+        ] {
+            let out = prune_layer(&w, &stats, &method, Pattern::TWO_FOUR, &mut rng);
+            assert!(out.w_hat.all_finite(), "{}", out.method);
+            errs.insert(out.method.clone(), out.weighted_err);
+        }
+        let armor = errs["ARMOR"];
+        for (name, &e) in &errs {
+            if name != "ARMOR" {
+                assert!(armor <= e * 1.001, "ARMOR {armor} vs {name} {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_method_is_lossless() {
+        let (w, stats) = setup(3);
+        let mut rng = Pcg64::seed_from_u64(0);
+        let out = prune_layer(&w, &stats, &Method::Dense, Pattern::TWO_FOUR, &mut rng);
+        assert_eq!(out.weighted_err, 0.0);
+    }
+
+    #[test]
+    fn storage_reflects_compression() {
+        let (w, stats) = setup(4);
+        let mut rng = Pcg64::seed_from_u64(0);
+        let dense = prune_layer(&w, &stats, &Method::Dense, Pattern::TWO_FOUR, &mut rng);
+        let pruned = prune_layer(&w, &stats, &Method::NoWagP, Pattern::TWO_FOUR, &mut rng);
+        assert!(pruned.storage_bytes < dense.storage_bytes * 6 / 10);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        let cfg = ArmorConfig::default();
+        for s in ["dense", "magnitude", "wanda", "nowag", "sparsegpt", "rotation", "armor"] {
+            assert!(Method::parse(s, &cfg).is_some(), "{s}");
+        }
+        assert!(Method::parse("bogus", &cfg).is_none());
+    }
+}

@@ -1,0 +1,75 @@
+//! NoWag-P (Liu et al., 2025): prune under the normalized importance
+//! `I_ij = W̄²_ij ‖X_j‖²`, weights unchanged. This is exactly ARMOR's
+//! initialization (paper Eq. 3), which is why the paper uses it as the
+//! ablation baseline and Theorem 3.1 floor.
+
+use crate::armor::initialize;
+use crate::sparsity::Pattern;
+use crate::tensor::Matrix;
+
+/// NoWag-P pruning: keep entries selected by the normalized importance mask;
+/// kept entries retain their original (unnormalized) values.
+pub fn nowag_p_prune(w: &Matrix, x_sq_norms: &[f32], pattern: Pattern) -> Matrix {
+    // d_block is irrelevant for the mask; use the largest divisor ≤ 8 to
+    // satisfy the BlockDiag constructor cheaply.
+    let db = largest_block(w.rows, w.cols, 8);
+    let (fact, _, _) = initialize(w, x_sq_norms, db, pattern);
+    fact.mask.apply(w)
+}
+
+fn largest_block(r: usize, c: usize, cap: usize) -> usize {
+    for db in (1..=cap).rev() {
+        if r % db == 0 && c % db == 0 {
+            return db;
+        }
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matches_armor_init_mask() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(8, 16, &mut rng);
+        let d: Vec<f32> = (0..16).map(|_| rng.next_f32() + 0.1).collect();
+        let pruned = nowag_p_prune(&w, &d, Pattern::TWO_FOUR);
+        let (fact, _, _) = initialize(&w, &d, 4, Pattern::TWO_FOUR);
+        assert_eq!(pruned, fact.mask.apply(&w));
+    }
+
+    #[test]
+    fn normalization_matters_vs_wanda() {
+        // A row with huge overall scale: NoWag normalizes it away, Wanda does
+        // not; construct a case where they disagree.
+        let w = Matrix::from_vec(
+            2,
+            4,
+            vec![
+                100.0, 150.0, 140.0, 100.0, // big row
+                1.0, 0.1, 0.1, 0.9, // small row
+            ],
+        );
+        let d = vec![1.0, 1.0, 1.0, 1.0];
+        let nowag = nowag_p_prune(&w, &d, Pattern::TWO_FOUR);
+        // row-normalization preserves within-row ordering under uniform d,
+        // so the masks agree on each row here; this is a consistency check
+        // that normalization never breaks the 2:4 structure.
+        let nz: usize = nowag.data.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nz, 4);
+    }
+
+    #[test]
+    fn weights_not_updated() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let w = Matrix::randn(16, 32, &mut rng);
+        let d: Vec<f32> = (0..32).map(|_| rng.next_f32() + 0.1).collect();
+        let out = nowag_p_prune(&w, &d, Pattern::TWO_FOUR);
+        for i in 0..w.data.len() {
+            assert!(out.data[i] == 0.0 || out.data[i] == w.data[i]);
+        }
+    }
+}

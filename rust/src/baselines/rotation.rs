@@ -1,0 +1,207 @@
+//! Rotation-based pruning comparator (Table 5's RotPruner / DenoiseRotator
+//! family): apply a fixed orthogonal block-Hadamard rotation to the input
+//! space, prune in the rotated basis, and fold the inverse rotation into the
+//! layer at inference (a *fixed*, non-tunable overhead — exactly the
+//! trade-off the paper contrasts with ARMOR's tunable `d_block`).
+//!
+//! Substitution note (DESIGN.md §3): we do not have the baselines' trained
+//! rotation checkpoints; a Walsh–Hadamard rotation is the standard
+//! data-independent instantiation of this method class (QuaRot/SliceGPT
+//! lineage) and exercises the same code path and cost model.
+
+use crate::baselines::CalibStats;
+use crate::sparsity::Pattern;
+use crate::tensor::Matrix;
+
+/// Inner pruner applied in the rotated basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotationBase {
+    NoWag,
+    SparseGpt,
+}
+
+impl RotationBase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RotationBase::NoWag => "NoWag-P",
+            RotationBase::SparseGpt => "SparseGPT",
+        }
+    }
+}
+
+/// Normalized Walsh–Hadamard matrix of size `n` (power of two), `H Hᵀ = I`.
+pub fn hadamard_matrix(n: usize) -> Matrix {
+    assert!(n.is_power_of_two(), "hadamard size {n} must be a power of two");
+    let mut h = Matrix::from_vec(1, 1, vec![1.0]);
+    let mut size = 1;
+    while size < n {
+        let mut next = Matrix::zeros(size * 2, size * 2);
+        for r in 0..size {
+            for c in 0..size {
+                let v = h[(r, c)];
+                next[(r, c)] = v;
+                next[(r, c + size)] = v;
+                next[(r + size, c)] = v;
+                next[(r + size, c + size)] = -v;
+            }
+        }
+        h = next;
+        size *= 2;
+    }
+    h.scale(1.0 / (n as f32).sqrt())
+}
+
+/// Block-Hadamard rotation `Q = I ⊗ H_b` over the input dimension: the
+/// largest power-of-two block `b ≤ 64` dividing `d_in`.
+fn rotation_blocks(d_in: usize) -> (usize, Matrix) {
+    let mut b = 64;
+    while b > 1 && d_in % b != 0 {
+        b /= 2;
+    }
+    (b, hadamard_matrix(b))
+}
+
+/// Bytes of the per-layer rotation overhead at inference (the dense `H_b`
+/// blocks applied to activations).
+pub fn rotation_overhead_bytes(d_in: usize) -> usize {
+    let (b, _) = rotation_blocks(d_in);
+    (d_in / b) * b * b * 4
+}
+
+/// Rotate → prune → rotate back. Returns the effective dense Ŵ
+/// (`Ŵ = prune(W·Q) · Qᵀ`) for evaluation; deployment would keep the sparse
+/// core and the rotation separate.
+pub fn rotation_prune(w: &Matrix, stats: &CalibStats, pattern: Pattern, base: RotationBase) -> Matrix {
+    let d_in = w.cols;
+    let (b, h) = rotation_blocks(d_in);
+    if b == 1 {
+        // no usable power-of-two block: degenerate to the base pruner
+        return match base {
+            RotationBase::NoWag => {
+                crate::baselines::nowag_p_prune(w, &stats.x_sq_norms, pattern)
+            }
+            RotationBase::SparseGpt => crate::baselines::sparsegpt_prune(w, stats, pattern),
+        };
+    }
+
+    // W_rot = W · Q, applied block-wise (Q = blockdiag(H, ..., H)).
+    let apply_q = |m: &Matrix, transpose: bool| -> Matrix {
+        let hh = if transpose { h.transpose() } else { h.clone() };
+        let mut out = Matrix::zeros(m.rows, m.cols);
+        for blk in 0..d_in / b {
+            let c0 = blk * b;
+            for r in 0..m.rows {
+                for cc in 0..b {
+                    let mut acc = 0.0f32;
+                    for t in 0..b {
+                        acc += m[(r, c0 + t)] * hh[(t, cc)];
+                    }
+                    out[(r, c0 + cc)] = acc;
+                }
+            }
+        }
+        out
+    };
+
+    let w_rot = apply_q(w, false);
+
+    // Rotate the calibration stats: Gram_rot = Qᵀ G Q; norms are its diagonal.
+    let stats_rot = match &stats.gram {
+        Some(g) => {
+            let mut g_rot = Matrix::zeros(d_in, d_in);
+            // Qᵀ G Q block-wise: (Qᵀ G Q)[I,J] = Hᵀ G[I,J] H per block pair
+            let nb = d_in / b;
+            for i in 0..nb {
+                for j in 0..nb {
+                    let mut gij = Matrix::zeros(b, b);
+                    for r in 0..b {
+                        for c in 0..b {
+                            gij[(r, c)] = g[(i * b + r, j * b + c)];
+                        }
+                    }
+                    let rot = h.transpose().matmul(&gij).matmul(&h);
+                    for r in 0..b {
+                        for c in 0..b {
+                            g_rot[(i * b + r, j * b + c)] = rot[(r, c)];
+                        }
+                    }
+                }
+            }
+            let x_sq_norms = (0..d_in).map(|j| g_rot[(j, j)].max(0.0)).collect();
+            CalibStats { x_sq_norms, gram: Some(g_rot), n_samples: stats.n_samples }
+        }
+        None => {
+            // without the Gram we can only approximate: uniform within block
+            let mut norms = vec![0.0f32; d_in];
+            for blk in 0..d_in / b {
+                let s: f32 = stats.x_sq_norms[blk * b..(blk + 1) * b].iter().sum();
+                for t in 0..b {
+                    norms[blk * b + t] = s / b as f32;
+                }
+            }
+            CalibStats { x_sq_norms: norms, gram: None, n_samples: stats.n_samples }
+        }
+    };
+
+    let pruned_rot = match base {
+        RotationBase::NoWag => {
+            crate::baselines::nowag_p_prune(&w_rot, &stats_rot.x_sq_norms, pattern)
+        }
+        RotationBase::SparseGpt => crate::baselines::sparsegpt_prune(&w_rot, &stats_rot, pattern),
+    };
+
+    // Ŵ = pruned_rot · Qᵀ
+    apply_q(&pruned_rot, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        for n in [2usize, 4, 16, 64] {
+            let h = hadamard_matrix(n);
+            let id = h.matmul(&h.transpose());
+            assert!(id.max_abs_diff(&Matrix::eye(n)) < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_energy() {
+        // pruning nothing (dense pattern impossible here) — instead check
+        // that rotate→prune→unrotate yields finite output with the right
+        // effective sparsity *in the rotated basis* (dense in original).
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(16, 64, &mut rng);
+        let x = Matrix::randn(128, 64, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        let out = rotation_prune(&w, &stats, Pattern::TWO_FOUR, RotationBase::NoWag);
+        assert!(out.all_finite());
+        assert_eq!(out.shape(), w.shape());
+        // output differs from plain NoWag (rotation actually does something)
+        let plain = crate::baselines::nowag_p_prune(&w, &stats.x_sq_norms, Pattern::TWO_FOUR);
+        assert!(out.max_abs_diff(&plain) > 1e-3);
+    }
+
+    #[test]
+    fn rotated_frobenius_error_not_catastrophic() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(32, 64, &mut rng);
+        let x = Matrix::randn(256, 64, &mut rng);
+        let stats = CalibStats::from_activations(&x);
+        let rot = rotation_prune(&w, &stats, Pattern::TWO_FOUR, RotationBase::SparseGpt);
+        let err_rot = crate::baselines::weighted_error(&w, &rot, &stats.x_sq_norms);
+        // compare against dropping everything (worst case) — must be far better
+        let zero = Matrix::zeros(32, 64);
+        let err_zero = crate::baselines::weighted_error(&w, &zero, &stats.x_sq_norms);
+        assert!(err_rot < 0.7 * err_zero, "{err_rot} vs {err_zero}");
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        assert_eq!(rotation_overhead_bytes(256), (256 / 64) * 64 * 64 * 4);
+        assert_eq!(rotation_overhead_bytes(24), (24 / 8) * 8 * 8 * 4);
+    }
+}

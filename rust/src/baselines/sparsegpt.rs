@@ -1,0 +1,186 @@
+//! SparseGPT (Frantar & Alistarh, 2023): Hessian-sketch-based pruning with
+//! OBS weight updates.
+//!
+//! Per layer: form `H = X Xᵀ + λI`, take the upper Cholesky factor `U` of
+//! `H⁻¹` (so `H⁻¹ = Uᵀ U`), then sweep columns left→right. Within each M-wide
+//! group, per row keep the N entries with the largest `w² / U²_jj` score;
+//! pruned entries propagate their error into the not-yet-visited columns via
+//! the OBS rank-1 update `W[:, j+1:] -= err ⊗ U[j, j+1:] / U[j, j]`.
+
+use crate::baselines::CalibStats;
+use crate::linalg::{cholesky, inv_spd};
+use crate::sparsity::Pattern;
+use crate::tensor::Matrix;
+
+/// Relative dampening added to the Hessian diagonal (SparseGPT uses 1%).
+const DAMP_FRAC: f32 = 0.01;
+
+/// SparseGPT pruning with weight updates. Falls back to Wanda-style masking
+/// if no Gram sketch is available in `stats`.
+pub fn sparsegpt_prune(w: &Matrix, stats: &CalibStats, pattern: Pattern) -> Matrix {
+    let Some(gram) = &stats.gram else {
+        return crate::baselines::wanda_prune(w, &stats.x_sq_norms, pattern);
+    };
+    let d_in = w.cols;
+    assert_eq!(gram.shape(), (d_in, d_in));
+
+    // H = XXᵀ + λI, λ = 1% of mean diagonal (dead columns get λ too).
+    let mut h = gram.clone();
+    let mean_diag: f32 = (0..d_in).map(|j| h[(j, j)]).sum::<f32>() / d_in as f32;
+    let damp = (DAMP_FRAC * mean_diag).max(1e-8);
+    for j in 0..d_in {
+        h[(j, j)] += damp;
+    }
+
+    // U = upper Cholesky of H⁻¹ (H⁻¹ = Uᵀ U ⇒ U = Lᵀ where L Lᵀ = H⁻¹).
+    let hinv = match inv_spd(&h) {
+        Some(m) => m,
+        None => return crate::baselines::wanda_prune(w, &stats.x_sq_norms, pattern),
+    };
+    let u = match cholesky(&hinv) {
+        Some(l) => l.transpose(),
+        None => return crate::baselines::wanda_prune(w, &stats.x_sq_norms, pattern),
+    };
+
+    let mut wk = w.clone(); // working copy, mutated by OBS updates
+    let mut out = w.clone();
+
+    match pattern {
+        Pattern::NM { n, m } => {
+            assert_eq!(d_in % m, 0);
+            for g in 0..d_in / m {
+                let c0 = g * m;
+                // choose per-row mask for this group from current wk
+                for r in 0..w.rows {
+                    let mut scores: Vec<(f32, usize)> = (0..m)
+                        .map(|t| {
+                            let j = c0 + t;
+                            let denom = u[(j, j)] * u[(j, j)];
+                            (wk[(r, j)] * wk[(r, j)] / denom.max(1e-20), t)
+                        })
+                        .collect();
+                    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+                    for &(_, t) in scores.iter().skip(n) {
+                        prune_entry_and_propagate(&mut wk, &mut out, &u, r, c0 + t);
+                    }
+                    for &(_, t) in scores.iter().take(n) {
+                        out[(r, c0 + t)] = wk[(r, c0 + t)];
+                    }
+                }
+            }
+        }
+        Pattern::Unstructured { .. } => {
+            // global threshold on the OBS saliency computed up-front
+            let keep = ((w.rows * d_in) as f64 * pattern.keep_frac() as f64).round() as usize;
+            let mut saliency: Vec<(f32, u32)> = Vec::with_capacity(w.rows * d_in);
+            for r in 0..w.rows {
+                for j in 0..d_in {
+                    let denom = u[(j, j)] * u[(j, j)];
+                    saliency.push((w[(r, j)] * w[(r, j)] / denom.max(1e-20), (r * d_in + j) as u32));
+                }
+            }
+            saliency.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            let mut keep_mask = vec![false; w.rows * d_in];
+            for &(_, idx) in saliency.iter().take(keep) {
+                keep_mask[idx as usize] = true;
+            }
+            for j in 0..d_in {
+                for r in 0..w.rows {
+                    if keep_mask[r * d_in + j] {
+                        out[(r, j)] = wk[(r, j)];
+                    } else {
+                        prune_entry_and_propagate(&mut wk, &mut out, &u, r, j);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Zero entry (r, j) and propagate the OBS error into columns j+1.. of the
+/// working copy.
+#[inline]
+fn prune_entry_and_propagate(wk: &mut Matrix, out: &mut Matrix, u: &Matrix, r: usize, j: usize) {
+    let d_in = wk.cols;
+    let err = wk[(r, j)] / u[(j, j)];
+    out[(r, j)] = 0.0;
+    if err != 0.0 {
+        let urow = u.row(j);
+        let wrow = wk.row_mut(r);
+        for c in j + 1..d_in {
+            wrow[c] -= err * urow[c];
+        }
+    }
+    wk[(r, j)] = 0.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{nowag_p_prune, weighted_error};
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64, rows: usize, cols: usize, n_act: usize) -> (Matrix, CalibStats, Matrix) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let w = Matrix::randn(rows, cols, &mut rng);
+        let x = Matrix::randn(n_act, cols, &mut rng);
+        (w, CalibStats::from_activations(&x), x)
+    }
+
+    #[test]
+    fn produces_valid_24_sparsity() {
+        let (w, stats, _) = setup(0, 16, 32, 128);
+        let out = sparsegpt_prune(&w, &stats, Pattern::TWO_FOUR);
+        let mask = crate::sparsity::Mask::from_matrix(&Matrix::from_fn(16, 32, |r, c| {
+            (out[(r, c)] != 0.0) as u8 as f32
+        }));
+        assert!(mask.satisfies_nm(2, 4));
+        assert!(out.all_finite());
+    }
+
+    /// The whole point of OBS updates: reconstruction error of the *layer
+    /// output* (‖(W−Ŵ)X‖²) beats the update-free mask-only methods.
+    #[test]
+    fn weight_updates_reduce_output_error() {
+        let (w, stats, x) = setup(1, 16, 64, 256);
+        let sg = sparsegpt_prune(&w, &stats, Pattern::TWO_FOUR);
+        let nw = nowag_p_prune(&w, &stats.x_sq_norms, Pattern::TWO_FOUR);
+        let out_err = |wh: &Matrix| {
+            let diff = w.sub(wh);
+            diff.matmul(&x.transpose()).frobenius_sq()
+        };
+        assert!(
+            out_err(&sg) < out_err(&nw),
+            "sparsegpt {} vs nowag {}",
+            out_err(&sg),
+            out_err(&nw)
+        );
+    }
+
+    #[test]
+    fn falls_back_without_gram() {
+        let (w, mut stats, _) = setup(2, 8, 16, 32);
+        stats.gram = None;
+        let out = sparsegpt_prune(&w, &stats, Pattern::TWO_FOUR);
+        let wanda = crate::baselines::wanda_prune(&w, &stats.x_sq_norms, Pattern::TWO_FOUR);
+        assert_eq!(out, wanda);
+    }
+
+    #[test]
+    fn unstructured_density() {
+        let (w, stats, _) = setup(3, 16, 32, 128);
+        let out = sparsegpt_prune(&w, &stats, Pattern::unstructured(0.5));
+        let nz = out.data.iter().filter(|&&x| x != 0.0).count();
+        let total = 16 * 32;
+        assert!((nz as i64 - (total / 2) as i64).abs() <= 2, "nz = {nz}");
+    }
+
+    #[test]
+    fn weighted_error_finite_and_reasonable() {
+        let (w, stats, _) = setup(4, 16, 32, 128);
+        let out = sparsegpt_prune(&w, &stats, Pattern::TWO_FOUR);
+        let err = weighted_error(&w, &out, &stats.x_sq_norms);
+        assert!(err.is_finite() && err > 0.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Wanda (Sun et al., 2024): importance `|W_ij| · ‖X_j‖₂`, no weight update.
+
+use crate::sparsity::{mask_from_importance, Pattern};
+use crate::tensor::Matrix;
+
+/// Prune with the Wanda criterion. `x_sq_norms` are the *squared* activation
+/// norms (`‖X_j‖²`); Wanda's score uses the norm itself, so we take the sqrt.
+pub fn wanda_prune(w: &Matrix, x_sq_norms: &[f32], pattern: Pattern) -> Matrix {
+    assert_eq!(w.cols, x_sq_norms.len());
+    let importance = Matrix::from_fn(w.rows, w.cols, |r, c| {
+        w[(r, c)].abs() * x_sq_norms[c].max(0.0).sqrt()
+    });
+    mask_from_importance(&importance, pattern).apply(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn activation_weighting_changes_choice() {
+        // |w| would keep cols 1,2; activation weighting favors cols 0,3.
+        let w = Matrix::from_vec(1, 4, vec![1.0, 1.5, 1.4, 1.0]);
+        let d = vec![100.0, 0.01, 0.01, 100.0];
+        let out = wanda_prune(&w, &d, Pattern::TWO_FOUR);
+        assert_eq!(out.data, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn uniform_activations_reduce_to_magnitude() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(8, 16, &mut rng);
+        let d = vec![1.0; 16];
+        let wanda = wanda_prune(&w, &d, Pattern::TWO_FOUR);
+        let mag = crate::baselines::magnitude_prune(&w, Pattern::TWO_FOUR);
+        assert_eq!(wanda, mag);
+    }
+
+    #[test]
+    fn weights_not_updated() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(8, 16, &mut rng);
+        let d: Vec<f32> = (0..16).map(|_| rng.next_f32() + 0.1).collect();
+        let out = wanda_prune(&w, &d, Pattern::TWO_FOUR);
+        for i in 0..w.data.len() {
+            assert!(out.data[i] == 0.0 || out.data[i] == w.data[i]);
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Criterion-less micro/macro benchmark harness (criterion is unavailable
+//! offline). Provides warmup + timed iterations with mean/p50/p99 stats and
+//! black-box value sinking, plus shared helpers for the per-table bench
+//! binaries under `rust/benches/`.
+
+use crate::util::timer::Stats;
+use std::time::Instant;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub std_ms: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>8} iters   mean {:>9.3} ms   p50 {:>9.3} ms   p99 {:>9.3} ms   σ {:>7.3}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms, self.std_ms
+        )
+    }
+}
+
+/// Time a closure: `warmup` untimed runs, then up to `iters` timed runs
+/// capped by `max_secs` wall clock.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, max_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::default();
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64() * 1e3);
+        if start.elapsed().as_secs_f64() > max_secs {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.len(),
+        mean_ms: stats.mean(),
+        p50_ms: stats.percentile(50.0),
+        p99_ms: stats.percentile(99.0),
+        std_ms: stats.std(),
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(table: &str, description: &str) {
+    println!("=====================================================================");
+    println!("ARMOR reproduction bench — {table}");
+    println!("{description}");
+    println!("=====================================================================");
+}
+
+/// Environment-tunable scale factor so CI can shrink benches
+/// (`ARMOR_BENCH_SCALE=0.2 cargo bench`).
+pub fn bench_scale() -> f64 {
+    std::env::var("ARMOR_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
+}
+
+/// Scale an iteration count, flooring at 1.
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * bench_scale()).round() as usize).max(1)
+}
+
+/// Shared experiment context for the per-table bench binaries: the trained
+/// model, corpus splits, calibration stats, and (when built) the PJRT
+/// runtime. Returns `None` with a notice when `make artifacts` hasn't run —
+/// benches then exit cleanly instead of failing.
+pub struct ExperimentCtx {
+    pub model: crate::model::GptModel,
+    pub wiki: String,
+    pub web: String,
+    pub train_tokens: Vec<u16>,
+    pub stats: std::collections::BTreeMap<String, crate::baselines::CalibStats>,
+    pub runtime: Option<crate::runtime::Runtime>,
+}
+
+impl ExperimentCtx {
+    pub fn load() -> Option<ExperimentCtx> {
+        Self::load_with(16, true)
+    }
+
+    pub fn load_with(calib_seqs: usize, with_gram: bool) -> Option<ExperimentCtx> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let model_path = root.join("artifacts/model/tiny.tsr");
+        if !model_path.exists() {
+            println!("[bench] artifacts not built (run `make artifacts`); skipping");
+            return None;
+        }
+        let model = crate::model::GptModel::load(&model_path).ok()?;
+        let read = |f: &str| std::fs::read_to_string(root.join("artifacts/corpus").join(f)).ok();
+        let (train, wiki, web) = (read("train.txt")?, read("wiki_like.txt")?, read("web_like.txt")?);
+        let train_tokens = crate::data::tokenize(&train);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(0xCA11B);
+        let seqs = crate::data::sample_calibration(
+            &train_tokens,
+            model.cfg.max_seq,
+            calib_seqs,
+            &mut rng,
+        );
+        let stats = crate::coordinator::calibrate(&model, &seqs, with_gram);
+        let runtime = crate::runtime::Runtime::load(&root.join("artifacts")).ok();
+        Some(ExperimentCtx { model, wiki, web, train_tokens, stats, runtime })
+    }
+
+    /// Perplexity on both held-out splits.
+    pub fn eval_ppl(&self, model: &crate::model::GptModel, seqs: usize) -> (f64, f64) {
+        let s = model.cfg.max_seq;
+        (
+            crate::eval::perplexity(model, &self.wiki, s, seqs),
+            crate::eval::perplexity(model, &self.web, s, seqs),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 20, 5.0, || {
+            for i in 0..1000 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn wall_clock_cap_respected() {
+        let r = bench("sleepy", 0, 1000, 0.05, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn scaled_floors_at_one() {
+        std::env::set_var("ARMOR_BENCH_SCALE", "0.0001");
+        assert_eq!(scaled(10), 1);
+        std::env::remove_var("ARMOR_BENCH_SCALE");
+    }
+}

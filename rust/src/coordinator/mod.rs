@@ -1,0 +1,313 @@
+//! Layer-3 coordinator: the pruning pipeline.
+//!
+//! A [`PruneJob`] walks every prunable linear of a model, captures
+//! calibration statistics with one dense forward pass over the calibration
+//! set, prunes each layer with the configured method (ARMOR native, ARMOR
+//! via the PJRT artifacts, or a baseline), writes the pruned weights back,
+//! and emits a [`PruneRunReport`]. Layers are scheduled across the worker
+//! pool; each worker owns an independent RNG stream so results are
+//! reproducible regardless of thread count.
+
+mod report;
+pub use report::{fmt, format_markdown_table, TableRow};
+
+#[cfg(test)]
+use crate::armor::ArmorConfig;
+use crate::baselines::{prune_layer, CalibStats, Method};
+use crate::data::CalibCapture;
+use crate::model::{prunable_layers, GptModel};
+use crate::sparsity::Pattern;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_map;
+use std::collections::BTreeMap;
+
+/// Per-layer outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub d_out: usize,
+    pub d_in: usize,
+    pub weighted_err: f64,
+    pub storage_bytes: usize,
+    /// ARMOR only: proxy loss at init (NoWag-P floor) and after optimization
+    pub initial_loss: Option<f64>,
+    pub final_loss: Option<f64>,
+    pub millis: f64,
+}
+
+/// Whole-model pruning outcome.
+#[derive(Clone, Debug)]
+pub struct PruneRunReport {
+    pub method: String,
+    pub pattern: Pattern,
+    pub layers: Vec<LayerReport>,
+    pub total_weighted_err: f64,
+    pub total_storage_bytes: usize,
+    /// mean wrapper overhead across ARMOR layers (the paper's "+o%")
+    pub wrapper_overhead: f64,
+    pub millis: f64,
+}
+
+/// A pruning job over a full model.
+pub struct PruneJob {
+    pub method: Method,
+    pub pattern: Pattern,
+    pub seed: u64,
+    /// use the PJRT artifacts for ARMOR's continuous step when available
+    pub use_xla: bool,
+}
+
+/// Run one dense forward pass over the calibration sequences, capturing
+/// per-linear activation statistics (`diag(XXᵀ)`, optionally the full Gram).
+pub fn calibrate(
+    model: &GptModel,
+    calib_seqs: &[Vec<u16>],
+    with_gram: bool,
+) -> BTreeMap<String, CalibStats> {
+    let mut capture = CalibCapture::new(with_gram);
+    for seq in calib_seqs {
+        model.forward(seq, &mut capture);
+    }
+    let mut stats = capture.finish();
+    // MoE experts may see zero tokens on tiny calib sets; backfill uniform.
+    for lref in prunable_layers(&model.cfg) {
+        stats
+            .entry(lref.name.clone())
+            .or_insert_with(|| CalibStats::uniform(lref.d_in));
+    }
+    stats
+}
+
+/// Prune every prunable layer of `model` per the job; returns the pruned
+/// model and the report. `runtime` enables the XLA path for ARMOR.
+pub fn prune_model(
+    model: &GptModel,
+    calib: &BTreeMap<String, CalibStats>,
+    job: &PruneJob,
+    runtime: Option<&crate::runtime::Runtime>,
+) -> (GptModel, PruneRunReport) {
+    let t0 = std::time::Instant::now();
+    let layers = prunable_layers(&model.cfg);
+    let mut seeder = Pcg64::seed_from_u64(job.seed);
+    let seeds: Vec<u64> = (0..layers.len()).map(|_| seeder.next_u64()).collect();
+
+    // One layer's work. The PJRT client is not Sync, so the XLA path runs
+    // layers serially; the native path fans out across the worker pool.
+    let run_layer = |i: usize,
+                     rt: Option<&crate::runtime::Runtime>|
+     -> (String, crate::tensor::Matrix, LayerReport, f64) {
+        let lref = &layers[i];
+        let lt0 = std::time::Instant::now();
+        let w = model.get(&lref.name);
+        let stats = calib
+            .get(&lref.name)
+            .cloned()
+            .unwrap_or_else(|| CalibStats::uniform(lref.d_in));
+        let mut rng = Pcg64::seed_from_u64(seeds[i]);
+
+        match (&job.method, rt) {
+            (Method::Armor(cfg), Some(rt)) => {
+                let mut cfg = cfg.clone();
+                cfg.pattern = job.pattern;
+                match crate::runtime::prune_matrix_xla(rt, w, &stats.x_sq_norms, &cfg, &mut rng) {
+                    Ok(res) => {
+                        let storage = res.factorization.storage_bytes();
+                        let overhead = res.factorization.wrapper_overhead();
+                        let w_hat = res.w_hat();
+                        let err = crate::baselines::weighted_error(w, &w_hat, &stats.x_sq_norms);
+                        return_layer(
+                            lref,
+                            w_hat,
+                            err,
+                            storage,
+                            Some(res.initial_loss),
+                            Some(res.final_loss),
+                            overhead,
+                            lt0,
+                        )
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[coordinator] XLA path failed for {}: {e}; native fallback",
+                            lref.name
+                        );
+                        native_prune(w, &stats, job, &mut rng, lref, lt0)
+                    }
+                }
+            }
+            _ => native_prune(w, &stats, job, &mut rng, lref, lt0),
+        }
+    };
+
+    let results: Vec<(String, crate::tensor::Matrix, LayerReport, f64)> =
+        match (job.use_xla, runtime) {
+            (true, Some(rt)) => (0..layers.len()).map(|i| run_layer(i, Some(rt))).collect(),
+            _ => parallel_map(layers.len(), |i| run_layer(i, None)),
+        };
+
+    let mut pruned_model = model.clone();
+    let mut layer_reports = Vec::new();
+    let mut total_err = 0.0;
+    let mut total_storage = 0usize;
+    let mut overhead_sum = 0.0;
+    let mut overhead_n = 0usize;
+    for (name, w_hat, rep, overhead) in results {
+        pruned_model.set(&name, w_hat);
+        total_err += rep.weighted_err;
+        total_storage += rep.storage_bytes;
+        if overhead > 0.0 {
+            overhead_sum += overhead;
+            overhead_n += 1;
+        }
+        layer_reports.push(rep);
+    }
+    let report = PruneRunReport {
+        method: job.method.label(),
+        pattern: job.pattern,
+        layers: layer_reports,
+        total_weighted_err: total_err,
+        total_storage_bytes: total_storage,
+        wrapper_overhead: if overhead_n > 0 { overhead_sum / overhead_n as f64 } else { 0.0 },
+        millis: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    (pruned_model, report)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn return_layer(
+    lref: &crate::model::LayerRef,
+    w_hat: crate::tensor::Matrix,
+    err: f64,
+    storage: usize,
+    initial_loss: Option<f64>,
+    final_loss: Option<f64>,
+    overhead: f64,
+    lt0: std::time::Instant,
+) -> (String, crate::tensor::Matrix, LayerReport, f64) {
+    (
+        lref.name.clone(),
+        w_hat,
+        LayerReport {
+            name: lref.name.clone(),
+            d_out: lref.d_out,
+            d_in: lref.d_in,
+            weighted_err: err,
+            storage_bytes: storage,
+            initial_loss,
+            final_loss,
+            millis: lt0.elapsed().as_secs_f64() * 1e3,
+        },
+        overhead,
+    )
+}
+
+fn native_prune(
+    w: &crate::tensor::Matrix,
+    stats: &CalibStats,
+    job: &PruneJob,
+    rng: &mut Pcg64,
+    lref: &crate::model::LayerRef,
+    lt0: std::time::Instant,
+) -> (String, crate::tensor::Matrix, LayerReport, f64) {
+    let out = prune_layer(w, stats, &job.method, job.pattern, rng);
+    let overhead = out.armor.as_ref().map(|f| f.wrapper_overhead()).unwrap_or(0.0);
+    return_layer(lref, out.w_hat, out.weighted_err, out.storage_bytes, None, None, overhead, lt0)
+}
+
+/// Model storage accounting: prunable layers per the report + dense rest.
+pub fn model_storage_bytes(model: &GptModel, report: &PruneRunReport) -> usize {
+    let prunable: usize = report.layers.iter().map(|l| l.storage_bytes).sum();
+    let prunable_names: std::collections::BTreeSet<&str> =
+        report.layers.iter().map(|l| l.name.as_str()).collect();
+    let rest: usize = model
+        .tensors
+        .iter()
+        .filter(|(n, _)| !prunable_names.contains(n.as_str()))
+        .map(|(_, m)| m.rows * m.cols * 4)
+        .sum();
+    prunable + rest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+
+    fn tiny_model() -> GptModel {
+        let mut rng = Pcg64::seed_from_u64(0);
+        // shrink to keep tests fast
+        let cfg = GptConfig { d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_seq: 32, ..GptConfig::tiny() };
+        GptModel::random_init(&cfg, &mut rng)
+    }
+
+    fn calib_seqs(n: usize) -> Vec<Vec<u16>> {
+        let mut rng = Pcg64::seed_from_u64(1);
+        (0..n).map(|_| (0..32).map(|_| rng.next_below(256) as u16).collect()).collect()
+    }
+
+    #[test]
+    fn calibrate_covers_all_layers() {
+        let model = tiny_model();
+        let stats = calibrate(&model, &calib_seqs(2), false);
+        for lref in prunable_layers(&model.cfg) {
+            let s = stats.get(&lref.name).unwrap();
+            assert_eq!(s.x_sq_norms.len(), lref.d_in);
+            assert!(s.x_sq_norms.iter().all(|x| x.is_finite() && *x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn prune_model_all_methods_produce_valid_models() {
+        let model = tiny_model();
+        let stats = calibrate(&model, &calib_seqs(2), true);
+        let armor_cfg = ArmorConfig { d_block: 8, n_iters: 10, ..Default::default() };
+        for method in [Method::Wanda, Method::NoWagP, Method::SparseGpt, Method::Armor(armor_cfg)] {
+            let job = PruneJob { method, pattern: Pattern::TWO_FOUR, seed: 3, use_xla: false };
+            let (pruned, report) = prune_model(&model, &stats, &job, None);
+            assert!(pruned.validate().is_ok());
+            assert_eq!(report.layers.len(), prunable_layers(&model.cfg).len());
+            assert!(report.total_weighted_err.is_finite());
+            // pruned model produces finite logits
+            let logits = pruned.forward(&calib_seqs(1)[0], &mut crate::model::NoCapture);
+            assert!(logits.all_finite(), "{}", report.method);
+        }
+    }
+
+    #[test]
+    fn armor_beats_nowag_on_weighted_error() {
+        let model = tiny_model();
+        let stats = calibrate(&model, &calib_seqs(3), false);
+        let armor_cfg = ArmorConfig { d_block: 8, n_iters: 40, ..Default::default() };
+        let (_, nowag) = prune_model(
+            &model,
+            &stats,
+            &PruneJob { method: Method::NoWagP, pattern: Pattern::TWO_FOUR, seed: 3, use_xla: false },
+            None,
+        );
+        let (_, armor) = prune_model(
+            &model,
+            &stats,
+            &PruneJob { method: Method::Armor(armor_cfg), pattern: Pattern::TWO_FOUR, seed: 3, use_xla: false },
+            None,
+        );
+        assert!(
+            armor.total_weighted_err < nowag.total_weighted_err,
+            "armor {} vs nowag {}",
+            armor.total_weighted_err,
+            nowag.total_weighted_err
+        );
+        assert!(armor.wrapper_overhead > 0.0 && armor.wrapper_overhead < 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let model = tiny_model();
+        let stats = calibrate(&model, &calib_seqs(2), false);
+        let cfg = ArmorConfig { d_block: 8, n_iters: 5, ..Default::default() };
+        let job = PruneJob { method: Method::Armor(cfg), pattern: Pattern::TWO_FOUR, seed: 9, use_xla: false };
+        let (m1, r1) = prune_model(&model, &stats, &job, None);
+        let (m2, r2) = prune_model(&model, &stats, &job, None);
+        assert_eq!(m1.get("l0.attn.wq"), m2.get("l0.attn.wq"));
+        assert_eq!(r1.total_weighted_err, r2.total_weighted_err);
+    }
+}

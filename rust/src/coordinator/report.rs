@@ -1,0 +1,68 @@
+//! Markdown table emission for the bench harness and the CLI reports —
+//! each experiment bench prints the same row structure as the paper's table.
+
+/// One row: a label plus formatted cell values.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub label: String,
+    pub cells: Vec<String>,
+}
+
+impl TableRow {
+    pub fn new(label: &str, cells: Vec<String>) -> TableRow {
+        TableRow { label: label.to_string(), cells }
+    }
+}
+
+/// Render a GitHub-flavored markdown table.
+pub fn format_markdown_table(title: &str, header: &[&str], rows: &[TableRow]) -> String {
+    let mut s = format!("\n### {title}\n\n");
+    s.push_str(&format!("| Method | {} |\n", header.join(" | ")));
+    s.push_str(&format!("|---|{}|\n", header.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+    for r in rows {
+        s.push_str(&format!("| {} | {} |\n", r.label, r.cells.join(" | ")));
+    }
+    s
+}
+
+/// Format a float with sensible precision for table cells.
+pub fn fmt(x: f64) -> String {
+    if !x.is_finite() {
+        return "—".into();
+    }
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let rows = vec![
+            TableRow::new("Dense", vec!["5.12".into(), "6.63".into()]),
+            TableRow::new("ARMOR", vec!["7.21".into(), "9.36".into()]),
+        ];
+        let t = format_markdown_table("Table 3", &["Wiki", "Web"], &rows);
+        assert!(t.contains("| Method | Wiki | Web |"));
+        assert!(t.contains("| ARMOR | 7.21 | 9.36 |"));
+        assert_eq!(t.matches('\n').count(), 7);
+    }
+
+    #[test]
+    fn fmt_precision() {
+        assert_eq!(fmt(5.123456), "5.123");
+        assert_eq!(fmt(51.234), "51.23");
+        assert_eq!(fmt(5123.4), "5123");
+        assert_eq!(fmt(f64::NAN), "—");
+        assert_eq!(fmt(0.0), "0");
+    }
+}

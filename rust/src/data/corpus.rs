@@ -1,0 +1,279 @@
+//! Deterministic synthetic corpus generator.
+//!
+//! Stands in for the paper's pre-training / calibration corpora (SlimPajama)
+//! and evaluation corpora (Wikitext2 / C4) — see DESIGN.md §3. The grammar
+//! embeds learnable structure that the downstream task suite (eval::tasks)
+//! probes: a fixed fact table (recall), single-digit arithmetic (GSM8K-ish),
+//! subject–verb agreement (Wino-ish), copy / reversal / induction patterns
+//! (BBH-ish), and narrative filler n-grams (HellaSwag-ish).
+//!
+//! Two eval distributions mirror the Wikitext2-vs-C4 pair:
+//! - `Split::WikiLike`  — narrative + agreement heavy
+//! - `Split::WebLike`   — mixed with arithmetic, lists, copy patterns
+
+use crate::util::rng::Pcg64;
+
+pub const NAMES: &[&str] = &[
+    "alice", "bob", "carol", "david", "erin", "frank", "grace", "henry", "iris", "jack", "karen",
+    "liam", "mona", "nina", "oscar", "peggy",
+];
+pub const COLORS: &[&str] =
+    &["red", "blue", "green", "gold", "black", "white", "pink", "gray"];
+pub const ANIMALS: &[&str] = &[
+    "fox", "dog", "cat", "owl", "hen", "pig", "ram", "bee", "ant", "bat", "cow", "elk",
+];
+pub const OBJECTS: &[&str] =
+    &["stone", "apple", "chair", "river", "cloud", "torch", "wheel", "ladder", "basket", "mirror"];
+pub const VERBS: &[&str] = &["chases", "finds", "carries", "watches", "guards", "follows"];
+pub const WORDS: &[&str] = &[
+    "sun", "moon", "star", "tree", "leaf", "rock", "sand", "wave", "wind", "rain", "snow", "fire",
+];
+pub const DIGIT_WORDS: &[&str] =
+    &["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"];
+
+/// The fixed fact table: `name likes <color>` — deterministic function of the
+/// name index so the task generator and corpus generator always agree.
+pub fn fact_color(name_idx: usize) -> &'static str {
+    COLORS[(name_idx * 5 + 3) % COLORS.len()]
+}
+
+/// Which corpus split to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    /// narrative-heavy eval split (Wikitext2 analog)
+    WikiLike,
+    /// mixed eval split (C4 analog)
+    WebLike,
+}
+
+impl Split {
+    pub fn seed_tag(&self) -> u64 {
+        match self {
+            Split::Train => 0x7121,
+            Split::WikiLike => 0x5151,
+            Split::WebLike => 0xC4C4,
+        }
+    }
+    pub fn filename(&self) -> &'static str {
+        match self {
+            Split::Train => "train.txt",
+            Split::WikiLike => "wiki_like.txt",
+            Split::WebLike => "web_like.txt",
+        }
+    }
+}
+
+/// Corpus generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub n_sentences: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> CorpusSpec {
+        CorpusSpec { n_sentences: 60_000, seed: 7 }
+    }
+}
+
+fn pick<'a>(rng: &mut Pcg64, xs: &[&'a str]) -> &'a str {
+    xs[rng.next_below(xs.len() as u32) as usize]
+}
+
+fn narrative(rng: &mut Pcg64) -> String {
+    format!(
+        "the {} {} {} the {} .",
+        pick(rng, COLORS),
+        pick(rng, ANIMALS),
+        pick(rng, VERBS),
+        pick(rng, OBJECTS)
+    )
+}
+
+fn fact(rng: &mut Pcg64) -> String {
+    let n = rng.next_below(NAMES.len() as u32) as usize;
+    format!("{} likes {} .", NAMES[n], fact_color(n))
+}
+
+fn arithmetic(rng: &mut Pcg64) -> String {
+    let a = rng.next_below(10) as usize;
+    let b = rng.next_below(10 - a as u32) as usize;
+    format!("{} plus {} equals {} .", DIGIT_WORDS[a], DIGIT_WORDS[b], DIGIT_WORDS[a + b])
+}
+
+fn agreement(rng: &mut Pcg64) -> String {
+    let animal = pick(rng, ANIMALS);
+    if rng.next_f32() < 0.5 {
+        format!("the {animal} runs fast .")
+    } else {
+        format!("the {animal}s run fast .")
+    }
+}
+
+fn copy_pattern(rng: &mut Pcg64) -> String {
+    let k = 2 + rng.next_below(2) as usize;
+    let ws: Vec<&str> = (0..k).map(|_| pick(rng, WORDS)).collect();
+    format!("copy : {} ; {} .", ws.join(" "), ws.join(" "))
+}
+
+fn reversal(rng: &mut Pcg64) -> String {
+    let k = 2 + rng.next_below(2) as usize;
+    let ws: Vec<&str> = (0..k).map(|_| pick(rng, WORDS)).collect();
+    let rev: Vec<&str> = ws.iter().rev().copied().collect();
+    format!("rev : {} ; {} .", ws.join(" "), rev.join(" "))
+}
+
+fn induction(rng: &mut Pcg64) -> String {
+    let a = pick(rng, WORDS);
+    let mut b = pick(rng, WORDS);
+    while b == a {
+        b = pick(rng, WORDS);
+    }
+    format!("{a} {b} {a} {b} {a} {b} .")
+}
+
+fn list_pattern(rng: &mut Pcg64) -> String {
+    let start = rng.next_below(6) as usize;
+    format!(
+        "count : {} {} {} {} .",
+        DIGIT_WORDS[start],
+        DIGIT_WORDS[start + 1],
+        DIGIT_WORDS[start + 2],
+        DIGIT_WORDS[start + 3]
+    )
+}
+
+/// Generate one split as a single string of newline-separated sentences.
+pub fn generate_corpus(spec: &CorpusSpec, split: Split) -> String {
+    let mut rng = Pcg64::seed_from_u64(spec.seed ^ split.seed_tag());
+    let mut out = String::with_capacity(spec.n_sentences * 32);
+    for _ in 0..spec.n_sentences {
+        let r = rng.next_f32();
+        let sentence = match split {
+            Split::Train => {
+                // balanced mixture covering all structures
+                if r < 0.25 {
+                    narrative(&mut rng)
+                } else if r < 0.40 {
+                    fact(&mut rng)
+                } else if r < 0.55 {
+                    arithmetic(&mut rng)
+                } else if r < 0.65 {
+                    agreement(&mut rng)
+                } else if r < 0.75 {
+                    copy_pattern(&mut rng)
+                } else if r < 0.85 {
+                    reversal(&mut rng)
+                } else if r < 0.93 {
+                    induction(&mut rng)
+                } else {
+                    list_pattern(&mut rng)
+                }
+            }
+            Split::WikiLike => {
+                if r < 0.55 {
+                    narrative(&mut rng)
+                } else if r < 0.75 {
+                    agreement(&mut rng)
+                } else if r < 0.9 {
+                    fact(&mut rng)
+                } else {
+                    induction(&mut rng)
+                }
+            }
+            Split::WebLike => {
+                if r < 0.3 {
+                    arithmetic(&mut rng)
+                } else if r < 0.5 {
+                    list_pattern(&mut rng)
+                } else if r < 0.65 {
+                    copy_pattern(&mut rng)
+                } else if r < 0.8 {
+                    narrative(&mut rng)
+                } else {
+                    reversal(&mut rng)
+                }
+            }
+        };
+        out.push_str(&sentence);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = CorpusSpec { n_sentences: 100, seed: 1 };
+        assert_eq!(generate_corpus(&spec, Split::Train), generate_corpus(&spec, Split::Train));
+    }
+
+    #[test]
+    fn splits_differ() {
+        let spec = CorpusSpec { n_sentences: 100, seed: 1 };
+        let a = generate_corpus(&spec, Split::WikiLike);
+        let b = generate_corpus(&spec, Split::WebLike);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn facts_are_consistent() {
+        // every "likes" sentence in any split must match the fact table
+        let spec = CorpusSpec { n_sentences: 2000, seed: 3 };
+        for split in [Split::Train, Split::WikiLike] {
+            let text = generate_corpus(&spec, split);
+            for line in text.lines().filter(|l| l.contains(" likes ")) {
+                let mut it = line.split_whitespace();
+                let name = it.next().unwrap();
+                assert_eq!(it.next(), Some("likes"));
+                let color = it.next().unwrap();
+                let idx = NAMES.iter().position(|&n| n == name).unwrap();
+                assert_eq!(color, fact_color(idx), "line: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_is_correct() {
+        let spec = CorpusSpec { n_sentences: 2000, seed: 4 };
+        let text = generate_corpus(&spec, Split::Train);
+        let val = |w: &str| DIGIT_WORDS.iter().position(|&d| d == w).unwrap();
+        let mut seen = 0;
+        for line in text.lines().filter(|l| l.contains(" plus ")) {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            // "<a> plus <b> equals <c> ."
+            assert_eq!(val(parts[0]) + val(parts[2]), val(parts[4]), "line: {line}");
+            seen += 1;
+        }
+        assert!(seen > 100);
+    }
+
+    #[test]
+    fn copy_and_reversal_are_valid() {
+        let spec = CorpusSpec { n_sentences: 3000, seed: 5 };
+        let text = generate_corpus(&spec, Split::Train);
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("copy : ") {
+                let body = rest.trim_end_matches(" .");
+                let (lhs, rhs) = body.split_once(" ; ").unwrap();
+                assert_eq!(lhs, rhs, "line: {line}");
+            } else if let Some(rest) = line.strip_prefix("rev : ") {
+                let body = rest.trim_end_matches(" .");
+                let (lhs, rhs) = body.split_once(" ; ").unwrap();
+                let rev: Vec<&str> = lhs.split(' ').rev().collect();
+                assert_eq!(rev.join(" "), rhs, "line: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_only_byte_tokenizable() {
+        let spec = CorpusSpec { n_sentences: 500, seed: 6 };
+        let text = generate_corpus(&spec, Split::WebLike);
+        assert!(text.is_ascii());
+    }
+}

@@ -1,0 +1,184 @@
+//! Data substrate: the synthetic corpus generator (standing in for
+//! SlimPajama — DESIGN.md §3), the byte-level tokenizer, batching, and the
+//! calibration sampler.
+//!
+//! The corpus is generated *once* by `armor gen-corpus` at build time and
+//! read by both the Python training step and the Rust runtime, so every
+//! consumer sees identical data.
+
+pub mod corpus;
+
+pub use corpus::{generate_corpus, CorpusSpec, Split};
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Byte-level tokenizer (vocab 256) — every string round-trips.
+pub fn tokenize(text: &str) -> Vec<u16> {
+    text.bytes().map(|b| b as u16).collect()
+}
+
+pub fn detokenize(tokens: &[u16]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Cut a token stream into fixed-length non-overlapping sequences.
+pub fn batch_sequences(tokens: &[u16], seq_len: usize, max_seqs: usize) -> Vec<Vec<u16>> {
+    tokens
+        .chunks_exact(seq_len)
+        .take(max_seqs)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+/// Sample `n` calibration sequences of length `seq_len` from a token stream
+/// at random offsets (the paper samples 128 SlimPajama documents).
+pub fn sample_calibration(
+    tokens: &[u16],
+    seq_len: usize,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Vec<Vec<u16>> {
+    assert!(tokens.len() > seq_len, "stream shorter than seq_len");
+    (0..n)
+        .map(|_| {
+            let start = rng.next_below((tokens.len() - seq_len) as u32) as usize;
+            tokens[start..start + seq_len].to_vec()
+        })
+        .collect()
+}
+
+/// Accumulating calibration capture: per layer, running `Σ xᵀx` Gram (or
+/// just the diagonal in norms-only mode) over every recorded activation row.
+pub struct CalibCapture {
+    /// layer name → (gram or none, sq-norm accumulator, rows seen)
+    pub stats: std::collections::BTreeMap<String, LayerCalib>,
+    pub with_gram: bool,
+}
+
+pub struct LayerCalib {
+    pub sq_norms: Vec<f64>,
+    pub gram: Option<Vec<f64>>, // d_in × d_in row-major
+    pub d_in: usize,
+    pub rows: usize,
+}
+
+impl CalibCapture {
+    pub fn new(with_gram: bool) -> CalibCapture {
+        CalibCapture { stats: Default::default(), with_gram }
+    }
+
+    /// Convert to the pruners' [`crate::baselines::CalibStats`].
+    pub fn finish(self) -> std::collections::BTreeMap<String, crate::baselines::CalibStats> {
+        self.stats
+            .into_iter()
+            .map(|(name, lc)| {
+                let x_sq_norms: Vec<f32> = lc.sq_norms.iter().map(|&x| x as f32).collect();
+                let gram = lc.gram.map(|g| {
+                    Matrix::from_vec(lc.d_in, lc.d_in, g.iter().map(|&x| x as f32).collect())
+                });
+                (
+                    name,
+                    crate::baselines::CalibStats { x_sq_norms, gram, n_samples: lc.rows },
+                )
+            })
+            .collect()
+    }
+}
+
+impl crate::model::ActivationCapture for CalibCapture {
+    fn record(&mut self, layer: &str, x: &Matrix) {
+        let d_in = x.cols;
+        let lc = self.stats.entry(layer.to_string()).or_insert_with(|| LayerCalib {
+            sq_norms: vec![0.0; d_in],
+            gram: if self.with_gram { Some(vec![0.0; d_in * d_in]) } else { None },
+            d_in,
+            rows: 0,
+        });
+        assert_eq!(lc.d_in, d_in, "layer {layer} d_in changed");
+        lc.rows += x.rows;
+        for r in 0..x.rows {
+            let row = x.row(r);
+            for c in 0..d_in {
+                lc.sq_norms[c] += (row[c] as f64) * (row[c] as f64);
+            }
+        }
+        if let Some(g) = &mut lc.gram {
+            // accumulate xᵀx
+            for r in 0..x.rows {
+                let row = x.row(r);
+                for i in 0..d_in {
+                    let xi = row[i] as f64;
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let base = i * d_in;
+                    for j in 0..d_in {
+                        g[base + j] += xi * row[j] as f64;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ActivationCapture;
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "the quick brown fox; 3 plus 4 equals 7.";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn batching_drops_remainder() {
+        let toks: Vec<u16> = (0..100).map(|i| (i % 256) as u16).collect();
+        let batches = batch_sequences(&toks, 32, 10);
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|b| b.len() == 32));
+    }
+
+    #[test]
+    fn calibration_sampler_bounds() {
+        let toks: Vec<u16> = (0..1000).map(|i| (i % 256) as u16).collect();
+        let mut rng = Pcg64::seed_from_u64(0);
+        let samples = sample_calibration(&toks, 64, 16, &mut rng);
+        assert_eq!(samples.len(), 16);
+        assert!(samples.iter().all(|s| s.len() == 64));
+    }
+
+    #[test]
+    fn calib_capture_accumulates_gram_and_norms() {
+        let mut cap = CalibCapture::new(true);
+        let x1 = Matrix::from_vec(2, 3, vec![1., 0., 2., 3., 1., 0.]);
+        let x2 = Matrix::from_vec(1, 3, vec![0., 2., 1.]);
+        cap.record("layer", &x1);
+        cap.record("layer", &x2);
+        let stats = cap.finish();
+        let s = &stats["layer"];
+        assert_eq!(s.n_samples, 3);
+        // col sq norms: c0 = 1+9 = 10, c1 = 1+4 = 5, c2 = 4+1 = 5
+        assert_eq!(s.x_sq_norms, vec![10.0, 5.0, 5.0]);
+        let g = s.gram.as_ref().unwrap();
+        // gram[0][2] = 1·2 + 3·0 + 0·1 = 2
+        assert_eq!(g[(0, 2)], 2.0);
+        assert_eq!(g[(2, 0)], 2.0);
+        // diagonal equals sq norms
+        for j in 0..3 {
+            assert_eq!(g[(j, j)], s.x_sq_norms[j]);
+        }
+    }
+
+    #[test]
+    fn norms_only_mode_skips_gram() {
+        let mut cap = CalibCapture::new(false);
+        cap.record("l", &Matrix::ones(2, 4));
+        let stats = cap.finish();
+        assert!(stats["l"].gram.is_none());
+        assert_eq!(stats["l"].x_sq_norms, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Evaluation harness: perplexity (Table 3 analog) and the downstream task
+//! suite (Tables 1–2 analog).
+
+mod tasks;
+pub use tasks::{task_suite, Task, TaskInstance, TASK_NAMES};
+
+use crate::data::{batch_sequences, tokenize};
+use crate::model::GptModel;
+use crate::util::threadpool::parallel_map;
+
+/// Perplexity of `model` on raw text: exp(mean per-token NLL) over
+/// fixed-length non-overlapping windows (the standard protocol).
+pub fn perplexity(model: &GptModel, text: &str, seq_len: usize, max_seqs: usize) -> f64 {
+    let tokens = tokenize(text);
+    let seqs = batch_sequences(&tokens, seq_len, max_seqs);
+    assert!(!seqs.is_empty(), "text too short for seq_len {seq_len}");
+    let nlls = parallel_map(seqs.len(), |i| model.nll(&seqs[i]));
+    let mean = nlls.iter().sum::<f64>() / nlls.len() as f64;
+    mean.exp()
+}
+
+/// Accuracy of `model` on a set of multiple-choice instances: a prediction
+/// is correct when the true continuation has the lowest mean NLL.
+pub fn score_instances(model: &GptModel, instances: &[TaskInstance]) -> f64 {
+    if instances.is_empty() {
+        return 0.0;
+    }
+    let correct: usize = parallel_map(instances.len(), |i| {
+        let inst = &instances[i];
+        let prompt = tokenize(&inst.prompt);
+        let mut best = (f64::INFINITY, 0usize);
+        for (c, cand) in inst.candidates.iter().enumerate() {
+            let full: Vec<u16> =
+                prompt.iter().copied().chain(tokenize(cand)).collect();
+            // score only the candidate span
+            let nll = model.nll_range(&full, prompt.len().saturating_sub(1));
+            if nll < best.0 {
+                best = (nll, c);
+            }
+        }
+        (best.1 == inst.correct) as usize
+    })
+    .iter()
+    .sum();
+    100.0 * correct as f64 / instances.len() as f64
+}
+
+/// Run the full 7-task suite; returns (task name, accuracy %) pairs.
+pub fn evaluate_tasks(model: &GptModel, n_per_task: usize, seed: u64) -> Vec<(String, f64)> {
+    task_suite(n_per_task, seed)
+        .into_iter()
+        .map(|(task, instances)| (task.name().to_string(), score_instances(model, &instances)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let model = GptModel::random_init(&GptConfig::tiny(), &mut rng);
+        let text = crate::data::generate_corpus(
+            &crate::data::CorpusSpec { n_sentences: 200, seed: 1 },
+            crate::data::Split::WikiLike,
+        );
+        let ppl = perplexity(&model, &text, 64, 8);
+        // untrained byte model ≈ uniform over 256
+        assert!(ppl > 100.0 && ppl < 600.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn random_model_tasks_near_chance() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let model = GptModel::random_init(&GptConfig::tiny(), &mut rng);
+        let results = evaluate_tasks(&model, 12, 3);
+        assert_eq!(results.len(), 7);
+        for (name, acc) in &results {
+            assert!((0.0..=100.0).contains(acc), "{name}: {acc}");
+        }
+        // average should be near chance (25–50% depending on candidate count)
+        let avg: f64 = results.iter().map(|(_, a)| a).sum::<f64>() / 7.0;
+        assert!(avg < 80.0, "untrained model suspiciously good: {avg}");
+    }
+
+    #[test]
+    fn perplexity_deterministic() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let model = GptModel::random_init(&GptConfig::tiny(), &mut rng);
+        let text = "the red fox chases the stone . ".repeat(40);
+        let a = perplexity(&model, &text, 32, 4);
+        let b = perplexity(&model, &text, 32, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,268 @@
+//! The 7-task downstream suite — the testbed analog of the paper's
+//! MMLU / GSM8K / BBH / GPQA / ARC-C / WinoGrande / HellaSwag battery
+//! (DESIGN.md §3). Each task probes a structure planted in the training
+//! corpus; scoring is multiple-choice by likelihood, like MMLU.
+
+use crate::data::corpus::{fact_color, COLORS, DIGIT_WORDS, NAMES, WORDS};
+use crate::util::rng::Pcg64;
+
+/// A multiple-choice instance.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub prompt: String,
+    pub candidates: Vec<String>,
+    pub correct: usize,
+}
+
+/// The task battery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// fact recall: `<name> likes` → color (MMLU-ish knowledge)
+    Recall,
+    /// arithmetic: `<a> plus <b> equals` → digit word (GSM8K-ish)
+    Arithmetic,
+    /// copy: `copy : w1 w2 ;` → `w1 w2` (BBH-ish)
+    Copy,
+    /// reversal: `rev : w1 w2 ;` → `w2 w1` (BBH/GPQA-ish)
+    Reversal,
+    /// induction: `a b a b a` → `b` (ARC-ish pattern)
+    Induction,
+    /// subject–verb agreement (WinoGrande-ish)
+    Agreement,
+    /// sequence completion: `count : two three four` → `five` (HellaSwag-ish)
+    Completion,
+}
+
+pub const TASK_NAMES: [&str; 7] =
+    ["Recall", "Arith", "Copy", "Rev", "Induct", "Agree", "Complete"];
+
+impl Task {
+    pub fn all() -> [Task; 7] {
+        [
+            Task::Recall,
+            Task::Arithmetic,
+            Task::Copy,
+            Task::Reversal,
+            Task::Induction,
+            Task::Agreement,
+            Task::Completion,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Recall => TASK_NAMES[0],
+            Task::Arithmetic => TASK_NAMES[1],
+            Task::Copy => TASK_NAMES[2],
+            Task::Reversal => TASK_NAMES[3],
+            Task::Induction => TASK_NAMES[4],
+            Task::Agreement => TASK_NAMES[5],
+            Task::Completion => TASK_NAMES[6],
+        }
+    }
+
+    /// Generate `n` deterministic instances.
+    pub fn instances(&self, n: usize, seed: u64) -> Vec<TaskInstance> {
+        let mut rng = Pcg64::seed_from_u64(seed ^ (*self as u64).wrapping_mul(0x9E37));
+        (0..n).map(|_| self.one(&mut rng)).collect()
+    }
+
+    fn one(&self, rng: &mut Pcg64) -> TaskInstance {
+        match self {
+            Task::Recall => {
+                let n = rng.next_below(NAMES.len() as u32) as usize;
+                let correct_color = fact_color(n);
+                let (cands, correct) = distractors(rng, correct_color, COLORS, 4);
+                TaskInstance {
+                    prompt: format!("{} likes ", NAMES[n]),
+                    candidates: cands.iter().map(|c| format!("{c} .")).collect(),
+                    correct,
+                }
+            }
+            Task::Arithmetic => {
+                let a = rng.next_below(10) as usize;
+                let b = rng.next_below(10 - a as u32) as usize;
+                let (cands, correct) = distractors(rng, DIGIT_WORDS[a + b], DIGIT_WORDS, 4);
+                TaskInstance {
+                    prompt: format!("{} plus {} equals ", DIGIT_WORDS[a], DIGIT_WORDS[b]),
+                    candidates: cands.iter().map(|c| format!("{c} .")).collect(),
+                    correct,
+                }
+            }
+            Task::Copy => {
+                let (w1, w2) = two_words(rng);
+                let answer = format!("{w1} {w2} .");
+                let mut cands = vec![answer.clone(), format!("{w2} {w1} .")];
+                push_distinct_pairs(rng, &mut cands, 4);
+                let correct = shuffle_candidates(rng, &mut cands, &answer);
+                TaskInstance { prompt: format!("copy : {w1} {w2} ; "), candidates: cands, correct }
+            }
+            Task::Reversal => {
+                let (w1, w2) = two_words(rng);
+                let answer = format!("{w2} {w1} .");
+                let mut cands = vec![answer.clone(), format!("{w1} {w2} .")];
+                push_distinct_pairs(rng, &mut cands, 4);
+                let correct = shuffle_candidates(rng, &mut cands, &answer);
+                TaskInstance { prompt: format!("rev : {w1} {w2} ; "), candidates: cands, correct }
+            }
+            Task::Induction => {
+                let (a, b) = two_words(rng);
+                let (cands, correct) = distractors(rng, b, WORDS, 4);
+                TaskInstance {
+                    prompt: format!("{a} {b} {a} {b} {a} "),
+                    candidates: cands.iter().map(|c| format!("{c} .")).collect(),
+                    correct,
+                }
+            }
+            Task::Agreement => {
+                let animal =
+                    crate::data::corpus::ANIMALS[rng.next_below(12) as usize];
+                let plural = rng.next_f32() < 0.5;
+                let (subject, answer, wrong) = if plural {
+                    (format!("the {animal}s "), "run fast .", "runs fast .")
+                } else {
+                    (format!("the {animal} "), "runs fast .", "run fast .")
+                };
+                let mut cands = vec![answer.to_string(), wrong.to_string()];
+                let correct = shuffle_candidates(rng, &mut cands, answer);
+                TaskInstance { prompt: subject, candidates: cands, correct }
+            }
+            Task::Completion => {
+                let start = rng.next_below(6) as usize;
+                let (cands, correct) = distractors(rng, DIGIT_WORDS[start + 3], DIGIT_WORDS, 4);
+                TaskInstance {
+                    prompt: format!(
+                        "count : {} {} {} ",
+                        DIGIT_WORDS[start],
+                        DIGIT_WORDS[start + 1],
+                        DIGIT_WORDS[start + 2]
+                    ),
+                    candidates: cands.iter().map(|c| format!("{c} .")).collect(),
+                    correct,
+                }
+            }
+        }
+    }
+}
+
+/// Extend `cands` with fresh `"<a> <b> ."` word pairs until it has `k`
+/// distinct entries.
+fn push_distinct_pairs(rng: &mut Pcg64, cands: &mut Vec<String>, k: usize) {
+    while cands.len() < k {
+        let (a, b) = two_words(rng);
+        let c = format!("{a} {b} .");
+        if !cands.contains(&c) {
+            cands.push(c);
+        }
+    }
+}
+
+fn two_words(rng: &mut Pcg64) -> (&'static str, &'static str) {
+    let a = WORDS[rng.next_below(WORDS.len() as u32) as usize];
+    let mut b = WORDS[rng.next_below(WORDS.len() as u32) as usize];
+    while b == a {
+        b = WORDS[rng.next_below(WORDS.len() as u32) as usize];
+    }
+    (a, b)
+}
+
+/// Build a candidate set of size `k` containing `answer` plus distinct
+/// distractors from `pool`; returns (candidates, index of answer).
+fn distractors(
+    rng: &mut Pcg64,
+    answer: &str,
+    pool: &[&str],
+    k: usize,
+) -> (Vec<String>, usize) {
+    let mut cands = vec![answer.to_string()];
+    while cands.len() < k {
+        let c = pool[rng.next_below(pool.len() as u32) as usize];
+        if !cands.iter().any(|x| x == c) {
+            cands.push(c.to_string());
+        }
+    }
+    let correct = shuffle_strings(rng, &mut cands, answer);
+    (cands, correct)
+}
+
+fn shuffle_strings(rng: &mut Pcg64, cands: &mut [String], answer: &str) -> usize {
+    rng.shuffle(cands);
+    cands.iter().position(|c| c == answer).unwrap()
+}
+
+fn shuffle_candidates(rng: &mut Pcg64, cands: &mut [String], answer: &str) -> usize {
+    rng.shuffle(cands);
+    cands.iter().position(|c| c == answer).unwrap()
+}
+
+/// Generate the full battery: 7 tasks × `n_per_task` instances.
+pub fn task_suite(n_per_task: usize, seed: u64) -> Vec<(Task, Vec<TaskInstance>)> {
+    Task::all()
+        .into_iter()
+        .map(|t| {
+            let inst = t.instances(n_per_task, seed);
+            (t, inst)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instances_deterministic() {
+        for t in Task::all() {
+            let a = t.instances(10, 42);
+            let b = t.instances(10, 42);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.candidates, y.candidates);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+
+    #[test]
+    fn correct_index_valid_and_answer_present() {
+        for t in Task::all() {
+            for inst in t.instances(50, 7) {
+                assert!(inst.correct < inst.candidates.len(), "{t:?}");
+                assert!(inst.candidates.len() >= 2, "{t:?}");
+                // all candidates distinct
+                let mut set = std::collections::BTreeSet::new();
+                for c in &inst.candidates {
+                    assert!(set.insert(c.clone()), "{t:?} dup candidate {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recall_answers_match_fact_table() {
+        for inst in Task::Recall.instances(40, 3) {
+            let name = inst.prompt.split_whitespace().next().unwrap();
+            let idx = NAMES.iter().position(|&n| n == name).unwrap();
+            let answer = inst.candidates[inst.correct].trim_end_matches(" .");
+            assert_eq!(answer, fact_color(idx));
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_correct() {
+        let val = |w: &str| DIGIT_WORDS.iter().position(|&d| d == w).unwrap();
+        for inst in Task::Arithmetic.instances(40, 5) {
+            let parts: Vec<&str> = inst.prompt.split_whitespace().collect();
+            let answer = inst.candidates[inst.correct].trim_end_matches(" .");
+            assert_eq!(val(parts[0]) + val(parts[2]), val(answer), "{inst:?}");
+        }
+    }
+
+    #[test]
+    fn suite_has_seven_tasks() {
+        let suite = task_suite(5, 1);
+        assert_eq!(suite.len(), 7);
+        assert!(suite.iter().all(|(_, i)| i.len() == 5));
+    }
+}

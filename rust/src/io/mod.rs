@@ -1,0 +1,100 @@
+//! On-disk formats shared between the build-time Python layer and the
+//! Rust runtime.
+//!
+//! - `.tsr` tensor bundles: magic `TSR1` + u64-LE header length + JSON header
+//!   + contiguous f32-LE payloads. Written by `python/compile/tsr.py` (model
+//!   weights, calibration dumps) and by Rust (pruned checkpoints, reports).
+//! - artifact manifest: JSON written by `python/compile/aot.py` describing
+//!   every HLO artifact (name, input/output shapes, entry).
+
+mod tsr;
+pub use tsr::{TensorBundle, TensorEntry};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled HLO artifact described by `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// path to the `.hlo.txt`, relative to the manifest directory
+    pub path: PathBuf,
+    /// flattened input shapes in call order, e.g. [[64,128],[128]]
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+    /// free-form metadata (d_block, n_steps, ...)
+    pub meta: Json,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for item in v.get("artifacts").as_arr().unwrap_or(&[]) {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                item.get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect()
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: item.get("name").as_str().unwrap_or("").to_string(),
+                path: dir.join(item.get("path").as_str().unwrap_or("")),
+                input_shapes: shapes("input_shapes"),
+                output_shapes: shapes("output_shapes"),
+                meta: item.get("meta").clone(),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("armor_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "artifacts": [
+                {"name": "cont_step_64x128_b16",
+                 "path": "cont_step_64x128_b16.hlo.txt",
+                 "input_shapes": [[64,128],[128]],
+                 "output_shapes": [[64,128]],
+                 "meta": {"d_block": 16}}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("cont_step_64x128_b16").unwrap();
+        assert_eq!(a.input_shapes, vec![vec![64, 128], vec![128]]);
+        assert_eq!(a.meta.get("d_block").as_usize(), Some(16));
+        assert!(m.find("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

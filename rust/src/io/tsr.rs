@@ -1,0 +1,229 @@
+//! `.tsr` tensor bundle reader/writer.
+//!
+//! Binary layout:
+//! ```text
+//! bytes 0..4    magic b"TSR1"
+//! bytes 4..12   u64 LE: header byte length H
+//! bytes 12..12+H JSON header (utf-8)
+//! bytes 12+H..  f32 LE payload, tensors concatenated in header order
+//! ```
+//! Header schema:
+//! ```json
+//! {"tensors": {"name": {"shape": [r, c], "offset": elems}}, "meta": {...}}
+//! ```
+//! Offsets are in *elements* from the payload start. The same format is
+//! produced by `python/compile/tsr.py`.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"TSR1";
+
+/// One named tensor in a bundle.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorEntry {
+    pub fn from_matrix(m: &Matrix) -> TensorEntry {
+        TensorEntry { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn from_vec(v: Vec<f32>) -> TensorEntry {
+        TensorEntry { shape: vec![v.len()], data: v }
+    }
+
+    pub fn to_matrix(&self) -> crate::Result<Matrix> {
+        anyhow::ensure!(self.shape.len() == 2, "tensor is {}-d, expected 2-d", self.shape.len());
+        Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An ordered collection of named tensors plus free-form metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, TensorEntry>,
+    pub meta: Json,
+}
+
+impl TensorBundle {
+    pub fn new() -> TensorBundle {
+        TensorBundle { tensors: BTreeMap::new(), meta: Json::Obj(Default::default()) }
+    }
+
+    pub fn insert_matrix(&mut self, name: &str, m: &Matrix) {
+        self.tensors.insert(name.to_string(), TensorEntry::from_matrix(m));
+    }
+
+    pub fn insert_vec(&mut self, name: &str, v: Vec<f32>) {
+        self.tensors.insert(name.to_string(), TensorEntry::from_vec(v));
+    }
+
+    pub fn matrix(&self, name: &str) -> crate::Result<Matrix> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in bundle"))?
+            .to_matrix()
+    }
+
+    pub fn vector(&self, name: &str) -> crate::Result<Vec<f32>> {
+        Ok(self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in bundle"))?
+            .data
+            .clone())
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        let mut header_tensors = BTreeMap::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            anyhow::ensure!(t.data.len() == t.elems(), "tensor '{name}' shape/data mismatch");
+            header_tensors.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("shape", Json::arr_usize(&t.shape)),
+                    ("offset", Json::Num(offset as f64)),
+                ]),
+            );
+            offset += t.elems();
+        }
+        let header = Json::obj(vec![
+            ("tensors", Json::Obj(header_tensors)),
+            ("meta", self.meta.clone()),
+        ])
+        .to_string_compact();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in self.tensors.values() {
+            // bulk-convert to LE bytes
+            let mut buf = Vec::with_capacity(t.data.len() * 4);
+            for x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<TensorBundle> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "{} is not a TSR1 bundle", path.display());
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        anyhow::ensure!(hlen < 64 << 20, "unreasonable header size {hlen}");
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("tsr header: {e}"))?;
+
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        anyhow::ensure!(payload.len() % 4 == 0, "payload not f32-aligned");
+        let floats: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for (name, spec) in header.get("tensors").as_obj().into_iter().flatten() {
+            let shape: Vec<usize> = spec
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect();
+            let offset = spec
+                .get("offset")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing offset"))?;
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                offset + n <= floats.len(),
+                "tensor '{name}' extends past payload ({} + {} > {})",
+                offset,
+                n,
+                floats.len()
+            );
+            tensors.insert(
+                name.clone(),
+                TensorEntry { shape, data: floats[offset..offset + n].to_vec() },
+            );
+        }
+        Ok(TensorBundle { tensors, meta: header.get("meta").clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let mut b = TensorBundle::new();
+        let w = Matrix::randn(6, 9, &mut rng);
+        b.insert_matrix("w", &w);
+        b.insert_vec("bias", vec![1.0, -2.0, 3.5]);
+        b.meta = Json::obj(vec![("step", Json::Num(17.0))]);
+
+        let path = std::env::temp_dir().join(format!("armor_tsr_{}.tsr", std::process::id()));
+        b.save(&path).unwrap();
+        let loaded = TensorBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.matrix("w").unwrap(), w);
+        assert_eq!(loaded.vector("bias").unwrap(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(loaded.meta.get("step").as_usize(), Some(17));
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let b = TensorBundle::new();
+        assert!(b.matrix("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join(format!("armor_bad_{}.tsr", std::process::id()));
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorBundle::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn multiple_tensors_keep_offsets() {
+        let mut b = TensorBundle::new();
+        b.insert_vec("a", vec![1.0, 2.0]);
+        b.insert_vec("b", vec![3.0]);
+        b.insert_vec("c", vec![4.0, 5.0, 6.0]);
+        let path = std::env::temp_dir().join(format!("armor_multi_{}.tsr", std::process::id()));
+        b.save(&path).unwrap();
+        let l = TensorBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(l.vector("a").unwrap(), vec![1.0, 2.0]);
+        assert_eq!(l.vector("b").unwrap(), vec![3.0]);
+        assert_eq!(l.vector("c").unwrap(), vec![4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,35 @@
+//! # ARMOR — Adaptive Representation with Matrix-factORization
+//!
+//! A production-grade reproduction of *"ARMOR: High-Performance Semi-Structured
+//! Pruning via Adaptive Matrix Factorization"* (Liu et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 1** (build-time Python): Pallas kernels for the compute hot-spots
+//!   (`python/compile/kernels/`).
+//! - **Layer 2** (build-time Python): JAX compute graphs — the ARMOR optimizer
+//!   steps and the tiny-GPT forward — AOT-lowered to HLO text artifacts.
+//! - **Layer 3** (this crate): the pruning-pipeline coordinator, every
+//!   substrate (tensor/linalg/model/eval/baselines), and a PJRT runtime that
+//!   loads the artifacts. Python is never on the runtime path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod io;
+pub mod sparsity;
+pub mod normalize;
+pub mod proxy;
+pub mod armor;
+pub mod baselines;
+pub mod model;
+pub mod data;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod prop;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,213 @@
+//! Blocked, threaded dense GEMM.
+//!
+//! The native fallback path for everything the PJRT artifacts accelerate.
+//! Strategy: row-panel parallelism across threads, k-blocked inner loops with
+//! 4-wide column unrolling so the compiler autovectorizes. Not MKL, but good
+//! for the ~10⁸-flop matrices this library sees on the native path.
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_chunks_mut;
+
+/// Cache-blocking parameter along k.
+const KB: usize = 64;
+
+/// `C = A · B`.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B`, writing into a preallocated output (hot-loop friendly).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "gemm inner dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // Parallelize over row panels of C; each worker owns disjoint C rows.
+    let rows_per = ((m + crate::util::threadpool::num_threads() - 1)
+        / crate::util::threadpool::num_threads())
+    .max(1);
+    parallel_chunks_mut(&mut c.data, rows_per * n, |start, c_chunk| {
+        let r0 = start / n;
+        let rows = c_chunk.len() / n;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for r in 0..rows {
+                let arow = a.row(r0 + r);
+                let crow = &mut c_chunk[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let aval = arow[kk];
+                    if aval == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    // 4-wide unroll; the tail handled separately.
+                    let n4 = n & !3;
+                    let mut j = 0;
+                    while j < n4 {
+                        crow[j] += aval * brow[j];
+                        crow[j + 1] += aval * brow[j + 1];
+                        crow[j + 2] += aval * brow[j + 2];
+                        crow[j + 3] += aval * brow[j + 3];
+                        j += 4;
+                    }
+                    while j < n {
+                        crow[j] += aval * brow[j];
+                        j += 1;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `C = A · Bᵀ` without materializing the transpose — row-row dot products,
+/// the natural layout for `y = x Wᵀ` linears (both operands row-major).
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "gemm_nt inner dims: {}x{} · ({}x{})ᵀ", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    let rows_per = ((m + crate::util::threadpool::num_threads() - 1)
+        / crate::util::threadpool::num_threads())
+    .max(1);
+    parallel_chunks_mut(&mut c.data, rows_per * n, |start, c_chunk| {
+        let r0 = start / n;
+        let rows = c_chunk.len() / n;
+        for r in 0..rows {
+            let arow = a.row(r0 + r);
+            let crow = &mut c_chunk[r * n..(r + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let brow = b.row(j);
+                let k4 = k & !3;
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                let mut t = 0;
+                while t < k4 {
+                    s0 += arow[t] * brow[t];
+                    s1 += arow[t + 1] * brow[t + 1];
+                    s2 += arow[t + 2] * brow[t + 2];
+                    s3 += arow[t + 3] * brow[t + 3];
+                    t += 4;
+                }
+                let mut acc = (s0 + s1) + (s2 + s3);
+                while t < k {
+                    acc += arow[t] * brow[t];
+                    t += 1;
+                }
+                *cj = acc;
+            }
+        }
+    });
+    c
+}
+
+/// Dense matrix-vector product `y = A x`.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    for r in 0..a.rows {
+        let row = a.row(r);
+        let mut acc = 0.0f32;
+        let n4 = a.cols & !3;
+        let mut j = 0;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        while j < n4 {
+            s0 += row[j] * x[j];
+            s1 += row[j + 1] * x[j + 1];
+            s2 += row[j + 2] * x[j + 2];
+            s3 += row[j + 3] * x[j + 3];
+            j += 4;
+        }
+        acc += (s0 + s1) + (s2 + s3);
+        while j < a.cols {
+            acc += row[j] * x[j];
+            j += 1;
+        }
+        y[r] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (70, 130, 50)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let want = gemm_naive(&a, &b);
+            let got = gemm(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = Matrix::randn(13, 13, &mut rng);
+        assert!(gemm(&a, &Matrix::eye(13)).max_abs_diff(&a) < 1e-6);
+        assert!(gemm(&Matrix::eye(13), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gemm_nt_matches_explicit_transpose() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        for (m, k, n) in [(1, 3, 2), (7, 13, 5), (32, 64, 48)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(n, k, &mut rng);
+            let want = gemm(&a, &b.transpose());
+            assert!(gemm_nt(&a, &b).max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_gemm() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = Matrix::randn(9, 21, &mut rng);
+        let x: Vec<f32> = (0..21).map(|_| rng.next_gaussian()).collect();
+        let y = matvec(&a, &x);
+        let want = gemm(&a, &Matrix::from_vec(21, 1, x));
+        for i in 0..9 {
+            assert!((y[i] - want[(i, 0)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(4, 3);
+        let c = gemm(&a, &b);
+        assert_eq!(c.shape(), (0, 3));
+    }
+
+    #[test]
+    fn gemm_into_reuses_buffer() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let b = Matrix::randn(8, 8, &mut rng);
+        let mut c = Matrix::ones(8, 8); // pre-filled garbage
+        gemm_into(&a, &b, &mut c);
+        assert!(c.max_abs_diff(&gemm_naive(&a, &b)) < 1e-4);
+    }
+}

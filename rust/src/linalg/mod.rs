@@ -1,0 +1,224 @@
+//! Linear-algebra substrate: blocked + threaded GEMM, Cholesky
+//! factorization/solves (for the SparseGPT baseline's Hessian inverse), and
+//! the tiny symmetric 2×2 pseudo-inverse solve at the heart of the ARMOR
+//! sparse-core update (paper Eq. 8/9).
+
+mod gemm;
+pub use gemm::{gemm, gemm_into, gemm_nt, matvec};
+
+use crate::tensor::Matrix;
+
+/// Cholesky factorization of a symmetric positive-definite matrix:
+/// returns lower-triangular `L` with `L Lᵀ = A`. Adds no damping — caller is
+/// responsible for regularizing (see `baselines::sparsegpt`).
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[(i, k)] as f64 * l[(j, k)] as f64;
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return None;
+                }
+                l[(i, j)] = (sum.sqrt()) as f32;
+            } else {
+                l[(i, j)] = (sum / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l[(i, k)] as f64 * y[k] as f64;
+        }
+        y[i] = (s / l[(i, i)] as f64) as f32;
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` for lower-triangular `L` (backward substitution).
+pub fn solve_lower_transpose(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in i + 1..n {
+            s -= l[(k, i)] as f64 * x[k] as f64;
+        }
+        x[i] = (s / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Solve SPD system `A x = b` via Cholesky. Returns `None` if `A` is not PD.
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Option<Vec<f32>> {
+    let l = cholesky(a)?;
+    Some(solve_lower_transpose(&l, &solve_lower(&l, b)))
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solve).
+/// Used by SparseGPT's Hessian-inverse sketch.
+pub fn inv_spd(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let x = solve_lower_transpose(&l, &solve_lower(&l, &e));
+        for r in 0..n {
+            inv[(r, c)] = x[r];
+        }
+        e[c] = 0.0;
+    }
+    Some(inv)
+}
+
+/// Solve the symmetric 2×2 system `G w = r` with pseudo-inverse fallback
+/// (paper Eq. 9: `(B' D B'ᵀ)† (B' D ΔWᵀ a)`). The Gram matrix `G` is PSD; if
+/// near-singular we fall back to the Moore-Penrose solution via eigen
+/// decomposition of the 2×2 symmetric matrix.
+///
+/// Returns `(w0, w1)`.
+pub fn solve_sym2x2_pinv(g00: f64, g01: f64, g11: f64, r0: f64, r1: f64) -> (f64, f64) {
+    let det = g00 * g11 - g01 * g01;
+    let scale = g00.abs().max(g11.abs()).max(1e-30);
+    if det > 1e-10 * scale * scale {
+        // Well-conditioned: direct inverse.
+        let inv_det = 1.0 / det;
+        ((g11 * r0 - g01 * r1) * inv_det, (g00 * r1 - g01 * r0) * inv_det)
+    } else {
+        // Pseudo-inverse via symmetric eigen-decomposition.
+        // Eigenvalues of [[g00, g01], [g01, g11]]:
+        let tr = g00 + g11;
+        let disc = ((g00 - g11) * (g00 - g11) + 4.0 * g01 * g01).sqrt();
+        let l1 = 0.5 * (tr + disc);
+        let l2 = 0.5 * (tr - disc);
+        let mut w = (0.0, 0.0);
+        for &lam in &[l1, l2] {
+            if lam <= 1e-12 * scale {
+                continue;
+            }
+            // Eigenvector for lam.
+            let (vx, vy) = if g01.abs() > 1e-30 {
+                let v = (lam - g11, g01);
+                let n = (v.0 * v.0 + v.1 * v.1).sqrt();
+                (v.0 / n, v.1 / n)
+            } else if (g00 - lam).abs() < (g11 - lam).abs() {
+                (1.0, 0.0)
+            } else {
+                (0.0, 1.0)
+            };
+            let proj = (vx * r0 + vy * r1) / lam;
+            w.0 += proj * vx;
+            w.1 += proj * vy;
+        }
+        w
+    }
+}
+
+/// Weighted dot product `Σ a_i b_i d_i` in f64.
+pub fn wdot(a: &[f32], b: &[f32], d: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), d.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        s += a[i] as f64 * b[i] as f64 * d[i] as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        let m = Matrix::randn(n, n, rng);
+        let mut a = m.matmul(&m.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f32 * 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_solve_accuracy() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = random_spd(12, &mut rng);
+        let x_true: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let xm = Matrix::from_vec(12, 1, x_true.clone());
+        let b_mat = a.matmul(&xm);
+        let b: Vec<f32> = (0..12).map(|i| b_mat[(i, 0)]).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        for i in 0..12 {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "{} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn inv_spd_gives_identity() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = random_spd(6, &mut rng);
+        let inv = inv_spd(&a).unwrap();
+        let id = a.matmul(&inv);
+        assert!(id.max_abs_diff(&Matrix::eye(6)) < 1e-3);
+    }
+
+    #[test]
+    fn sym2x2_well_conditioned() {
+        // G = [[2, 1], [1, 3]], r = G·[1, -2] = [0, -5]
+        let (w0, w1) = solve_sym2x2_pinv(2.0, 1.0, 3.0, 0.0, -5.0);
+        assert!((w0 - 1.0).abs() < 1e-9 && (w1 + 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sym2x2_singular_pinv() {
+        // G = [[1, 1], [1, 1]] (rank 1), r = [2, 2]. Min-norm solution = [1, 1].
+        let (w0, w1) = solve_sym2x2_pinv(1.0, 1.0, 1.0, 2.0, 2.0);
+        assert!((w0 - 1.0).abs() < 1e-9 && (w1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sym2x2_zero_matrix() {
+        let (w0, w1) = solve_sym2x2_pinv(0.0, 0.0, 0.0, 1.0, 1.0);
+        assert_eq!((w0, w1), (0.0, 0.0));
+    }
+
+    #[test]
+    fn wdot_weighted() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 1.0, 1.0];
+        let d = [1.0f32, 0.0, 2.0];
+        assert_eq!(wdot(&a, &b, &d), 7.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! `armor` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//!   gen-corpus   generate the synthetic corpus splits (build-time data)
+//!   prune        prune a model with a chosen method/pattern
+//!   eval         perplexity + task-suite evaluation of a model
+//!   pipeline     prune with several methods and print a Table-3-style report
+//!   inspect      list artifacts / model tensors
+
+use armor::armor::{ArmorConfig, ContinuousOpt, SelectionHeuristic};
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, prune_model, PruneJob};
+use armor::data::{generate_corpus, sample_calibration, tokenize, CorpusSpec, Split};
+use armor::eval::{evaluate_tasks, perplexity};
+use armor::model::GptModel;
+use armor::sparsity::Pattern;
+use armor::util::cli::{usage, Args, OptSpec};
+use armor::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse();
+    let result = match args.subcommand() {
+        Some("gen-corpus") => cmd_gen_corpus(&args),
+        Some("prune") => cmd_prune(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "{}",
+        usage(
+            "armor",
+            "ARMOR semi-structured pruning pipeline",
+            &[
+                OptSpec { name: "model", help: "path to a .tsr model bundle", default: Some("artifacts/model/tiny.tsr") },
+                OptSpec { name: "method", help: "dense|magnitude|wanda|nowag|sparsegpt|rotation|armor", default: Some("armor") },
+                OptSpec { name: "pattern", help: "2:4, 4:8, 5:8, 6:8, or 50%", default: Some("2:4") },
+                OptSpec { name: "iters", help: "ARMOR BCD iterations", default: Some("120") },
+                OptSpec { name: "d-block", help: "wrapper block size", default: Some("32") },
+                OptSpec { name: "calib", help: "calibration sequences", default: Some("16") },
+                OptSpec { name: "xla", help: "use PJRT artifacts for the hot path", default: None },
+                OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
+                OptSpec { name: "out", help: "output path for pruned model", default: None },
+                OptSpec { name: "seed", help: "RNG seed", default: Some("0") },
+            ]
+        )
+    );
+    println!("subcommands: gen-corpus | prune | eval | pipeline | inspect");
+}
+
+fn armor_cfg_from(args: &Args) -> ArmorConfig {
+    ArmorConfig {
+        d_block: args.get_usize("d-block", 32),
+        n_iters: args.get_usize("iters", 120),
+        optimizer: ContinuousOpt::Adam { lr: args.get_f32("lr", 1e-3) },
+        heuristic: SelectionHeuristic::parse(&args.get_or("heuristic", "l1random"))
+            .unwrap_or(SelectionHeuristic::L1Random),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    }
+}
+
+fn load_model(args: &Args) -> armor::Result<GptModel> {
+    let path = args.get_or("model", "artifacts/model/tiny.tsr");
+    GptModel::load(Path::new(&path))
+}
+
+fn load_corpus_split(args: &Args, split: Split) -> armor::Result<String> {
+    let dir = args.get_or("corpus-dir", "artifacts/corpus");
+    let path = Path::new(&dir).join(split.filename());
+    if path.exists() {
+        Ok(std::fs::read_to_string(&path)?)
+    } else {
+        // fall back to generating on the fly (identical content)
+        Ok(generate_corpus(&CorpusSpec::default(), split))
+    }
+}
+
+fn cmd_gen_corpus(args: &Args) -> armor::Result<()> {
+    let out = args.get_or("out", "artifacts/corpus");
+    let n = args.get_usize("sentences", CorpusSpec::default().n_sentences);
+    let seed = args.get_u64("seed", CorpusSpec::default().seed);
+    std::fs::create_dir_all(&out)?;
+    let spec = CorpusSpec { n_sentences: n, seed };
+    for split in [Split::Train, Split::WikiLike, Split::WebLike] {
+        let spec = if split == Split::Train {
+            spec
+        } else {
+            CorpusSpec { n_sentences: n / 10, ..spec }
+        };
+        let text = generate_corpus(&spec, split);
+        let path = Path::new(&out).join(split.filename());
+        std::fs::write(&path, &text)?;
+        println!("[gen-corpus] {} ({} bytes)", path.display(), text.len());
+    }
+    Ok(())
+}
+
+fn parse_method(args: &Args, name: &str) -> armor::Result<Method> {
+    Method::parse(name, &armor_cfg_from(args))
+        .ok_or_else(|| anyhow::anyhow!("unknown method '{name}'"))
+}
+
+fn get_runtime(args: &Args) -> Option<armor::runtime::Runtime> {
+    if !args.flag("xla") {
+        return None;
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match armor::runtime::Runtime::load(Path::new(&dir)) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("[warn] no PJRT runtime ({e}); falling back to native");
+            None
+        }
+    }
+}
+
+fn calibration(
+    args: &Args,
+    model: &GptModel,
+    with_gram: bool,
+) -> armor::Result<std::collections::BTreeMap<String, armor::baselines::CalibStats>> {
+    let text = load_corpus_split(args, Split::Train)?;
+    let tokens = tokenize(&text);
+    let n = args.get_usize("calib", 16);
+    let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0) ^ 0xCA11B);
+    let seqs = sample_calibration(&tokens, model.cfg.max_seq.min(128), n, &mut rng);
+    Ok(calibrate(model, &seqs, with_gram))
+}
+
+fn cmd_prune(args: &Args) -> armor::Result<()> {
+    let model = load_model(args)?;
+    let method = parse_method(args, &args.get_or("method", "armor"))?;
+    let pattern = Pattern::parse(&args.get_or("pattern", "2:4"))
+        .ok_or_else(|| anyhow::anyhow!("bad pattern"))?;
+    let needs_gram = matches!(method, Method::SparseGpt | Method::Rotation(_));
+    let stats = calibration(args, &model, needs_gram)?;
+    let rt = get_runtime(args);
+    let job = PruneJob { method, pattern, seed: args.get_u64("seed", 0), use_xla: rt.is_some() };
+    println!("[prune] method={} pattern={}", job.method.label(), pattern.label());
+    let (pruned, report) = prune_model(&model, &stats, &job, rt.as_ref());
+    println!(
+        "[prune] total weighted err {:.4}  storage {:.2} MiB  wrapper overhead {:.2}%  ({:.1}s)",
+        report.total_weighted_err,
+        armor::coordinator::model_storage_bytes(&pruned, &report) as f64 / (1 << 20) as f64,
+        report.wrapper_overhead * 100.0,
+        report.millis / 1e3
+    );
+    if let Some(out) = args.get("out") {
+        pruned.save(Path::new(out))?;
+        println!("[prune] saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> armor::Result<()> {
+    let model = load_model(args)?;
+    let seq = model.cfg.max_seq.min(128);
+    let max_seqs = args.get_usize("eval-seqs", 16);
+    for (name, split) in [("wiki-like", Split::WikiLike), ("web-like", Split::WebLike)] {
+        let text = load_corpus_split(args, split)?;
+        let ppl = perplexity(&model, &text, seq, max_seqs);
+        println!("[eval] {name} perplexity: {ppl:.4}");
+    }
+    if args.flag("tasks") {
+        let n = args.get_usize("task-n", 20);
+        for (task, acc) in evaluate_tasks(&model, n, args.get_u64("seed", 0)) {
+            println!("[eval] task {task:<10} accuracy {acc:.1}%");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> armor::Result<()> {
+    let model = load_model(args)?;
+    let methods = args.get_or("methods", "dense,wanda,nowag,sparsegpt,armor");
+    let pattern = Pattern::parse(&args.get_or("pattern", "2:4"))
+        .ok_or_else(|| anyhow::anyhow!("bad pattern"))?;
+    let stats = calibration(args, &model, true)?;
+    let rt = get_runtime(args);
+    let seq = model.cfg.max_seq.min(128);
+    let max_seqs = args.get_usize("eval-seqs", 12);
+    let wiki = load_corpus_split(args, Split::WikiLike)?;
+    let web = load_corpus_split(args, Split::WebLike)?;
+
+    let mut rows = Vec::new();
+    for mname in methods.split(',') {
+        let method = parse_method(args, mname.trim())?;
+        let job =
+            PruneJob { method, pattern, seed: args.get_u64("seed", 0), use_xla: rt.is_some() };
+        let t0 = std::time::Instant::now();
+        let (pruned, report) = prune_model(&model, &stats, &job, rt.as_ref());
+        let ppl_wiki = perplexity(&pruned, &wiki, seq, max_seqs);
+        let ppl_web = perplexity(&pruned, &web, seq, max_seqs);
+        println!(
+            "[pipeline] {:<12} wiki {:8.3}  web {:8.3}  err {:10.3}  ({:.1}s)",
+            report.method,
+            ppl_wiki,
+            ppl_web,
+            report.total_weighted_err,
+            t0.elapsed().as_secs_f64()
+        );
+        rows.push(armor::coordinator::TableRow::new(
+            &report.method,
+            vec![format!("{ppl_wiki:.3}"), format!("{ppl_web:.3}")],
+        ));
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            &format!("Perplexity at {} (Table 3 analog)", pattern.label()),
+            &["Wiki-like (↓)", "Web-like (↓)"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> armor::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest_path = Path::new(&dir).join("manifest.json");
+    if manifest_path.exists() {
+        let manifest = armor::io::Manifest::load(Path::new(&dir))?;
+        println!("artifacts in {dir}:");
+        for a in &manifest.artifacts {
+            println!(
+                "  {:<32} inputs {}",
+                a.name,
+                a.input_shapes.iter().map(|s| format!("{s:?}")).collect::<Vec<_>>().join(" ")
+            );
+        }
+    }
+    if let Ok(model) = load_model(args) {
+        println!(
+            "model: {} params ({} tensors), config {:?}",
+            model.cfg.param_count(),
+            model.tensors.len(),
+            model.cfg
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Model configuration, shared with the Python build layer via JSON
+//! (`configs/*.json`).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Mixture-of-Experts MLP configuration (Appendix F analog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoeConfig {
+    pub n_experts: usize,
+    /// top-k routing (we use k=1, switch-style, for the tiny models)
+    pub top_k: usize,
+}
+
+/// GPT architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GptConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub moe: Option<MoeConfig>,
+}
+
+impl GptConfig {
+    /// The default end-to-end model: small enough to prune and evaluate
+    /// natively in seconds, big enough to have real structure.
+    pub fn tiny() -> GptConfig {
+        GptConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 128,
+            moe: None,
+        }
+    }
+
+    /// A larger config for scaling benches.
+    pub fn small() -> GptConfig {
+        GptConfig {
+            vocab: 256,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 1024,
+            max_seq: 256,
+            moe: None,
+        }
+    }
+
+    /// MoE variant of `tiny` (Table 10 analog).
+    pub fn tiny_moe() -> GptConfig {
+        GptConfig { moe: Some(MoeConfig { n_experts: 4, top_k: 1 }), ..GptConfig::tiny() }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks; head is tied).
+    pub fn param_count(&self) -> usize {
+        let embed = self.vocab * self.d_model + self.max_seq * self.d_model;
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = match self.moe {
+            None => 2 * self.d_model * self.d_ff,
+            Some(m) => m.n_experts * 2 * self.d_model * self.d_ff + m.n_experts * self.d_model,
+        };
+        let ln = 4 * self.d_model; // ln1+ln2 (g,b)
+        embed + self.n_layers * (attn + mlp + ln) + 2 * self.d_model
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+        ];
+        if let Some(m) = self.moe {
+            pairs.push((
+                "moe",
+                Json::obj(vec![
+                    ("n_experts", Json::Num(m.n_experts as f64)),
+                    ("top_k", Json::Num(m.top_k as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<GptConfig> {
+        let req = |k: &str| {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("config missing field '{k}'"))
+        };
+        let moe = match v.get("moe") {
+            Json::Null => None,
+            m => Some(MoeConfig {
+                n_experts: m.get("n_experts").as_usize().unwrap_or(4),
+                top_k: m.get("top_k").as_usize().unwrap_or(1),
+            }),
+        };
+        Ok(GptConfig {
+            vocab: req("vocab")?,
+            d_model: req("d_model")?,
+            n_layers: req("n_layers")?,
+            n_heads: req("n_heads")?,
+            d_ff: req("d_ff")?,
+            max_seq: req("max_seq")?,
+            moe,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<GptConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        GptConfig::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [GptConfig::tiny(), GptConfig::small(), GptConfig::tiny_moe()] {
+            let j = cfg.to_json();
+            let back = GptConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = GptConfig::tiny();
+        // embeddings 256·128 + 128·128, blocks 4·(4·128² + 2·128·512 + 512) + 256
+        let expect = 256 * 128 + 128 * 128 + 4 * (4 * 128 * 128 + 2 * 128 * 512 + 4 * 128) + 2 * 128;
+        assert_eq!(c.param_count(), expect);
+        assert!(c.param_count() < 1_200_000);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        let c = GptConfig::tiny();
+        assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = GptConfig::tiny_moe();
+        let path = std::env::temp_dir().join(format!("armor_cfg_{}.json", std::process::id()));
+        cfg.save(&path).unwrap();
+        assert_eq!(GptConfig::load(&path).unwrap(), cfg);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,77 @@
+//! Registry of prunable linear layers (the q/k/v/o + MLP projections —
+//! embeddings and the tied head are left dense, matching the paper's setup).
+
+use crate::model::GptConfig;
+
+/// A reference to one prunable weight matrix inside the model's tensor map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerRef {
+    /// tensor-map key, e.g. `l2.attn.wq`
+    pub name: String,
+    pub d_out: usize,
+    pub d_in: usize,
+}
+
+impl LayerRef {
+    pub fn params(&self) -> usize {
+        self.d_out * self.d_in
+    }
+}
+
+/// Enumerate every prunable linear in a model config, in forward order.
+pub fn prunable_layers(cfg: &GptConfig) -> Vec<LayerRef> {
+    let d = cfg.d_model;
+    let mut out = Vec::new();
+    for l in 0..cfg.n_layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            out.push(LayerRef { name: format!("l{l}.attn.{w}"), d_out: d, d_in: d });
+        }
+        match cfg.moe {
+            None => {
+                out.push(LayerRef { name: format!("l{l}.mlp.up"), d_out: cfg.d_ff, d_in: d });
+                out.push(LayerRef { name: format!("l{l}.mlp.down"), d_out: d, d_in: cfg.d_ff });
+            }
+            Some(m) => {
+                for e in 0..m.n_experts {
+                    out.push(LayerRef {
+                        name: format!("l{l}.moe.e{e}.up"),
+                        d_out: cfg.d_ff,
+                        d_in: d,
+                    });
+                    out.push(LayerRef {
+                        name: format!("l{l}.moe.e{e}.down"),
+                        d_out: d,
+                        d_in: cfg.d_ff,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_layer_count() {
+        let layers = prunable_layers(&GptConfig::tiny());
+        assert_eq!(layers.len(), 4 * 6); // 4 attn + 2 mlp per layer
+        assert!(layers.iter().any(|l| l.name == "l3.mlp.down" && l.d_in == 512));
+    }
+
+    #[test]
+    fn moe_layer_count() {
+        let layers = prunable_layers(&GptConfig::tiny_moe());
+        assert_eq!(layers.len(), 4 * (4 + 2 * 4)); // 4 attn + 2·4 expert mats
+    }
+
+    #[test]
+    fn shapes_divisible_by_four() {
+        // every prunable layer must support 2:4 groups along d_in
+        for l in prunable_layers(&GptConfig::tiny()) {
+            assert_eq!(l.d_in % 4, 0, "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The transformer substrate: a tiny GPT (and its Mixture-of-Experts
+//! variant) with a native Rust forward pass used for perplexity evaluation,
+//! downstream-task scoring, and calibration-statistics capture.
+//!
+//! The architecture mirrors `python/compile/model.py` exactly (pre-LN,
+//! learned positional embeddings, tanh-GELU, tied LM head) so weights
+//! trained at build time by JAX load and run natively here.
+
+mod config;
+mod gpt;
+mod layers;
+
+pub use config::{GptConfig, MoeConfig};
+pub use gpt::{ActivationCapture, GptModel, NoCapture};
+pub use layers::{prunable_layers, LayerRef};

@@ -1,0 +1,117 @@
+//! NoWag row/column normalization (paper §3.2).
+//!
+//! ```text
+//! r¹_j = sqrt(Σ_i W²_ij)            (column norms)
+//! r²_i = sqrt(Σ_j (W_ij / r¹_j)²)   (row norms after column scaling)
+//! W̄_ij = W_ij / (r¹_j · r²_i)
+//! ```
+//! After optimization the factorization is denormalized by folding `r²` into
+//! the rows of `A` and `r¹` into the columns of `B` ("pre-scaling the rows and
+//! columns of A and B", paper §3.2), so inference needs no extra pass.
+
+use crate::tensor::{BlockDiag, Matrix};
+
+/// The normalization result: `W̄` plus both scale vectors.
+#[derive(Clone, Debug)]
+pub struct Normalized {
+    pub w_bar: Matrix,
+    /// column scales `r¹ ∈ R^{d_in}`
+    pub r1: Vec<f32>,
+    /// row scales `r² ∈ R^{d_out}`
+    pub r2: Vec<f32>,
+}
+
+const EPS: f32 = 1e-12;
+
+/// Compute the NoWag normalization of `W`.
+pub fn nowag_normalize(w: &Matrix) -> Normalized {
+    let mut r1: Vec<f32> = w.col_sq_norms().iter().map(|s| s.sqrt().max(EPS)).collect();
+    // guard all-zero columns: scale 1 keeps them zero without inf
+    for x in &mut r1 {
+        if *x <= EPS {
+            *x = 1.0;
+        }
+    }
+    let mut w_bar = w.clone();
+    let inv_r1: Vec<f32> = r1.iter().map(|x| 1.0 / x).collect();
+    w_bar.scale_cols(&inv_r1);
+    let mut r2: Vec<f32> = w_bar.row_sq_norms().iter().map(|s| s.sqrt().max(EPS)).collect();
+    for x in &mut r2 {
+        if *x <= EPS {
+            *x = 1.0;
+        }
+    }
+    let inv_r2: Vec<f32> = r2.iter().map(|x| 1.0 / x).collect();
+    w_bar.scale_rows(&inv_r2);
+    Normalized { w_bar, r1, r2 }
+}
+
+/// Undo normalization on a reconstructed `Ŵ` (for tests / native eval):
+/// `W ≈ diag(r²) · Ŵ_normalized · diag(r¹)`.
+pub fn denormalize(w_hat: &Matrix, r1: &[f32], r2: &[f32]) -> Matrix {
+    let mut out = w_hat.clone();
+    out.scale_rows(r2);
+    out.scale_cols(r1);
+    out
+}
+
+/// Fold the normalization scales into the block-diagonal wrappers so the
+/// deployed factorization `A·(W'⊙M)·B` reproduces the *unnormalized* weight:
+/// rows of `A` scaled by `r²`, columns of `B` scaled... note `B` multiplies
+/// activations on the right of the sparse core, i.e. `Ŵ x = A S B x`, so the
+/// `r¹` column scaling of the original W corresponds to scaling the *rows* of
+/// `B`'s blocks by `r¹` of the matching input coordinate — equivalently
+/// `B ← B · diag(r¹)`? No: `W = diag(r²) W̄ diag(r¹)` and
+/// `W̄ ≈ A S B` gives `W ≈ (diag(r²) A) S (B diag(r¹))`.
+pub fn fold_scales(a: &mut BlockDiag, b: &mut BlockDiag, r1: &[f32], r2: &[f32]) {
+    a.scale_rows(r2);
+    b.scale_cols(r1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn normalization_properties() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let w = Matrix::randn(12, 20, &mut rng);
+        let n = nowag_normalize(&w);
+        // every row of W̄ has unit norm
+        for s in n.w_bar.row_sq_norms() {
+            assert!((s - 1.0).abs() < 1e-4, "row norm² {s}");
+        }
+        // denormalize recovers W
+        assert!(denormalize(&n.w_bar, &n.r1, &n.r2).max_abs_diff(&w) < 1e-4);
+    }
+
+    #[test]
+    fn r1_are_column_norms() {
+        let w = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 2.0]);
+        let n = nowag_normalize(&w);
+        assert!((n.r1[0] - 5.0).abs() < 1e-6);
+        assert!((n.r1[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_column_is_safe() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        let n = nowag_normalize(&w);
+        assert!(n.w_bar.all_finite());
+        assert!(denormalize(&n.w_bar, &n.r1, &n.r2).max_abs_diff(&w) < 1e-6);
+    }
+
+    #[test]
+    fn fold_scales_reproduces_unnormalized() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = Matrix::randn(8, 12, &mut rng);
+        let n = nowag_normalize(&w);
+        // identity factorization of W̄: A=I, S=W̄, B=I
+        let mut a = BlockDiag::identity(8, 4);
+        let mut b = BlockDiag::identity(12, 4);
+        fold_scales(&mut a, &mut b, &n.r1, &n.r2);
+        let rec = a.matmul_right(&b.matmul_left(&n.w_bar));
+        assert!(rec.max_abs_diff(&w) < 1e-4);
+    }
+}

@@ -1,0 +1,135 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Seeded generators + a `forall` driver that reports the failing seed so a
+//! failure reproduces with `ARMOR_PROP_SEED=<seed>`. Used by the integration
+//! tests in `rust/tests/` for the coordinator/optimizer invariants.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (`ARMOR_PROP_CASES` to override).
+pub fn num_cases(default: usize) -> usize {
+    std::env::var("ARMOR_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, panics with the
+/// case's seed for reproduction.
+pub fn forall<G, T, P>(name: &str, cases: usize, generate: G, prop: P)
+where
+    G: Fn(&mut Pcg64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base = std::env::var("ARMOR_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xA4u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed on case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub struct Gen;
+
+impl Gen {
+    /// Random matrix with dims sampled from `dims` (rows, cols both chosen
+    /// from the list, cols forced to a multiple of `col_multiple`).
+    pub fn matrix(rng: &mut Pcg64, dims: &[usize], col_multiple: usize) -> Matrix {
+        let rows = dims[rng.next_below(dims.len() as u32) as usize];
+        let mut cols = dims[rng.next_below(dims.len() as u32) as usize];
+        cols = (cols / col_multiple).max(1) * col_multiple;
+        let mut m = Matrix::randn(rows, cols, rng);
+        // occasionally inject structure: zero columns, tiny values, outliers
+        match rng.next_below(4) {
+            0 => {
+                let c = rng.next_below(cols as u32) as usize;
+                for r in 0..rows {
+                    m[(r, c)] = 0.0;
+                }
+            }
+            1 => {
+                let r = rng.next_below(rows as u32) as usize;
+                for c in 0..cols {
+                    m[(r, c)] *= 100.0;
+                }
+            }
+            2 => {
+                for x in m.data.iter_mut() {
+                    *x *= 1e-3;
+                }
+            }
+            _ => {}
+        }
+        m
+    }
+
+    /// Positive activation weights of length `n`, with occasional zeros.
+    pub fn act_norms(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.next_f32() < 0.05 {
+                    0.0
+                } else {
+                    rng.next_f32() * 4.0 + 0.01
+                }
+            })
+            .collect()
+    }
+
+    /// A valid block size for the given dims.
+    pub fn block_size(rng: &mut Pcg64, rows: usize, cols: usize) -> usize {
+        let mut candidates: Vec<usize> =
+            [4usize, 8, 16].iter().copied().filter(|&b| rows % b == 0 && cols % b == 0).collect();
+        if candidates.is_empty() {
+            candidates.push(1);
+        }
+        candidates[rng.next_below(candidates.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", 10, |rng| rng.next_f32(), |x| {
+            if (0.0..1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failure() {
+        forall("fails", 5, |rng| rng.next_below(10), |&x| {
+            if x > 10 {
+                Ok(())
+            } else {
+                Err("always fails".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        for _ in 0..20 {
+            let m = Gen::matrix(&mut rng, &[8, 16, 32], 4);
+            assert_eq!(m.cols % 4, 0);
+            let db = Gen::block_size(&mut rng, m.rows, m.cols);
+            assert_eq!(m.rows % db, 0);
+            assert_eq!(m.cols % db, 0);
+            let d = Gen::act_norms(&mut rng, m.cols);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! XLA-accelerated ARMOR optimizer: the continuous step (the flops) runs as
+//! the AOT `cont_steps_*` artifact — K fused Adam steps per PJRT call — and
+//! the combinatorial sparse-core step stays native. This is the production
+//! hot path; `armor::ArmorOptimizer` is the pure-native fallback.
+
+use crate::armor::{initialize, sparse_core_step, ArmorConfig, IterRecord, PruneResult};
+use crate::proxy::ProxyProblem;
+use crate::runtime::{self, Runtime};
+use crate::sparsity::Pattern;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Drives Algorithm 1 with the continuous step offloaded to PJRT.
+pub struct ArmorXlaOptimizer<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    /// Adam steps fused per PJRT call (from the artifact metadata)
+    pub k_steps: usize,
+    fact: crate::armor::ArmorFactorization,
+    problem: ProxyProblem,
+    norm: crate::normalize::Normalized,
+    cfg: ArmorConfig,
+    rng: Pcg64,
+    // Adam moment literals stay device/host-side between calls
+    moments: Vec<xla::Literal>, // [ma, va, mb, vb, mw, vw]
+    t: f32,
+    lr: f32,
+    pub history: Vec<IterRecord>,
+    pub initial_loss: f64,
+    iter: usize,
+}
+
+impl<'rt> ArmorXlaOptimizer<'rt> {
+    /// `cfg.optimizer` must be Adam (the artifact encodes joint Adam).
+    pub fn new(
+        rt: &'rt Runtime,
+        w: &Matrix,
+        x_sq_norms: &[f32],
+        cfg: &ArmorConfig,
+        rng: Pcg64,
+    ) -> crate::Result<ArmorXlaOptimizer<'rt>> {
+        let artifact = format!("cont_steps_{}x{}_b{}", w.rows, w.cols, cfg.d_block);
+        anyhow::ensure!(
+            rt.has(&artifact),
+            "no artifact '{artifact}' — run `make artifacts` with matching shapes/d_block"
+        );
+        let k_steps = rt
+            .manifest
+            .find(&artifact)
+            .and_then(|s| s.meta.get("k_steps").as_usize())
+            .unwrap_or(10);
+        let lr = match cfg.optimizer {
+            crate::armor::ContinuousOpt::Adam { lr } => lr,
+            other => anyhow::bail!("XLA path supports Adam only, got {other:?}"),
+        };
+        let (fact, problem, norm) = initialize(w, x_sq_norms, cfg.d_block, cfg.pattern);
+        let initial_loss = problem.loss_plain(&fact.core());
+        let db = cfg.d_block as i64;
+        let zeros_bd = |d: usize| {
+            let nb = (d / cfg.d_block) as i64;
+            xla::Literal::vec1(&vec![0.0f32; (nb * db * db) as usize])
+                .reshape(&[nb, db, db])
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        };
+        let zeros_m = |r: usize, c: usize| {
+            xla::Literal::vec1(&vec![0.0f32; r * c])
+                .reshape(&[r as i64, c as i64])
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        };
+        let moments = vec![
+            zeros_bd(w.rows)?,
+            zeros_bd(w.rows)?,
+            zeros_bd(w.cols)?,
+            zeros_bd(w.cols)?,
+            zeros_m(w.rows, w.cols)?,
+            zeros_m(w.rows, w.cols)?,
+        ];
+        Ok(ArmorXlaOptimizer {
+            rt,
+            artifact,
+            k_steps,
+            moments,
+            t: 0.0,
+            lr,
+            fact,
+            problem,
+            norm,
+            cfg: cfg.clone(),
+            rng,
+            history: vec![IterRecord { iter: 0, loss: initial_loss }],
+            initial_loss,
+            iter: 0,
+        })
+    }
+
+    /// One macro-iteration: K fused Adam steps on PJRT, then (for N:M
+    /// patterns with sparse updates enabled) one native sparse-core step.
+    /// Returns the artifact-reported loss after the continuous step.
+    pub fn step(&mut self) -> crate::Result<f64> {
+        let mask_m = self.fact.mask.to_matrix();
+        let mut inputs = vec![
+            runtime::lit_from_blockdiag(&self.fact.a)?,
+            runtime::lit_from_blockdiag(&self.fact.b)?,
+            runtime::lit_from_matrix(&self.fact.w_prime)?,
+            runtime::lit_from_matrix(&mask_m)?,
+            runtime::lit_from_matrix(&self.problem.w_bar)?,
+            runtime::lit_from_vec(&self.problem.d),
+        ];
+        inputs.extend(self.moments.iter().cloned());
+        inputs.push(runtime::lit_scalar(self.t));
+        inputs.push(runtime::lit_scalar(self.lr));
+
+        let out = self.rt.execute(&self.artifact, &inputs)?;
+        anyhow::ensure!(out.len() == 11, "cont_steps returned {} outputs", out.len());
+        let mut it = out.into_iter();
+        // outputs: a, b, wp, ma, va, mb, vb, mw, vw, t, loss
+        let (d_out, d_in) = (self.fact.d_out(), self.fact.d_in());
+        let db = self.cfg.d_block;
+        self.fact.a = runtime::blockdiag_from_lit(&it.next().unwrap(), d_out, db)?;
+        self.fact.b = runtime::blockdiag_from_lit(&it.next().unwrap(), d_in, db)?;
+        self.fact.w_prime = runtime::matrix_from_lit(&it.next().unwrap(), d_out, d_in)?;
+        for m in self.moments.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        self.t = runtime::scalar_from_lit(&it.next().unwrap())?;
+        let loss = runtime::scalar_from_lit(&it.next().unwrap())? as f64;
+
+        let sparse_on =
+            self.cfg.sparse_update && matches!(self.cfg.pattern, Pattern::NM { .. });
+        if sparse_on {
+            if let Pattern::NM { n, m } = self.cfg.pattern {
+                sparse_core_step(
+                    &mut self.fact,
+                    &self.problem,
+                    n,
+                    m,
+                    self.cfg.heuristic,
+                    &mut self.rng,
+                );
+            }
+        }
+        self.iter += self.k_steps;
+        self.history.push(IterRecord { iter: self.iter, loss });
+        Ok(loss)
+    }
+
+    /// Run until at least `n_adam_steps` Adam steps have executed.
+    pub fn run(&mut self, n_adam_steps: usize) -> crate::Result<()> {
+        while self.iter < n_adam_steps {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    pub fn current_loss(&self) -> f64 {
+        self.problem.loss(&self.fact.a, &self.fact.core(), &self.fact.b)
+    }
+
+    /// Finalize exactly like the native optimizer: fold the NoWag scales
+    /// into `A`/`B` and return the result.
+    pub fn finish(mut self) -> PruneResult {
+        let final_loss = self.current_loss();
+        crate::normalize::fold_scales(
+            &mut self.fact.a,
+            &mut self.fact.b,
+            &self.norm.r1,
+            &self.norm.r2,
+        );
+        PruneResult {
+            factorization: self.fact,
+            initial_loss: self.initial_loss,
+            final_loss,
+            history: self.history,
+        }
+    }
+}
+
+/// Prune one matrix via the XLA path (API-compatible with
+/// `armor::prune_matrix`).
+pub fn prune_matrix_xla(
+    rt: &Runtime,
+    w: &Matrix,
+    x_sq_norms: &[f32],
+    cfg: &ArmorConfig,
+    rng: &mut Pcg64,
+) -> crate::Result<PruneResult> {
+    let mut opt = ArmorXlaOptimizer::new(rt, w, x_sq_norms, cfg, rng.fork(0xA4A1))?;
+    opt.run(cfg.n_iters)?;
+    Ok(opt.finish())
+}

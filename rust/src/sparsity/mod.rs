@@ -1,0 +1,309 @@
+//! Sparsity patterns: binary masks, N:M semi-structured constraints,
+//! unstructured top-k, and compressed 2:4 storage.
+
+mod compressed;
+pub use compressed::Compressed24;
+
+use crate::tensor::Matrix;
+
+/// The sparsity pattern a pruner must satisfy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// N of every M consecutive columns kept, per row (paper's 2:4 is `NM(2,4)`).
+    NM { n: usize, m: usize },
+    /// Unstructured with the given kept fraction (e.g. 0.5 = 50% sparsity).
+    Unstructured { keep_frac_x1000: usize },
+}
+
+impl Pattern {
+    pub const TWO_FOUR: Pattern = Pattern::NM { n: 2, m: 4 };
+
+    pub fn unstructured(keep_frac: f32) -> Pattern {
+        Pattern::Unstructured { keep_frac_x1000: (keep_frac * 1000.0).round() as usize }
+    }
+
+    pub fn keep_frac(&self) -> f32 {
+        match self {
+            Pattern::NM { n, m } => *n as f32 / *m as f32,
+            Pattern::Unstructured { keep_frac_x1000 } => *keep_frac_x1000 as f32 / 1000.0,
+        }
+    }
+
+    /// Parse `"2:4"`, `"4:8"`, `"50%"`, or `"unstructured:0.5"`.
+    pub fn parse(s: &str) -> Option<Pattern> {
+        if let Some((n, m)) = s.split_once(':') {
+            if let (Ok(n), Ok(m)) = (n.parse::<usize>(), m.parse::<usize>()) {
+                if n <= m && m > 0 {
+                    return Some(Pattern::NM { n, m });
+                }
+            }
+            if n == "unstructured" {
+                if let Ok(k) = m.parse::<f32>() {
+                    return Some(Pattern::unstructured(k));
+                }
+            }
+            return None;
+        }
+        if let Some(pct) = s.strip_suffix('%') {
+            if let Ok(p) = pct.parse::<f32>() {
+                return Some(Pattern::unstructured(1.0 - p / 100.0));
+            }
+        }
+        None
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Pattern::NM { n, m } => format!("{n}:{m}"),
+            Pattern::Unstructured { keep_frac_x1000 } => {
+                format!("{}%", 100 - keep_frac_x1000 / 10)
+            }
+        }
+    }
+}
+
+/// Binary mask stored as bytes (0/1), same shape as the weight matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl Mask {
+    pub fn ones(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, data: vec![1; rows * cols] }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.data[r * self.cols + c] != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.data[r * self.cols + c] = v as u8;
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.data.iter().map(|&b| b as usize).sum()
+    }
+
+    pub fn density(&self) -> f32 {
+        self.count_ones() as f32 / (self.rows * self.cols) as f32
+    }
+
+    /// Apply to a weight matrix: `W ⊙ M`.
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        let data = w.data.iter().zip(&self.data).map(|(x, &m)| if m != 0 { *x } else { 0.0 }).collect();
+        Matrix { rows: w.rows, cols: w.cols, data }
+    }
+
+    /// Zero masked entries in place.
+    pub fn apply_inplace(&self, w: &mut Matrix) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        for (x, &m) in w.data.iter_mut().zip(&self.data) {
+            if m == 0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// As a 0.0/1.0 float matrix (for the PJRT artifacts, which take masks
+    /// as f32 inputs).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&b| b as f32).collect(),
+        }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Mask {
+        Mask {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| (x != 0.0) as u8).collect(),
+        }
+    }
+
+    /// Check the paper's constraint `‖M_{i,[k]}‖₀ = n` for every row `i` and
+    /// every group `k` of `m` consecutive columns.
+    pub fn satisfies_nm(&self, n: usize, m: usize) -> bool {
+        if self.cols % m != 0 {
+            return false;
+        }
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for g in row.chunks_exact(m) {
+                if g.iter().map(|&b| b as usize).sum::<usize>() != n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Importance-score mask initialization: keep the top-`n` of every `m`
+/// consecutive columns per row by `importance` (paper Eq. 3 with
+/// `I_ij = W̄²_ij ‖X_j‖²` — the NoWag-P / Wanda-style criterion).
+pub fn nm_mask_from_importance(importance: &Matrix, n: usize, m: usize) -> Mask {
+    assert!(n <= m && m > 0, "invalid {n}:{m}");
+    assert_eq!(importance.cols % m, 0, "cols {} not divisible by M={m}", importance.cols);
+    let mut mask = Mask::zeros(importance.rows, importance.cols);
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    for r in 0..importance.rows {
+        let row = importance.row(r);
+        for k in 0..importance.cols / m {
+            let g = &row[k * m..(k + 1) * m];
+            idx.clear();
+            idx.extend(0..m);
+            // sort descending by importance; stable so ties keep lower index
+            idx.sort_by(|&a, &b| g[b].partial_cmp(&g[a]).unwrap_or(std::cmp::Ordering::Equal));
+            for &i in idx.iter().take(n) {
+                mask.set(r, k * m + i, true);
+            }
+        }
+    }
+    mask
+}
+
+/// Unstructured top-k mask: keep the `keep_frac` largest-importance entries
+/// globally (matrix-wide threshold, matching NoWag-P's unstructured mode).
+pub fn unstructured_mask_from_importance(importance: &Matrix, keep_frac: f32) -> Mask {
+    let total = importance.rows * importance.cols;
+    let keep = ((total as f64) * keep_frac as f64).round() as usize;
+    let keep = keep.min(total);
+    if keep == total {
+        return Mask::ones(importance.rows, importance.cols);
+    }
+    let mut order: Vec<u32> = (0..total as u32).collect();
+    order.sort_by(|&a, &b| {
+        importance.data[b as usize]
+            .partial_cmp(&importance.data[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = Mask::zeros(importance.rows, importance.cols);
+    for &i in order.iter().take(keep) {
+        mask.data[i as usize] = 1;
+    }
+    mask
+}
+
+/// Build a mask for an arbitrary `Pattern`.
+pub fn mask_from_importance(importance: &Matrix, pattern: Pattern) -> Mask {
+    match pattern {
+        Pattern::NM { n, m } => nm_mask_from_importance(importance, n, m),
+        Pattern::Unstructured { .. } => {
+            unstructured_mask_from_importance(importance, pattern.keep_frac())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn two_four_mask_valid_and_optimal() {
+        let imp = Matrix::from_vec(1, 8, vec![0.1, 0.9, 0.5, 0.2, 1.0, 0.0, 0.3, 0.7]);
+        let m = nm_mask_from_importance(&imp, 2, 4);
+        assert!(m.satisfies_nm(2, 4));
+        // group 0: keep cols 1 (0.9) and 2 (0.5)
+        assert!(m.get(0, 1) && m.get(0, 2));
+        // group 1: keep cols 4 (1.0) and 7 (0.7)
+        assert!(m.get(0, 4) && m.get(0, 7));
+        assert_eq!(m.count_ones(), 4);
+    }
+
+    #[test]
+    fn nm_general_patterns() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let imp = Matrix::randn(16, 32, &mut rng).hadamard(&Matrix::randn(16, 32, &mut rng));
+        for (n, m) in [(1, 4), (2, 4), (3, 4), (4, 8), (5, 8), (6, 8)] {
+            let mask = nm_mask_from_importance(&imp, n, m);
+            assert!(mask.satisfies_nm(n, m), "{n}:{m}");
+            assert!((mask.density() - n as f32 / m as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unstructured_density() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let imp = Matrix::randn(20, 50, &mut rng);
+        let m = unstructured_mask_from_importance(&imp, 0.5);
+        assert_eq!(m.count_ones(), 500);
+        // kept entries have importance >= dropped entries
+        let kept_min = imp
+            .data
+            .iter()
+            .zip(&m.data)
+            .filter(|(_, &k)| k != 0)
+            .map(|(&v, _)| v)
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = imp
+            .data
+            .iter()
+            .zip(&m.data)
+            .filter(|(_, &k)| k == 0)
+            .map(|(&v, _)| v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!(kept_min >= dropped_max);
+    }
+
+    #[test]
+    fn apply_zeroes_masked() {
+        let w = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        let mut m = Mask::zeros(1, 4);
+        m.set(0, 1, true);
+        m.set(0, 3, true);
+        assert_eq!(m.apply(&w).data, vec![0., 2., 0., 4.]);
+        let mut w2 = w.clone();
+        m.apply_inplace(&mut w2);
+        assert_eq!(w2.data, vec![0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn satisfies_nm_detects_violations() {
+        let mut m = Mask::zeros(1, 8);
+        m.set(0, 0, true);
+        m.set(0, 1, true);
+        m.set(0, 4, true);
+        m.set(0, 5, true);
+        assert!(m.satisfies_nm(2, 4));
+        m.set(0, 2, true); // 3 in group 0
+        assert!(!m.satisfies_nm(2, 4));
+    }
+
+    #[test]
+    fn mask_matrix_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let imp = Matrix::randn(8, 16, &mut rng);
+        let m = nm_mask_from_importance(&imp, 2, 4);
+        assert_eq!(Mask::from_matrix(&m.to_matrix()), m);
+    }
+
+    #[test]
+    fn pattern_labels() {
+        assert_eq!(Pattern::TWO_FOUR.label(), "2:4");
+        assert_eq!(Pattern::unstructured(0.5).label(), "50%");
+        assert_eq!(Pattern::NM { n: 4, m: 8 }.keep_frac(), 0.5);
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(Pattern::parse("2:4"), Some(Pattern::TWO_FOUR));
+        assert_eq!(Pattern::parse("5:8"), Some(Pattern::NM { n: 5, m: 8 }));
+        assert_eq!(Pattern::parse("50%"), Some(Pattern::unstructured(0.5)));
+        assert_eq!(Pattern::parse("unstructured:0.5"), Some(Pattern::unstructured(0.5)));
+        assert_eq!(Pattern::parse("8:4"), None);
+        assert_eq!(Pattern::parse("garbage"), None);
+    }
+}

@@ -1,0 +1,294 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Pcg64;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of `f32`. The workhorse container for weights,
+/// activations, masks-as-floats, and gradients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.next_gaussian()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Normal with given std.
+    pub fn randn_scaled(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.next_gaussian() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Dense matmul via the blocked/threaded kernel in `linalg`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        crate::linalg::gemm(self, other)
+    }
+
+    /// Element-wise product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale column `c` of every row by `s[c]`.
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols);
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            for (x, f) in row.iter_mut().zip(s) {
+                *x *= f;
+            }
+        }
+    }
+
+    /// Scale row `r` by `s[r]`.
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for r in 0..self.rows {
+            let f = s[r];
+            for x in self.row_mut(r) {
+                *x *= f;
+            }
+        }
+    }
+
+    pub fn frobenius_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Squared L2 norm of each column.
+    pub fn col_sq_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for c in 0..self.cols {
+                out[c] += row[c] * row[c];
+            }
+        }
+        out
+    }
+
+    /// Squared L2 norm of each row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|x| x * x).sum())
+            .collect()
+    }
+
+    /// Copy the `br,bc`-th `bs × bs` block (paper notation `C^{(br,bc)}`,
+    /// 0-indexed here).
+    pub fn block(&self, br: usize, bc: usize, bs: usize) -> Matrix {
+        let (r0, c0) = (br * bs, bc * bs);
+        assert!(r0 + bs <= self.rows && c0 + bs <= self.cols);
+        let mut out = Matrix::zeros(bs, bs);
+        for r in 0..bs {
+            out.row_mut(r).copy_from_slice(&self.row(r0 + r)[c0..c0 + bs]);
+        }
+        out
+    }
+
+    /// Write a `bs × bs` block back.
+    pub fn set_block(&mut self, br: usize, bc: usize, bs: usize, blk: &Matrix) {
+        assert_eq!(blk.shape(), (bs, bs));
+        let (r0, c0) = (br * bs, bc * bs);
+        for r in 0..bs {
+            self.row_mut(r0 + r)[c0..c0 + bs].copy_from_slice(blk.row(r));
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, f32> {
+        self.data.iter()
+    }
+
+    /// True if all entries are finite (NaN/Inf guard used in tests and the
+    /// coordinator's post-step validation).
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let m = Matrix::randn(5, 7, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(3, 2)], m[(2, 3)]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.add(&b).data, vec![6., 8., 10., 12.]);
+        assert_eq!(b.sub(&a).data, vec![4., 4., 4., 4.]);
+        assert_eq!(a.hadamard(&b).data, vec![5., 12., 21., 32.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.data, vec![3.5, 5., 6.5, 8.]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(2, 2, vec![3., 0., 4., 0.]);
+        assert_eq!(m.frobenius_sq(), 25.0);
+        assert_eq!(m.col_sq_norms(), vec![25.0, 0.0]);
+        assert_eq!(m.row_sq_norms(), vec![9.0, 16.0]);
+    }
+
+    #[test]
+    fn block_get_set_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut m = Matrix::randn(8, 12, &mut rng);
+        let blk = m.block(1, 2, 4);
+        assert_eq!(blk[(0, 0)], m[(4, 8)]);
+        let newblk = Matrix::ones(4, 4);
+        m.set_block(1, 2, 4, &newblk);
+        assert_eq!(m.block(1, 2, 4), newblk);
+        // neighbours untouched
+        assert_eq!(m.block(0, 0, 4), m.block(0, 0, 4));
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut m = Matrix::ones(2, 3);
+        m.scale_rows(&[2.0, 3.0]);
+        assert_eq!(m.data, vec![2., 2., 2., 3., 3., 3.]);
+        m.scale_cols(&[1.0, 0.5, 0.0]);
+        assert_eq!(m.data, vec![2., 1., 0., 3., 1.5, 0.]);
+    }
+
+    #[test]
+    fn finite_guard() {
+        let mut m = Matrix::ones(2, 2);
+        assert!(m.all_finite());
+        m[(1, 1)] = f32::NAN;
+        assert!(!m.all_finite());
+    }
+}

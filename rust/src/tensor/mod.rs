@@ -1,0 +1,258 @@
+//! Dense row-major matrix type and blocked views.
+//!
+//! All weight matrices in the library follow the paper's convention
+//! `W ∈ R^{d_out × d_in}` (rows = output features). Block indexing uses the
+//! paper's Appendix-A notation: `C^{(i,j)}` is the `d_block × d_block` block
+//! at block-row `i`, block-col `j`.
+
+mod matrix;
+pub use matrix::Matrix;
+
+/// A block-diagonal square matrix stored densely per block:
+/// `blocks[i]` is the `d_block × d_block` block `D^{(i)}` (paper §3.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockDiag {
+    pub d: usize,
+    pub d_block: usize,
+    /// `d / d_block` blocks, each a row-major `d_block × d_block` matrix.
+    pub blocks: Vec<Matrix>,
+}
+
+impl BlockDiag {
+    /// Identity block-diagonal of size `d` with block size `d_block`.
+    /// Panics unless `d_block` divides `d`.
+    pub fn identity(d: usize, d_block: usize) -> BlockDiag {
+        assert!(d_block > 0 && d % d_block == 0, "d_block {d_block} must divide d {d}");
+        let n = d / d_block;
+        BlockDiag { d, d_block, blocks: (0..n).map(|_| Matrix::eye(d_block)).collect() }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.d / self.d_block
+    }
+
+    /// Number of stored (nonzero-capable) parameters: `n_blocks * d_block²`.
+    pub fn param_count(&self) -> usize {
+        self.n_blocks() * self.d_block * self.d_block
+    }
+
+    /// Densify into a full `d × d` matrix (for tests / small cases).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.d, self.d);
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let off = bi * self.d_block;
+            for r in 0..self.d_block {
+                for c in 0..self.d_block {
+                    out[(off + r, off + c)] = blk[(r, c)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Left-apply: `self · m` where `m` is `d × k`. Each block multiplies its
+    /// own row-panel — O(d · d_block · k) instead of O(d² k).
+    pub fn matmul_right(&self, m: &Matrix) -> Matrix {
+        assert_eq!(self.d, m.rows);
+        let mut out = Matrix::zeros(m.rows, m.cols);
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let off = bi * self.d_block;
+            for r in 0..self.d_block {
+                let orow = off + r;
+                for t in 0..self.d_block {
+                    let a = blk[(r, t)];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let src = m.row(off + t);
+                    let dst = out.row_mut(orow);
+                    for c in 0..m.cols {
+                        dst[c] += a * src[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Right-apply: `m · self` where `m` is `k × d`.
+    pub fn matmul_left(&self, m: &Matrix) -> Matrix {
+        assert_eq!(self.d, m.cols);
+        let mut out = Matrix::zeros(m.rows, m.cols);
+        for (bj, blk) in self.blocks.iter().enumerate() {
+            let off = bj * self.d_block;
+            for r in 0..m.rows {
+                let src = m.row(r);
+                let dst = out.row_mut(r);
+                for t in 0..self.d_block {
+                    let x = src[off + t];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for c in 0..self.d_block {
+                        dst[off + c] += x * blk[(t, c)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply to a vector from the left: `y = self · x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d);
+        let mut y = vec![0.0f32; self.d];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let off = bi * self.d_block;
+            for r in 0..self.d_block {
+                let mut acc = 0.0f32;
+                let row = blk.row(r);
+                for t in 0..self.d_block {
+                    acc += row[t] * x[off + t];
+                }
+                y[off + r] = acc;
+            }
+        }
+        y
+    }
+
+    /// Scale block rows by a per-global-row factor (used to fold the NoWag
+    /// denormalization `r^{(2)}` into `A`).
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.d);
+        for (bi, blk) in self.blocks.iter_mut().enumerate() {
+            let off = bi * self.d_block;
+            for r in 0..self.d_block {
+                let f = s[off + r];
+                for c in 0..self.d_block {
+                    blk[(r, c)] *= f;
+                }
+            }
+        }
+    }
+
+    /// Scale block columns by a per-global-col factor (folds `r^{(1)}` into `B`).
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.d);
+        for (bj, blk) in self.blocks.iter_mut().enumerate() {
+            let off = bj * self.d_block;
+            for r in 0..self.d_block {
+                for c in 0..self.d_block {
+                    blk[(r, c)] *= s[off + c];
+                }
+            }
+        }
+    }
+
+    /// Transpose (transposes each block).
+    pub fn transpose(&self) -> BlockDiag {
+        BlockDiag {
+            d: self.d,
+            d_block: self.d_block,
+            blocks: self.blocks.iter().map(|b| b.transpose()).collect(),
+        }
+    }
+
+    /// Frobenius-norm distance to another block-diagonal (tests).
+    pub fn max_abs_diff(&self, other: &BlockDiag) -> f32 {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.d_block, other.d_block);
+        self.blocks
+            .iter()
+            .zip(&other.blocks)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_acts_as_identity() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let a = BlockDiag::identity(8, 4);
+        let m = Matrix::randn(8, 6, &mut rng);
+        assert!(a.matmul_right(&m).max_abs_diff(&m) < 1e-7);
+        let m2 = Matrix::randn(5, 8, &mut rng);
+        assert!(a.matmul_left(&m2).max_abs_diff(&m2) < 1e-7);
+    }
+
+    #[test]
+    fn blockdiag_matches_dense_multiply() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut bd = BlockDiag::identity(8, 4);
+        for b in &mut bd.blocks {
+            *b = Matrix::randn(4, 4, &mut rng);
+        }
+        let m = Matrix::randn(8, 5, &mut rng);
+        let dense = bd.to_dense().matmul(&m);
+        assert!(bd.matmul_right(&m).max_abs_diff(&dense) < 1e-5);
+
+        let m2 = Matrix::randn(3, 8, &mut rng);
+        let dense2 = m2.matmul(&bd.to_dense());
+        assert!(bd.matmul_left(&m2).max_abs_diff(&dense2) < 1e-5);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut bd = BlockDiag::identity(12, 4);
+        for b in &mut bd.blocks {
+            *b = Matrix::randn(4, 4, &mut rng);
+        }
+        let x: Vec<f32> = (0..12).map(|_| rng.next_gaussian()).collect();
+        let xm = Matrix::from_vec(12, 1, x.clone());
+        let want = bd.to_dense().matmul(&xm);
+        let got = bd.matvec(&x);
+        for i in 0..12 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scale_rows_cols_match_dense_diag() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut bd = BlockDiag::identity(8, 2);
+        for b in &mut bd.blocks {
+            *b = Matrix::randn(2, 2, &mut rng);
+        }
+        let s: Vec<f32> = (0..8).map(|i| 0.5 + i as f32).collect();
+        let dense = bd.to_dense();
+
+        let mut rowscaled = bd.clone();
+        rowscaled.scale_rows(&s);
+        let mut want = dense.clone();
+        for r in 0..8 {
+            for c in 0..8 {
+                want[(r, c)] *= s[r];
+            }
+        }
+        assert!(rowscaled.to_dense().max_abs_diff(&want) < 1e-6);
+
+        let mut colscaled = bd.clone();
+        colscaled.scale_cols(&s);
+        let mut want2 = dense;
+        for r in 0..8 {
+            for c in 0..8 {
+                want2[(r, c)] *= s[c];
+            }
+        }
+        assert!(colscaled.to_dense().max_abs_diff(&want2) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nondividing_block() {
+        BlockDiag::identity(10, 4);
+    }
+
+    #[test]
+    fn param_count_is_sublinear() {
+        let bd = BlockDiag::identity(1024, 32);
+        assert_eq!(bd.param_count(), 32 * 32 * 32);
+        assert!(bd.param_count() < 1024 * 1024 / 10);
+    }
+}

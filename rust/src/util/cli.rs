@@ -1,0 +1,134 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option, for `usage()`.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first item = program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut it = args.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut out = Args { program, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// First positional argument (conventionally the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, summary: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{program} — {summary}\n\nOptions:\n");
+    for o in opts {
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = parse(&["prog", "run", "--iters", "50", "--block=32", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get_usize("iters", 0), 50);
+        assert_eq!(a.get_usize("block", 0), 32);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["prog"]);
+        assert_eq!(a.get_or("mode", "armor"), "armor");
+        assert_eq!(a.get_f32("lr", 1e-4), 1e-4);
+    }
+
+    #[test]
+    fn positional_collects() {
+        let a = parse(&["prog", "prune", "layer0", "--n", "3", "layer1"]);
+        assert_eq!(a.positional, vec!["prune", "layer0", "layer1"]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("armor", "prune things", &[OptSpec { name: "iters", help: "iterations", default: Some("300") }]);
+        assert!(u.contains("--iters"));
+        assert!(u.contains("default: 300"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Foundational utilities built from scratch (the offline environment carries
+//! no clap/serde/rayon/tokio — each substrate here replaces one of those).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

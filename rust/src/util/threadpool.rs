@@ -1,0 +1,125 @@
+//! Data-parallel helpers on top of `std::thread::scope` (rayon is not
+//! available offline). These are the only concurrency primitives the
+//! library needs: indexed parallel-for and chunked map over slices.
+
+/// Number of worker threads to use: `ARMOR_THREADS` env override, else
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ARMOR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, work-stealing via an atomic cursor.
+/// `f` must be `Sync` (called concurrently from many threads).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map producing a `Vec<T>` in index order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = Some(f(i));
+        });
+    }
+    out.into_iter().map(|x| x.expect("parallel_map slot unfilled")).collect()
+}
+
+/// Split `data` into `num_threads()` contiguous chunks and run `f(chunk_start,
+/// chunk)` on each in parallel. Used by the GEMM row-panel parallelism.
+pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk: usize,
+    f: F,
+) {
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &mut [T])> = {
+        let mut res = Vec::new();
+        let mut rest = data;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            res.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        res
+    };
+    let slots: Vec<std::sync::Mutex<(usize, &mut [T])>> =
+        chunks.into_iter().map(std::sync::Mutex::new).collect();
+    parallel_for(slots.len(), |i| {
+        let mut g = slots[i].lock().unwrap();
+        let (start, ref mut s) = *g;
+        f(start, s);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(257, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_mut_writes_disjoint() {
+        let mut data = vec![0usize; 1003];
+        parallel_chunks_mut(&mut data, 100, |start, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_for(0, |_| panic!("should not run"));
+        let v: Vec<usize> = parallel_map(0, |i| i);
+        assert!(v.is_empty());
+    }
+}

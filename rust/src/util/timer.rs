@@ -1,0 +1,118 @@
+//! Lightweight timing / metrics helpers shared by the coordinator and the
+//! bench harness.
+
+use std::time::Instant;
+
+/// Scope timer: `let _t = Timer::new("phase");` prints elapsed on drop when
+/// `ARMOR_TIMING=1`.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    quiet: bool,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Timer {
+        Timer {
+            label: label.to_string(),
+            start: Instant::now(),
+            quiet: std::env::var("ARMOR_TIMING").map(|v| v != "1").unwrap_or(true),
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.quiet {
+            eprintln!("[timing] {}: {:.2} ms", self.label, self.elapsed_ms());
+        }
+    }
+}
+
+/// Accumulating statistics over f64 samples (used by the bench harness and
+/// the coordinator's per-layer metrics).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+    /// Percentile via nearest-rank on a sorted copy; `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        let s = Stats::default();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Property-based tests over the coordinator/optimizer invariants, via the
+//! in-repo `prop` mini-framework (proptest is unavailable offline).
+//! Override case counts with `ARMOR_PROP_CASES`, reproduce failures with
+//! `ARMOR_PROP_SEED`.
+
+use armor::armor::{
+    initialize, prune_matrix, sparse_core_step, ArmorConfig, ContinuousOpt, SelectionHeuristic,
+};
+use armor::prop::{forall, num_cases, Gen};
+use armor::sparsity::{mask_from_importance, Pattern};
+use armor::tensor::Matrix;
+use armor::util::rng::Pcg64;
+
+struct Layer {
+    w: Matrix,
+    d: Vec<f32>,
+    db: usize,
+    seed: u64,
+}
+
+fn gen_layer(rng: &mut Pcg64) -> Layer {
+    let w = Gen::matrix(rng, &[8, 16, 24, 32], 8);
+    let d = Gen::act_norms(rng, w.cols);
+    let db = Gen::block_size(rng, w.rows, w.cols);
+    Layer { w, d, db, seed: rng.next_u64() }
+}
+
+/// Theorem 3.1 (sequential GD): the loss trajectory never increases, for
+/// arbitrary layer shapes, block sizes, and degenerate activation stats.
+#[test]
+fn prop_monotone_descent_sequential_gd() {
+    forall("monotone descent", num_cases(12), gen_layer, |l| {
+        // d_block must be divisible by M=4 for the sparse step
+        let db = if l.db % 4 == 0 { l.db } else { 8.min(l.w.rows).min(l.w.cols) };
+        if l.w.rows % db != 0 || l.w.cols % db != 0 || db % 4 != 0 {
+            return Ok(()); // shape not expressible; vacuously true
+        }
+        let cfg = ArmorConfig {
+            d_block: db,
+            n_iters: 8,
+            optimizer: ContinuousOpt::SequentialGd,
+            record_every: 1,
+            seed: l.seed,
+            ..Default::default()
+        };
+        let res = prune_matrix(&l.w, &l.d, &cfg, &mut Pcg64::seed_from_u64(l.seed));
+        let mut prev = f64::INFINITY;
+        for rec in &res.history {
+            if rec.loss > prev + 1e-6 * prev.max(1.0) {
+                return Err(format!("loss rose at iter {}: {prev} -> {}", rec.iter, rec.loss));
+            }
+            prev = rec.loss;
+        }
+        if !res.final_loss.is_finite() {
+            return Err("non-finite final loss".into());
+        }
+        Ok(())
+    });
+}
+
+/// The 2:4 mask constraint survives any number of sparse-core steps under
+/// every selection heuristic.
+#[test]
+fn prop_mask_constraint_preserved() {
+    forall("mask constraint", num_cases(10), gen_layer, |l| {
+        let db = 8;
+        if l.w.rows % db != 0 || l.w.cols % db != 0 {
+            return Ok(());
+        }
+        let (mut fact, problem, _) = initialize(&l.w, &l.d, db, Pattern::TWO_FOUR);
+        let mut rng = Pcg64::seed_from_u64(l.seed);
+        for h in [
+            SelectionHeuristic::Random,
+            SelectionHeuristic::L1Greedy,
+            SelectionHeuristic::L2Random,
+            SelectionHeuristic::L1Random,
+        ] {
+            sparse_core_step(&mut fact, &problem, 2, 4, h, &mut rng);
+            if !fact.mask.satisfies_nm(2, 4) {
+                return Err(format!("{h:?} broke the 2:4 constraint"));
+            }
+            if !fact.w_prime.all_finite() {
+                return Err(format!("{h:?} produced non-finite weights"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ARMOR's final proxy loss never exceeds its NoWag-P initialization
+/// (the Theorem 3.1 floor), for the practical Adam optimizer too.
+#[test]
+fn prop_never_worse_than_nowag() {
+    forall("floor guarantee", num_cases(10), gen_layer, |l| {
+        let db = 8;
+        if l.w.rows % db != 0 || l.w.cols % db != 0 {
+            return Ok(());
+        }
+        let cfg = ArmorConfig {
+            d_block: db,
+            n_iters: 15,
+            optimizer: ContinuousOpt::Adam { lr: 1e-3 },
+            seed: l.seed,
+            ..Default::default()
+        };
+        let res = prune_matrix(&l.w, &l.d, &cfg, &mut Pcg64::seed_from_u64(l.seed));
+        if res.final_loss > res.initial_loss * (1.0 + 1e-6) {
+            return Err(format!("{} -> {}", res.initial_loss, res.final_loss));
+        }
+        Ok(())
+    });
+}
+
+/// Mask construction density is exact for every N:M pattern on arbitrary
+/// importance matrices (including ties and zeros).
+#[test]
+fn prop_nm_mask_density_exact() {
+    forall("mask density", num_cases(20), gen_layer, |l| {
+        for (n, m) in [(1usize, 4usize), (2, 4), (3, 4), (4, 8), (5, 8), (6, 8)] {
+            if l.w.cols % m != 0 {
+                continue;
+            }
+            let imp = l.w.hadamard(&l.w);
+            let mask = mask_from_importance(&imp, Pattern::NM { n, m });
+            if !mask.satisfies_nm(n, m) {
+                return Err(format!("{n}:{m} violated"));
+            }
+            let want = l.w.rows * l.w.cols * n / m;
+            if mask.count_ones() != want {
+                return Err(format!("{n}:{m}: {} ones, want {want}", mask.count_ones()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Round-trip: compressed 2:4 storage reproduces the masked dense matrix
+/// exactly, and its matvec agrees with the dense one.
+#[test]
+fn prop_compressed24_roundtrip() {
+    forall("compressed 2:4", num_cases(15), gen_layer, |l| {
+        if l.w.cols % 4 != 0 {
+            return Ok(());
+        }
+        let imp = l.w.hadamard(&l.w);
+        let mask = mask_from_importance(&imp, Pattern::TWO_FOUR);
+        let c = armor::sparsity::Compressed24::compress(&l.w, &mask)
+            .map_err(|e| e.to_string())?;
+        let dense = mask.apply(&l.w);
+        if c.to_dense().max_abs_diff(&dense) > 1e-6 {
+            return Err("decompress mismatch".into());
+        }
+        let mut rng = Pcg64::seed_from_u64(l.seed);
+        let x: Vec<f32> = (0..l.w.cols).map(|_| rng.next_gaussian()).collect();
+        let got = c.matvec(&x);
+        let want = armor::linalg::matvec(&dense, &x);
+        for i in 0..got.len() {
+            if (got[i] - want[i]).abs() > 1e-3 * (1.0 + want[i].abs()) {
+                return Err(format!("matvec row {i}: {} vs {}", got[i], want[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// NoWag normalization always denormalizes back to the original matrix,
+/// even with zero columns/rows and extreme scales.
+#[test]
+fn prop_normalization_roundtrip() {
+    forall("normalize roundtrip", num_cases(20), gen_layer, |l| {
+        let n = armor::normalize::nowag_normalize(&l.w);
+        if !n.w_bar.all_finite() {
+            return Err("non-finite W̄".into());
+        }
+        let back = armor::normalize::denormalize(&n.w_bar, &n.r1, &n.r2);
+        let scale = l.w.data.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-6);
+        if back.max_abs_diff(&l.w) > 1e-3 * scale {
+            return Err(format!("roundtrip error {}", back.max_abs_diff(&l.w)));
+        }
+        Ok(())
+    });
+}
