@@ -25,7 +25,7 @@ fn main() -> armor::Result<()> {
     let eval_seqs = args.get_usize("eval-seqs", 12);
     let task_n = args.get_usize("task-n", 12);
 
-    anyhow::ensure!(
+    armor::ensure!(
         Path::new(&model_path).exists(),
         "model not found at {model_path} — run `make artifacts` first"
     );

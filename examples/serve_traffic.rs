@@ -1,0 +1,78 @@
+//! Walkthrough: prune a model, compile it to its deployment form, and serve
+//! a burst of generation requests through the continuous-batching engine.
+//!
+//!     cargo run --release --example serve_traffic
+//!
+//! Steps:
+//!   1. build a tiny GPT and calibration traffic
+//!   2. prune it with ARMOR (2:4 cores wrapped in block-diagonal A/B)
+//!   3. `CompiledModel::compile` — the factorizations from the prune report
+//!      become native `Armor` exec linears; nothing is folded back to dense
+//!   4. submit requests to the `Engine` and drain, printing per-request
+//!      latency and aggregate tokens/sec
+
+use armor::armor::ArmorConfig;
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, prune_model, PruneJob};
+use armor::data::detokenize;
+use armor::model::{CompiledModel, GptConfig, GptModel};
+use armor::serve::{Engine, EngineConfig};
+use armor::sparsity::Pattern;
+use armor::util::rng::Pcg64;
+
+fn main() -> armor::Result<()> {
+    let mut rng = Pcg64::seed_from_u64(0);
+
+    // 1. model + calibration data
+    let cfg = GptConfig::tiny();
+    let model = GptModel::random_init(&cfg, &mut rng);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..64).map(|_| rng.next_below(256) as u16).collect())
+        .collect();
+    let stats = calibrate(&model, &calib, false);
+
+    // 2. prune with ARMOR at 2:4
+    let armor_cfg = ArmorConfig { d_block: 32, n_iters: 40, ..Default::default() };
+    let job = PruneJob {
+        method: Method::Armor(armor_cfg),
+        pattern: Pattern::TWO_FOUR,
+        seed: 1,
+        use_xla: false,
+    };
+    let (pruned, report) = prune_model(&model, &stats, &job, None);
+    println!(
+        "pruned: weighted err {:.3}, wrapper overhead {:.1}%",
+        report.total_weighted_err,
+        report.wrapper_overhead * 100.0
+    );
+
+    // 3. lower to execution form — ARMOR wrappers survive compilation
+    let compiled = CompiledModel::compile(&pruned, Some(&report))?;
+    println!(
+        "compiled: exec forms {:?}, deployed weights {} KiB",
+        compiled.exec_summary(),
+        compiled.storage_bytes() / 1024
+    );
+
+    // 4. serve a traffic burst with continuous batching
+    let mut engine = Engine::new(compiled, EngineConfig { max_batch: 4 });
+    let mut ids = Vec::new();
+    for i in 0..8u64 {
+        let mut prng = Pcg64::seed_from_u64(100 + i);
+        let prompt: Vec<u16> = (0..12).map(|_| prng.next_below(256) as u16).collect();
+        ids.push((engine.submit(&prompt, 24), prompt));
+    }
+    let report = engine.drain();
+    print!("{}", report.render());
+    for r in report.requests.iter().take(2) {
+        println!(
+            "request {:?}: {} prompt tok → {} new tok, ttft {:.2} ms, sample: {:?}",
+            r.id,
+            r.prompt_len,
+            r.n_generated,
+            r.ttft_ms,
+            detokenize(&r.generated[..r.n_generated.min(16)])
+        );
+    }
+    Ok(())
+}

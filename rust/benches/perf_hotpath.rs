@@ -25,6 +25,23 @@ fn main() {
     });
     println!("{}  ({:.2} GFLOP/s)", r.line(), 2.0 * 256f64.powi(3) / (r.mean_ms / 1e3) / 1e9);
 
+    // ---- compressed 2:4 batched matmul: per-column reference vs blocked ----
+    {
+        let wc = Matrix::randn(512, 1024, &mut rng);
+        let imp = wc.hadamard(&wc);
+        let mask = armor::sparsity::nm_mask_from_importance(&imp, 2, 4);
+        let c24 = armor::sparsity::Compressed24::compress(&wc, &mask).unwrap();
+        let xs = Matrix::randn(1024, 64, &mut rng);
+        let r_ref = bench("c24 matmul 512x1024 b64 (per-col ref)", 2, scaled(30), 10.0, || {
+            black_box(c24.matmul_ref(&xs));
+        });
+        println!("{}", r_ref.line());
+        let r_blk = bench("c24 matmul 512x1024 b64 (blocked)", 2, scaled(30), 10.0, || {
+            black_box(c24.matmul(&xs));
+        });
+        println!("{}  ({:.2}x vs per-column)", r_blk.line(), r_ref.mean_ms / r_blk.mean_ms);
+    }
+
     let (fact, problem, _) = initialize(&w, &d, db, Pattern::TWO_FOUR);
     let r = bench("proxy loss + residual", 2, scaled(50), 10.0, || {
         black_box(problem.loss(&fact.a, &fact.core(), &fact.b));

@@ -46,6 +46,10 @@ pub struct PruneRunReport {
     /// mean wrapper overhead across ARMOR layers (the paper's "+o%")
     pub wrapper_overhead: f64,
     pub millis: f64,
+    /// ARMOR only: the per-layer `A·S·B` factorizations, kept so that
+    /// `model::CompiledModel::compile` can execute the wrappers natively at
+    /// serve time instead of folding them back into a dense matrix.
+    pub factorizations: BTreeMap<String, crate::armor::ArmorFactorization>,
 }
 
 /// A pruning job over a full model.
@@ -93,9 +97,7 @@ pub fn prune_model(
 
     // One layer's work. The PJRT client is not Sync, so the XLA path runs
     // layers serially; the native path fans out across the worker pool.
-    let run_layer = |i: usize,
-                     rt: Option<&crate::runtime::Runtime>|
-     -> (String, crate::tensor::Matrix, LayerReport, f64) {
+    let run_layer = |i: usize, rt: Option<&crate::runtime::Runtime>| -> LayerOutcome {
         let lref = &layers[i];
         let lt0 = std::time::Instant::now();
         let w = model.get(&lref.name);
@@ -124,6 +126,7 @@ pub fn prune_model(
                             Some(res.final_loss),
                             overhead,
                             lt0,
+                            Some(res.factorization),
                         )
                     }
                     Err(e) => {
@@ -139,11 +142,10 @@ pub fn prune_model(
         }
     };
 
-    let results: Vec<(String, crate::tensor::Matrix, LayerReport, f64)> =
-        match (job.use_xla, runtime) {
-            (true, Some(rt)) => (0..layers.len()).map(|i| run_layer(i, Some(rt))).collect(),
-            _ => parallel_map(layers.len(), |i| run_layer(i, None)),
-        };
+    let results: Vec<LayerOutcome> = match (job.use_xla, runtime) {
+        (true, Some(rt)) => (0..layers.len()).map(|i| run_layer(i, Some(rt))).collect(),
+        _ => parallel_map(layers.len(), |i| run_layer(i, None)),
+    };
 
     let mut pruned_model = model.clone();
     let mut layer_reports = Vec::new();
@@ -151,13 +153,17 @@ pub fn prune_model(
     let mut total_storage = 0usize;
     let mut overhead_sum = 0.0;
     let mut overhead_n = 0usize;
-    for (name, w_hat, rep, overhead) in results {
+    let mut factorizations = BTreeMap::new();
+    for (name, w_hat, rep, overhead, fact) in results {
         pruned_model.set(&name, w_hat);
         total_err += rep.weighted_err;
         total_storage += rep.storage_bytes;
         if overhead > 0.0 {
             overhead_sum += overhead;
             overhead_n += 1;
+        }
+        if let Some(f) = fact {
+            factorizations.insert(name, f);
         }
         layer_reports.push(rep);
     }
@@ -169,9 +175,20 @@ pub fn prune_model(
         total_storage_bytes: total_storage,
         wrapper_overhead: if overhead_n > 0 { overhead_sum / overhead_n as f64 } else { 0.0 },
         millis: t0.elapsed().as_secs_f64() * 1e3,
+        factorizations,
     };
     (pruned_model, report)
 }
+
+/// Per-layer result: (tensor name, pruned weight, report row, wrapper
+/// overhead, ARMOR factorization if the method produced one).
+type LayerOutcome = (
+    String,
+    crate::tensor::Matrix,
+    LayerReport,
+    f64,
+    Option<crate::armor::ArmorFactorization>,
+);
 
 #[allow(clippy::too_many_arguments)]
 fn return_layer(
@@ -183,7 +200,8 @@ fn return_layer(
     final_loss: Option<f64>,
     overhead: f64,
     lt0: std::time::Instant,
-) -> (String, crate::tensor::Matrix, LayerReport, f64) {
+    fact: Option<crate::armor::ArmorFactorization>,
+) -> LayerOutcome {
     (
         lref.name.clone(),
         w_hat,
@@ -198,6 +216,7 @@ fn return_layer(
             millis: lt0.elapsed().as_secs_f64() * 1e3,
         },
         overhead,
+        fact,
     )
 }
 
@@ -208,10 +227,20 @@ fn native_prune(
     rng: &mut Pcg64,
     lref: &crate::model::LayerRef,
     lt0: std::time::Instant,
-) -> (String, crate::tensor::Matrix, LayerReport, f64) {
+) -> LayerOutcome {
     let out = prune_layer(w, stats, &job.method, job.pattern, rng);
     let overhead = out.armor.as_ref().map(|f| f.wrapper_overhead()).unwrap_or(0.0);
-    return_layer(lref, out.w_hat, out.weighted_err, out.storage_bytes, None, None, overhead, lt0)
+    return_layer(
+        lref,
+        out.w_hat,
+        out.weighted_err,
+        out.storage_bytes,
+        None,
+        None,
+        overhead,
+        lt0,
+        out.armor,
+    )
 }
 
 /// Model storage accounting: prunable layers per the report + dense rest.
@@ -297,6 +326,25 @@ mod tests {
             nowag.total_weighted_err
         );
         assert!(armor.wrapper_overhead > 0.0 && armor.wrapper_overhead < 1.0);
+    }
+
+    #[test]
+    fn armor_report_carries_factorizations() {
+        let model = tiny_model();
+        let stats = calibrate(&model, &calib_seqs(2), false);
+        let cfg = ArmorConfig { d_block: 8, n_iters: 5, ..Default::default() };
+        let job = PruneJob { method: Method::Armor(cfg), pattern: Pattern::TWO_FOUR, seed: 1, use_xla: false };
+        let (pruned, report) = prune_model(&model, &stats, &job, None);
+        for lref in prunable_layers(&model.cfg) {
+            let f = report.factorizations.get(&lref.name).expect("factorization kept");
+            // the densified tensor in the model is exactly the factorization's
+            // reconstruction — compilation can execute A·S·B natively
+            assert!(f.reconstruct().max_abs_diff(pruned.get(&lref.name)) < 1e-6);
+        }
+        // baselines keep no factorizations
+        let job = PruneJob { method: Method::Wanda, pattern: Pattern::TWO_FOUR, seed: 1, use_xla: false };
+        let (_, report) = prune_model(&model, &stats, &job, None);
+        assert!(report.factorizations.is_empty());
     }
 
     #[test]

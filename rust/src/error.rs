@@ -1,0 +1,106 @@
+//! Crate-wide error type (anyhow is unavailable offline).
+//!
+//! A string-message error with the three macros the codebase uses:
+//! [`err!`](crate::err!) (build an error), [`bail!`](crate::bail!) (return
+//! early), and [`ensure!`](crate::ensure!) (assert-or-bail). Conversions
+//! from the std error types that appear behind `?` are provided.
+
+use std::fmt;
+
+/// A human-readable error message.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Build an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(ok: bool) -> crate::Result<u32> {
+            crate::ensure!(ok, "flag was {}", ok);
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        let e = f(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> crate::Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file/armor")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -37,8 +37,8 @@ impl Manifest {
     pub fn load(dir: &Path) -> crate::Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| crate::err!("parsing manifest: {e}"))?;
         let mut artifacts = Vec::new();
         for item in v.get("artifacts").as_arr().unwrap_or(&[]) {
             let shapes = |key: &str| -> Vec<Vec<usize>> {

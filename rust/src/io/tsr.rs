@@ -39,7 +39,7 @@ impl TensorEntry {
     }
 
     pub fn to_matrix(&self) -> crate::Result<Matrix> {
-        anyhow::ensure!(self.shape.len() == 2, "tensor is {}-d, expected 2-d", self.shape.len());
+        crate::ensure!(self.shape.len() == 2, "tensor is {}-d, expected 2-d", self.shape.len());
         Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone()))
     }
 
@@ -71,7 +71,7 @@ impl TensorBundle {
     pub fn matrix(&self, name: &str) -> crate::Result<Matrix> {
         self.tensors
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in bundle"))?
+            .ok_or_else(|| crate::err!("tensor '{name}' not in bundle"))?
             .to_matrix()
     }
 
@@ -79,7 +79,7 @@ impl TensorBundle {
         Ok(self
             .tensors
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not in bundle"))?
+            .ok_or_else(|| crate::err!("tensor '{name}' not in bundle"))?
             .data
             .clone())
     }
@@ -88,7 +88,7 @@ impl TensorBundle {
         let mut header_tensors = BTreeMap::new();
         let mut offset = 0usize;
         for (name, t) in &self.tensors {
-            anyhow::ensure!(t.data.len() == t.elems(), "tensor '{name}' shape/data mismatch");
+            crate::ensure!(t.data.len() == t.elems(), "tensor '{name}' shape/data mismatch");
             header_tensors.insert(
                 name.clone(),
                 Json::obj(vec![
@@ -122,23 +122,23 @@ impl TensorBundle {
     pub fn load(path: &Path) -> crate::Result<TensorBundle> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)
-                .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?,
+                .map_err(|e| crate::err!("opening {}: {e}", path.display()))?,
         );
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "{} is not a TSR1 bundle", path.display());
+        crate::ensure!(&magic == MAGIC, "{} is not a TSR1 bundle", path.display());
         let mut lenb = [0u8; 8];
         f.read_exact(&mut lenb)?;
         let hlen = u64::from_le_bytes(lenb) as usize;
-        anyhow::ensure!(hlen < 64 << 20, "unreasonable header size {hlen}");
+        crate::ensure!(hlen < 64 << 20, "unreasonable header size {hlen}");
         let mut hbuf = vec![0u8; hlen];
         f.read_exact(&mut hbuf)?;
         let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow::anyhow!("tsr header: {e}"))?;
+            .map_err(|e| crate::err!("tsr header: {e}"))?;
 
         let mut payload = Vec::new();
         f.read_to_end(&mut payload)?;
-        anyhow::ensure!(payload.len() % 4 == 0, "payload not f32-aligned");
+        crate::ensure!(payload.len() % 4 == 0, "payload not f32-aligned");
         let floats: Vec<f32> = payload
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -156,9 +156,9 @@ impl TensorBundle {
             let offset = spec
                 .get("offset")
                 .as_usize()
-                .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing offset"))?;
+                .ok_or_else(|| crate::err!("tensor '{name}' missing offset"))?;
             let n: usize = shape.iter().product();
-            anyhow::ensure!(
+            crate::ensure!(
                 offset + n <= floats.len(),
                 "tensor '{name}' extends past payload ({} + {} > {})",
                 offset,

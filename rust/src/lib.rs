@@ -12,8 +12,19 @@
 //!   substrate (tensor/linalg/model/eval/baselines), and a PJRT runtime that
 //!   loads the artifacts. Python is never on the runtime path.
 //!
+//! - **Serving** (this crate, `serve/` + `model/compiled.rs`): pruned models
+//!   are lowered to their deployment form ([`model::CompiledModel`]) and
+//!   executed with KV-cached decoding under a continuous-batching engine
+//!   ([`serve::Engine`]) — the sparsity bought at prune time is kept at
+//!   inference time.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// The seed style favours explicit index loops over iterator chains in the
+// numeric kernels; keep clippy's style lints from failing `-D warnings` CI.
+#![allow(clippy::needless_range_loop)]
+
+pub mod error;
 pub mod util;
 pub mod tensor;
 pub mod linalg;
@@ -28,8 +39,9 @@ pub mod data;
 pub mod eval;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench;
 pub mod prop;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -5,6 +5,8 @@
 //!   prune        prune a model with a chosen method/pattern
 //!   eval         perplexity + task-suite evaluation of a model
 //!   pipeline     prune with several methods and print a Table-3-style report
+//!   serve        compile to execution form and replay synthetic traffic
+//!                through the KV-cached continuous-batching engine
 //!   inspect      list artifacts / model tensors
 
 use armor::armor::{ArmorConfig, ContinuousOpt, SelectionHeuristic};
@@ -12,7 +14,8 @@ use armor::baselines::Method;
 use armor::coordinator::{calibrate, prune_model, PruneJob};
 use armor::data::{generate_corpus, sample_calibration, tokenize, CorpusSpec, Split};
 use armor::eval::{evaluate_tasks, perplexity};
-use armor::model::GptModel;
+use armor::model::{CompiledModel, GptModel};
+use armor::serve::{Engine, EngineConfig};
 use armor::sparsity::Pattern;
 use armor::util::cli::{usage, Args, OptSpec};
 use armor::util::rng::Pcg64;
@@ -25,6 +28,7 @@ fn main() {
         Some("prune") => cmd_prune(&args),
         Some("eval") => cmd_eval(&args),
         Some("pipeline") => cmd_pipeline(&args),
+        Some("serve") => cmd_serve(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
             print_usage();
@@ -54,10 +58,15 @@ fn print_usage() {
                 OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
                 OptSpec { name: "out", help: "output path for pruned model", default: None },
                 OptSpec { name: "seed", help: "RNG seed", default: Some("0") },
+                OptSpec { name: "requests", help: "serve: synthetic requests to replay", default: Some("16") },
+                OptSpec { name: "prompt-len", help: "serve: prompt tokens per request", default: Some("16") },
+                OptSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("32") },
+                OptSpec { name: "batch", help: "serve: max in-flight sequences", default: Some("8") },
+                OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
             ]
         )
     );
-    println!("subcommands: gen-corpus | prune | eval | pipeline | inspect");
+    println!("subcommands: gen-corpus | prune | eval | pipeline | serve | inspect");
 }
 
 fn armor_cfg_from(args: &Args) -> ArmorConfig {
@@ -110,7 +119,7 @@ fn cmd_gen_corpus(args: &Args) -> armor::Result<()> {
 
 fn parse_method(args: &Args, name: &str) -> armor::Result<Method> {
     Method::parse(name, &armor_cfg_from(args))
-        .ok_or_else(|| anyhow::anyhow!("unknown method '{name}'"))
+        .ok_or_else(|| armor::err!("unknown method '{name}'"))
 }
 
 fn get_runtime(args: &Args) -> Option<armor::runtime::Runtime> {
@@ -144,7 +153,7 @@ fn cmd_prune(args: &Args) -> armor::Result<()> {
     let model = load_model(args)?;
     let method = parse_method(args, &args.get_or("method", "armor"))?;
     let pattern = Pattern::parse(&args.get_or("pattern", "2:4"))
-        .ok_or_else(|| anyhow::anyhow!("bad pattern"))?;
+        .ok_or_else(|| armor::err!("bad pattern"))?;
     let needs_gram = matches!(method, Method::SparseGpt | Method::Rotation(_));
     let stats = calibration(args, &model, needs_gram)?;
     let rt = get_runtime(args);
@@ -187,7 +196,7 @@ fn cmd_pipeline(args: &Args) -> armor::Result<()> {
     let model = load_model(args)?;
     let methods = args.get_or("methods", "dense,wanda,nowag,sparsegpt,armor");
     let pattern = Pattern::parse(&args.get_or("pattern", "2:4"))
-        .ok_or_else(|| anyhow::anyhow!("bad pattern"))?;
+        .ok_or_else(|| armor::err!("bad pattern"))?;
     let stats = calibration(args, &model, true)?;
     let rt = get_runtime(args);
     let seq = model.cfg.max_seq.min(128);
@@ -225,6 +234,81 @@ fn cmd_pipeline(args: &Args) -> armor::Result<()> {
             &rows
         )
     );
+    Ok(())
+}
+
+/// Load (or prune in-process), compile to execution form, and replay a
+/// synthetic traffic burst through the continuous-batching engine.
+fn cmd_serve(args: &Args) -> armor::Result<()> {
+    let model = match load_model(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("[serve] no model bundle ({e}); serving a random-init tiny model");
+            let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0));
+            GptModel::random_init(&armor::model::GptConfig::tiny(), &mut rng)
+        }
+    };
+    let method_name = args.get_or("method", "armor");
+    let pattern = Pattern::parse(&args.get_or("pattern", "2:4"))
+        .ok_or_else(|| armor::err!("bad pattern"))?;
+
+    // Prune in-process unless serving the bundle as-is: a freshly pruned
+    // run carries its ARMOR factorizations into compilation, so the A·S·B
+    // wrappers execute natively instead of being folded back to dense.
+    let (serving_model, prune_report) = if method_name == "dense" {
+        (model, None)
+    } else {
+        let method = parse_method(args, &method_name)?;
+        let needs_gram = matches!(method, Method::SparseGpt | Method::Rotation(_));
+        let stats = calibration(args, &model, needs_gram)?;
+        let rt = get_runtime(args);
+        let job =
+            PruneJob { method, pattern, seed: args.get_u64("seed", 0), use_xla: rt.is_some() };
+        println!("[serve] pruning with {} at {}", job.method.label(), pattern.label());
+        let (pruned, rep) = prune_model(&model, &stats, &job, rt.as_ref());
+        (pruned, Some(rep))
+    };
+    let compiled = CompiledModel::compile(&serving_model, prune_report.as_ref())?;
+    println!(
+        "[serve] compiled: exec forms {:?}, deployed weights {:.2} MiB",
+        compiled.exec_summary(),
+        compiled.storage_bytes() as f64 / (1 << 20) as f64
+    );
+
+    // synthetic traffic replay sampled from the web-like split
+    let text = load_corpus_split(args, Split::WebLike)?;
+    let tokens = tokenize(&text);
+    let n_requests = args.get_usize("requests", 16);
+    let prompt_len = args.get_usize("prompt-len", 16).max(1);
+    let max_new = args.get_usize("max-new", 32);
+    let max_batch = args.get_usize("batch", 8);
+    let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0) ^ 0x5E47E);
+    let prompts = sample_calibration(&tokens, prompt_len, n_requests, &mut rng);
+
+    let mut engine = Engine::new(compiled, EngineConfig { max_batch });
+    for p in &prompts {
+        engine.submit(p, max_new);
+    }
+    let report = engine.drain();
+    print!("{}", report.render());
+
+    if args.flag("compare") {
+        // mirror the engine's window clamping so both sides do the same work
+        let max_seq = serving_model.cfg.max_seq;
+        let t0 = std::time::Instant::now();
+        let mut generated = 0usize;
+        for p in &prompts {
+            let plen = p.len().min(max_seq);
+            let eff_new = max_new.clamp(1, max_seq + 1 - plen);
+            let out = serving_model.generate(&p[p.len() - plen..], eff_new);
+            generated += out.len() - plen;
+        }
+        let base = generated as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "[serve] full-recompute generate baseline: {base:.1} tok/s → engine speedup {:.2}x",
+            report.tokens_per_sec() / base
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,712 @@
+//! Compiled-model execution: the deployment form of a pruned [`GptModel`].
+//!
+//! Pruning produces dense tensors (the sparsity lives only in their zero
+//! pattern) — good for evaluation, wasteful for serving. [`CompiledModel`]
+//! lowers every prunable linear into an [`ExecLinear`]:
+//!
+//! - [`ExecLinear::Dense`] — unpruned layers, executed with the blocked GEMM;
+//! - [`ExecLinear::Sparse24`] — 2:4-pruned layers, executed directly from the
+//!   compressed layout (half the weight bytes, half the multiply-adds);
+//! - [`ExecLinear::Armor`] — the paper's `Ŵ = A·S·B` factorization executed
+//!   natively: block-diagonal wrapper matvecs around a compressed 2:4 core,
+//!   never folded back to dense.
+//!
+//! The compiled forward supports incremental decoding against a
+//! [`KvCache`](crate::serve::KvCache): `decode_step`/`decode_batch` process
+//! one token per sequence at O(seq) attention cost, producing logits that
+//! match the full-sequence forward.
+
+use crate::coordinator::PruneRunReport;
+use crate::linalg::gemm_nt;
+use crate::model::gpt::{gelu_inplace, layer_norm};
+use crate::model::{prunable_layers, GptConfig, GptModel, MoeConfig};
+use crate::serve::KvCache;
+use crate::sparsity::{Compressed24, Mask};
+use crate::tensor::{BlockDiag, Matrix};
+use crate::util::threadpool::parallel_map;
+use std::collections::BTreeMap;
+
+/// One prunable linear in its deployment form. All variants compute
+/// `y = x Ŵᵀ` for row-major activations `x` (`n × d_in` → `n × d_out`).
+#[derive(Clone, Debug)]
+pub enum ExecLinear {
+    /// Unpruned dense weight (`d_out × d_in`).
+    Dense(Matrix),
+    /// Compressed 2:4 weight, executed from the packed layout.
+    Sparse24(Compressed24),
+    /// ARMOR factorization `Ŵ = post · core · pre` (paper's `A · S · B`),
+    /// applied input-to-output: `y = A (S (B x))`.
+    Armor { pre: BlockDiag, core: Compressed24, post: BlockDiag },
+}
+
+impl ExecLinear {
+    pub fn d_out(&self) -> usize {
+        match self {
+            ExecLinear::Dense(w) => w.rows,
+            ExecLinear::Sparse24(c) => c.rows,
+            ExecLinear::Armor { core, .. } => core.rows,
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            ExecLinear::Dense(w) => w.cols,
+            ExecLinear::Sparse24(c) => c.cols,
+            ExecLinear::Armor { core, .. } => core.cols,
+        }
+    }
+
+    /// Apply to row-major activations: `x` is `n × d_in`, result `n × d_out`.
+    /// The sparse variants run the batched compressed matmul over `xᵀ`, so a
+    /// continuous batch shares one pass over the weight bytes.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        debug_assert_eq!(x.cols, self.d_in());
+        match self {
+            ExecLinear::Dense(w) => gemm_nt(x, w),
+            ExecLinear::Sparse24(c) => c.matmul(&x.transpose()).transpose(),
+            ExecLinear::Armor { pre, core, post } => {
+                let xt = x.transpose(); // d_in × n
+                let bx = pre.matmul_right(&xt); // B x
+                let sx = core.matmul(&bx); // S (B x)
+                post.matmul_right(&sx).transpose() // (A (S (B x)))ᵀ
+            }
+        }
+    }
+
+    /// Deployed weight bytes of this form.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            ExecLinear::Dense(w) => w.rows * w.cols * 4,
+            ExecLinear::Sparse24(c) => c.storage_bytes(),
+            ExecLinear::Armor { pre, core, post } => {
+                core.storage_bytes() + (pre.param_count() + post.param_count()) * 4
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecLinear::Dense(_) => "dense",
+            ExecLinear::Sparse24(_) => "2:4",
+            ExecLinear::Armor { .. } => "armor",
+        }
+    }
+}
+
+/// Recover a 2:4 mask from a matrix's zero pattern: every group of 4
+/// consecutive columns must hold at most 2 nonzeros (groups with fewer are
+/// padded with zero positions). `None` means the matrix is not
+/// 2:4-executable and stays dense.
+pub fn mask_24_from_zeros(w: &Matrix) -> Option<Mask> {
+    if w.cols == 0 || w.cols % 4 != 0 {
+        return None;
+    }
+    let mut mask = Mask::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for k in 0..w.cols / 4 {
+            let mut kept = 0usize;
+            for i in 0..4 {
+                if row[k * 4 + i] != 0.0 {
+                    if kept == 2 {
+                        return None;
+                    }
+                    mask.set(r, k * 4 + i, true);
+                    kept += 1;
+                }
+            }
+            // pad sparse groups so the mask is exactly 2:4
+            for i in 0..4 {
+                if kept == 2 {
+                    break;
+                }
+                if !mask.get(r, k * 4 + i) {
+                    mask.set(r, k * 4 + i, true);
+                    kept += 1;
+                }
+            }
+        }
+    }
+    Some(mask)
+}
+
+/// A [`GptModel`] lowered to its deployment form: prunable linears as
+/// [`ExecLinear`]s, everything else (embeddings, LayerNorm gains, MoE
+/// routers, final LN) as dense tensors.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub cfg: GptConfig,
+    /// non-prunable tensors, by the same names as in [`GptModel`]
+    pub tensors: BTreeMap<String, Matrix>,
+    /// prunable linears in execution form, by tensor name
+    pub linears: BTreeMap<String, ExecLinear>,
+}
+
+impl CompiledModel {
+    /// Lower a (pruned) model. When `report` carries ARMOR factorizations
+    /// (from [`crate::coordinator::prune_model`]), those layers execute the
+    /// native `A·S·B` path; otherwise each layer's zero pattern decides
+    /// between compressed 2:4 and dense execution.
+    pub fn compile(model: &GptModel, report: Option<&PruneRunReport>) -> crate::Result<CompiledModel> {
+        model.validate()?;
+        let mut linears = BTreeMap::new();
+        for lref in prunable_layers(&model.cfg) {
+            let w = model.get(&lref.name);
+            let fact = report.and_then(|r| r.factorizations.get(&lref.name));
+            let exec = match fact {
+                Some(f) if f.mask.satisfies_nm(2, 4) => ExecLinear::Armor {
+                    pre: f.b.clone(),
+                    core: f.compress_core()?,
+                    post: f.a.clone(),
+                },
+                _ => match mask_24_from_zeros(w) {
+                    Some(mask) => ExecLinear::Sparse24(Compressed24::compress(w, &mask)?),
+                    None => ExecLinear::Dense(w.clone()),
+                },
+            };
+            crate::ensure!(
+                (exec.d_out(), exec.d_in()) == (lref.d_out, lref.d_in),
+                "layer '{}': exec shape {}x{}, expected {}x{}",
+                lref.name,
+                exec.d_out(),
+                exec.d_in(),
+                lref.d_out,
+                lref.d_in
+            );
+            linears.insert(lref.name.clone(), exec);
+        }
+        let tensors = model
+            .tensors
+            .iter()
+            .filter(|(name, _)| !linears.contains_key(*name))
+            .map(|(name, m)| (name.clone(), m.clone()))
+            .collect();
+        Ok(CompiledModel { cfg: model.cfg.clone(), tensors, linears })
+    }
+
+    fn tensor(&self, name: &str) -> &Matrix {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("compiled model tensor '{name}' missing"))
+    }
+
+    fn lin(&self, name: &str) -> &ExecLinear {
+        self.linears
+            .get(name)
+            .unwrap_or_else(|| panic!("compiled model linear '{name}' missing"))
+    }
+
+    /// Deployed weight bytes (exec linears in compressed form + dense rest).
+    pub fn storage_bytes(&self) -> usize {
+        let lin: usize = self.linears.values().map(|l| l.storage_bytes()).sum();
+        let rest: usize = self.tensors.values().map(|m| m.rows * m.cols * 4).sum();
+        lin + rest
+    }
+
+    /// Count of exec linears per variant label (CLI/report display).
+    pub fn exec_summary(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for l in self.linears.values() {
+            *out.entry(l.label()).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Token + positional embedding rows for a chunk starting at `start_pos`.
+    fn embed(&self, tokens: &[u16], start_pos: usize) -> Matrix {
+        let d = self.cfg.d_model;
+        let tok_e = self.tensor("tok_embed");
+        let pos_e = self.tensor("pos_embed");
+        let mut x = Matrix::zeros(tokens.len(), d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let te = tok_e.row(tok as usize);
+            let pe = pos_e.row(start_pos + i);
+            let row = x.row_mut(i);
+            for c in 0..d {
+                row[c] = te[c] + pe[c];
+            }
+        }
+        x
+    }
+
+    /// Full forward over one sequence (`seq × vocab` logits), no cache kept.
+    /// Semantically identical to [`GptModel::forward`], executed through the
+    /// compiled linears.
+    pub fn forward(&self, tokens: &[u16]) -> Matrix {
+        let mut cache = KvCache::new(&self.cfg);
+        self.prefill(&mut cache, tokens)
+    }
+
+    /// Process a chunk of tokens as the continuation of `cache`, appending
+    /// K/V for every new position. Returns per-position logits for the chunk
+    /// (`chunk_len × vocab`). With an empty cache this *is* the full forward.
+    ///
+    /// The per-layer body must stay in lock-step with [`Self::decode_batch`]
+    /// (same ops, same accumulation order) — the serve engine's correctness
+    /// rests on their bit-exact parity, which the `decode_step_matches_*`
+    /// tests and `prop_compile_execute_preserves_outputs` enforce.
+    pub fn prefill(&self, cache: &mut KvCache, tokens: &[u16]) -> Matrix {
+        let n = tokens.len();
+        let start = cache.len();
+        assert!(n > 0, "empty chunk");
+        assert!(start + n <= self.cfg.max_seq, "chunk exceeds max_seq {}", self.cfg.max_seq);
+        let mut x = self.embed(tokens, start);
+
+        for l in 0..self.cfg.n_layers {
+            let xn = layer_norm(
+                &x,
+                self.tensor(&format!("l{l}.ln1.g")),
+                self.tensor(&format!("l{l}.ln1.b")),
+            );
+            let q = self.lin(&format!("l{l}.attn.wq")).apply(&xn);
+            let k = self.lin(&format!("l{l}.attn.wk")).apply(&xn);
+            let v = self.lin(&format!("l{l}.attn.wv")).apply(&xn);
+            for i in 0..n {
+                cache.append(l, k.row(i), v.row(i));
+            }
+            // chunk row i attends over the cached prefix plus chunk rows ≤ i
+            let ctx_rows = {
+                let cache_ref: &KvCache = cache;
+                parallel_map(n, |i| {
+                    attend(cache_ref, l, q.row(i), start + i + 1, self.cfg.n_heads)
+                })
+            };
+            let mut ctx = Matrix::zeros(n, self.cfg.d_model);
+            for (i, row) in ctx_rows.into_iter().enumerate() {
+                ctx.row_mut(i).copy_from_slice(&row);
+            }
+            let attn_out = self.lin(&format!("l{l}.attn.wo")).apply(&ctx);
+            x = x.add(&attn_out);
+
+            let xn2 = layer_norm(
+                &x,
+                self.tensor(&format!("l{l}.ln2.g")),
+                self.tensor(&format!("l{l}.ln2.b")),
+            );
+            let mlp_out = match self.cfg.moe {
+                None => {
+                    let mut h = self.lin(&format!("l{l}.mlp.up")).apply(&xn2);
+                    gelu_inplace(&mut h);
+                    self.lin(&format!("l{l}.mlp.down")).apply(&h)
+                }
+                Some(moe) => self.moe_rows(l, &xn2, moe),
+            };
+            x = x.add(&mlp_out);
+        }
+        cache.advance(n);
+
+        let xf = layer_norm(&x, self.tensor("ln_f.g"), self.tensor("ln_f.b"));
+        gemm_nt(&xf, self.tensor("tok_embed"))
+    }
+
+    /// Decode one token for one sequence; returns the next-token logits.
+    pub fn decode_step(&self, cache: &mut KvCache, token: u16) -> Vec<f32> {
+        let logits = self.decode_batch(&mut [cache], &[token]);
+        logits.row(0).to_vec()
+    }
+
+    /// Decode one token for each of `caches.len()` independent sequences in
+    /// a single batched pass: the linears run once over the whole batch
+    /// (`batch × d` activations → one compressed-matmul sweep per weight),
+    /// attention runs per sequence against its own cache across the worker
+    /// pool. Returns `batch × vocab` logits.
+    ///
+    /// Lock-step constraint: see [`Self::prefill`] — edit both or neither.
+    pub fn decode_batch(&self, caches: &mut [&mut KvCache], tokens: &[u16]) -> Matrix {
+        let bsz = tokens.len();
+        assert_eq!(caches.len(), bsz, "one cache per sequence");
+        assert!(bsz > 0, "empty decode batch");
+        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        for (i, &p) in pos.iter().enumerate() {
+            assert!(p < self.cfg.max_seq, "sequence {i} exhausted its context window");
+        }
+        let d = self.cfg.d_model;
+        let tok_e = self.tensor("tok_embed");
+        let pos_e = self.tensor("pos_embed");
+        let mut x = Matrix::zeros(bsz, d);
+        for i in 0..bsz {
+            let te = tok_e.row(tokens[i] as usize);
+            let pe = pos_e.row(pos[i]);
+            let row = x.row_mut(i);
+            for c in 0..d {
+                row[c] = te[c] + pe[c];
+            }
+        }
+
+        for l in 0..self.cfg.n_layers {
+            let xn = layer_norm(
+                &x,
+                self.tensor(&format!("l{l}.ln1.g")),
+                self.tensor(&format!("l{l}.ln1.b")),
+            );
+            let q = self.lin(&format!("l{l}.attn.wq")).apply(&xn);
+            let k = self.lin(&format!("l{l}.attn.wk")).apply(&xn);
+            let v = self.lin(&format!("l{l}.attn.wv")).apply(&xn);
+            for i in 0..bsz {
+                caches[i].append(l, k.row(i), v.row(i));
+            }
+            let ctx_rows = {
+                let shared: Vec<&KvCache> = caches.iter().map(|c| &**c).collect();
+                parallel_map(bsz, |i| {
+                    attend(shared[i], l, q.row(i), pos[i] + 1, self.cfg.n_heads)
+                })
+            };
+            let mut ctx = Matrix::zeros(bsz, d);
+            for (i, row) in ctx_rows.into_iter().enumerate() {
+                ctx.row_mut(i).copy_from_slice(&row);
+            }
+            let attn_out = self.lin(&format!("l{l}.attn.wo")).apply(&ctx);
+            x = x.add(&attn_out);
+
+            let xn2 = layer_norm(
+                &x,
+                self.tensor(&format!("l{l}.ln2.g")),
+                self.tensor(&format!("l{l}.ln2.b")),
+            );
+            let mlp_out = match self.cfg.moe {
+                None => {
+                    let mut h = self.lin(&format!("l{l}.mlp.up")).apply(&xn2);
+                    gelu_inplace(&mut h);
+                    self.lin(&format!("l{l}.mlp.down")).apply(&h)
+                }
+                Some(moe) => self.moe_rows(l, &xn2, moe),
+            };
+            x = x.add(&mlp_out);
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+
+        let xf = layer_norm(&x, self.tensor("ln_f.g"), self.tensor("ln_f.b"));
+        gemm_nt(&xf, self.tensor("tok_embed"))
+    }
+
+    /// Top-1 MoE over a batch of rows; mirrors `GptModel::moe_forward` with
+    /// the expert projections in execution form.
+    fn moe_rows(&self, l: usize, xn: &Matrix, moe: MoeConfig) -> Matrix {
+        let n = xn.rows;
+        let router = self.tensor(&format!("l{l}.moe.router"));
+        let logits = gemm_nt(xn, router);
+        let mut out = Matrix::zeros(n, self.cfg.d_model);
+
+        let mut assignment: Vec<(usize, f32)> = Vec::with_capacity(n);
+        for t in 0..n {
+            let row = logits.row(t);
+            let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
+            let mut denom = 0.0f32;
+            let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            for (e, &lv) in row.iter().enumerate() {
+                denom += (lv - maxv).exp();
+                if lv > bv {
+                    bv = lv;
+                    best = e;
+                }
+            }
+            let gate = (bv - maxv).exp() / denom;
+            assignment.push((best, gate));
+        }
+
+        for e in 0..moe.n_experts {
+            let rows: Vec<usize> = (0..n).filter(|&t| assignment[t].0 == e).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let mut xe = Matrix::zeros(rows.len(), self.cfg.d_model);
+            for (i, &t) in rows.iter().enumerate() {
+                xe.row_mut(i).copy_from_slice(xn.row(t));
+            }
+            let mut h = self.lin(&format!("l{l}.moe.e{e}.up")).apply(&xe);
+            gelu_inplace(&mut h);
+            let ye = self.lin(&format!("l{l}.moe.e{e}.down")).apply(&h);
+            for (i, &t) in rows.iter().enumerate() {
+                let gate = assignment[t].1;
+                let orow = out.row_mut(t);
+                let yrow = ye.row(i);
+                for c in 0..self.cfg.d_model {
+                    orow[c] += gate * yrow[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// KV-cached greedy generation: one prefill over the prompt, then one
+    /// `decode_step` per new token. The prompt is truncated to the last
+    /// `max_seq` tokens and `n_new` clamped to `max_seq + 1 - prompt_len`
+    /// (the final token needs no cache slot), so the sequence fits the
+    /// context window.
+    pub fn generate(&self, prompt: &[u16], n_new: usize) -> Vec<u16> {
+        let start = prompt.len().saturating_sub(self.cfg.max_seq);
+        let prompt = &prompt[start..];
+        let n_new = n_new.min(self.cfg.max_seq + 1 - prompt.len());
+        let mut toks = prompt.to_vec();
+        if n_new == 0 {
+            return toks;
+        }
+        let mut cache = KvCache::new(&self.cfg);
+        let logits = self.prefill(&mut cache, prompt);
+        let mut next = argmax(logits.row(logits.rows - 1)) as u16;
+        toks.push(next);
+        for _ in 1..n_new {
+            let logits = self.decode_step(&mut cache, next);
+            next = argmax(&logits) as u16;
+            toks.push(next);
+        }
+        toks
+    }
+}
+
+/// Index of the maximum value (first occurrence wins); the single greedy
+/// tie-break rule shared by `GptModel::generate` and the serve engine.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Causal attention of one query row over `n_ctx` cached positions of
+/// `layer` — the incremental counterpart of the full-sequence attention in
+/// `gpt.rs`, with identical accumulation order so logits match bit-for-bit.
+fn attend(cache: &KvCache, layer: usize, q_row: &[f32], n_ctx: usize, n_heads: usize) -> Vec<f32> {
+    let d = q_row.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        let qi = &q_row[c0..c0 + hd];
+        let mut scores = Vec::with_capacity(n_ctx);
+        let mut maxs = f32::NEG_INFINITY;
+        for j in 0..n_ctx {
+            let kj = &cache.k_row(layer, j)[c0..c0 + hd];
+            let mut s = 0.0f32;
+            for t in 0..hd {
+                s += qi[t] * kj[t];
+            }
+            s *= scale;
+            maxs = maxs.max(s);
+            scores.push(s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let orow = &mut out[c0..c0 + hd];
+        for (j, &sj) in scores.iter().enumerate() {
+            let w = sj / denom;
+            let vj = &cache.v_row(layer, j)[c0..c0 + hd];
+            for t in 0..hd {
+                orow[t] += w * vj[t];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Method;
+    use crate::coordinator::{calibrate, prune_model, PruneJob};
+    use crate::model::NoCapture;
+    use crate::sparsity::Pattern;
+    use crate::util::rng::Pcg64;
+
+    fn small_cfg() -> GptConfig {
+        GptConfig { d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_seq: 32, ..GptConfig::tiny() }
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_below(256) as u16).collect()
+    }
+
+    fn pruned(method: Method, seed: u64) -> (GptModel, crate::coordinator::PruneRunReport) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let model = GptModel::random_init(&small_cfg(), &mut rng);
+        let seqs: Vec<Vec<u16>> = (0..2).map(|i| toks(24, seed + 10 + i)).collect();
+        let stats = calibrate(&model, &seqs, false);
+        let job = PruneJob { method, pattern: Pattern::TWO_FOUR, seed, use_xla: false };
+        prune_model(&model, &stats, &job, None)
+    }
+
+    #[test]
+    fn dense_compile_matches_model_forward() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let model = GptModel::random_init(&small_cfg(), &mut rng);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        assert!(compiled.linears.values().all(|l| matches!(l, ExecLinear::Dense(_))));
+        let t = toks(12, 1);
+        let a = model.forward(&t, &mut NoCapture);
+        let b = compiled.forward(&t);
+        assert!(a.max_abs_diff(&b) < 1e-5, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn sparse24_detected_and_matches_pruned_model() {
+        let (model, _) = pruned(Method::Wanda, 2);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        assert!(
+            compiled.linears.values().all(|l| matches!(l, ExecLinear::Sparse24(_))),
+            "{:?}",
+            compiled.exec_summary()
+        );
+        let t = toks(10, 3);
+        let a = model.forward(&t, &mut NoCapture);
+        let b = compiled.forward(&t);
+        assert!(a.max_abs_diff(&b) < 1e-3, "diff {}", a.max_abs_diff(&b));
+        // compressed execution stores half the weight bytes
+        let dense_bytes: usize =
+            compiled.linears.values().map(|l| l.d_out() * l.d_in() * 4).sum();
+        let exec_bytes: usize = compiled.linears.values().map(|l| l.storage_bytes()).sum();
+        assert!(exec_bytes < dense_bytes * 6 / 10);
+    }
+
+    #[test]
+    fn armor_factorization_survives_compilation() {
+        let cfg = crate::armor::ArmorConfig { d_block: 8, n_iters: 8, ..Default::default() };
+        let (model, report) = pruned(Method::Armor(cfg), 4);
+        let compiled = CompiledModel::compile(&model, Some(&report)).unwrap();
+        assert!(
+            compiled.linears.values().all(|l| matches!(l, ExecLinear::Armor { .. })),
+            "{:?}",
+            compiled.exec_summary()
+        );
+        let t = toks(10, 5);
+        let a = model.forward(&t, &mut NoCapture);
+        let b = compiled.forward(&t);
+        // A(S(Bx)) vs the folded dense (ASB)x: same values, different
+        // association — tolerance covers the f32 reassociation only
+        assert!(a.max_abs_diff(&b) < 1e-3, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn decode_step_matches_full_forward_all_variants() {
+        let armor_cfg = crate::armor::ArmorConfig { d_block: 8, n_iters: 6, ..Default::default() };
+        let cases: Vec<(&str, GptModel, Option<crate::coordinator::PruneRunReport>)> = vec![
+            (
+                "dense",
+                {
+                    let mut rng = Pcg64::seed_from_u64(20);
+                    GptModel::random_init(&small_cfg(), &mut rng)
+                },
+                None,
+            ),
+            ("2:4", pruned(Method::NoWagP, 21).0, None),
+            {
+                let (m, r) = pruned(Method::Armor(armor_cfg), 22);
+                ("armor", m, Some(r))
+            },
+        ];
+        for (label, model, report) in cases {
+            let compiled = CompiledModel::compile(&model, report.as_ref()).unwrap();
+            let t = toks(14, 23);
+            let full = compiled.forward(&t);
+            // replay the same sequence token-by-token through the KV cache
+            let mut cache = KvCache::new(&compiled.cfg);
+            for (i, &tok) in t.iter().enumerate() {
+                let logits = compiled.decode_step(&mut cache, tok);
+                let want = full.row(i);
+                for c in 0..want.len() {
+                    assert!(
+                        (logits[c] - want[c]).abs() < 1e-4,
+                        "{label}: pos {i} logit {c}: {} vs {}",
+                        logits[c],
+                        want[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_independent_decodes() {
+        let (model, _) = pruned(Method::Wanda, 30);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        let prompts: Vec<Vec<u16>> = (0..3).map(|i| toks(6 + i, 31 + i as u64)).collect();
+        // independent path
+        let solo: Vec<Vec<f32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut cache = KvCache::new(&compiled.cfg);
+                compiled.prefill(&mut cache, &p[..p.len() - 1]);
+                compiled.decode_step(&mut cache, p[p.len() - 1])
+            })
+            .collect();
+        // batched path
+        let mut caches: Vec<KvCache> = prompts.iter().map(|_| KvCache::new(&compiled.cfg)).collect();
+        for (c, p) in caches.iter_mut().zip(&prompts) {
+            compiled.prefill(c, &p[..p.len() - 1]);
+        }
+        let last: Vec<u16> = prompts.iter().map(|p| p[p.len() - 1]).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let batched = compiled.decode_batch(&mut refs, &last);
+        for i in 0..prompts.len() {
+            for c in 0..batched.cols {
+                assert!(
+                    (batched[(i, c)] - solo[i][c]).abs() < 1e-4,
+                    "seq {i} logit {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kv_generate_matches_recompute_generate() {
+        let mut rng = Pcg64::seed_from_u64(40);
+        let model = GptModel::random_init(&small_cfg(), &mut rng);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        let prompt = toks(6, 41);
+        let slow = model.generate(&prompt, 8);
+        let fast = compiled.generate(&prompt, 8);
+        assert_eq!(slow, fast);
+    }
+
+    #[test]
+    fn moe_model_compiles_and_decodes() {
+        let cfg = GptConfig {
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            ..GptConfig::tiny_moe()
+        };
+        let mut rng = Pcg64::seed_from_u64(50);
+        let model = GptModel::random_init(&cfg, &mut rng);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        let t = toks(10, 51);
+        let full = compiled.forward(&t);
+        let want = model.forward(&t, &mut NoCapture);
+        assert!(full.max_abs_diff(&want) < 1e-5);
+        let mut cache = KvCache::new(&cfg);
+        for (i, &tok) in t.iter().enumerate() {
+            let logits = compiled.decode_step(&mut cache, tok);
+            for c in 0..want.cols {
+                assert!((logits[c] - full[(i, c)]).abs() < 1e-4, "pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mask_24_detection() {
+        // 2 nonzeros per group → detected
+        let w = Matrix::from_vec(1, 8, vec![1., 0., 2., 0., 0., 3., 0., 4.]);
+        let m = mask_24_from_zeros(&w).unwrap();
+        assert!(m.satisfies_nm(2, 4));
+        // 3 nonzeros in a group → dense
+        let w = Matrix::from_vec(1, 4, vec![1., 2., 3., 0.]);
+        assert!(mask_24_from_zeros(&w).is_none());
+        // all-zero groups get padded
+        let w = Matrix::zeros(2, 8);
+        let m = mask_24_from_zeros(&w).unwrap();
+        assert!(m.satisfies_nm(2, 4));
+        // non-multiple-of-4 width → dense
+        assert!(mask_24_from_zeros(&Matrix::zeros(1, 6)).is_none());
+    }
+}

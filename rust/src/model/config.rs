@@ -98,7 +98,7 @@ impl GptConfig {
         let req = |k: &str| {
             v.get(k)
                 .as_usize()
-                .ok_or_else(|| anyhow::anyhow!("config missing field '{k}'"))
+                .ok_or_else(|| crate::err!("config missing field '{k}'"))
         };
         let moe = match v.get("moe") {
             Json::Null => None,
@@ -125,8 +125,8 @@ impl GptConfig {
 
     pub fn load(path: &Path) -> crate::Result<GptConfig> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        GptConfig::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
+        GptConfig::from_json(&Json::parse(&text).map_err(|e| crate::err!("{e}"))?)
     }
 }
 

@@ -106,7 +106,7 @@ impl GptModel {
             } else if t.shape.len() == 1 {
                 Matrix::from_vec(1, t.shape[0], t.data.clone())
             } else {
-                anyhow::bail!("tensor '{name}' has rank {}", t.shape.len());
+                crate::bail!("tensor '{name}' has rank {}", t.shape.len());
             };
             tensors.insert(name.clone(), m);
         }
@@ -149,8 +149,8 @@ impl GptModel {
             let t = self
                 .tensors
                 .get(&name)
-                .ok_or_else(|| anyhow::anyhow!("missing tensor '{name}'"))?;
-            anyhow::ensure!(
+                .ok_or_else(|| crate::err!("missing tensor '{name}'"))?;
+            crate::ensure!(
                 t.shape() == shape,
                 "tensor '{name}': shape {:?}, expected {:?}",
                 t.shape(),
@@ -293,14 +293,7 @@ impl GptModel {
         for _ in 0..n_new {
             let window_start = toks.len().saturating_sub(self.cfg.max_seq);
             let logits = self.forward(&toks[window_start..], &mut NoCapture);
-            let last = logits.row(logits.rows - 1);
-            let mut best = 0usize;
-            for (i, &v) in last.iter().enumerate() {
-                if v > last[best] {
-                    best = i;
-                }
-            }
-            toks.push(best as u16);
+            toks.push(crate::model::argmax(logits.row(logits.rows - 1)) as u16);
         }
         toks
     }

@@ -6,10 +6,12 @@
 //! learned positional embeddings, tanh-GELU, tied LM head) so weights
 //! trained at build time by JAX load and run natively here.
 
+mod compiled;
 mod config;
 mod gpt;
 mod layers;
 
+pub use compiled::{argmax, mask_24_from_zeros, CompiledModel, ExecLinear};
 pub use config::{GptConfig, MoeConfig};
 pub use gpt::{ActivationCapture, GptModel, NoCapture};
 pub use layers::{prunable_layers, LayerRef};

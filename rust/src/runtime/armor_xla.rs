@@ -40,7 +40,7 @@ impl<'rt> ArmorXlaOptimizer<'rt> {
         rng: Pcg64,
     ) -> crate::Result<ArmorXlaOptimizer<'rt>> {
         let artifact = format!("cont_steps_{}x{}_b{}", w.rows, w.cols, cfg.d_block);
-        anyhow::ensure!(
+        crate::ensure!(
             rt.has(&artifact),
             "no artifact '{artifact}' — run `make artifacts` with matching shapes/d_block"
         );
@@ -51,7 +51,7 @@ impl<'rt> ArmorXlaOptimizer<'rt> {
             .unwrap_or(10);
         let lr = match cfg.optimizer {
             crate::armor::ContinuousOpt::Adam { lr } => lr,
-            other => anyhow::bail!("XLA path supports Adam only, got {other:?}"),
+            other => crate::bail!("XLA path supports Adam only, got {other:?}"),
         };
         let (fact, problem, norm) = initialize(w, x_sq_norms, cfg.d_block, cfg.pattern);
         let initial_loss = problem.loss_plain(&fact.core());
@@ -60,12 +60,12 @@ impl<'rt> ArmorXlaOptimizer<'rt> {
             let nb = (d / cfg.d_block) as i64;
             xla::Literal::vec1(&vec![0.0f32; (nb * db * db) as usize])
                 .reshape(&[nb, db, db])
-                .map_err(|e| anyhow::anyhow!("{e}"))
+                .map_err(|e| crate::err!("{e}"))
         };
         let zeros_m = |r: usize, c: usize| {
             xla::Literal::vec1(&vec![0.0f32; r * c])
                 .reshape(&[r as i64, c as i64])
-                .map_err(|e| anyhow::anyhow!("{e}"))
+                .map_err(|e| crate::err!("{e}"))
         };
         let moments = vec![
             zeros_bd(w.rows)?,
@@ -111,7 +111,7 @@ impl<'rt> ArmorXlaOptimizer<'rt> {
         inputs.push(runtime::lit_scalar(self.lr));
 
         let out = self.rt.execute(&self.artifact, &inputs)?;
-        anyhow::ensure!(out.len() == 11, "cont_steps returned {} outputs", out.len());
+        crate::ensure!(out.len() == 11, "cont_steps returned {} outputs", out.len());
         let mut it = out.into_iter();
         // outputs: a, b, wp, ma, va, mb, vb, mw, vw, t, loss
         let (d_out, d_in) = (self.fact.d_out(), self.fact.d_in());

@@ -1,0 +1,224 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the Rust hot path. Python is never involved at
+//! runtime — the artifacts are self-contained.
+
+use crate::io::Manifest;
+use crate::tensor::{BlockDiag, Matrix};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Compile-once, execute-many PJRT wrapper.
+///
+/// The PJRT handles are `!Send`/`!Sync` (Rc + raw pointers inside the `xla`
+/// crate), so a `Runtime` lives on one thread; the coordinator serializes
+/// XLA-path layer work accordingly.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load from an artifacts directory containing `manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu: {e}"))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Whether an artifact with this name exists.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.find(name).is_some()
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| crate::err!("artifact '{name}' not in manifest"))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| crate::err!("loading {}: {e}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| crate::err!("compiling '{name}': {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact; the AOT pipeline lowers with `return_tuple=True`,
+    /// so the single output literal is a tuple that we decompose.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| crate::err!("executing '{name}': {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| crate::err!("fetching '{name}' result: {e}"))?;
+        lit.to_tuple().map_err(|e| crate::err!("untupling '{name}': {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversions
+// ---------------------------------------------------------------------------
+
+pub fn lit_from_matrix(m: &Matrix) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| crate::err!("reshape: {e}"))
+}
+
+pub fn lit_from_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Stack a block-diagonal's blocks into an `(nb, db, db)` literal.
+pub fn lit_from_blockdiag(bd: &BlockDiag) -> crate::Result<xla::Literal> {
+    let nb = bd.n_blocks();
+    let db = bd.d_block;
+    let mut flat = Vec::with_capacity(nb * db * db);
+    for blk in &bd.blocks {
+        flat.extend_from_slice(&blk.data);
+    }
+    xla::Literal::vec1(&flat)
+        .reshape(&[nb as i64, db as i64, db as i64])
+        .map_err(|e| crate::err!("reshape blockdiag: {e}"))
+}
+
+/// Tokens as an `(batch, seq)` i32 literal.
+pub fn lit_from_tokens(batch: &[Vec<u16>]) -> crate::Result<xla::Literal> {
+    let b = batch.len();
+    let s = batch.first().map(|x| x.len()).unwrap_or(0);
+    let mut flat: Vec<i32> = Vec::with_capacity(b * s);
+    for seq in batch {
+        assert_eq!(seq.len(), s, "ragged token batch");
+        flat.extend(seq.iter().map(|&t| t as i32));
+    }
+    xla::Literal::vec1(&flat)
+        .reshape(&[b as i64, s as i64])
+        .map_err(|e| crate::err!("reshape tokens: {e}"))
+}
+
+pub fn matrix_from_lit(lit: &xla::Literal, rows: usize, cols: usize) -> crate::Result<Matrix> {
+    let data: Vec<f32> = lit.to_vec().map_err(|e| crate::err!("literal to_vec: {e}"))?;
+    crate::ensure!(data.len() == rows * cols, "literal has {} elems, want {rows}x{cols}", data.len());
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+pub fn blockdiag_from_lit(lit: &xla::Literal, d: usize, d_block: usize) -> crate::Result<BlockDiag> {
+    let data: Vec<f32> = lit.to_vec().map_err(|e| crate::err!("literal to_vec: {e}"))?;
+    let nb = d / d_block;
+    crate::ensure!(data.len() == nb * d_block * d_block, "blockdiag literal size mismatch");
+    let mut bd = BlockDiag::identity(d, d_block);
+    for (i, blk) in bd.blocks.iter_mut().enumerate() {
+        blk.data
+            .copy_from_slice(&data[i * d_block * d_block..(i + 1) * d_block * d_block]);
+    }
+    Ok(bd)
+}
+
+pub fn scalar_from_lit(lit: &xla::Literal) -> crate::Result<f32> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| crate::err!("literal to_vec: {e}"))?;
+    crate::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+/// Fast perplexity via the `gpt_nll_*` artifact: feeds the model tensors in
+/// the manifest's `param_names` order plus an i32 token batch, returns
+/// per-sequence mean NLLs.
+pub fn gpt_nll_xla(
+    rt: &Runtime,
+    artifact: &str,
+    model: &crate::model::GptModel,
+    batch: &[Vec<u16>],
+) -> crate::Result<Vec<f32>> {
+    let spec = rt
+        .manifest
+        .find(artifact)
+        .ok_or_else(|| crate::err!("artifact '{artifact}' missing"))?;
+    let names: Vec<String> = spec
+        .meta
+        .get("param_names")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+    crate::ensure!(!names.is_empty(), "artifact '{artifact}' lacks param_names");
+    let mut inputs = Vec::with_capacity(names.len() + 1);
+    for (i, name) in names.iter().enumerate() {
+        let m = model
+            .tensors
+            .get(name)
+            .ok_or_else(|| crate::err!("model tensor '{name}' missing"))?;
+        // 1-D params (LN gains etc.) were lowered as rank-1
+        let want = &spec.input_shapes[i];
+        let lit = if want.len() == 1 {
+            xla::Literal::vec1(&m.data)
+        } else {
+            lit_from_matrix(m)?
+        };
+        inputs.push(lit);
+    }
+    inputs.push(lit_from_tokens(batch)?);
+    let out = rt.execute(artifact, &inputs)?;
+    let nll: Vec<f32> = out[0].to_vec().map_err(|e| crate::err!("{e}"))?;
+    Ok(nll)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn literal_roundtrips() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let m = Matrix::randn(4, 6, &mut rng);
+        let lit = lit_from_matrix(&m).unwrap();
+        let back = matrix_from_lit(&lit, 4, 6).unwrap();
+        assert!(back.max_abs_diff(&m) < 1e-7);
+
+        let mut bd = BlockDiag::identity(8, 4);
+        for b in &mut bd.blocks {
+            *b = Matrix::randn(4, 4, &mut rng);
+        }
+        let lit = lit_from_blockdiag(&bd).unwrap();
+        let back = blockdiag_from_lit(&lit, 8, 4).unwrap();
+        assert!(back.max_abs_diff(&bd) < 1e-7);
+    }
+
+    #[test]
+    fn tokens_literal_shape() {
+        let batch = vec![vec![1u16, 2, 3], vec![4, 5, 6]];
+        let lit = lit_from_tokens(&batch).unwrap();
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let dir = std::env::temp_dir().join(format!("armor_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(!rt.has("nope"));
+        assert!(rt.executable("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! Native stub for the PJRT runtime (default build).
+//!
+//! The offline build environment carries no `xla` crate, so the real PJRT
+//! client only compiles behind `--features pjrt`. This stub keeps the full
+//! public surface available: every entry point returns a "feature disabled"
+//! error, which the coordinator, CLI, and benches already treat as "no
+//! runtime — use the native path".
+
+use crate::armor::{ArmorConfig, IterRecord, PruneResult};
+use crate::io::Manifest;
+use crate::model::GptModel;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use std::marker::PhantomData;
+use std::path::Path;
+
+const DISABLED: &str = "PJRT runtime disabled: this build uses the native path only. Enabling \
+     `--features pjrt` additionally requires adding the (vendored) `xla` crate to rust/Cargo.toml \
+     — it is deliberately not declared so offline dependency resolution keeps working";
+
+/// Stub runtime; [`Runtime::load`] always fails, so no instance ever exists
+/// in a default build.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> crate::Result<Runtime> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    /// No artifacts exist without the PJRT client.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+/// Stub of the XLA-offloaded ARMOR optimizer; construction always fails.
+pub struct ArmorXlaOptimizer<'rt> {
+    pub k_steps: usize,
+    pub history: Vec<IterRecord>,
+    pub initial_loss: f64,
+    _rt: PhantomData<&'rt Runtime>,
+}
+
+impl<'rt> ArmorXlaOptimizer<'rt> {
+    pub fn new(
+        _rt: &'rt Runtime,
+        _w: &Matrix,
+        _x_sq_norms: &[f32],
+        _cfg: &ArmorConfig,
+        _rng: Pcg64,
+    ) -> crate::Result<ArmorXlaOptimizer<'rt>> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    pub fn step(&mut self) -> crate::Result<f64> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    pub fn run(&mut self, _n_adam_steps: usize) -> crate::Result<()> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    pub fn current_loss(&self) -> f64 {
+        unreachable!("stub ArmorXlaOptimizer cannot be constructed")
+    }
+
+    pub fn finish(self) -> PruneResult {
+        unreachable!("stub ArmorXlaOptimizer cannot be constructed")
+    }
+}
+
+/// Stub of the XLA pruning entry point (API-compatible with
+/// `armor::prune_matrix`); the coordinator logs the error and falls back to
+/// the native optimizer.
+pub fn prune_matrix_xla(
+    _rt: &Runtime,
+    _w: &Matrix,
+    _x_sq_norms: &[f32],
+    _cfg: &ArmorConfig,
+    _rng: &mut Pcg64,
+) -> crate::Result<PruneResult> {
+    Err(crate::err!("{DISABLED}"))
+}
+
+/// Stub of the fast-perplexity artifact runner.
+pub fn gpt_nll_xla(
+    _rt: &Runtime,
+    _artifact: &str,
+    _model: &GptModel,
+    _batch: &[Vec<u16>],
+) -> crate::Result<Vec<f32>> {
+    Err(crate::err!("{DISABLED}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_disabled() {
+        let e = Runtime::load(Path::new("/tmp")).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}

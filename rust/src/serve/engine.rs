@@ -1,0 +1,346 @@
+//! The serving engine: continuous batching over a [`CompiledModel`].
+//!
+//! `submit` enqueues generation requests; each `step` admits waiting
+//! requests into the in-flight batch (prefilling their prompts), runs one
+//! batched KV-cached decode across every active sequence, and retires the
+//! finished ones. `drain` steps until idle and returns a [`ServeReport`]
+//! with per-request latency and aggregate throughput.
+
+use crate::model::{argmax, CompiledModel};
+use crate::serve::scheduler::{ActiveSeq, Scheduler};
+use crate::serve::{KvCache, RequestId};
+use crate::util::timer::Stats;
+use std::time::Instant;
+
+/// Engine tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Maximum in-flight sequences per decode step.
+    pub max_batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { max_batch: 8 }
+    }
+}
+
+/// Completed-request accounting.
+#[derive(Clone, Debug)]
+pub struct RequestStats {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub n_generated: usize,
+    /// submit → first generated token (queue wait + prefill)
+    pub ttft_ms: f64,
+    /// submit → last generated token
+    pub latency_ms: f64,
+    /// the generated continuation (prompt excluded)
+    pub generated: Vec<u16>,
+}
+
+/// Aggregate outcome of a drain.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub requests: Vec<RequestStats>,
+    pub wall_ms: f64,
+    /// prompt tokens processed by prefill
+    pub prefill_tokens: usize,
+    /// tokens generated (the serving throughput numerator)
+    pub generated_tokens: usize,
+    /// decode steps executed and the largest batch observed
+    pub decode_steps: usize,
+    pub peak_batch: usize,
+}
+
+impl ServeReport {
+    /// Generated tokens per wall-clock second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / (self.wall_ms / 1e3)
+    }
+
+    fn latency_stats(&self) -> (Stats, Stats) {
+        let mut lat = Stats::default();
+        let mut ttft = Stats::default();
+        for r in &self.requests {
+            lat.push(r.latency_ms);
+            ttft.push(r.ttft_ms);
+        }
+        (lat, ttft)
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let (lat, ttft) = self.latency_stats();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests {}  prefill {} tok  generated {} tok  wall {:.1} ms  throughput {:.1} tok/s\n",
+            self.requests.len(),
+            self.prefill_tokens,
+            self.generated_tokens,
+            self.wall_ms,
+            self.tokens_per_sec()
+        ));
+        s.push_str(&format!(
+            "decode steps {}  peak batch {}  latency mean {:.2} ms  p50 {:.2}  p99 {:.2}  ttft p50 {:.2} ms\n",
+            self.decode_steps,
+            self.peak_batch,
+            lat.mean(),
+            lat.percentile(50.0),
+            lat.percentile(99.0),
+            ttft.percentile(50.0)
+        ));
+        s
+    }
+}
+
+/// Compressed-execution inference engine with KV-cached continuous batching.
+pub struct Engine {
+    model: CompiledModel,
+    sched: Scheduler,
+    finished: Vec<RequestStats>,
+    prefill_tokens: usize,
+    generated_tokens: usize,
+    decode_steps: usize,
+    peak_batch: usize,
+    /// start of the current accounting window: set by the first submit after
+    /// a drain, so throughput covers all work since then, not just the
+    /// final drain loop
+    window_start: Option<Instant>,
+}
+
+impl Engine {
+    pub fn new(model: CompiledModel, cfg: EngineConfig) -> Engine {
+        Engine {
+            model,
+            sched: Scheduler::new(cfg.max_batch),
+            finished: Vec::new(),
+            prefill_tokens: 0,
+            generated_tokens: 0,
+            decode_steps: 0,
+            peak_batch: 0,
+            window_start: None,
+        }
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    /// Enqueue a generation request. The prompt is truncated to the last
+    /// `max_seq` tokens and `max_new` clamped to `[1, max_seq+1-prompt_len]`
+    /// — the prompt plus all but the last generated token must fit the
+    /// context window (the final token comes from the last logits without
+    /// occupying a cache slot). Served best-effort rather than rejected.
+    pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> RequestId {
+        let max_seq = self.model.cfg.max_seq;
+        let start = prompt.len().saturating_sub(max_seq);
+        let prompt: Vec<u16> = if prompt.is_empty() {
+            // degenerate but well-defined: seed with token 0
+            vec![0]
+        } else {
+            prompt[start..].to_vec()
+        };
+        let max_new = max_new.clamp(1, max_seq + 1 - prompt.len());
+        self.window_start.get_or_insert_with(Instant::now);
+        self.sched.enqueue(prompt, max_new)
+    }
+
+    /// Requests not yet completed (waiting or in flight).
+    pub fn outstanding(&self) -> usize {
+        self.sched.pending_len() + self.sched.active_len()
+    }
+
+    /// One engine iteration: admit + prefill new requests, one batched
+    /// decode over the active batch, retire finished sequences. Returns the
+    /// number of tokens generated this step.
+    pub fn step(&mut self) -> usize {
+        let mut produced = 0usize;
+
+        // --- admission: prefill into free batch slots ---
+        while let Some(req) = self.sched.pop_admittable() {
+            let mut cache = KvCache::new(&self.model.cfg);
+            let logits = self.model.prefill(&mut cache, &req.prompt);
+            let first = argmax(logits.row(logits.rows - 1)) as u16;
+            self.prefill_tokens += req.prompt.len();
+            self.generated_tokens += 1;
+            produced += 1;
+            self.sched.admit(ActiveSeq {
+                id: req.id,
+                cache,
+                prompt_len: req.prompt.len(),
+                max_new: req.max_new,
+                generated: vec![first],
+                last_token: first,
+                submitted: req.submitted,
+                first_token_at: Some(Instant::now()),
+            });
+        }
+        // a prefill alone may satisfy max_new == 1
+        self.retire();
+
+        // --- batched decode over the in-flight batch ---
+        let bsz = self.sched.active_len();
+        if bsz > 0 {
+            self.peak_batch = self.peak_batch.max(bsz);
+            self.decode_steps += 1;
+            let tokens: Vec<u16> = self.sched.active.iter().map(|s| s.last_token).collect();
+            let logits = {
+                let mut caches: Vec<&mut KvCache> =
+                    self.sched.active.iter_mut().map(|s| &mut s.cache).collect();
+                self.model.decode_batch(&mut caches, &tokens)
+            };
+            for (i, seq) in self.sched.active.iter_mut().enumerate() {
+                let next = argmax(logits.row(i)) as u16;
+                seq.generated.push(next);
+                seq.last_token = next;
+            }
+            self.generated_tokens += bsz;
+            produced += bsz;
+            self.retire();
+        }
+        produced
+    }
+
+    fn retire(&mut self) {
+        let now = Instant::now();
+        for seq in self.sched.retire_finished() {
+            let ttft = seq
+                .first_token_at
+                .map(|t| t.duration_since(seq.submitted).as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            self.finished.push(RequestStats {
+                id: seq.id,
+                prompt_len: seq.prompt_len,
+                n_generated: seq.generated.len(),
+                ttft_ms: ttft,
+                latency_ms: now.duration_since(seq.submitted).as_secs_f64() * 1e3,
+                generated: seq.generated,
+            });
+        }
+    }
+
+    /// Step until every submitted request completes; returns the report for
+    /// everything finished since the last drain. Wall time covers the whole
+    /// accounting window (from the first submit after the previous drain),
+    /// so tokens generated by explicit `step` calls are not overcounted.
+    pub fn drain(&mut self) -> ServeReport {
+        let t0 = self.window_start.take().unwrap_or_else(Instant::now);
+        while !self.sched.is_idle() {
+            self.step();
+        }
+        let mut requests = std::mem::take(&mut self.finished);
+        requests.sort_by_key(|r| r.id);
+        ServeReport {
+            requests,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            prefill_tokens: std::mem::take(&mut self.prefill_tokens),
+            generated_tokens: std::mem::take(&mut self.generated_tokens),
+            decode_steps: std::mem::take(&mut self.decode_steps),
+            peak_batch: std::mem::take(&mut self.peak_batch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptConfig, GptModel};
+    use crate::util::rng::Pcg64;
+
+    fn small_model() -> CompiledModel {
+        let cfg = GptConfig { d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_seq: 32, ..GptConfig::tiny() };
+        let mut rng = Pcg64::seed_from_u64(0);
+        let model = GptModel::random_init(&cfg, &mut rng);
+        CompiledModel::compile(&model, None).unwrap()
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_below(256) as u16).collect()
+    }
+
+    /// Continuous batching must not change what each request generates:
+    /// every drained continuation equals the single-sequence greedy path.
+    #[test]
+    fn batched_serving_matches_solo_generation() {
+        let compiled = small_model();
+        let mut engine = Engine::new(compiled.clone(), EngineConfig { max_batch: 3 });
+        let prompts: Vec<Vec<u16>> = (0..5).map(|i| toks(4 + i, 100 + i as u64)).collect();
+        let max_new = [6usize, 3, 8, 1, 5];
+        let mut ids = Vec::new();
+        for (p, &n) in prompts.iter().zip(&max_new) {
+            ids.push(engine.submit(p, n));
+        }
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 5);
+        assert!(report.peak_batch <= 3);
+        for (i, r) in report.requests.iter().enumerate() {
+            assert_eq!(r.id, ids[i]);
+            assert_eq!(r.n_generated, max_new[i]);
+            let solo = compiled.generate(&prompts[i], max_new[i]);
+            assert_eq!(
+                r.generated,
+                solo[prompts[i].len()..].to_vec(),
+                "request {i} diverged under batching"
+            );
+        }
+    }
+
+    #[test]
+    fn report_accounting_consistent() {
+        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 2 });
+        for i in 0..4 {
+            engine.submit(&toks(5, i), 4);
+        }
+        let report = engine.drain();
+        assert_eq!(report.prefill_tokens, 4 * 5);
+        assert_eq!(report.generated_tokens, 4 * 4);
+        assert_eq!(report.generated_tokens, report.requests.iter().map(|r| r.n_generated).sum());
+        assert!(report.tokens_per_sec() > 0.0);
+        for r in &report.requests {
+            assert!(r.latency_ms >= r.ttft_ms);
+        }
+        let text = report.render();
+        assert!(text.contains("tok/s"), "{text}");
+        // engine is reusable after a drain
+        engine.submit(&toks(3, 99), 2);
+        let again = engine.drain();
+        assert_eq!(again.requests.len(), 1);
+        assert_eq!(again.generated_tokens, 2);
+    }
+
+    #[test]
+    fn clamps_oversized_requests() {
+        let mut engine = Engine::new(small_model(), EngineConfig::default());
+        // prompt longer than the context window, huge token budget
+        engine.submit(&toks(100, 7), 1000);
+        let report = engine.drain();
+        let r = &report.requests[0];
+        assert_eq!(r.prompt_len, 32); // truncated to max_seq
+        // full window: the one generated token comes from the prefill logits
+        assert_eq!(r.n_generated, 1);
+        // empty prompt is seeded, not rejected
+        engine.submit(&[], 3);
+        let report = engine.drain();
+        assert_eq!(report.requests[0].prompt_len, 1);
+        assert_eq!(report.requests[0].n_generated, 3);
+    }
+
+    #[test]
+    fn late_submissions_join_inflight_batch() {
+        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 4 });
+        engine.submit(&toks(4, 1), 10);
+        // a few steps in, new traffic arrives
+        engine.step();
+        engine.step();
+        engine.submit(&toks(4, 2), 4);
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 2);
+        // both ran concurrently at some point
+        assert!(report.peak_batch == 2, "peak {}", report.peak_batch);
+    }
+}

@@ -1,0 +1,145 @@
+//! Per-request key/value cache for incremental decoding.
+//!
+//! A [`KvCache`] stores, for every transformer layer, the K and V projection
+//! rows of every token processed so far. Decoding one more token then costs
+//! one linear pass over a single row plus O(seq) attention — instead of the
+//! O(seq²) full-sequence recompute that `GptModel::generate` pays per token.
+
+use crate::model::GptConfig;
+
+/// Append-only K/V store, one growable row-major buffer per layer.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub d_model: usize,
+    pub max_seq: usize,
+    /// tokens fully processed (all layers appended)
+    len: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &GptConfig) -> KvCache {
+        let n_layers = cfg.n_layers;
+        KvCache {
+            d_model: cfg.d_model,
+            max_seq: cfg.max_seq,
+            len: 0,
+            k: (0..n_layers).map(|_| Vec::new()).collect(),
+            v: (0..n_layers).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions still available before `max_seq` (the positional-embedding
+    /// table bounds the context window).
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Drop all cached state, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.clear();
+        }
+    }
+
+    /// Append one token's K and V rows for `layer`. Call for every layer,
+    /// then commit the token(s) with [`KvCache::advance`].
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d_model);
+        debug_assert_eq!(v_row.len(), self.d_model);
+        self.k[layer].extend_from_slice(k_row);
+        self.v[layer].extend_from_slice(v_row);
+    }
+
+    /// Commit `n` freshly appended tokens. Panics if some layer is missing
+    /// rows (an incomplete decode step would silently corrupt attention).
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+        assert!(self.len <= self.max_seq, "kv cache overflow: {} > {}", self.len, self.max_seq);
+        for (l, buf) in self.k.iter().enumerate() {
+            assert_eq!(buf.len(), self.len * self.d_model, "layer {l} K rows out of sync");
+        }
+        for (l, buf) in self.v.iter().enumerate() {
+            assert_eq!(buf.len(), self.len * self.d_model, "layer {l} V rows out of sync");
+        }
+    }
+
+    #[inline]
+    pub fn k_row(&self, layer: usize, t: usize) -> &[f32] {
+        &self.k[layer][t * self.d_model..(t + 1) * self.d_model]
+    }
+
+    #[inline]
+    pub fn v_row(&self, layer: usize, t: usize) -> &[f32] {
+        &self.v[layer][t * self.d_model..(t + 1) * self.d_model]
+    }
+
+    /// Resident bytes of the cached activations.
+    pub fn memory_bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GptConfig {
+        GptConfig { d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16, max_seq: 4, ..GptConfig::tiny() }
+    }
+
+    #[test]
+    fn append_advance_roundtrip() {
+        let mut c = KvCache::new(&cfg());
+        assert!(c.is_empty());
+        assert_eq!(c.remaining(), 4);
+        let k = [1.0f32; 8];
+        let v = [2.0f32; 8];
+        for l in 0..2 {
+            c.append(l, &k, &v);
+        }
+        c.advance(1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.k_row(0, 0), &k);
+        assert_eq!(c.v_row(1, 0), &v);
+        assert_eq!(c.memory_bytes(), 2 * 2 * 8 * 4);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.memory_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of sync")]
+    fn advance_detects_missing_layer() {
+        let mut c = KvCache::new(&cfg());
+        c.append(0, &[0.0; 8], &[0.0; 8]); // layer 1 never appended
+        c.advance(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_detected() {
+        let mut c = KvCache::new(&cfg());
+        for _ in 0..5 {
+            for l in 0..2 {
+                c.append(l, &[0.0; 8], &[0.0; 8]);
+            }
+            c.advance(1);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Compressed-execution inference serving.
+//!
+//! The paper's claim is that ARMOR "retains the inference speedups and
+//! substantial memory usage reductions of 2:4 pruning" — this subsystem is
+//! where the repo cashes that in. Three pieces:
+//!
+//! - [`KvCache`]: per-request K/V storage so decoding one token costs
+//!   O(seq) attention instead of a full-sequence recompute;
+//! - [`Scheduler`]: FIFO admission + in-flight batch bookkeeping for
+//!   continuous batching;
+//! - [`Engine`]: drives a [`crate::model::CompiledModel`] — batched
+//!   compressed matmuls across the active batch, per-sequence attention
+//!   across the worker pool — and reports per-request latency plus
+//!   aggregate tokens/sec in a [`ServeReport`].
+//!
+//! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
+//! dense-recompute vs KV-cached-compressed comparison.
+
+mod engine;
+mod kv_cache;
+mod scheduler;
+
+pub use engine::{Engine, EngineConfig, RequestStats, ServeReport};
+pub use kv_cache::KvCache;
+pub use scheduler::{ActiveSeq, GenRequest, RequestId, Scheduler};

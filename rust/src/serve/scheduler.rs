@@ -1,0 +1,167 @@
+//! Request queue and continuous-batching state.
+//!
+//! The scheduler owns two collections: a FIFO of waiting [`GenRequest`]s and
+//! the in-flight batch of [`ActiveSeq`]s. Every engine step admits waiting
+//! requests into free batch slots and retires finished sequences, so new
+//! traffic joins the batch mid-flight instead of waiting for a full drain —
+//! continuous batching, not static batching.
+
+use crate::serve::KvCache;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Opaque handle returned by `Engine::submit`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// A queued generation request (prompt/max_new already clamped to the
+/// model's context window by the engine).
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+    pub submitted: Instant,
+}
+
+/// One in-flight sequence: its KV cache plus generation progress.
+pub struct ActiveSeq {
+    pub id: RequestId,
+    pub cache: KvCache,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// tokens generated so far (first one comes from the prefill)
+    pub generated: Vec<u16>,
+    /// most recent token — the next decode step's input
+    pub last_token: u16,
+    pub submitted: Instant,
+    pub first_token_at: Option<Instant>,
+}
+
+impl ActiveSeq {
+    /// Finished when the token budget is spent or the context window is full.
+    pub fn finished(&self) -> bool {
+        self.generated.len() >= self.max_new || self.cache.remaining() == 0
+    }
+}
+
+/// FIFO admission + in-flight batch bookkeeping.
+pub struct Scheduler {
+    pub max_batch: usize,
+    next_id: u64,
+    pending: VecDeque<GenRequest>,
+    pub active: Vec<ActiveSeq>,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Scheduler {
+        assert!(max_batch > 0, "batch must admit at least one sequence");
+        Scheduler { max_batch, next_id: 0, pending: VecDeque::new(), active: Vec::new() }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn enqueue(&mut self, prompt: Vec<u16>, max_new: usize) -> RequestId {
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        self.pending.push_back(GenRequest { id, prompt, max_new, submitted: Instant::now() });
+        id
+    }
+
+    /// Whether the in-flight batch has a free slot.
+    pub fn has_capacity(&self) -> bool {
+        self.active.len() < self.max_batch
+    }
+
+    /// Next waiting request, if a batch slot is free.
+    pub fn pop_admittable(&mut self) -> Option<GenRequest> {
+        if self.has_capacity() {
+            self.pending.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Place a prefilled sequence into the in-flight batch.
+    pub fn admit(&mut self, seq: ActiveSeq) {
+        assert!(self.has_capacity(), "admitting past max_batch");
+        self.active.push(seq);
+    }
+
+    /// Remove and return every finished sequence, keeping in-flight order.
+    pub fn retire_finished(&mut self) -> Vec<ActiveSeq> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True when no request is waiting or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+
+    fn seq(id: u64, max_new: usize, generated: usize) -> ActiveSeq {
+        let cfg = GptConfig { d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16, max_seq: 64, ..GptConfig::tiny() };
+        ActiveSeq {
+            id: RequestId(id),
+            cache: KvCache::new(&cfg),
+            prompt_len: 1,
+            max_new,
+            generated: vec![0; generated],
+            last_token: 0,
+            submitted: Instant::now(),
+            first_token_at: None,
+        }
+    }
+
+    #[test]
+    fn fifo_admission_respects_capacity() {
+        let mut s = Scheduler::new(2);
+        let a = s.enqueue(vec![1], 4);
+        let b = s.enqueue(vec![2], 4);
+        let c = s.enqueue(vec![3], 4);
+        assert!(a < b && b < c);
+        assert_eq!(s.pending_len(), 3);
+        let r1 = s.pop_admittable().unwrap();
+        assert_eq!(r1.id, a);
+        s.admit(seq(r1.id.0, 4, 0));
+        let r2 = s.pop_admittable().unwrap();
+        s.admit(seq(r2.id.0, 4, 0));
+        // batch full: third request must wait
+        assert!(s.pop_admittable().is_none());
+        assert_eq!(s.pending_len(), 1);
+        assert!(!s.is_idle());
+    }
+
+    #[test]
+    fn retire_removes_only_finished() {
+        let mut s = Scheduler::new(4);
+        s.admit(seq(0, 2, 2)); // done
+        s.admit(seq(1, 5, 1)); // running
+        s.admit(seq(2, 1, 1)); // done
+        let done = s.retire_finished();
+        assert_eq!(done.len(), 2);
+        assert_eq!(s.active_len(), 1);
+        assert_eq!(s.active[0].id, RequestId(1));
+    }
+}

@@ -27,8 +27,8 @@ pub struct Compressed24 {
 impl Compressed24 {
     /// Compress `w ⊙ mask`, where `mask` must satisfy the 2:4 constraint.
     pub fn compress(w: &Matrix, mask: &Mask) -> crate::Result<Compressed24> {
-        anyhow::ensure!(mask.satisfies_nm(2, 4), "mask is not 2:4");
-        anyhow::ensure!((w.rows, w.cols) == (mask.rows, mask.cols), "shape mismatch");
+        crate::ensure!(mask.satisfies_nm(2, 4), "mask is not 2:4");
+        crate::ensure!((w.rows, w.cols) == (mask.rows, mask.cols), "shape mismatch");
         let groups_per_row = w.cols / 4;
         let mut values = Vec::with_capacity(w.rows * groups_per_row * 2);
         let mut meta = Vec::with_capacity(w.rows * groups_per_row);
@@ -88,28 +88,85 @@ impl Compressed24 {
         y
     }
 
+    /// Decode the metadata nibbles once into absolute column indices
+    /// (`2 * n_groups` entries, `[c0, c1]` per group). The decode is shared
+    /// across every batch column in [`Compressed24::matmul`] instead of being
+    /// re-derived per output element.
+    fn decode_columns(&self) -> Vec<u32> {
+        let gpr = self.cols / 4;
+        let mut cols = Vec::with_capacity(self.meta.len() * 2);
+        for (g, &m) in self.meta.iter().enumerate() {
+            let base = ((g % gpr.max(1)) * 4) as u32;
+            cols.push(base + (m & 3) as u32);
+            cols.push(base + ((m >> 2) & 3) as u32);
+        }
+        cols
+    }
+
     /// Batched matvec over the columns of `X` (`cols × batch`), producing
     /// `rows × batch`. Matches the paper's Table 4 "batched MatVec" workload.
+    ///
+    /// Blocked over the batch dimension: group metadata is decoded once
+    /// (`decode_columns`), the output is split into row panels across the
+    /// worker pool, and each panel walks the compressed weights once per
+    /// batch block so the active `X[:, jb..jend]` slab stays cache-resident
+    /// while the weights stream. Accumulation order per output element is
+    /// identical to the reference path, so results are bit-exact with
+    /// [`Compressed24::matmul_ref`].
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.rows, self.cols);
         let gpr = self.cols / 4;
         let b = x.cols;
         let mut out = Matrix::zeros(self.rows, b);
-        for r in 0..self.rows {
-            let vbase = r * gpr * 2;
-            let mbase = r * gpr;
-            let orow = out.row_mut(r);
-            for k in 0..gpr {
-                let m = self.meta[mbase + k];
-                let c0 = k * 4 + (m & 3) as usize;
-                let c1 = k * 4 + ((m >> 2) & 3) as usize;
-                let v0 = self.values[vbase + 2 * k];
-                let v1 = self.values[vbase + 2 * k + 1];
-                let x0 = x.row(c0);
-                let x1 = x.row(c1);
-                for j in 0..b {
-                    orow[j] += v0 * x0[j] + v1 * x1[j];
+        if self.rows == 0 || b == 0 || gpr == 0 {
+            return out;
+        }
+        let cols_dec = self.decode_columns();
+        const JB: usize = 64;
+        let n_threads = crate::util::threadpool::num_threads().max(1);
+        let rows_per = self.rows.div_ceil(n_threads).max(1);
+        crate::util::threadpool::parallel_chunks_mut(&mut out.data, rows_per * b, |start, chunk| {
+            let r0 = start / b;
+            let nrows = chunk.len() / b;
+            for jb in (0..b).step_by(JB) {
+                let jend = (jb + JB).min(b);
+                for ri in 0..nrows {
+                    let r = r0 + ri;
+                    let vbase = r * gpr * 2;
+                    let dbase = r * gpr * 2;
+                    let orow = &mut chunk[ri * b + jb..ri * b + jend];
+                    for k in 0..gpr {
+                        let c0 = cols_dec[dbase + 2 * k] as usize;
+                        let c1 = cols_dec[dbase + 2 * k + 1] as usize;
+                        let v0 = self.values[vbase + 2 * k];
+                        let v1 = self.values[vbase + 2 * k + 1];
+                        let x0 = &x.row(c0)[jb..jend];
+                        let x1 = &x.row(c1)[jb..jend];
+                        for ((o, &a0), &a1) in orow.iter_mut().zip(x0).zip(x1) {
+                            *o += v0 * a0 + v1 * a1;
+                        }
+                    }
                 }
+            }
+        });
+        out
+    }
+
+    /// Reference batched matvec: one independent [`Compressed24::matvec`] per
+    /// batch column (the pre-optimization hot path, kept for verification and
+    /// the `perf_hotpath` before/after comparison).
+    pub fn matmul_ref(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.cols);
+        let b = x.cols;
+        let mut out = Matrix::zeros(self.rows, b);
+        let mut col = vec![0.0f32; self.cols];
+        for j in 0..b {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = x[(i, j)];
+            }
+            let y = self.matvec(&col);
+            for (i, &yi) in y.iter().enumerate() {
+                out[(i, j)] = yi;
             }
         }
         out
@@ -162,6 +219,26 @@ mod tests {
         let x = Matrix::randn(16, 5, &mut rng);
         let want = mask.apply(&w).matmul(&x);
         assert!(c.matmul(&x).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn blocked_matmul_bit_exact_with_reference() {
+        // shapes straddling the JB=64 batch block and the row-panel split
+        for (rows, cols, batch, seed) in [(8, 16, 1, 5), (16, 32, 63, 6), (33, 24, 130, 7)] {
+            let (_, _, c) = random_compressed(rows, cols, seed);
+            let mut rng = Pcg64::seed_from_u64(seed + 100);
+            let x = Matrix::randn(cols, batch, &mut rng);
+            let blocked = c.matmul(&x);
+            let reference = c.matmul_ref(&x);
+            assert_eq!(blocked, reference, "{rows}x{cols} batch {batch}");
+        }
+    }
+
+    #[test]
+    fn matmul_empty_batch() {
+        let (_, _, c) = random_compressed(8, 16, 11);
+        let x = Matrix::zeros(16, 0);
+        assert_eq!(c.matmul(&x).shape(), (8, 0));
     }
 
     #[test]

@@ -85,6 +85,9 @@ fn model_load_rejects_missing_config() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Exercises the real PJRT client's compile-time (not load-time) failure;
+/// the default build ships the stub runtime, which has no executables.
+#[cfg(feature = "pjrt")]
 #[test]
 fn manifest_with_missing_hlo_file_errors_at_compile_not_load() {
     let dir = tmp("mani");
@@ -98,6 +101,19 @@ fn manifest_with_missing_hlo_file_errors_at_compile_not_load() {
     let rt = armor::runtime::Runtime::load(&dir).unwrap();
     assert!(rt.has("ghost"));
     assert!(rt.executable("ghost").is_err()); // fails cleanly, no panic
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Default build: the PJRT runtime is feature-gated; loading reports the
+/// disabled feature as a clean error instead of panicking.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn runtime_disabled_without_pjrt_feature() {
+    let dir = tmp("mani_stub");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    let err = armor::runtime::Runtime::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("pjrt"), "unhelpful error: {err}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -3,16 +3,24 @@
 //! trivially with a notice) when `artifacts/` has not been built, so
 //! `cargo test` works before `make artifacts`.
 
+#[cfg(feature = "pjrt")]
 use armor::armor::{ArmorConfig, ArmorOptimizer, ContinuousOpt};
+#[cfg(feature = "pjrt")]
 use armor::coordinator::{calibrate, prune_model, PruneJob};
 use armor::data::{sample_calibration, tokenize};
-use armor::model::{GptModel, NoCapture};
+use armor::model::GptModel;
+#[cfg(feature = "pjrt")]
+use armor::model::NoCapture;
+#[cfg(feature = "pjrt")]
 use armor::runtime::{gpt_nll_xla, ArmorXlaOptimizer, Runtime};
+#[cfg(feature = "pjrt")]
 use armor::sparsity::Pattern;
+#[cfg(feature = "pjrt")]
 use armor::tensor::Matrix;
 use armor::util::rng::Pcg64;
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
@@ -66,6 +74,7 @@ fn trained_model_nll_matches_jax() {
 /// The `gpt_nll_*` artifact executed via PJRT matches the native forward on
 /// identical sequences (tight tolerance: same weights, same math, two
 /// execution engines).
+#[cfg(feature = "pjrt")]
 #[test]
 fn gpt_nll_artifact_matches_native() {
     let (Some(dir), Some(mpath)) = (artifacts_dir(), model_path()) else { return };
@@ -93,6 +102,7 @@ fn gpt_nll_artifact_matches_native() {
 /// The XLA cont_steps path and the native Adam path optimize the same
 /// objective: from identical inits, both reduce the proxy loss and land in
 /// the same neighbourhood.
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_optimizer_tracks_native() {
     let Some(dir) = artifacts_dir() else { return };
@@ -131,6 +141,7 @@ fn xla_optimizer_tracks_native() {
 /// Full pipeline through the XLA hot path: prune the trained model with
 /// ARMOR using the artifacts, and confirm it beats NoWag-P on weighted
 /// error while producing a working model.
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_pipeline_end_to_end() {
     let (Some(dir), Some(mpath)) = (artifacts_dir(), model_path()) else { return };

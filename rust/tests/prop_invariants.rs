@@ -6,7 +6,11 @@
 use armor::armor::{
     initialize, prune_matrix, sparse_core_step, ArmorConfig, ContinuousOpt, SelectionHeuristic,
 };
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, prune_model, PruneJob};
+use armor::model::{CompiledModel, GptConfig, GptModel, NoCapture};
 use armor::prop::{forall, num_cases, Gen};
+use armor::serve::KvCache;
 use armor::sparsity::{mask_from_importance, Pattern};
 use armor::tensor::Matrix;
 use armor::util::rng::Pcg64;
@@ -157,6 +161,93 @@ fn prop_compressed24_roundtrip() {
         for i in 0..got.len() {
             if (got[i] - want[i]).abs() > 1e-3 * (1.0 + want[i].abs()) {
                 return Err(format!("matvec row {i}: {} vs {}", got[i], want[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+struct ServeCase {
+    model: GptModel,
+    method: Method,
+    tokens: Vec<u16>,
+    seed: u64,
+}
+
+fn gen_serve_case(rng: &mut Pcg64) -> ServeCase {
+    let d_model = [16usize, 32][rng.next_below(2) as usize];
+    let cfg = GptConfig {
+        d_model,
+        n_layers: 1 + rng.next_below(2) as usize,
+        n_heads: 2,
+        d_ff: d_model * 2,
+        max_seq: 24,
+        ..GptConfig::tiny()
+    };
+    let model = GptModel::random_init(&cfg, rng);
+    let method = match rng.next_below(3) {
+        0 => Method::Wanda,
+        1 => Method::NoWagP,
+        _ => Method::Armor(ArmorConfig { d_block: 8, n_iters: 4, ..Default::default() }),
+    };
+    let tokens = (0..6 + rng.next_below(6) as usize)
+        .map(|_| rng.next_below(256) as u16)
+        .collect();
+    ServeCase { model, method, tokens, seed: rng.next_u64() }
+}
+
+/// Compile→execute parity: lowering a pruned model to its deployment form
+/// preserves the forward outputs of the uncompiled pruned model, and
+/// KV-cached decoding reproduces the full forward logits — for 2:4
+/// compressed cores and native ARMOR `A·S·B` execution alike.
+#[test]
+fn prop_compile_execute_preserves_outputs() {
+    forall("compile/execute parity", num_cases(6), gen_serve_case, |case| {
+        let calib = vec![case.tokens.clone()];
+        let stats = calibrate(&case.model, &calib, false);
+        let job = PruneJob {
+            method: case.method.clone(),
+            pattern: Pattern::TWO_FOUR,
+            seed: case.seed,
+            use_xla: false,
+        };
+        let (pruned, report) = prune_model(&case.model, &stats, &job, None);
+        let compiled = CompiledModel::compile(&pruned, Some(&report))
+            .map_err(|e| e.to_string())?;
+        if matches!(case.method, Method::Armor(_)) {
+            if !compiled.exec_summary().contains_key("armor") {
+                return Err(format!(
+                    "ARMOR factorizations lost in compilation: {:?}",
+                    compiled.exec_summary()
+                ));
+            }
+        } else if !compiled.exec_summary().contains_key("2:4") {
+            return Err(format!("2:4 cores not detected: {:?}", compiled.exec_summary()));
+        }
+
+        // compiled forward vs the uncompiled pruned model
+        let want = pruned.forward(&case.tokens, &mut NoCapture);
+        let full = compiled.forward(&case.tokens);
+        let scale = want.data.iter().fold(1.0f32, |a, &x| a.max(x.abs()));
+        if full.max_abs_diff(&want) > 2e-3 * scale {
+            return Err(format!(
+                "compiled forward drifted: {} (scale {scale})",
+                full.max_abs_diff(&want)
+            ));
+        }
+
+        // KV-cached decode vs the compiled full forward
+        let mut cache = KvCache::new(&compiled.cfg);
+        for (i, &tok) in case.tokens.iter().enumerate() {
+            let logits = compiled.decode_step(&mut cache, tok);
+            for c in 0..full.cols {
+                if (logits[c] - full[(i, c)]).abs() > 1e-4 {
+                    return Err(format!(
+                        "decode_step pos {i} logit {c}: {} vs {}",
+                        logits[c],
+                        full[(i, c)]
+                    ));
+                }
             }
         }
         Ok(())
