@@ -55,7 +55,7 @@ fn main() -> armor::Result<()> {
     );
 
     // 4. serve a traffic burst with continuous batching
-    let mut engine = Engine::new(compiled, EngineConfig { max_batch: 4 });
+    let mut engine = Engine::new(compiled, EngineConfig { max_batch: 4 })?;
     let mut ids = Vec::new();
     for i in 0..8u64 {
         let mut prng = Pcg64::seed_from_u64(100 + i);

@@ -1,0 +1,76 @@
+"""Layer-1 Pallas kernel: ragged-batch decode attention over KV panels.
+
+TPU twin of the Rust serve path's blocked attention kernel
+(`rust/src/model/attention.rs`), mirroring its blocking scheme:
+
+- **Work decomposition**: the grid iterates over `(batch, head)` — exactly
+  the Rust kernel's one-task-per-(sequence, head) split. Each step owns one
+  query head-slice and one `max_seq × head_dim` K/V panel in VMEM, the
+  head-major layout `serve::KvCache` stores natively.
+- **Raggedness**: sequences in the batch have mixed lengths; `seq_lens[b]`
+  masks positions `>= len` to `-inf` before the softmax, the vectorized
+  equivalent of the Rust kernel slicing its panel at `n_ctx`.
+- **Softmax**: the same two-pass max/exp/normalize the Rust kernel runs —
+  no online rescaling, so both twins agree with the scalar reference to
+  f32 rounding.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is asserted against `ref.attn_decode_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    q = q_ref[0, 0]  # (head_dim,) query slice of this (batch, head) task
+    k = k_ref[0, 0]  # (max_seq, head_dim) K panel
+    v = v_ref[0, 0]  # (max_seq, head_dim) V panel
+    n = len_ref[0]  # this sequence's cached length
+    # pass 1: scores over the panel, masked past the ragged length
+    idx = jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)[:, 0]
+    scores = jnp.where(idx < n, (k @ q) * scale, -jnp.inf)
+    # pass 2: two-pass softmax (max, then exp/normalize), as in the Rust twin
+    m = jnp.max(scores)
+    e = jnp.where(idx < n, jnp.exp(scores - m), 0.0)
+    # pass 3: weighted V-sum
+    o_ref[0, 0] = (e / jnp.sum(e)) @ v
+
+
+def attn_decode(q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array) -> jax.Array:
+    """Ragged batched decode attention.
+
+    q:        (batch, n_heads, head_dim)  one query token per sequence
+    k, v:     (batch, n_heads, max_seq, head_dim)  head-major KV panels
+    seq_lens: (batch,) int32  cached positions per sequence (1..max_seq)
+
+    Returns (batch, n_heads, head_dim) context rows.
+    """
+    bsz, n_heads, head_dim = q.shape
+    assert k.shape == v.shape == (bsz, n_heads, k.shape[2], head_dim), (q.shape, k.shape, v.shape)
+    assert seq_lens.shape == (bsz,), seq_lens.shape
+    max_seq = k.shape[2]
+    scale = 1.0 / float(head_dim) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(bsz, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, max_seq, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, max_seq, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        seq_lens.astype(jnp.int32),
+    )

@@ -23,6 +23,27 @@ def armor_matmul_ref(a_blocks, core, b_blocks):
     return out.reshape(nbo * db, nbi * db)
 
 
+def attn_decode_ref(q, k, v, seq_lens):
+    """Ragged batched decode attention (serve-path twin).
+
+    q: (batch, n_heads, head_dim); k, v: (batch, n_heads, max_seq, head_dim);
+    seq_lens: (batch,) — positions >= seq_lens[b] are masked out of sequence
+    b's softmax. Returns (batch, n_heads, head_dim).
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / float(q.shape[-1]) ** 0.5
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    idx = jnp.arange(k.shape[2])
+    mask = idx[None, None, :] < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", w, v)
+
+
 def proxy_loss_ref(w_bar, w_hat, d):
     """NoWag proxy loss: Σ_ij (w_bar − w_hat)²_ij d_j  (paper Eq. 2)."""
     diff = (w_bar - w_hat).astype(jnp.float32)

@@ -1,0 +1,13 @@
+"""Pytest wiring for the build-time Python layer.
+
+Makes `python -m pytest python/tests -q` work from the repo root: the
+`compile` package lives in `python/`, which is not on `sys.path` when the
+rootdir is the repo root, so prepend it here. Individual test modules
+skip-guard their JAX/Pallas and hypothesis imports (`pytest.importorskip`)
+so the suite passes on bare runners that carry neither.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir)))

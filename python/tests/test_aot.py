@@ -2,6 +2,10 @@
 containing an entry computation, and executes correctly via jax before
 export (the numerics the Rust runtime will reproduce)."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas not installed (bare runner)")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,10 @@
 """Layer-2 ARMOR optimizer tests: descent, mask freezing, kernel-evaluated
 loss consistency — the Python-side mirror of the Rust optimizer invariants."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas not installed (bare runner)")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,10 +1,14 @@
 """Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
 swept over shapes/dtypes with hypothesis."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas not installed (bare runner)")
+pytest.importorskip("hypothesis", reason="hypothesis not installed (bare runner)")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels
@@ -173,3 +177,52 @@ def test_sparse_group_ls_gain_is_loss_reduction():
     before = jnp.sum(e[0] ** 2 * d[0][None, :])
     after = jnp.sum((e[0] - contrib) ** 2 * d[0][None, :])
     np.testing.assert_allclose(before - after, gains[0, best], rtol=1e-3)
+
+
+# --------------------------------------------------------------------- #
+# attn_decode
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    n_heads=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([4, 8, 16]),
+    max_seq=st.sampled_from([8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_attn_decode_matches_ref(bsz, n_heads, head_dim, max_seq, seed):
+    q = rand(seed, bsz, n_heads, head_dim)
+    k = rand(seed + 1, bsz, n_heads, max_seq, head_dim)
+    v = rand(seed + 2, bsz, n_heads, max_seq, head_dim)
+    # ragged: every sequence gets its own length in [1, max_seq]
+    lens = jax.random.randint(jax.random.PRNGKey(seed + 3), (bsz,), 1, max_seq + 1)
+    got = kernels.attn_decode(q, k, v, lens)
+    want = ref.attn_decode_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attn_decode_ignores_rows_past_length():
+    """Positions >= seq_lens[b] must not influence the output — the ragged
+    mask is the kernel's slice-at-n_ctx equivalent."""
+    bsz, n_heads, head_dim, max_seq = 2, 2, 8, 16
+    q = rand(0, bsz, n_heads, head_dim)
+    k = rand(1, bsz, n_heads, max_seq, head_dim)
+    v = rand(2, bsz, n_heads, max_seq, head_dim)
+    lens = jnp.array([5, 11], dtype=jnp.int32)
+    base = kernels.attn_decode(q, k, v, lens)
+    # scribble over the masked tail
+    k2 = k.at[0, :, 5:].set(1e6).at[1, :, 11:].set(-1e6)
+    v2 = v.at[0, :, 5:].set(1e6).at[1, :, 11:].set(-1e6)
+    got = kernels.attn_decode(q, k2, v2, lens)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+def test_attn_decode_single_position_returns_value_row():
+    """With one cached position the softmax weight is 1: output == V[:, :, 0]."""
+    q = rand(3, 3, 2, 8)
+    k = rand(4, 3, 2, 4, 8)
+    v = rand(5, 3, 2, 4, 8)
+    lens = jnp.ones((3,), dtype=jnp.int32)
+    got = kernels.attn_decode(q, k, v, lens)
+    np.testing.assert_allclose(got, v[:, :, 0], rtol=1e-5, atol=1e-6)

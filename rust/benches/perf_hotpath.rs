@@ -3,10 +3,11 @@
 //! sparse-core step). Drives the EXPERIMENTS.md §Perf before/after log.
 
 use armor::armor::{initialize, sparse_core_step, ArmorConfig, ArmorOptimizer, SelectionHeuristic};
-use armor::bench::{bench, bench_header, black_box, scaled, ExperimentCtx};
+use armor::bench::{bench, bench_header, black_box, emit_json, result_fields, scaled, ExperimentCtx};
 use armor::runtime::ArmorXlaOptimizer;
 use armor::sparsity::Pattern;
 use armor::tensor::Matrix;
+use armor::util::json::Json;
 use armor::util::rng::Pcg64;
 
 fn main() {
@@ -24,6 +25,7 @@ fn main() {
         black_box(a.matmul(&b));
     });
     println!("{}  ({:.2} GFLOP/s)", r.line(), 2.0 * 256f64.powi(3) / (r.mean_ms / 1e3) / 1e9);
+    emit_json("perf_hotpath", "gemm_256", result_fields(&r));
 
     // ---- compressed 2:4 batched matmul: per-column reference vs blocked ----
     {
@@ -40,6 +42,47 @@ fn main() {
             black_box(c24.matmul(&xs));
         });
         println!("{}  ({:.2}x vs per-column)", r_blk.line(), r_ref.mean_ms / r_blk.mean_ms);
+        emit_json("perf_hotpath", "c24_matmul_ref", result_fields(&r_ref));
+        emit_json("perf_hotpath", "c24_matmul_blocked", result_fields(&r_blk));
+    }
+
+    // ---- batched decode attention: scalar per-sequence vs blocked kernel ----
+    {
+        use armor::model::{attend_batch_scalar, AttnKernel, GptConfig};
+        use armor::serve::KvCache;
+        let cfg = GptConfig {
+            d_model: 128,
+            n_layers: 1,
+            n_heads: 4,
+            d_ff: 256,
+            max_seq: 128,
+            ..GptConfig::tiny()
+        };
+        let bsz = 16usize;
+        let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(&cfg)).collect();
+        // ragged fills: sequence i has 64 + 4i cached positions
+        for (i, c) in caches.iter_mut().enumerate() {
+            for _ in 0..64 + 4 * i {
+                let kr: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                let vr: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                c.append(0, &kr, &vr);
+                c.advance(1);
+            }
+        }
+        let shared: Vec<&KvCache> = caches.iter().collect();
+        let n_ctx: Vec<usize> = shared.iter().map(|c| c.len()).collect();
+        let q = Matrix::randn(bsz, cfg.d_model, &mut rng);
+        let r_sc = bench("attn decode b16 h4 d128 (scalar ref)", 2, scaled(200), 10.0, || {
+            black_box(attend_batch_scalar(&shared, 0, &q, &n_ctx, cfg.n_heads));
+        });
+        println!("{}", r_sc.line());
+        let kern = AttnKernel::new(cfg.n_heads, cfg.head_dim());
+        let r_bk = bench("attn decode b16 h4 d128 (blocked)", 2, scaled(200), 10.0, || {
+            black_box(kern.attend_batch(&shared, 0, &q, &n_ctx));
+        });
+        println!("{}  ({:.2}x vs scalar)", r_bk.line(), r_sc.mean_ms / r_bk.mean_ms);
+        emit_json("perf_hotpath", "attn_decode_scalar", result_fields(&r_sc));
+        emit_json("perf_hotpath", "attn_decode_blocked", result_fields(&r_bk));
     }
 
     let (fact, problem, _) = initialize(&w, &d, db, Pattern::TWO_FOUR);
@@ -76,6 +119,11 @@ fn main() {
     println!(
         "\nnative BCD iteration ({d_out}x{d_in}, db={db}):      {native_per_iter:8.2} ms/iter (loss {:.4})",
         native.current_loss()
+    );
+    emit_json(
+        "perf_hotpath",
+        "native_bcd_iter",
+        vec![("mean_ms", Json::Num(native_per_iter))],
     );
 
     if let Some(ctx) = ExperimentCtx::load_with(2, false) {

@@ -9,14 +9,23 @@
 //!
 //! The KV-cached rows must beat row 1: decoding from the cache is O(seq)
 //! per token instead of a full forward over the growing sequence.
+//!
+//! A second sweep pits the blocked batch-shared attention kernel against
+//! the per-sequence scalar reference at batch sizes {1, 4, 8, 16}: the
+//! blocked variant must win at batch ≥ 8, where its `batch × n_heads` panel
+//! tasks and contiguous head-major KV reads pay off.
+//!
+//! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
+//! artifact (CI's bench-smoke job uploads it as `BENCH_2.json`).
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
-use armor::bench::{bench_header, scaled};
+use armor::bench::{bench_header, emit_json, scaled};
 use armor::coordinator::{calibrate, prune_model, PruneJob, PruneRunReport, TableRow};
-use armor::model::{CompiledModel, GptConfig, GptModel};
+use armor::model::{AttnImpl, CompiledModel, GptConfig, GptModel};
 use armor::serve::{Engine, EngineConfig};
 use armor::sparsity::Pattern;
+use armor::util::json::Json;
 use armor::util::rng::Pcg64;
 
 fn traffic(rng: &mut Pcg64, n_requests: usize, prompt_len: usize) -> Vec<Vec<u16>> {
@@ -41,7 +50,8 @@ fn engine_toks_per_sec(
     max_new: usize,
     max_batch: usize,
 ) -> (f64, f64, usize) {
-    let mut engine = Engine::new(compiled, EngineConfig { max_batch });
+    let mut engine =
+        Engine::new(compiled, EngineConfig { max_batch }).expect("bench engine config");
     for p in prompts {
         engine.submit(p, max_new);
     }
@@ -133,5 +143,68 @@ fn main() {
         println!("OK: KV-cached 2:4 decode beats dense full-recompute ({sparse_tps:.1} vs {base_tps:.1} tok/s)");
     } else {
         println!("WARN: KV-cached 2:4 decode did not beat recompute ({sparse_tps:.1} vs {base_tps:.1} tok/s)");
+    }
+    for (case, tps, p50) in [
+        ("dense_recompute", base_tps, f64::NAN),
+        ("kv_dense", dense_tps, dense_p50),
+        ("kv_24", sparse_tps, sparse_p50),
+        ("kv_armor", armor_tps, armor_p50),
+    ] {
+        emit_json(
+            "serve_throughput",
+            case,
+            vec![("tok_s", Json::Num(tps)), ("p50_ms", Json::Num(p50))],
+        );
+    }
+
+    // --- scalar vs blocked attention across batch sizes ---
+    // Same 2:4 model and traffic shape per batch size; only the attention
+    // route differs. The blocked kernel must win at batch >= 8.
+    println!("\nattention: scalar per-sequence reference vs blocked batch kernel");
+    let attn_compiled = CompiledModel::compile(&nowag_model, None).unwrap();
+    let attn_new = scaled(24).max(2);
+    let mut attn_rows = Vec::new();
+    let mut blocked_wins_at_8plus = true;
+    for &bs in &[1usize, 4, 8, 16] {
+        let burst = traffic(&mut rng, 2 * bs, prompt_len);
+        let scalar_exec = attn_compiled.clone().with_attn(AttnImpl::ScalarRef);
+        let (scalar_tps, _, _) = engine_toks_per_sec(scalar_exec, &burst, attn_new, bs);
+        let blocked_exec = attn_compiled.clone().with_attn(AttnImpl::Blocked);
+        let (blocked_tps, _, peak) = engine_toks_per_sec(blocked_exec, &burst, attn_new, bs);
+        let speedup = blocked_tps / scalar_tps;
+        if bs >= 8 && blocked_tps <= scalar_tps {
+            blocked_wins_at_8plus = false;
+        }
+        attn_rows.push(TableRow::new(
+            &format!("batch {bs}"),
+            vec![
+                format!("{scalar_tps:.1}"),
+                format!("{blocked_tps:.1}"),
+                format!("{speedup:.2}x"),
+                format!("{peak}"),
+            ],
+        ));
+        emit_json(
+            "serve_attention",
+            &format!("batch_{bs}"),
+            vec![
+                ("scalar_tok_s", Json::Num(scalar_tps)),
+                ("blocked_tok_s", Json::Num(blocked_tps)),
+                ("speedup", Json::Num(speedup)),
+            ],
+        );
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Attention kernel: scalar reference vs blocked (KV-cached 2:4)",
+            &["scalar tok/s", "blocked tok/s (↑)", "speedup", "peak batch"],
+            &attn_rows
+        )
+    );
+    if blocked_wins_at_8plus {
+        println!("OK: blocked attention beats the scalar reference at batch >= 8");
+    } else {
+        println!("WARN: blocked attention did not beat the scalar reference at batch >= 8");
     }
 }

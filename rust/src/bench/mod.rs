@@ -72,6 +72,62 @@ pub fn bench_scale() -> f64 {
     std::env::var("ARMOR_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
 }
 
+/// Append one machine-readable benchmark record to the JSON file named by
+/// `ARMOR_BENCH_JSON` (no-op when unset). The file holds a single JSON
+/// array; each call re-reads, appends, and rewrites it, so several bench
+/// binaries run in sequence accumulate into one artifact — CI's bench-smoke
+/// job points this at `BENCH_2.json` and uploads it, giving the perf
+/// trajectory a durable trail.
+pub fn emit_json(bench: &str, case: &str, fields: Vec<(&str, crate::util::json::Json)>) {
+    use crate::util::json::Json;
+    let Ok(path) = std::env::var("ARMOR_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let mut records = match std::fs::read_to_string(&path) {
+        Err(_) => Vec::new(), // first record of a fresh file
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(a)) => a,
+            // starting over silently would hide the loss of the trail
+            Ok(_) => {
+                eprintln!("[bench] {path} is not a JSON array; restarting the record array");
+                Vec::new()
+            }
+            Err(e) => {
+                eprintln!("[bench] {path} is not valid JSON ({e}); restarting the record array");
+                Vec::new()
+            }
+        },
+    };
+    let mut pairs = vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("case", Json::Str(case.to_string())),
+        ("scale", Json::Num(bench_scale())),
+    ];
+    // non-finite numbers have no JSON representation and would corrupt the
+    // accumulated artifact; drop them rather than emit `NaN`/`inf` literals
+    pairs.extend(
+        fields
+            .into_iter()
+            .filter(|(_, v)| !matches!(v, Json::Num(n) if !n.is_finite())),
+    );
+    records.push(Json::obj(pairs));
+    if let Err(e) = std::fs::write(&path, Json::Arr(records).to_string_pretty()) {
+        eprintln!("[bench] could not write {path}: {e}");
+    }
+}
+
+/// `emit_json` fields for a timed [`BenchResult`].
+pub fn result_fields(r: &BenchResult) -> Vec<(&'static str, crate::util::json::Json)> {
+    use crate::util::json::Json;
+    vec![
+        ("iters", Json::Num(r.iters as f64)),
+        ("mean_ms", Json::Num(r.mean_ms)),
+        ("p50_ms", Json::Num(r.p50_ms)),
+        ("p99_ms", Json::Num(r.p99_ms)),
+    ]
+}
+
 /// Scale an iteration count, flooring at 1.
 pub fn scaled(n: usize) -> usize {
     ((n as f64 * bench_scale()).round() as usize).max(1)
@@ -151,6 +207,25 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5));
         });
         assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn emit_json_accumulates_records() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join(format!("armor_bench_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        std::env::set_var("ARMOR_BENCH_JSON", &path);
+        emit_json("unit", "first", vec![("tok_s", Json::Num(1.5))]);
+        emit_json("unit", "second", vec![("bad", Json::Num(f64::NAN))]);
+        std::env::remove_var("ARMOR_BENCH_JSON");
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("tok_s").as_f64(), Some(1.5));
+        assert_eq!(arr[1].get("case").as_str(), Some("second"));
+        // non-finite fields are dropped, keeping the artifact valid JSON
+        assert_eq!(arr[1].get("bad"), &Json::Null);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -282,10 +282,20 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
     let prompt_len = args.get_usize("prompt-len", 16).max(1);
     let max_new = args.get_usize("max-new", 32);
     let max_batch = args.get_usize("batch", 8);
+    // validate flags against the serving model up front: bad values come
+    // back as structured errors, never as panics inside the scheduler or
+    // KvCache mid-burst
+    armor::ensure!(max_batch >= 1, "--batch (engine max_batch) must be >= 1, got {max_batch}");
+    armor::ensure!(
+        prompt_len <= compiled.cfg.max_seq,
+        "--prompt-len {prompt_len} exceeds the model's context window {} (max_seq)",
+        compiled.cfg.max_seq
+    );
+    // --max-new 0 stays legal: the engine clamps it to 1 (best-effort serving)
     let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0) ^ 0x5E47E);
     let prompts = sample_calibration(&tokens, prompt_len, n_requests, &mut rng);
 
-    let mut engine = Engine::new(compiled, EngineConfig { max_batch });
+    let mut engine = Engine::new(compiled, EngineConfig { max_batch })?;
     for p in &prompts {
         engine.submit(p, max_new);
     }

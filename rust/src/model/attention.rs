@@ -1,0 +1,366 @@
+//! Blocked ragged-batch attention over head-major KV panels.
+//!
+//! PR 1 batched the serve path's linears but ran attention per sequence as
+//! scalar row loops — the hot path the paper motivates with hardware-speedup
+//! numbers was serialized exactly where continuous batching should pay off.
+//! [`AttnKernel`] fuses the per-head score/softmax/weighted-sum into one
+//! batch-shared kernel:
+//!
+//! - **Work decomposition**: one task per `(sequence, head)` pair, fanned
+//!   out with the same row-panel threading pattern as
+//!   [`Compressed24::matmul`](crate::sparsity::Compressed24::matmul) — the
+//!   output matrix is chunked in `head_dim` slices, so every worker owns
+//!   exactly one head's context row and no two tasks share a cache line of
+//!   output. A batch of 8 sequences × 4 heads keeps 32 workers busy where
+//!   the scalar path had 8.
+//! - **Panel reads**: each task streams its `(layer, head)` K and V panels
+//!   from the [`KvCache`](crate::serve::KvCache) head-major layout —
+//!   `n_ctx × head_dim` contiguous floats — instead of gathering
+//!   `d_model`-strided row slices.
+//! - **Blocking**: scores are computed in one sequential sweep (4-lane
+//!   unrolled dot products), then the weighted V-sum is accumulated in
+//!   4-row context tiles so each pass over the output slice folds in four
+//!   positions' values.
+//!
+//! The pre-kernel per-sequence path survives as [`attend_scalar`] /
+//! [`attend_batch_scalar`]: the parity oracle for the property tests and
+//! the baseline the `serve_throughput` bench compares against. Both paths
+//! share the two-pass max/exp/normalize softmax, so they agree to f32
+//! rounding (the kernel's reassociated accumulation is *bit-close*, not
+//! bit-exact — see `prop_blocked_attention_matches_scalar`).
+//!
+//! `python/compile/kernels/attn_decode.py` is the Pallas twin: grid over
+//! `(batch, head)`, one VMEM panel per task, identical masked two-pass
+//! softmax.
+
+use crate::serve::KvCache;
+use crate::tensor::Matrix;
+use crate::util::threadpool::{parallel_chunks_mut, parallel_map};
+
+/// Which attention implementation a [`CompiledModel`](crate::model::CompiledModel)
+/// routes through. `Blocked` is the production path; `ScalarRef` keeps the
+/// pre-kernel per-sequence loops selectable for parity tests and the
+/// scalar-vs-blocked bench comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AttnImpl {
+    #[default]
+    Blocked,
+    ScalarRef,
+}
+
+/// Batch-shared causal attention kernel over head-major KV panels.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnKernel {
+    pub n_heads: usize,
+    pub head_dim: usize,
+}
+
+/// Context positions folded per output-accumulation tile (pass 3).
+const CTX_TILE: usize = 4;
+
+impl AttnKernel {
+    pub fn new(n_heads: usize, head_dim: usize) -> AttnKernel {
+        assert!(n_heads > 0 && head_dim > 0);
+        AttnKernel { n_heads, head_dim }
+    }
+
+    /// Ragged-batch attention: query row `i` of `q` attends over the first
+    /// `n_ctx[i]` cached positions of `caches[i]` at `layer`. Sequences may
+    /// have arbitrary mixed lengths; a prefill chunk passes the same cache
+    /// `n` times with `n_ctx = start+1 ..= start+n`. Returns the
+    /// `n_items × d_model` context rows.
+    pub fn attend_batch(
+        &self,
+        caches: &[&KvCache],
+        layer: usize,
+        q: &Matrix,
+        n_ctx: &[usize],
+    ) -> Matrix {
+        let n_items = q.rows;
+        assert_eq!(caches.len(), n_items, "one cache per query row");
+        assert_eq!(n_ctx.len(), n_items, "one context length per query row");
+        let (nh, hd) = (self.n_heads, self.head_dim);
+        assert_eq!(q.cols, nh * hd, "query width != n_heads * head_dim");
+        let mut out = Matrix::zeros(n_items, nh * hd);
+        if n_items == 0 {
+            return out;
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        // one (sequence, head) task per head_dim-sized output chunk
+        parallel_chunks_mut(&mut out.data, hd, |start, chunk| {
+            let task = start / hd;
+            let (i, h) = (task / nh, task % nh);
+            debug_assert!(n_ctx[i] >= 1, "sequence {i} attends over nothing");
+            attend_head_blocked(
+                caches[i],
+                layer,
+                h,
+                &q.row(i)[h * hd..(h + 1) * hd],
+                n_ctx[i],
+                scale,
+                chunk,
+            );
+        });
+        out
+    }
+}
+
+/// One `(sequence, head)` task: fused score/softmax/weighted-sum of a single
+/// query head-slice over its contiguous K/V panels.
+fn attend_head_blocked(
+    cache: &KvCache,
+    layer: usize,
+    head: usize,
+    q: &[f32],
+    n_ctx: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    let kp = cache.k_panel(layer, head, n_ctx);
+    let vp = cache.v_panel(layer, head, n_ctx);
+
+    // pass 1: scores over the K panel, tracking the running max
+    let mut scores = vec![0.0f32; n_ctx];
+    let mut maxs = f32::NEG_INFINITY;
+    for (j, s) in scores.iter_mut().enumerate() {
+        let sj = dot4(q, &kp[j * hd..(j + 1) * hd]) * scale;
+        maxs = maxs.max(sj);
+        *s = sj;
+    }
+
+    // pass 2: exponentiate + denominator
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - maxs).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom;
+
+    // pass 3: weighted V-sum in CTX_TILE-row tiles — each read-modify-write
+    // sweep of `out` folds in four positions' values
+    let mut j = 0;
+    while j + CTX_TILE <= n_ctx {
+        let w0 = scores[j] * inv;
+        let w1 = scores[j + 1] * inv;
+        let w2 = scores[j + 2] * inv;
+        let w3 = scores[j + 3] * inv;
+        let v0 = &vp[j * hd..(j + 1) * hd];
+        let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
+        let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
+        let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
+        for t in 0..hd {
+            out[t] += w0 * v0[t] + w1 * v1[t] + w2 * v2[t] + w3 * v3[t];
+        }
+        j += CTX_TILE;
+    }
+    while j < n_ctx {
+        let w = scores[j] * inv;
+        let vj = &vp[j * hd..(j + 1) * hd];
+        for t in 0..hd {
+            out[t] += w * vj[t];
+        }
+        j += 1;
+    }
+}
+
+/// 4-lane unrolled dot product (independent accumulators so the compiler
+/// can keep them in registers / vectorize).
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// Reference causal attention of one query row over `n_ctx` cached positions
+/// — the pre-kernel per-sequence scalar path, preserved verbatim (plain
+/// sequential dot / softmax / weighted-sum per head). Parity oracle for the
+/// blocked kernel and the `serve_throughput` scalar baseline.
+pub fn attend_scalar(
+    cache: &KvCache,
+    layer: usize,
+    q_row: &[f32],
+    n_ctx: usize,
+    n_heads: usize,
+) -> Vec<f32> {
+    let d = q_row.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        let qi = &q_row[c0..c0 + hd];
+        let mut scores = Vec::with_capacity(n_ctx);
+        let mut maxs = f32::NEG_INFINITY;
+        for j in 0..n_ctx {
+            let kj = cache.k_at(layer, h, j);
+            let mut s = 0.0f32;
+            for t in 0..hd {
+                s += qi[t] * kj[t];
+            }
+            s *= scale;
+            maxs = maxs.max(s);
+            scores.push(s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let orow = &mut out[c0..c0 + hd];
+        for (j, &sj) in scores.iter().enumerate() {
+            let w = sj / denom;
+            let vj = cache.v_at(layer, h, j);
+            for t in 0..hd {
+                orow[t] += w * vj[t];
+            }
+        }
+    }
+    out
+}
+
+/// Scalar-path ragged batch: one [`attend_scalar`] per sequence across the
+/// worker pool (the pre-kernel `decode_batch` shape — per-sequence tasks,
+/// no head fan-out).
+pub fn attend_batch_scalar(
+    caches: &[&KvCache],
+    layer: usize,
+    q: &Matrix,
+    n_ctx: &[usize],
+    n_heads: usize,
+) -> Matrix {
+    let n_items = q.rows;
+    assert_eq!(caches.len(), n_items);
+    assert_eq!(n_ctx.len(), n_items);
+    let rows = parallel_map(n_items, |i| {
+        attend_scalar(caches[i], layer, q.row(i), n_ctx[i], n_heads)
+    });
+    let mut out = Matrix::zeros(n_items, q.cols);
+    for (i, row) in rows.into_iter().enumerate() {
+        out.row_mut(i).copy_from_slice(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+    use crate::util::rng::Pcg64;
+
+    fn filled_cache(cfg: &GptConfig, n_tokens: usize, rng: &mut Pcg64) -> KvCache {
+        let mut c = KvCache::new(cfg);
+        for _ in 0..n_tokens {
+            let k: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+            for l in 0..cfg.n_layers {
+                c.append(l, &k, &v);
+            }
+            c.advance(1);
+        }
+        c
+    }
+
+    fn cfg(d_model: usize, n_heads: usize) -> GptConfig {
+        GptConfig {
+            d_model,
+            n_layers: 2,
+            n_heads,
+            d_ff: 4 * d_model,
+            max_seq: 24,
+            ..GptConfig::tiny()
+        }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_ragged_batch() {
+        let cfg = cfg(24, 3); // head_dim 8
+        let mut rng = Pcg64::seed_from_u64(7);
+        let lens = [1usize, 5, 13, 24, 2];
+        let caches: Vec<KvCache> =
+            lens.iter().map(|&n| filled_cache(&cfg, n, &mut rng)).collect();
+        let refs: Vec<&KvCache> = caches.iter().collect();
+        let q = Matrix::randn(lens.len(), cfg.d_model, &mut rng);
+        for layer in 0..cfg.n_layers {
+            let kern = AttnKernel::new(cfg.n_heads, cfg.head_dim());
+            let blocked = kern.attend_batch(&refs, layer, &q, &lens);
+            let scalar = attend_batch_scalar(&refs, layer, &q, &lens, cfg.n_heads);
+            let diff = blocked.max_abs_diff(&scalar);
+            assert!(diff < 1e-5, "layer {layer} diff {diff}");
+        }
+    }
+
+    #[test]
+    fn single_position_is_value_row() {
+        // one cached position → softmax weight 1 → output == V row
+        let cfg = cfg(16, 2);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let c = filled_cache(&cfg, 1, &mut rng);
+        let q = Matrix::randn(1, cfg.d_model, &mut rng);
+        let out = AttnKernel::new(2, 8).attend_batch(&[&c], 0, &q, &[1]);
+        for h in 0..2 {
+            let v = c.v_at(0, h, 0);
+            for t in 0..8 {
+                assert!((out[(0, h * 8 + t)] - v[t]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_style_shared_cache() {
+        // the same cache passed n times with increasing n_ctx (prefill shape)
+        let cfg = cfg(16, 2);
+        let mut rng = Pcg64::seed_from_u64(11);
+        let c = filled_cache(&cfg, 6, &mut rng);
+        let q = Matrix::randn(6, cfg.d_model, &mut rng);
+        let shared: Vec<&KvCache> = vec![&c; 6];
+        let n_ctx: Vec<usize> = (1..=6).collect();
+        let blocked = AttnKernel::new(2, 8).attend_batch(&shared, 1, &q, &n_ctx);
+        let scalar = attend_batch_scalar(&shared, 1, &q, &n_ctx, 2);
+        assert!(blocked.max_abs_diff(&scalar) < 1e-5);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let kern = AttnKernel::new(2, 8);
+        let q = Matrix::zeros(0, 16);
+        let out = kern.attend_batch(&[], 0, &q, &[]);
+        assert_eq!(out.shape(), (0, 16));
+    }
+
+    #[test]
+    fn ctx_tile_remainder_lengths_agree() {
+        // lengths straddling the CTX_TILE=4 accumulation tile and the dot4
+        // unroll width
+        let cfg = cfg(20, 2); // head_dim 10: exercises the dot4 remainder
+        let mut rng = Pcg64::seed_from_u64(19);
+        for n in [1usize, 3, 4, 5, 7, 8, 9, 15, 16, 17] {
+            let c = filled_cache(&cfg, n, &mut rng);
+            let q = Matrix::randn(1, cfg.d_model, &mut rng);
+            let blocked = AttnKernel::new(2, 10).attend_batch(&[&c], 0, &q, &[n]);
+            let scalar = attend_scalar(&c, 0, q.row(0), n, 2);
+            for t in 0..cfg.d_model {
+                assert!(
+                    (blocked[(0, t)] - scalar[t]).abs() < 1e-5,
+                    "n_ctx {n} col {t}: {} vs {}",
+                    blocked[(0, t)],
+                    scalar[t]
+                );
+            }
+        }
+    }
+}

@@ -6,11 +6,13 @@
 //! learned positional embeddings, tanh-GELU, tied LM head) so weights
 //! trained at build time by JAX load and run natively here.
 
+mod attention;
 mod compiled;
 mod config;
 mod gpt;
 mod layers;
 
+pub use attention::{attend_batch_scalar, attend_scalar, AttnImpl, AttnKernel};
 pub use compiled::{argmax, mask_24_from_zeros, CompiledModel, ExecLinear};
 pub use config::{GptConfig, MoeConfig};
 pub use gpt::{ActivationCapture, GptModel, NoCapture};

@@ -113,8 +113,21 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(model: CompiledModel, cfg: EngineConfig) -> Engine {
-        Engine {
+    /// Build an engine over a compiled model. Returns a structured error
+    /// (not a panic) on an unservable configuration, so callers like the
+    /// `armor serve` CLI can surface bad flags cleanly.
+    pub fn new(model: CompiledModel, cfg: EngineConfig) -> crate::Result<Engine> {
+        crate::ensure!(
+            cfg.max_batch >= 1,
+            "engine max_batch must be >= 1, got {}",
+            cfg.max_batch
+        );
+        crate::ensure!(
+            model.cfg.max_seq >= 2,
+            "model context window {} cannot hold a prompt token plus a generated token",
+            model.cfg.max_seq
+        );
+        Ok(Engine {
             model,
             sched: Scheduler::new(cfg.max_batch),
             finished: Vec::new(),
@@ -123,7 +136,7 @@ impl Engine {
             decode_steps: 0,
             peak_batch: 0,
             window_start: None,
-        }
+        })
     }
 
     pub fn model(&self) -> &CompiledModel {
@@ -268,7 +281,8 @@ mod tests {
     #[test]
     fn batched_serving_matches_solo_generation() {
         let compiled = small_model();
-        let mut engine = Engine::new(compiled.clone(), EngineConfig { max_batch: 3 });
+        let mut engine =
+            Engine::new(compiled.clone(), EngineConfig { max_batch: 3 }).unwrap();
         let prompts: Vec<Vec<u16>> = (0..5).map(|i| toks(4 + i, 100 + i as u64)).collect();
         let max_new = [6usize, 3, 8, 1, 5];
         let mut ids = Vec::new();
@@ -292,7 +306,7 @@ mod tests {
 
     #[test]
     fn report_accounting_consistent() {
-        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 2 });
+        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 2 }).unwrap();
         for i in 0..4 {
             engine.submit(&toks(5, i), 4);
         }
@@ -313,9 +327,20 @@ mod tests {
         assert_eq!(again.generated_tokens, 2);
     }
 
+    /// `--max-batch 0` must come back as a structured `error.rs` error,
+    /// never a panic inside the scheduler.
+    #[test]
+    fn zero_batch_is_structured_error() {
+        let err = match Engine::new(small_model(), EngineConfig { max_batch: 0 }) {
+            Ok(_) => panic!("max_batch 0 must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("max_batch"), "{err}");
+    }
+
     #[test]
     fn clamps_oversized_requests() {
-        let mut engine = Engine::new(small_model(), EngineConfig::default());
+        let mut engine = Engine::new(small_model(), EngineConfig::default()).unwrap();
         // prompt longer than the context window, huge token budget
         engine.submit(&toks(100, 7), 1000);
         let report = engine.drain();
@@ -332,7 +357,7 @@ mod tests {
 
     #[test]
     fn late_submissions_join_inflight_batch() {
-        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 4 });
+        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 4 }).unwrap();
         engine.submit(&toks(4, 1), 10);
         // a few steps in, new traffic arrives
         engine.step();

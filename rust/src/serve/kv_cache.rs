@@ -4,16 +4,33 @@
 //! rows of every token processed so far. Decoding one more token then costs
 //! one linear pass over a single row plus O(seq) attention — instead of the
 //! O(seq²) full-sequence recompute that `GptModel::generate` pays per token.
+//!
+//! # Layout contract (the attention kernel reads panels, not rows)
+//!
+//! Each layer's K (and V) buffer is **head-major**: head `h` owns the
+//! contiguous panel `[h · max_seq · head_dim .. (h+1) · max_seq · head_dim)`,
+//! holding its `head_dim`-wide slice of every cached position back to back.
+//! [`AttnKernel`](crate::model::AttnKernel) streams one `(layer, head)` panel
+//! per work item with zero strided reads; `append` pays the scatter (one
+//! `head_dim` copy per head) once per token instead of attention paying a
+//! `d_model`-strided gather once per *(token, step)*. Buffers are allocated
+//! at `max_seq` capacity up front so panels never move as the sequence
+//! grows — the append cursor is the only thing that advances.
 
 use crate::model::GptConfig;
 
-/// Append-only K/V store, one growable row-major buffer per layer.
+/// Append-only K/V store: per layer, head-major panels of `max_seq` capacity.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub d_model: usize,
     pub max_seq: usize,
-    /// tokens fully processed (all layers appended)
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// tokens fully processed (all layers appended + committed)
     len: usize,
+    /// per layer: rows appended so far (≥ `len` mid-step, == `len` after
+    /// [`KvCache::advance`])
+    filled: Vec<usize>,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
@@ -21,12 +38,23 @@ pub struct KvCache {
 impl KvCache {
     pub fn new(cfg: &GptConfig) -> KvCache {
         let n_layers = cfg.n_layers;
+        assert_eq!(
+            cfg.d_model % cfg.n_heads,
+            0,
+            "d_model {} not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let panel = cfg.max_seq * cfg.d_model;
         KvCache {
             d_model: cfg.d_model,
             max_seq: cfg.max_seq,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.head_dim(),
             len: 0,
-            k: (0..n_layers).map(|_| Vec::new()).collect(),
-            v: (0..n_layers).map(|_| Vec::new()).collect(),
+            filled: vec![0; n_layers],
+            k: (0..n_layers).map(|_| vec![0.0; panel]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; panel]).collect(),
         }
     }
 
@@ -52,18 +80,26 @@ impl KvCache {
     /// Drop all cached state, keeping the allocations.
     pub fn clear(&mut self) {
         self.len = 0;
-        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
-            buf.clear();
+        for f in self.filled.iter_mut() {
+            *f = 0;
         }
     }
 
-    /// Append one token's K and V rows for `layer`. Call for every layer,
-    /// then commit the token(s) with [`KvCache::advance`].
+    /// Append one token's K and V rows for `layer`, scattering each
+    /// `d_model` row into the per-head panels. Call for every layer, then
+    /// commit the token(s) with [`KvCache::advance`].
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.d_model);
         debug_assert_eq!(v_row.len(), self.d_model);
-        self.k[layer].extend_from_slice(k_row);
-        self.v[layer].extend_from_slice(v_row);
+        let t = self.filled[layer];
+        assert!(t < self.max_seq, "kv cache overflow: position {t} >= max_seq {}", self.max_seq);
+        let (hd, ms) = (self.head_dim, self.max_seq);
+        for h in 0..self.n_heads {
+            let dst = h * ms * hd + t * hd;
+            self.k[layer][dst..dst + hd].copy_from_slice(&k_row[h * hd..(h + 1) * hd]);
+            self.v[layer][dst..dst + hd].copy_from_slice(&v_row[h * hd..(h + 1) * hd]);
+        }
+        self.filled[layer] = t + 1;
     }
 
     /// Commit `n` freshly appended tokens. Panics if some layer is missing
@@ -71,27 +107,47 @@ impl KvCache {
     pub fn advance(&mut self, n: usize) {
         self.len += n;
         assert!(self.len <= self.max_seq, "kv cache overflow: {} > {}", self.len, self.max_seq);
-        for (l, buf) in self.k.iter().enumerate() {
-            assert_eq!(buf.len(), self.len * self.d_model, "layer {l} K rows out of sync");
-        }
-        for (l, buf) in self.v.iter().enumerate() {
-            assert_eq!(buf.len(), self.len * self.d_model, "layer {l} V rows out of sync");
+        for (l, &f) in self.filled.iter().enumerate() {
+            assert_eq!(f, self.len, "layer {l} K/V rows out of sync");
         }
     }
 
+    /// The first `n_ctx` cached K rows of one head: `n_ctx × head_dim`
+    /// values, contiguous. Appended-but-uncommitted rows are readable (a
+    /// prefill chunk attends over rows it appended this step).
     #[inline]
-    pub fn k_row(&self, layer: usize, t: usize) -> &[f32] {
-        &self.k[layer][t * self.d_model..(t + 1) * self.d_model]
+    pub fn k_panel(&self, layer: usize, head: usize, n_ctx: usize) -> &[f32] {
+        debug_assert!(n_ctx <= self.filled[layer]);
+        let base = head * self.max_seq * self.head_dim;
+        &self.k[layer][base..base + n_ctx * self.head_dim]
     }
 
+    /// The first `n_ctx` cached V rows of one head (see [`KvCache::k_panel`]).
     #[inline]
-    pub fn v_row(&self, layer: usize, t: usize) -> &[f32] {
-        &self.v[layer][t * self.d_model..(t + 1) * self.d_model]
+    pub fn v_panel(&self, layer: usize, head: usize, n_ctx: usize) -> &[f32] {
+        debug_assert!(n_ctx <= self.filled[layer]);
+        let base = head * self.max_seq * self.head_dim;
+        &self.v[layer][base..base + n_ctx * self.head_dim]
     }
 
-    /// Resident bytes of the cached activations.
+    /// One head's K slice of position `t` (`head_dim` values).
+    #[inline]
+    pub fn k_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
+        let base = (head * self.max_seq + t) * self.head_dim;
+        &self.k[layer][base..base + self.head_dim]
+    }
+
+    /// One head's V slice of position `t` (`head_dim` values).
+    #[inline]
+    pub fn v_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
+        let base = (head * self.max_seq + t) * self.head_dim;
+        &self.v[layer][base..base + self.head_dim]
+    }
+
+    /// Resident bytes of the cached activations (appended rows, not the
+    /// `max_seq` capacity reservation).
     pub fn memory_bytes(&self) -> usize {
-        self.k.iter().chain(self.v.iter()).map(|b| b.len() * 4).sum()
+        self.filled.iter().map(|&f| f * self.d_model * 4 * 2).sum()
     }
 }
 
@@ -108,19 +164,43 @@ mod tests {
         let mut c = KvCache::new(&cfg());
         assert!(c.is_empty());
         assert_eq!(c.remaining(), 4);
-        let k = [1.0f32; 8];
-        let v = [2.0f32; 8];
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
         for l in 0..2 {
             c.append(l, &k, &v);
         }
         c.advance(1);
         assert_eq!(c.len(), 1);
-        assert_eq!(c.k_row(0, 0), &k);
-        assert_eq!(c.v_row(1, 0), &v);
+        // head-major: head h of position 0 holds the row's h-th head_dim slice
+        assert_eq!(c.k_at(0, 0, 0), &k[0..4]);
+        assert_eq!(c.k_at(0, 1, 0), &k[4..8]);
+        assert_eq!(c.v_at(1, 1, 0), &v[4..8]);
         assert_eq!(c.memory_bytes(), 2 * 2 * 8 * 4);
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn panels_are_position_contiguous_per_head() {
+        let mut c = KvCache::new(&cfg());
+        for t in 0..3 {
+            let row: Vec<f32> = (0..8).map(|i| (t * 8 + i) as f32).collect();
+            for l in 0..2 {
+                c.append(l, &row, &row);
+            }
+            c.advance(1);
+        }
+        // head 1's panel = [row0[4..8], row1[4..8], row2[4..8]] back to back
+        let p = c.k_panel(0, 1, 3);
+        assert_eq!(p.len(), 12);
+        for t in 0..3 {
+            for i in 0..4 {
+                assert_eq!(p[t * 4 + i], (t * 8 + 4 + i) as f32);
+            }
+        }
+        // panel prefix equals the per-position accessor
+        assert_eq!(&p[4..8], c.k_at(0, 1, 1));
     }
 
     #[test]

@@ -4,14 +4,16 @@
 //! substantial memory usage reductions of 2:4 pruning" — this subsystem is
 //! where the repo cashes that in. Three pieces:
 //!
-//! - [`KvCache`]: per-request K/V storage so decoding one token costs
-//!   O(seq) attention instead of a full-sequence recompute;
+//! - [`KvCache`]: per-request K/V storage in head-major panels, so decoding
+//!   one token costs O(seq) attention instead of a full-sequence recompute
+//!   and the attention kernel reads contiguous per-head panels;
 //! - [`Scheduler`]: FIFO admission + in-flight batch bookkeeping for
 //!   continuous batching;
 //! - [`Engine`]: drives a [`crate::model::CompiledModel`] — batched
-//!   compressed matmuls across the active batch, per-sequence attention
-//!   across the worker pool — and reports per-request latency plus
-//!   aggregate tokens/sec in a [`ServeReport`].
+//!   compressed matmuls across the active batch, blocked batch-shared
+//!   attention ([`crate::model::AttnKernel`]) over every in-flight
+//!   sequence — and reports per-request latency plus aggregate tokens/sec
+//!   in a [`ServeReport`].
 //!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
 //! dense-recompute vs KV-cached-compressed comparison.

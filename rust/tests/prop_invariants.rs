@@ -8,7 +8,7 @@ use armor::armor::{
 };
 use armor::baselines::Method;
 use armor::coordinator::{calibrate, prune_model, PruneJob};
-use armor::model::{CompiledModel, GptConfig, GptModel, NoCapture};
+use armor::model::{attend_batch_scalar, AttnKernel, CompiledModel, GptConfig, GptModel, NoCapture};
 use armor::prop::{forall, num_cases, Gen};
 use armor::serve::KvCache;
 use armor::sparsity::{mask_from_importance, Pattern};
@@ -247,6 +247,87 @@ fn prop_compile_execute_preserves_outputs() {
                         logits[c],
                         full[(i, c)]
                     ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+struct AttnCase {
+    n_heads: usize,
+    head_dim: usize,
+    n_layers: usize,
+    max_seq: usize,
+    /// cached positions per sequence — ragged by construction
+    lens: Vec<usize>,
+    seed: u64,
+}
+
+fn gen_attn_case(rng: &mut Pcg64) -> AttnCase {
+    let n_heads = [1usize, 2, 3, 4][rng.next_below(4) as usize];
+    let head_dim = [4usize, 8, 10, 16][rng.next_below(4) as usize];
+    let max_seq = 32;
+    let bsz = 1 + rng.next_below(8) as usize;
+    let lens = (0..bsz).map(|_| 1 + rng.next_below(max_seq as u32) as usize).collect();
+    AttnCase {
+        n_heads,
+        head_dim,
+        n_layers: 1 + rng.next_below(2) as usize,
+        max_seq,
+        lens,
+        seed: rng.next_u64(),
+    }
+}
+
+/// The blocked batch-shared attention kernel matches the scalar
+/// per-sequence reference bit-close on ragged batches — mixed sequence
+/// lengths, batch sizes, head counts, and head dims (including dims that
+/// straddle the kernel's 4-lane unroll and 4-row accumulation tiles).
+#[test]
+fn prop_blocked_attention_matches_scalar() {
+    forall("attention parity", num_cases(10), gen_attn_case, |case| {
+        let d_model = case.n_heads * case.head_dim;
+        let cfg = GptConfig {
+            d_model,
+            n_layers: case.n_layers,
+            n_heads: case.n_heads,
+            d_ff: 2 * d_model,
+            max_seq: case.max_seq,
+            ..GptConfig::tiny()
+        };
+        let mut rng = Pcg64::seed_from_u64(case.seed);
+        let caches: Vec<KvCache> = case
+            .lens
+            .iter()
+            .map(|&n| {
+                let mut c = KvCache::new(&cfg);
+                for _ in 0..n {
+                    let k: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+                    let v: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+                    for l in 0..cfg.n_layers {
+                        c.append(l, &k, &v);
+                    }
+                    c.advance(1);
+                }
+                c
+            })
+            .collect();
+        let shared: Vec<&KvCache> = caches.iter().collect();
+        let q = Matrix::randn(case.lens.len(), d_model, &mut rng);
+        let kern = AttnKernel::new(cfg.n_heads, cfg.head_dim());
+        for layer in 0..cfg.n_layers {
+            let blocked = kern.attend_batch(&shared, layer, &q, &case.lens);
+            let scalar = attend_batch_scalar(&shared, layer, &q, &case.lens, cfg.n_heads);
+            for i in 0..case.lens.len() {
+                for c in 0..d_model {
+                    let (b, s) = (blocked[(i, c)], scalar[(i, c)]);
+                    if (b - s).abs() > 1e-5 * (1.0 + s.abs()) {
+                        return Err(format!(
+                            "layer {layer} seq {i} (len {}) col {c}: blocked {b} vs scalar {s}",
+                            case.lens[i]
+                        ));
+                    }
                 }
             }
         }
