@@ -1,21 +1,34 @@
-"""Layer-1 Pallas kernel: ragged-batch decode attention over KV panels.
+"""Layer-1 Pallas kernels: ragged-batch decode attention over KV panels —
+contiguous (`attn_decode`) and paged (`attn_decode_paged`).
 
-TPU twin of the Rust serve path's blocked attention kernel
+TPU twins of the Rust serve path's blocked attention kernel
 (`rust/src/model/attention.rs`), mirroring its blocking scheme:
 
 - **Work decomposition**: the grid iterates over `(batch, head)` — exactly
   the Rust kernel's one-task-per-(sequence, head) split. Each step owns one
-  query head-slice and one `max_seq × head_dim` K/V panel in VMEM, the
-  head-major layout `serve::KvCache` stores natively.
+  query head-slice and that head's K/V storage in VMEM, the head-major
+  layout `serve::KvCache` stores natively.
 - **Raggedness**: sequences in the batch have mixed lengths; `seq_lens[b]`
   masks positions `>= len` to `-inf` before the softmax, the vectorized
-  equivalent of the Rust kernel slicing its panel at `n_ctx`.
+  equivalent of the Rust kernel slicing its panel (or page-run chain) at
+  `n_ctx`.
+- **Paging** (`attn_decode_paged`): K/V live in a shared page *pool*
+  (`serve::KvPool`'s layout — fixed-size pages of positions, refcount-shared
+  prompt prefixes); each sequence names its chain through an int32 page
+  table. The kernel gathers the chain, flattens it into the virtual panel,
+  and masks the ragged tail — the vectorized mirror of the Rust kernel
+  streaming `panel_runs` and carrying its position cursor across page
+  boundaries. Two sequences whose tables point at the same pool pages share
+  them in memory exactly like two forked Rust chains.
 - **Softmax**: the same two-pass max/exp/normalize the Rust kernel runs —
   no online rescaling, so both twins agree with the scalar reference to
   f32 rounding.
 
 Lowered with `interpret=True`: the CPU PJRT plugin cannot run Mosaic
-custom-calls; correctness is asserted against `ref.attn_decode_ref`.
+custom-calls; correctness is asserted against `ref.attn_decode_ref`. A
+production Mosaic lowering of the paged variant would hoist the page table
+into SMEM via `PrefetchScalarGridSpec` and DMA pages HBM→VMEM per grid
+step instead of gathering a resident pool.
 """
 
 from __future__ import annotations
@@ -72,5 +85,77 @@ def attn_decode(q: jax.Array, k: jax.Array, v: jax.Array, seq_lens: jax.Array) -
         q.astype(jnp.float32),
         k.astype(jnp.float32),
         v.astype(jnp.float32),
+        seq_lens.astype(jnp.int32),
+    )
+
+
+def _paged_kernel(q_ref, kp_ref, vp_ref, table_ref, len_ref, o_ref, *, scale):
+    q = q_ref[0, 0]  # (head_dim,) query slice of this (batch, head) task
+    k_pool = kp_ref[:, 0]  # (n_pool, page, head_dim) this head's page pool
+    v_pool = vp_ref[:, 0]
+    table = table_ref[0]  # (n_chain,) page ids of this sequence's chain
+    n = len_ref[0]  # cached positions (raggedness over the flattened chain)
+    n_chain, page, head_dim = table.shape[0], k_pool.shape[1], k_pool.shape[2]
+    # gather the chain and flatten it into the virtual contiguous panel —
+    # the vectorized equivalent of streaming panel_runs page by page
+    k = jnp.take(k_pool, table, axis=0).reshape(n_chain * page, head_dim)
+    v = jnp.take(v_pool, table, axis=0).reshape(n_chain * page, head_dim)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_chain * page, 1), 0)[:, 0]
+    scores = jnp.where(idx < n, (k @ q) * scale, -jnp.inf)
+    m = jnp.max(scores)
+    e = jnp.where(idx < n, jnp.exp(scores - m), 0.0)
+    o_ref[0, 0] = (e / jnp.sum(e)) @ v
+
+
+def attn_decode_paged(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    seq_lens: jax.Array,
+) -> jax.Array:
+    """Ragged batched decode attention over a shared page pool.
+
+    q:          (batch, n_heads, head_dim)  one query token per sequence
+    k_pages:    (n_pool, n_heads, page_positions, head_dim)  page pool
+    v_pages:    (n_pool, n_heads, page_positions, head_dim)
+    page_table: (batch, n_chain) int32  pool ids of each sequence's chain,
+                in position order; entries past the sequence's last page are
+                arbitrary valid ids (their positions are masked)
+    seq_lens:   (batch,) int32  cached positions per sequence
+                (1..n_chain*page_positions)
+
+    Sequences sharing prompt-prefix pages simply repeat pool ids in their
+    tables. Returns (batch, n_heads, head_dim) context rows.
+    """
+    bsz, n_heads, head_dim = q.shape
+    n_pool, _, page, _ = k_pages.shape
+    assert k_pages.shape == v_pages.shape == (n_pool, n_heads, page, head_dim), (
+        q.shape,
+        k_pages.shape,
+        v_pages.shape,
+    )
+    n_chain = page_table.shape[1]
+    assert page_table.shape == (bsz, n_chain), page_table.shape
+    assert seq_lens.shape == (bsz,), seq_lens.shape
+    scale = 1.0 / float(head_dim) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale),
+        grid=(bsz, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((n_pool, 1, page, head_dim), lambda b, h: (0, h, 0, 0)),
+            pl.BlockSpec((n_pool, 1, page, head_dim), lambda b, h: (0, h, 0, 0)),
+            pl.BlockSpec((1, n_chain), lambda b, h: (b, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k_pages.astype(jnp.float32),
+        v_pages.astype(jnp.float32),
+        page_table.astype(jnp.int32),
         seq_lens.astype(jnp.int32),
     )

@@ -226,3 +226,85 @@ def test_attn_decode_single_position_returns_value_row():
     lens = jnp.ones((3,), dtype=jnp.int32)
     got = kernels.attn_decode(q, k, v, lens)
     np.testing.assert_allclose(got, v[:, :, 0], rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# attn_decode_paged
+# --------------------------------------------------------------------- #
+
+def _assemble_panels(pages, table, max_seq):
+    """Flatten (n_pool, h, page, d) pool + (b, n_chain) tables into the
+    contiguous (b, h, max_seq, d) panels the non-paged reference reads."""
+    gathered = pages[table]  # (b, n_chain, h, page, d)
+    flat = jnp.moveaxis(gathered, 2, 1).reshape(
+        table.shape[0], pages.shape[1], -1, pages.shape[3]
+    )
+    return flat[:, :, :max_seq]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    n_heads=st.sampled_from([1, 2]),
+    head_dim=st.sampled_from([4, 8]),
+    page=st.sampled_from([1, 2, 4]),
+    n_chain=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_attn_decode_paged_matches_contiguous_ref(bsz, n_heads, head_dim, page, n_chain, seed):
+    """Paging is an addressing change only: gathering each sequence's chain
+    from the pool must equal the contiguous reference on the assembled
+    panels, for random page sizes, chain lengths, and ragged seq_lens."""
+    n_pool = bsz * n_chain  # worst case: no sharing
+    q = rand(seed, bsz, n_heads, head_dim)
+    k_pages = rand(seed + 1, n_pool, n_heads, page, head_dim)
+    v_pages = rand(seed + 2, n_pool, n_heads, page, head_dim)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 3), 2)
+    table = jax.random.randint(keys[0], (bsz, n_chain), 0, n_pool)
+    max_seq = n_chain * page
+    lens = jax.random.randint(keys[1], (bsz,), 1, max_seq + 1)
+    got = kernels.attn_decode_paged(q, k_pages, v_pages, table, lens)
+    want = ref.attn_decode_ref(
+        q,
+        _assemble_panels(k_pages, table, max_seq),
+        _assemble_panels(v_pages, table, max_seq),
+        lens,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attn_decode_paged_shared_prefix_pages():
+    """Two sequences whose tables point at the same prefix pages attend over
+    identical values there — the KvPool refcount-sharing layout — and only
+    their divergent tail pages differ."""
+    n_heads, head_dim, page = 2, 8, 4
+    q = rand(0, 2, n_heads, head_dim)
+    q = q.at[1].set(q[0])  # same query → outputs differ only via K/V
+    k_pages = rand(1, 4, n_heads, page, head_dim)
+    v_pages = rand(2, 4, n_heads, page, head_dim)
+    # chains: seq0 = [pool0, pool1, pool2], seq1 = [pool0, pool1, pool3]
+    table = jnp.array([[0, 1, 2], [0, 1, 3]], dtype=jnp.int32)
+    # within the shared prefix only → identical outputs
+    lens = jnp.array([8, 8], dtype=jnp.int32)
+    out = kernels.attn_decode_paged(q, k_pages, v_pages, table, lens)
+    np.testing.assert_allclose(out[0], out[1], rtol=1e-6, atol=1e-6)
+    # past the divergence point → outputs must differ
+    lens = jnp.array([12, 12], dtype=jnp.int32)
+    out = kernels.attn_decode_paged(q, k_pages, v_pages, table, lens)
+    assert not np.allclose(out[0], out[1], rtol=1e-3, atol=1e-3)
+
+
+def test_attn_decode_paged_ignores_pages_past_length():
+    """Ragged tail masking: positions >= seq_lens never contribute, even
+    when the table's tail entries alias arbitrary (scribbled) pool pages."""
+    n_heads, head_dim, page = 2, 8, 4
+    q = rand(0, 1, n_heads, head_dim)
+    k_pages = rand(1, 3, n_heads, page, head_dim)
+    v_pages = rand(2, 3, n_heads, page, head_dim)
+    table = jnp.array([[0, 1, 2]], dtype=jnp.int32)
+    lens = jnp.array([6], dtype=jnp.int32)  # mid-page-1: rest is masked
+    base = kernels.attn_decode_paged(q, k_pages, v_pages, table, lens)
+    k2 = k_pages.at[1, :, 2:].set(1e6).at[2].set(-1e6)
+    v2 = v_pages.at[1, :, 2:].set(1e6).at[2].set(-1e6)
+    got = kernels.attn_decode_paged(q, k2, v2, table, lens)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)

@@ -83,6 +83,31 @@ fn main() {
         println!("{}  ({:.2}x vs scalar)", r_bk.line(), r_sc.mean_ms / r_bk.mean_ms);
         emit_json("perf_hotpath", "attn_decode_scalar", result_fields(&r_sc));
         emit_json("perf_hotpath", "attn_decode_blocked", result_fields(&r_bk));
+
+        // same rows under 16-position pages: the page-run streaming
+        // overhead the kernel pays for bounded KV memory (one run per page
+        // instead of one monolithic panel)
+        let paged_pool = armor::serve::KvPool::new(&cfg, 16, None).unwrap();
+        let mut paged: Vec<KvCache> = (0..bsz).map(|_| paged_pool.new_cache()).collect();
+        for (c, src) in paged.iter_mut().zip(&caches) {
+            for t in 0..src.len() {
+                // reassemble the d_model rows from the per-head slices
+                let mut kr = Vec::with_capacity(cfg.d_model);
+                let mut vr = Vec::with_capacity(cfg.d_model);
+                for h in 0..cfg.n_heads {
+                    kr.extend_from_slice(src.k_at(0, h, t));
+                    vr.extend_from_slice(src.v_at(0, h, t));
+                }
+                c.append(0, &kr, &vr);
+                c.advance(1);
+            }
+        }
+        let paged_refs: Vec<&KvCache> = paged.iter().collect();
+        let r_pg = bench("attn decode b16 h4 d128 (blocked, 16-pos pages)", 2, scaled(200), 10.0, || {
+            black_box(kern.attend_batch(&paged_refs, 0, &q, &n_ctx));
+        });
+        println!("{}  ({:.2}x vs default 32-pos pages)", r_pg.line(), r_bk.mean_ms / r_pg.mean_ms);
+        emit_json("perf_hotpath", "attn_decode_blocked_paged16", result_fields(&r_pg));
     }
 
     let (fact, problem, _) = initialize(&w, &d, db, Pattern::TWO_FOUR);

@@ -13,17 +13,23 @@
 //! A second sweep pits the blocked batch-shared attention kernel against
 //! the per-sequence scalar reference at batch sizes {1, 4, 8, 16}: the
 //! blocked variant must win at batch ≥ 8, where its `batch × n_heads` panel
-//! tasks and contiguous head-major KV reads pay off.
+//! tasks and contiguous KV page-run reads pay off.
+//!
+//! A third sweep replays *templated* traffic (requests sharing a long
+//! prompt prefix) with prefix sharing off vs on: sharing must cut prefill
+//! work (hits > 0) and the paged pool must reserve less KV memory than the
+//! monolithic full-panel layout at equal batch.
 //!
 //! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
-//! artifact (CI's bench-smoke job uploads it as `BENCH_2.json`).
+//! artifact (CI's bench-smoke job uploads it as `BENCH_3.json`), including
+//! prefix-hit rates and pool bytes alongside throughput.
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
 use armor::bench::{bench_header, emit_json, scaled};
 use armor::coordinator::{calibrate, prune_model, PruneJob, PruneRunReport, TableRow};
 use armor::model::{AttnImpl, CompiledModel, GptConfig, GptModel};
-use armor::serve::{Engine, EngineConfig};
+use armor::serve::{Engine, EngineConfig, ServeReport};
 use armor::sparsity::Pattern;
 use armor::util::json::Json;
 use armor::util::rng::Pcg64;
@@ -44,14 +50,13 @@ fn prune(
     prune_model(model, &stats, &job, None)
 }
 
-fn engine_toks_per_sec(
+fn run_engine(
     compiled: CompiledModel,
     prompts: &[Vec<u16>],
     max_new: usize,
-    max_batch: usize,
-) -> (f64, f64, usize) {
-    let mut engine =
-        Engine::new(compiled, EngineConfig { max_batch }).expect("bench engine config");
+    cfg: EngineConfig,
+) -> (ServeReport, f64) {
+    let mut engine = Engine::new(compiled, cfg).expect("bench engine config");
     for p in prompts {
         engine.submit(p, max_new);
     }
@@ -60,7 +65,23 @@ fn engine_toks_per_sec(
     for r in &report.requests {
         lat.push(r.latency_ms);
     }
-    (report.tokens_per_sec(), lat.percentile(50.0), report.peak_batch)
+    let p50 = lat.percentile(50.0);
+    (report, p50)
+}
+
+fn engine_toks_per_sec(
+    compiled: CompiledModel,
+    prompts: &[Vec<u16>],
+    max_new: usize,
+    max_batch: usize,
+) -> (f64, f64, usize) {
+    let (report, p50) = run_engine(
+        compiled,
+        prompts,
+        max_new,
+        EngineConfig { max_batch, ..EngineConfig::default() },
+    );
+    (report.tokens_per_sec(), p50, report.peak_batch)
 }
 
 fn main() {
@@ -88,9 +109,10 @@ fn main() {
     let base_tps = generated as f64 / t0.elapsed().as_secs_f64();
 
     // --- 2–4. KV-cached engine over the three exec forms ---
+    let engine_defaults = EngineConfig { max_batch, ..EngineConfig::default() };
     let dense_compiled = CompiledModel::compile(&model, None).unwrap();
-    let (dense_tps, dense_p50, _) =
-        engine_toks_per_sec(dense_compiled, &prompts, max_new, max_batch);
+    let (dense_rep, dense_p50) = run_engine(dense_compiled, &prompts, max_new, engine_defaults);
+    let dense_tps = dense_rep.tokens_per_sec();
 
     let (nowag_model, _) = prune(&model, Method::NoWagP, &prompts);
     let sparse_compiled = CompiledModel::compile(&nowag_model, None).unwrap();
@@ -100,8 +122,8 @@ fn main() {
         sparse_compiled.exec_summary()
     );
     let sparse_bytes = sparse_compiled.storage_bytes();
-    let (sparse_tps, sparse_p50, peak) =
-        engine_toks_per_sec(sparse_compiled, &prompts, max_new, max_batch);
+    let (sparse_rep, sparse_p50) = run_engine(sparse_compiled, &prompts, max_new, engine_defaults);
+    let (sparse_tps, peak) = (sparse_rep.tokens_per_sec(), sparse_rep.peak_batch);
 
     let armor_cfg = ArmorConfig { d_block: 32, n_iters: scaled(30), ..Default::default() };
     let (armor_model, armor_report) = prune(&model, Method::Armor(armor_cfg), &prompts);
@@ -112,8 +134,8 @@ fn main() {
         armor_compiled.exec_summary()
     );
     let armor_bytes = armor_compiled.storage_bytes();
-    let (armor_tps, armor_p50, _) =
-        engine_toks_per_sec(armor_compiled, &prompts, max_new, max_batch);
+    let (armor_rep, armor_p50) = run_engine(armor_compiled, &prompts, max_new, engine_defaults);
+    let armor_tps = armor_rep.tokens_per_sec();
 
     let dense_bytes = CompiledModel::compile(&model, None).unwrap().storage_bytes();
     let fmt_row = |tps: f64, p50: f64, bytes: usize| {
@@ -144,16 +166,26 @@ fn main() {
     } else {
         println!("WARN: KV-cached 2:4 decode did not beat recompute ({sparse_tps:.1} vs {base_tps:.1} tok/s)");
     }
-    for (case, tps, p50) in [
-        ("dense_recompute", base_tps, f64::NAN),
-        ("kv_dense", dense_tps, dense_p50),
-        ("kv_24", sparse_tps, sparse_p50),
-        ("kv_armor", armor_tps, armor_p50),
+    emit_json(
+        "serve_throughput",
+        "dense_recompute",
+        vec![("tok_s", Json::Num(base_tps)), ("p50_ms", Json::Num(f64::NAN))],
+    );
+    for (case, rep, p50) in [
+        ("kv_dense", &dense_rep, dense_p50),
+        ("kv_24", &sparse_rep, sparse_p50),
+        ("kv_armor", &armor_rep, armor_p50),
     ] {
         emit_json(
             "serve_throughput",
             case,
-            vec![("tok_s", Json::Num(tps)), ("p50_ms", Json::Num(p50))],
+            vec![
+                ("tok_s", Json::Num(rep.tokens_per_sec())),
+                ("p50_ms", Json::Num(p50)),
+                ("prefix_hit_rate", Json::Num(rep.prefix_hit_rate())),
+                ("kv_reserved_bytes", Json::Num(rep.kv_reserved_bytes as f64)),
+                ("kv_resident_bytes", Json::Num(rep.kv_resident_bytes as f64)),
+            ],
         );
     }
 
@@ -206,5 +238,97 @@ fn main() {
         println!("OK: blocked attention beats the scalar reference at batch >= 8");
     } else {
         println!("WARN: blocked attention did not beat the scalar reference at batch >= 8");
+    }
+
+    // --- prefix sharing: templated-prompt traffic, sharing off vs on ---
+    // The realistic serve shape: every request repeats a long system-prompt
+    // prefix. Sharing must cut prefill work; the paged pool must reserve
+    // less KV than batch × monolithic max_seq panels.
+    println!("\nprefix sharing: templated prompts (shared 48-token prefix), paged KV pool");
+    let prefix_len = 48usize;
+    let tail_len = 8usize;
+    let n_templated = scaled(16).max(4);
+    let template: Vec<u16> = (0..prefix_len).map(|_| rng.next_below(256) as u16).collect();
+    let templated: Vec<Vec<u16>> = (0..n_templated)
+        .map(|_| {
+            let mut p = template.clone();
+            p.extend((0..tail_len).map(|_| rng.next_below(256) as u16));
+            p
+        })
+        .collect();
+    let page_positions = 16usize;
+    let engine_cfg = |sharing: bool| EngineConfig {
+        max_batch,
+        page_positions,
+        kv_budget_bytes: None,
+        prefix_sharing: sharing,
+    };
+    let mut share_rows = Vec::new();
+    let mut shared_report = None;
+    for (case, sharing) in [("sharing_off", false), ("sharing_on", true)] {
+        let exec = attn_compiled.clone();
+        let (report, p50) = run_engine(exec, &templated, attn_new, engine_cfg(sharing));
+        let monolithic =
+            report.peak_batch * cfg.n_layers * 2 * cfg.max_seq * cfg.d_model * 4;
+        share_rows.push(TableRow::new(
+            case,
+            vec![
+                format!("{:.1}", report.tokens_per_sec()),
+                format!("{}", report.prefill_tokens),
+                format!("{}", report.prefix_hits),
+                format!("{:.0}", report.prefix_hit_rate() * 100.0),
+                format!("{}", report.kv_reserved_bytes / 1024),
+                format!("{}", monolithic / 1024),
+            ],
+        ));
+        emit_json(
+            "serve_prefix",
+            case,
+            vec![
+                ("tok_s", Json::Num(report.tokens_per_sec())),
+                ("p50_ms", Json::Num(p50)),
+                ("prefill_tokens", Json::Num(report.prefill_tokens as f64)),
+                ("prefix_hits", Json::Num(report.prefix_hits as f64)),
+                ("prefix_hit_rate", Json::Num(report.prefix_hit_rate())),
+                ("kv_reserved_bytes", Json::Num(report.kv_reserved_bytes as f64)),
+                ("kv_resident_bytes", Json::Num(report.kv_resident_bytes as f64)),
+                ("kv_shared_bytes", Json::Num(report.kv_shared_bytes as f64)),
+                ("monolithic_bytes", Json::Num(monolithic as f64)),
+            ],
+        );
+        if sharing {
+            shared_report = Some((report, monolithic));
+        }
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Prefix sharing on templated traffic (KV-cached 2:4, paged pool)",
+            &[
+                "tok/s (↑)",
+                "prefill tok (↓)",
+                "prefix hits",
+                "hit %",
+                "reserved KiB (↓)",
+                "monolithic KiB",
+            ],
+            &share_rows
+        )
+    );
+    let (report, monolithic) = shared_report.expect("sharing_on ran");
+    if report.prefix_hits > 0 && report.kv_reserved_bytes < monolithic {
+        println!(
+            "OK: prefix cache hit {} requests and paged reservations undercut monolithic panels ({} vs {} KiB)",
+            report.prefix_hits,
+            report.kv_reserved_bytes / 1024,
+            monolithic / 1024
+        );
+    } else {
+        println!(
+            "WARN: prefix sharing underperformed (hits {}, reserved {} vs monolithic {} KiB)",
+            report.prefix_hits,
+            report.kv_reserved_bytes / 1024,
+            monolithic / 1024
+        );
     }
 }

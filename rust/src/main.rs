@@ -62,6 +62,9 @@ fn print_usage() {
                 OptSpec { name: "prompt-len", help: "serve: prompt tokens per request", default: Some("16") },
                 OptSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("32") },
                 OptSpec { name: "batch", help: "serve: max in-flight sequences", default: Some("8") },
+                OptSpec { name: "page-size", help: "serve: KV page size in positions", default: Some("32") },
+                OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
+                OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
             ]
         )
@@ -282,20 +285,43 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
     let prompt_len = args.get_usize("prompt-len", 16).max(1);
     let max_new = args.get_usize("max-new", 32);
     let max_batch = args.get_usize("batch", 8);
+    let page_positions = args.get_usize("page-size", 32);
+    let kv_budget_bytes = match args.get("kv-budget-mb") {
+        None => None,
+        Some(v) => {
+            let mb: f64 = v
+                .parse()
+                .map_err(|_| armor::err!("--kv-budget-mb must be a number, got '{v}'"))?;
+            armor::ensure!(mb > 0.0, "--kv-budget-mb must be > 0, got {mb}");
+            Some((mb * (1 << 20) as f64) as usize)
+        }
+    };
     // validate flags against the serving model up front: bad values come
     // back as structured errors, never as panics inside the scheduler or
     // KvCache mid-burst
     armor::ensure!(max_batch >= 1, "--batch (engine max_batch) must be >= 1, got {max_batch}");
+    armor::ensure!(page_positions >= 1, "--page-size must be >= 1 position, got {page_positions}");
     armor::ensure!(
         prompt_len <= compiled.cfg.max_seq,
         "--prompt-len {prompt_len} exceeds the model's context window {} (max_seq)",
         compiled.cfg.max_seq
     );
+    // the semantic budget check (budget >= one page per layer×head chain)
+    // lives in KvPool::new — Engine::new below surfaces it as the same
+    // structured error, without this file duplicating the page-bytes formula
     // --max-new 0 stays legal: the engine clamps it to 1 (best-effort serving)
     let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0) ^ 0x5E47E);
     let prompts = sample_calibration(&tokens, prompt_len, n_requests, &mut rng);
 
-    let mut engine = Engine::new(compiled, EngineConfig { max_batch })?;
+    let mut engine = Engine::new(
+        compiled,
+        EngineConfig {
+            max_batch,
+            page_positions,
+            kv_budget_bytes,
+            prefix_sharing: !args.flag("no-prefix-share"),
+        },
+    )?;
     for p in &prompts {
         engine.submit(p, max_new);
     }

@@ -13,14 +13,20 @@
 //!   exactly one head's context row and no two tasks share a cache line of
 //!   output. A batch of 8 sequences × 4 heads keeps 32 workers busy where
 //!   the scalar path had 8.
-//! - **Panel reads**: each task streams its `(layer, head)` K and V panels
-//!   from the [`KvCache`](crate::serve::KvCache) head-major layout —
-//!   `n_ctx × head_dim` contiguous floats — instead of gathering
-//!   `d_model`-strided row slices.
+//! - **Page-run reads**: each task streams its `(layer, head)` K and V
+//!   streams from the [`KvCache`](crate::serve::KvCache) page chains via
+//!   [`KvCache::panel_runs`] — a sequence of contiguous
+//!   `run_len × head_dim` float runs (one per page, `run_len` =
+//!   `page_positions` except for the last, ragged run) — instead of
+//!   gathering `d_model`-strided row slices. Within a run the access
+//!   pattern is identical to the old monolithic head-major panel; the
+//!   kernel carries its position cursor across run boundaries, so paging
+//!   changes the iteration shape, never the arithmetic.
 //! - **Blocking**: scores are computed in one sequential sweep (4-lane
 //!   unrolled dot products), then the weighted V-sum is accumulated in
-//!   4-row context tiles so each pass over the output slice folds in four
-//!   positions' values.
+//!   4-row context tiles *within each run* so each pass over the output
+//!   slice folds in four positions' values; the ragged tail of every run
+//!   falls back to single rows.
 //!
 //! The pre-kernel per-sequence path survives as [`attend_scalar`] /
 //! [`attend_batch_scalar`]: the parity oracle for the property tests and
@@ -106,7 +112,7 @@ impl AttnKernel {
 }
 
 /// One `(sequence, head)` task: fused score/softmax/weighted-sum of a single
-/// query head-slice over its contiguous K/V panels.
+/// query head-slice, streaming the stream's contiguous K/V page runs.
 fn attend_head_blocked(
     cache: &KvCache,
     layer: usize,
@@ -117,17 +123,21 @@ fn attend_head_blocked(
     out: &mut [f32],
 ) {
     let hd = q.len();
-    let kp = cache.k_panel(layer, head, n_ctx);
-    let vp = cache.v_panel(layer, head, n_ctx);
 
-    // pass 1: scores over the K panel, tracking the running max
+    // pass 1: scores over the K page runs, tracking the running max; the
+    // position cursor `j` carries across run boundaries
     let mut scores = vec![0.0f32; n_ctx];
     let mut maxs = f32::NEG_INFINITY;
-    for (j, s) in scores.iter_mut().enumerate() {
-        let sj = dot4(q, &kp[j * hd..(j + 1) * hd]) * scale;
-        maxs = maxs.max(sj);
-        *s = sj;
+    let mut j = 0usize;
+    for (kp, _) in cache.panel_runs(layer, head, n_ctx) {
+        for krow in kp.chunks_exact(hd) {
+            let sj = dot4(q, krow) * scale;
+            maxs = maxs.max(sj);
+            scores[j] = sj;
+            j += 1;
+        }
     }
+    debug_assert_eq!(j, n_ctx, "page runs must cover exactly n_ctx positions");
 
     // pass 2: exponentiate + denominator
     let mut denom = 0.0f32;
@@ -137,30 +147,37 @@ fn attend_head_blocked(
     }
     let inv = 1.0 / denom;
 
-    // pass 3: weighted V-sum in CTX_TILE-row tiles — each read-modify-write
-    // sweep of `out` folds in four positions' values
-    let mut j = 0;
-    while j + CTX_TILE <= n_ctx {
-        let w0 = scores[j] * inv;
-        let w1 = scores[j + 1] * inv;
-        let w2 = scores[j + 2] * inv;
-        let w3 = scores[j + 3] * inv;
-        let v0 = &vp[j * hd..(j + 1) * hd];
-        let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
-        let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
-        let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
-        for t in 0..hd {
-            out[t] += w0 * v0[t] + w1 * v1[t] + w2 * v2[t] + w3 * v3[t];
+    // pass 3: weighted V-sum in CTX_TILE-row tiles within each run — each
+    // read-modify-write sweep of `out` folds in four positions' values;
+    // the ragged tail of a run (page remainder) folds in single rows
+    let mut base = 0usize;
+    for (_, vp) in cache.panel_runs(layer, head, n_ctx) {
+        let run = vp.len() / hd;
+        let w = &scores[base..base + run];
+        let mut j = 0;
+        while j + CTX_TILE <= run {
+            let w0 = w[j] * inv;
+            let w1 = w[j + 1] * inv;
+            let w2 = w[j + 2] * inv;
+            let w3 = w[j + 3] * inv;
+            let v0 = &vp[j * hd..(j + 1) * hd];
+            let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
+            let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
+            let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
+            for t in 0..hd {
+                out[t] += w0 * v0[t] + w1 * v1[t] + w2 * v2[t] + w3 * v3[t];
+            }
+            j += CTX_TILE;
         }
-        j += CTX_TILE;
-    }
-    while j < n_ctx {
-        let w = scores[j] * inv;
-        let vj = &vp[j * hd..(j + 1) * hd];
-        for t in 0..hd {
-            out[t] += w * vj[t];
+        while j < run {
+            let wj = w[j] * inv;
+            let vj = &vp[j * hd..(j + 1) * hd];
+            for t in 0..hd {
+                out[t] += wj * vj[t];
+            }
+            j += 1;
         }
-        j += 1;
+        base += run;
     }
 }
 
@@ -332,6 +349,86 @@ mod tests {
         let blocked = AttnKernel::new(2, 8).attend_batch(&shared, 1, &q, &n_ctx);
         let scalar = attend_batch_scalar(&shared, 1, &q, &n_ctx, 2);
         assert!(blocked.max_abs_diff(&scalar) < 1e-5);
+    }
+
+    /// Paging is an iteration-shape change only: the same rows stored under
+    /// 1/3/5/8-position pages attend identically (to f32 reassociation) to
+    /// the scalar reference reading them row-by-row.
+    #[test]
+    fn paged_chains_match_scalar_across_page_sizes() {
+        let cfg = cfg(20, 2); // head_dim 10: dot4 remainder + page remainders
+        for pp in [1usize, 3, 5, 8] {
+            let pool = crate::serve::KvPool::new(&cfg, pp, None).unwrap();
+            let mut rng = Pcg64::seed_from_u64(23 + pp as u64);
+            let lens = [1usize, 4, 7, 17, 24];
+            let caches: Vec<KvCache> = lens
+                .iter()
+                .map(|&n| {
+                    let mut c = pool.new_cache();
+                    for _ in 0..n {
+                        let k: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                        let v: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                        for l in 0..cfg.n_layers {
+                            c.append(l, &k, &v);
+                        }
+                        c.advance(1);
+                    }
+                    c
+                })
+                .collect();
+            let refs: Vec<&KvCache> = caches.iter().collect();
+            let q = Matrix::randn(lens.len(), cfg.d_model, &mut rng);
+            let blocked = AttnKernel::new(2, 10).attend_batch(&refs, 0, &q, &lens);
+            let scalar = attend_batch_scalar(&refs, 0, &q, &lens, 2);
+            let diff = blocked.max_abs_diff(&scalar);
+            assert!(diff < 1e-5, "page size {pp}: diff {diff}");
+        }
+    }
+
+    /// A forked (shared-prefix, CoW-diverged) chain attends identically to
+    /// an independently built chain holding the same rows.
+    #[test]
+    fn shared_prefix_fork_attends_like_private_copy() {
+        let cfg = cfg(16, 2);
+        let pool = crate::serve::KvPool::new(&cfg, 3, None).unwrap();
+        let mut rng = Pcg64::seed_from_u64(31);
+        let prefix: Vec<(Vec<f32>, Vec<f32>)> = (0..7)
+            .map(|_| {
+                let k: Vec<f32> = (0..16).map(|_| rng.next_gaussian()).collect();
+                let v: Vec<f32> = (0..16).map(|_| rng.next_gaussian()).collect();
+                (k, v)
+            })
+            .collect();
+        let tail: Vec<(Vec<f32>, Vec<f32>)> = (0..4)
+            .map(|_| {
+                let k: Vec<f32> = (0..16).map(|_| rng.next_gaussian()).collect();
+                let v: Vec<f32> = (0..16).map(|_| rng.next_gaussian()).collect();
+                (k, v)
+            })
+            .collect();
+        let append_all = |c: &mut KvCache, rows: &[(Vec<f32>, Vec<f32>)]| {
+            for (k, v) in rows {
+                for l in 0..cfg.n_layers {
+                    c.append(l, k, v);
+                }
+                c.advance(1);
+            }
+        };
+        let mut base = pool.new_cache();
+        append_all(&mut base, &prefix);
+        let mut forked = base.fork_prefix(7); // mid-page: CoW on first append
+        append_all(&mut forked, &tail);
+        let mut private = pool.new_cache();
+        append_all(&mut private, &prefix);
+        append_all(&mut private, &tail);
+
+        let q = Matrix::randn(1, 16, &mut rng);
+        let kern = AttnKernel::new(2, 8);
+        for layer in 0..cfg.n_layers {
+            let a = kern.attend_batch(&[&forked], layer, &q, &[11]);
+            let b = kern.attend_batch(&[&private], layer, &q, &[11]);
+            assert_eq!(a.data, b.data, "layer {layer}: fork must be bit-identical");
+        }
     }
 
     #[test]

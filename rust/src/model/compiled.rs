@@ -23,7 +23,7 @@ use crate::linalg::gemm_nt;
 use crate::model::attention::{attend_batch_scalar, AttnImpl, AttnKernel};
 use crate::model::gpt::{gelu_inplace, layer_norm};
 use crate::model::{prunable_layers, GptConfig, GptModel, MoeConfig};
-use crate::serve::KvCache;
+use crate::serve::{KvCache, KvPool, PrefixRegistry};
 use crate::sparsity::{Compressed24, Mask};
 use crate::tensor::{BlockDiag, Matrix};
 use std::collections::BTreeMap;
@@ -319,6 +319,42 @@ impl CompiledModel {
 
         let xf = layer_norm(&x, self.tensor("ln_f.g"), self.tensor("ln_f.b"));
         gemm_nt(&xf, self.tensor("tok_embed"))
+    }
+
+    /// Prefix-reuse prefill: the serve path's admission entry point.
+    ///
+    /// Looks the prompt up in the [`PrefixRegistry`] (hash at page
+    /// boundaries, longest aligned prefix wins, token-verified). On a hit,
+    /// the new sequence *attaches to the existing page chain* — a
+    /// [`KvCache::fork_prefix`] refcount bump, no K/V recompute, no copy —
+    /// and only the prompt *suffix* is prefilled. On a miss, a fresh cache
+    /// is drawn from `pool` and the whole prompt prefilled. Either way the
+    /// prompt's page-aligned prefix is (re)registered for the next request.
+    ///
+    /// Returns `(cache, logits, reused)`: the sequence's cache positioned
+    /// after the prompt, the per-position logits of the *prefilled suffix*
+    /// (its last row is the next-token distribution — identical, row for
+    /// row, to the tail of a full prefill, since every op is
+    /// row-independent), and how many prompt tokens were served from the
+    /// registry. `reused` is always `< tokens.len()`: the suffix keeps at
+    /// least one token so the last logits row exists.
+    pub fn prefill_reuse(
+        &self,
+        registry: &mut PrefixRegistry,
+        pool: &KvPool,
+        tokens: &[u16],
+    ) -> (KvCache, Matrix, usize) {
+        let (mut cache, reused) = match registry.lookup(tokens) {
+            Some(c) => {
+                let n = c.len();
+                debug_assert!(n < tokens.len());
+                (c, n)
+            }
+            None => (pool.new_cache(), 0),
+        };
+        let logits = self.prefill(&mut cache, &tokens[reused..]);
+        registry.register(tokens, &cache);
+        (cache, logits, reused)
     }
 
     /// Decode one token for one sequence; returns the next-token logits.
@@ -648,6 +684,51 @@ mod tests {
                     "seq {i} logit {c}"
                 );
             }
+        }
+    }
+
+    /// Prefix-reuse prefill is bit-exact against a fresh full prefill:
+    /// every op in the stack is row-independent, so attaching to a cached
+    /// chain and prefilling only the suffix reproduces the same logits and
+    /// the same greedy continuation.
+    #[test]
+    fn prefix_reuse_prefill_matches_fresh_prefill() {
+        let (model, _) = pruned(Method::NoWagP, 70);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        // 4-position pages so the prompts span several pages
+        let pool = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let mut reg = PrefixRegistry::new(pool.clone(), 4);
+        let prefix = toks(13, 71);
+        let mk = |tail: &[u16]| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(tail);
+            p
+        };
+        let (a, b) = (mk(&[3, 5, 7]), mk(&[11, 13]));
+
+        let (mut ca, _, r0) = compiled.prefill_reuse(&mut reg, &pool, &a);
+        assert_eq!(r0, 0, "first request misses");
+        let (cb, logits_b, r1) = compiled.prefill_reuse(&mut reg, &pool, &b);
+        assert_eq!(r1, 12, "longest page-aligned prefix of 13 shared tokens");
+
+        // fresh, no-sharing prefill of the same prompt
+        let mut fresh = pool.new_cache();
+        let full = compiled.prefill(&mut fresh, &b);
+        assert_eq!(cb.len(), fresh.len());
+        let suffix_rows = logits_b.rows;
+        for (i, row) in (full.rows - suffix_rows..full.rows).enumerate() {
+            assert_eq!(logits_b.row(i), full.row(row), "suffix logits row {i} drifted");
+        }
+        // and decoding on the attached chain agrees token for token with
+        // decoding on a fresh one
+        let mut f2 = pool.new_cache();
+        compiled.prefill(&mut f2, &a);
+        let mut tok = 9u16;
+        for step in 0..4 {
+            let shared = compiled.decode_step(&mut ca, tok);
+            let fresh = compiled.decode_step(&mut f2, tok);
+            assert_eq!(shared, fresh, "decode step {step} drifted on the shared chain");
+            tok = argmax(&shared) as u16;
         }
     }
 

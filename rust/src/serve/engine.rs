@@ -1,27 +1,44 @@
 //! The serving engine: continuous batching over a [`CompiledModel`].
 //!
 //! `submit` enqueues generation requests; each `step` admits waiting
-//! requests into the in-flight batch (prefilling their prompts), runs one
-//! batched KV-cached decode across every active sequence, and retires the
-//! finished ones. `drain` steps until idle and returns a [`ServeReport`]
-//! with per-request latency and aggregate throughput.
+//! requests into the in-flight batch — admission is **capacity-aware**: a
+//! request enters iff its worst-case KV page demand fits the shared
+//! [`KvPool`] budget (and a batch slot is free), otherwise it queues — then
+//! prefills admitted prompts through the [`PrefixRegistry`] (a templated
+//! prompt attaches to a retained page chain and prefills only its suffix),
+//! runs one batched KV-cached decode across every active sequence, and
+//! retires the finished ones, returning their page reservations. `drain`
+//! steps until idle and returns a [`ServeReport`] with per-request latency,
+//! aggregate throughput, pool memory peaks, and prefix-hit counters.
 
 use crate::model::{argmax, CompiledModel};
 use crate::serve::scheduler::{ActiveSeq, Scheduler};
-use crate::serve::{KvCache, RequestId};
+use crate::serve::{KvPool, PrefixRegistry, RequestId, DEFAULT_PREFIX_ENTRIES};
 use crate::util::timer::Stats;
 use std::time::Instant;
 
 /// Engine tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
-    /// Maximum in-flight sequences per decode step.
+    /// Maximum in-flight sequences per decode step (secondary cap; the
+    /// primary admission control is the page budget).
     pub max_batch: usize,
+    /// Positions per KV page (`armor serve --page-size`).
+    pub page_positions: usize,
+    /// KV pool budget in bytes (`--kv-budget-mb`); `None` = unbounded.
+    pub kv_budget_bytes: Option<usize>,
+    /// Retain prompt-prefix page chains for reuse across requests.
+    pub prefix_sharing: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { max_batch: 8 }
+        EngineConfig {
+            max_batch: 8,
+            page_positions: crate::serve::DEFAULT_PAGE_POSITIONS,
+            kv_budget_bytes: None,
+            prefix_sharing: true,
+        }
     }
 }
 
@@ -31,6 +48,8 @@ pub struct RequestStats {
     pub id: RequestId,
     pub prompt_len: usize,
     pub n_generated: usize,
+    /// prompt tokens served from the prefix cache instead of prefill
+    pub reused_tokens: usize,
     /// submit → first generated token (queue wait + prefill)
     pub ttft_ms: f64,
     /// submit → last generated token
@@ -44,13 +63,25 @@ pub struct RequestStats {
 pub struct ServeReport {
     pub requests: Vec<RequestStats>,
     pub wall_ms: f64,
-    /// prompt tokens processed by prefill
+    /// prompt tokens processed by prefill (prefix-cache hits excluded)
     pub prefill_tokens: usize,
     /// tokens generated (the serving throughput numerator)
     pub generated_tokens: usize,
     /// decode steps executed and the largest batch observed
     pub decode_steps: usize,
     pub peak_batch: usize,
+    /// admissions that attached to a retained prefix chain
+    pub prefix_hits: usize,
+    /// prompt tokens those hits skipped re-prefilling
+    pub prefix_hit_tokens: usize,
+    /// peak unique pool pages held, in bytes (live memory)
+    pub kv_resident_bytes: usize,
+    /// peak worst-case page reservations, in bytes (the admission axis —
+    /// compare against `batch × full-panel` for the monolithic layout)
+    pub kv_reserved_bytes: usize,
+    /// peak bytes referenced beyond the unique pages — memory that page
+    /// sharing avoided duplicating
+    pub kv_shared_bytes: usize,
 }
 
 impl ServeReport {
@@ -60,6 +91,14 @@ impl ServeReport {
             return 0.0;
         }
         self.generated_tokens as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// Fraction of admissions served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.requests.len() as f64
     }
 
     fn latency_stats(&self) -> (Stats, Stats) {
@@ -93,19 +132,34 @@ impl ServeReport {
             lat.percentile(99.0),
             ttft.percentile(50.0)
         ));
+        s.push_str(&format!(
+            "kv pool peaks: resident {:.1} KiB  reserved {:.1} KiB  shared {:.1} KiB  |  prefix hits {} ({:.0}% of requests, {} tok reused)\n",
+            self.kv_resident_bytes as f64 / 1024.0,
+            self.kv_reserved_bytes as f64 / 1024.0,
+            self.kv_shared_bytes as f64 / 1024.0,
+            self.prefix_hits,
+            self.prefix_hit_rate() * 100.0,
+            self.prefix_hit_tokens
+        ));
         s
     }
 }
 
-/// Compressed-execution inference engine with KV-cached continuous batching.
+/// Compressed-execution inference engine with KV-cached continuous batching
+/// over a paged, budgeted KV pool.
 pub struct Engine {
     model: CompiledModel,
     sched: Scheduler,
+    pool: KvPool,
+    prefix: PrefixRegistry,
     finished: Vec<RequestStats>,
     prefill_tokens: usize,
     generated_tokens: usize,
     decode_steps: usize,
     peak_batch: usize,
+    /// peak of (pages referenced − unique pages) × page_bytes, sampled per
+    /// step — duplication that sharing avoided
+    peak_shared_bytes: usize,
     /// start of the current accounting window: set by the first submit after
     /// a drain, so throughput covers all work since then, not just the
     /// final drain loop
@@ -114,8 +168,9 @@ pub struct Engine {
 
 impl Engine {
     /// Build an engine over a compiled model. Returns a structured error
-    /// (not a panic) on an unservable configuration, so callers like the
-    /// `armor serve` CLI can surface bad flags cleanly.
+    /// (not a panic) on an unservable configuration — zero batch or page
+    /// size, a KV budget below one sequence's first page row — so callers
+    /// like the `armor serve` CLI can surface bad flags cleanly.
     pub fn new(model: CompiledModel, cfg: EngineConfig) -> crate::Result<Engine> {
         crate::ensure!(
             cfg.max_batch >= 1,
@@ -127,14 +182,23 @@ impl Engine {
             "model context window {} cannot hold a prompt token plus a generated token",
             model.cfg.max_seq
         );
+        let pool = KvPool::new(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes)?;
+        let prefix = if cfg.prefix_sharing {
+            PrefixRegistry::new(pool.clone(), DEFAULT_PREFIX_ENTRIES)
+        } else {
+            PrefixRegistry::disabled(pool.clone())
+        };
         Ok(Engine {
             model,
             sched: Scheduler::new(cfg.max_batch),
+            pool,
+            prefix,
             finished: Vec::new(),
             prefill_tokens: 0,
             generated_tokens: 0,
             decode_steps: 0,
             peak_batch: 0,
+            peak_shared_bytes: 0,
             window_start: None,
         })
     }
@@ -143,21 +207,27 @@ impl Engine {
         &self.model
     }
 
-    /// Enqueue a generation request. The prompt is truncated to the last
-    /// `max_seq` tokens and `max_new` clamped to `[1, max_seq+1-prompt_len]`
-    /// — the prompt plus all but the last generated token must fit the
-    /// context window (the final token comes from the last logits without
-    /// occupying a cache slot). Served best-effort rather than rejected.
+    /// The shared page pool (capacity/usage introspection).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Enqueue a generation request. Served best-effort rather than
+    /// rejected: the prompt is truncated to the last `window` tokens and
+    /// `max_new` clamped to `[1, window+1-prompt_len]`, where `window` is
+    /// the context window shrunk — if necessary — to the longest sequence
+    /// whose worst-case page demand fits the whole pool budget (a request
+    /// that could never be admitted would queue forever).
     pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> RequestId {
-        let max_seq = self.model.cfg.max_seq;
-        let start = prompt.len().saturating_sub(max_seq);
+        let window = self.pool.budget_max_len();
+        let start = prompt.len().saturating_sub(window);
         let prompt: Vec<u16> = if prompt.is_empty() {
             // degenerate but well-defined: seed with token 0
             vec![0]
         } else {
             prompt[start..].to_vec()
         };
-        let max_new = max_new.clamp(1, max_seq + 1 - prompt.len());
+        let max_new = max_new.clamp(1, window + 1 - prompt.len());
         self.window_start.get_or_insert_with(Instant::now);
         self.sched.enqueue(prompt, max_new)
     }
@@ -167,18 +237,40 @@ impl Engine {
         self.sched.pending_len() + self.sched.active_len()
     }
 
-    /// One engine iteration: admit + prefill new requests, one batched
-    /// decode over the active batch, retire finished sequences. Returns the
-    /// number of tokens generated this step.
+    /// Cache positions this request may occupy: the whole prompt plus all
+    /// but the last generated token (the final token comes from the last
+    /// logits without a cache slot), capped by the context window.
+    fn worst_case_len(&self, prompt_len: usize, max_new: usize) -> usize {
+        (prompt_len + max_new - 1).min(self.model.cfg.max_seq)
+    }
+
+    /// One engine iteration: admit + prefill new requests (page budget
+    /// permitting), one batched decode over the active batch, retire
+    /// finished sequences. Returns the number of tokens generated this step.
     pub fn step(&mut self) -> usize {
         let mut produced = 0usize;
 
-        // --- admission: prefill into free batch slots ---
-        while let Some(req) = self.sched.pop_admittable() {
-            let mut cache = KvCache::new(&self.model.cfg);
-            let logits = self.model.prefill(&mut cache, &req.prompt);
+        // --- admission: budget-gated prefill into free batch slots ---
+        loop {
+            let Some(req) = self.sched.peek_admittable() else { break };
+            let need = self.worst_case_len(req.prompt.len(), req.max_new);
+            let demand = self.pool.pages_for_seq(need);
+            if !self.pool.try_reserve(demand) {
+                // shed cold prefix chains before making the request queue —
+                // but only while eviction can actually cover the shortfall;
+                // otherwise keep the cache warm and wait for retirements
+                let eviction_helps =
+                    demand <= self.pool.pages_free() + self.prefix.reserved_pages();
+                if !eviction_helps || !self.prefix.evict_lru() {
+                    break;
+                }
+                continue;
+            }
+            let req = self.sched.pop_admittable().expect("peeked request vanished");
+            let (cache, logits, reused) =
+                self.model.prefill_reuse(&mut self.prefix, &self.pool, &req.prompt);
             let first = argmax(logits.row(logits.rows - 1)) as u16;
-            self.prefill_tokens += req.prompt.len();
+            self.prefill_tokens += req.prompt.len() - reused;
             self.generated_tokens += 1;
             produced += 1;
             self.sched.admit(ActiveSeq {
@@ -186,12 +278,15 @@ impl Engine {
                 cache,
                 prompt_len: req.prompt.len(),
                 max_new: req.max_new,
+                reserved_pages: demand,
+                reused_tokens: reused,
                 generated: vec![first],
                 last_token: first,
                 submitted: req.submitted,
                 first_token_at: Some(Instant::now()),
             });
         }
+        self.sample_sharing();
         // a prefill alone may satisfy max_new == 1
         self.retire();
 
@@ -202,7 +297,7 @@ impl Engine {
             self.decode_steps += 1;
             let tokens: Vec<u16> = self.sched.active.iter().map(|s| s.last_token).collect();
             let logits = {
-                let mut caches: Vec<&mut KvCache> =
+                let mut caches: Vec<&mut crate::serve::KvCache> =
                     self.sched.active.iter_mut().map(|s| &mut s.cache).collect();
                 self.model.decode_batch(&mut caches, &tokens)
             };
@@ -213,14 +308,28 @@ impl Engine {
             }
             self.generated_tokens += bsz;
             produced += bsz;
+            self.sample_sharing();
             self.retire();
         }
         produced
     }
 
+    /// Record how much duplication page sharing is currently avoiding:
+    /// pages referenced by active chains + the registry, minus the unique
+    /// pages actually held.
+    fn sample_sharing(&mut self) {
+        let referenced: usize =
+            self.sched.active.iter().map(|s| s.cache.pages_referenced()).sum::<usize>()
+                + self.prefix.pages_referenced();
+        let shared =
+            referenced.saturating_sub(self.pool.pages_allocated()) * self.pool.page_bytes();
+        self.peak_shared_bytes = self.peak_shared_bytes.max(shared);
+    }
+
     fn retire(&mut self) {
         let now = Instant::now();
         for seq in self.sched.retire_finished() {
+            self.pool.release(seq.reserved_pages);
             let ttft = seq
                 .first_token_at
                 .map(|t| t.duration_since(seq.submitted).as_secs_f64() * 1e3)
@@ -229,6 +338,7 @@ impl Engine {
                 id: seq.id,
                 prompt_len: seq.prompt_len,
                 n_generated: seq.generated.len(),
+                reused_tokens: seq.reused_tokens,
                 ttft_ms: ttft,
                 latency_ms: now.duration_since(seq.submitted).as_secs_f64() * 1e3,
                 generated: seq.generated,
@@ -247,6 +357,8 @@ impl Engine {
         }
         let mut requests = std::mem::take(&mut self.finished);
         requests.sort_by_key(|r| r.id);
+        let (hits, _misses, reused) = self.prefix.take_counters();
+        let pb = self.pool.page_bytes();
         ServeReport {
             requests,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -254,6 +366,11 @@ impl Engine {
             generated_tokens: std::mem::take(&mut self.generated_tokens),
             decode_steps: std::mem::take(&mut self.decode_steps),
             peak_batch: std::mem::take(&mut self.peak_batch),
+            prefix_hits: hits,
+            prefix_hit_tokens: reused,
+            kv_resident_bytes: self.pool.take_peak_allocated() * pb,
+            kv_reserved_bytes: self.pool.take_peak_reserved() * pb,
+            kv_shared_bytes: std::mem::take(&mut self.peak_shared_bytes),
         }
     }
 }
@@ -281,8 +398,11 @@ mod tests {
     #[test]
     fn batched_serving_matches_solo_generation() {
         let compiled = small_model();
-        let mut engine =
-            Engine::new(compiled.clone(), EngineConfig { max_batch: 3 }).unwrap();
+        let mut engine = Engine::new(
+            compiled.clone(),
+            EngineConfig { max_batch: 3, ..EngineConfig::default() },
+        )
+        .unwrap();
         let prompts: Vec<Vec<u16>> = (0..5).map(|i| toks(4 + i, 100 + i as u64)).collect();
         let max_new = [6usize, 3, 8, 1, 5];
         let mut ids = Vec::new();
@@ -304,9 +424,114 @@ mod tests {
         }
     }
 
+    /// Templated traffic: requests sharing a long prompt prefix must hit
+    /// the prefix cache, generate exactly the solo continuations, and
+    /// reserve less KV memory than the monolithic full-panel layout.
+    #[test]
+    fn templated_prompts_share_prefix_pages() {
+        let compiled = small_model();
+        let cfg = compiled.cfg.clone();
+        let mut engine = Engine::new(
+            compiled.clone(),
+            EngineConfig { max_batch: 4, page_positions: 4, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let prefix = toks(17, 42); // 4 full pages + 1
+        let prompts: Vec<Vec<u16>> = (0..4)
+            .map(|i| {
+                let mut p = prefix.clone();
+                p.extend_from_slice(&[i as u16 + 1, i as u16 + 7]);
+                p
+            })
+            .collect();
+        for p in &prompts {
+            engine.submit(p, 6);
+        }
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 4);
+        assert!(report.prefix_hits >= 3, "templated requests must hit: {report:?}");
+        assert!(report.prefix_hit_tokens >= 3 * 16, "hits reuse the aligned prefix");
+        // accounting: prefill skipped exactly the reused tokens
+        let submitted: usize = prompts.iter().map(|p| p.len()).sum();
+        assert_eq!(report.prefill_tokens, submitted - report.prefix_hit_tokens);
+        assert!(report.kv_shared_bytes > 0, "shared pages must be observed");
+        // paged reservations beat the monolithic layout at equal batch:
+        // 4 requests × (19 prompt + 6 new − 1) = 24 positions → 6 pages/chain
+        // vs a full 32-position panel per request
+        let monolithic = 4 * cfg.n_layers * 2 * cfg.max_seq * cfg.d_model * 4;
+        assert!(
+            report.kv_reserved_bytes < monolithic,
+            "paged reserved {} must undercut monolithic {monolithic}",
+            report.kv_reserved_bytes
+        );
+        // sharing must not change outputs: compare against a no-sharing
+        // engine at the same page size (same page tiling → same arithmetic)
+        let mut baseline = Engine::new(
+            compiled.clone(),
+            EngineConfig {
+                max_batch: 4,
+                page_positions: 4,
+                prefix_sharing: false,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        for p in &prompts {
+            baseline.submit(p, 6);
+        }
+        let solo = baseline.drain();
+        assert_eq!(solo.prefix_hits, 0);
+        for (i, (r, s)) in report.requests.iter().zip(&solo.requests).enumerate() {
+            assert_eq!(r.generated, s.generated, "request {i} diverged under prefix sharing");
+            assert!(r.reused_tokens > 0 || i == 0);
+            assert_eq!(s.reused_tokens, 0);
+        }
+        // identical traffic again: the retained chains survive the drain
+        for p in &prompts {
+            engine.submit(p, 6);
+        }
+        let again = engine.drain();
+        assert_eq!(again.prefix_hits, 4, "every repeat request attaches");
+    }
+
+    /// A page budget that only holds one sequence serializes the batch
+    /// (graceful queueing) without losing any request.
+    #[test]
+    fn budget_admission_queues_when_full() {
+        let compiled = small_model();
+        // one sequence: 12 positions → 3 pages × 4 chains = 12 pages; give
+        // the pool exactly that
+        let pool_probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let budget = pool_probe.pages_for_seq(12) * pool_probe.page_bytes();
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig {
+                max_batch: 4,
+                page_positions: 4,
+                kv_budget_bytes: Some(budget),
+                prefix_sharing: false,
+            },
+        )
+        .unwrap();
+        for i in 0..3 {
+            engine.submit(&toks(5, i), 8); // worst case 12 positions each
+        }
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 3, "queued requests still complete");
+        assert_eq!(report.peak_batch, 1, "budget admits one sequence at a time");
+        assert!(report.kv_reserved_bytes <= budget);
+        for r in &report.requests {
+            assert_eq!(r.n_generated, 8);
+        }
+    }
+
     #[test]
     fn report_accounting_consistent() {
-        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 2 }).unwrap();
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 2, ..EngineConfig::default() },
+        )
+        .unwrap();
         for i in 0..4 {
             engine.submit(&toks(5, i), 4);
         }
@@ -315,12 +540,16 @@ mod tests {
         assert_eq!(report.generated_tokens, 4 * 4);
         assert_eq!(report.generated_tokens, report.requests.iter().map(|r| r.n_generated).sum());
         assert!(report.tokens_per_sec() > 0.0);
+        assert!(report.kv_resident_bytes > 0);
+        assert!(report.kv_reserved_bytes >= report.kv_resident_bytes);
         for r in &report.requests {
             assert!(r.latency_ms >= r.ttft_ms);
         }
         let text = report.render();
         assert!(text.contains("tok/s"), "{text}");
-        // engine is reusable after a drain
+        assert!(text.contains("prefix hits"), "{text}");
+        // engine is reusable after a drain, and reservations were returned
+        assert_eq!(engine.pool().pages_reserved(), 0);
         engine.submit(&toks(3, 99), 2);
         let again = engine.drain();
         assert_eq!(again.requests.len(), 1);
@@ -331,11 +560,36 @@ mod tests {
     /// never a panic inside the scheduler.
     #[test]
     fn zero_batch_is_structured_error() {
-        let err = match Engine::new(small_model(), EngineConfig { max_batch: 0 }) {
+        let err = match Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 0, ..EngineConfig::default() },
+        ) {
             Ok(_) => panic!("max_batch 0 must be rejected"),
             Err(e) => e,
         };
         assert!(err.to_string().contains("max_batch"), "{err}");
+    }
+
+    /// Bad paging flags are structured errors too: page size 0, and a KV
+    /// budget that cannot hold one sequence's first page row.
+    #[test]
+    fn bad_pool_flags_are_structured_errors() {
+        let err = match Engine::new(
+            small_model(),
+            EngineConfig { page_positions: 0, ..EngineConfig::default() },
+        ) {
+            Ok(_) => panic!("page size 0 must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("page size"), "{err}");
+        let err = match Engine::new(
+            small_model(),
+            EngineConfig { kv_budget_bytes: Some(64), ..EngineConfig::default() },
+        ) {
+            Ok(_) => panic!("a 64-byte budget must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("budget"), "{err}");
     }
 
     #[test]
@@ -355,9 +609,38 @@ mod tests {
         assert_eq!(report.requests[0].n_generated, 3);
     }
 
+    /// With a budget, oversized requests are clamped to the longest
+    /// sequence the whole pool can hold, not just to `max_seq`.
+    #[test]
+    fn clamps_to_budget_window() {
+        let compiled = small_model();
+        let probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        // room for 16 positions per chain
+        let budget = probe.pages_for_seq(16) * probe.page_bytes();
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig {
+                max_batch: 2,
+                page_positions: 4,
+                kv_budget_bytes: Some(budget),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        engine.submit(&toks(100, 7), 1000);
+        let report = engine.drain();
+        let r = &report.requests[0];
+        assert_eq!(r.prompt_len, 16, "prompt truncated to the budget window");
+        assert_eq!(r.n_generated, 1);
+    }
+
     #[test]
     fn late_submissions_join_inflight_batch() {
-        let mut engine = Engine::new(small_model(), EngineConfig { max_batch: 4 }).unwrap();
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 4, ..EngineConfig::default() },
+        )
+        .unwrap();
         engine.submit(&toks(4, 1), 10);
         // a few steps in, new traffic arrives
         engine.step();

@@ -1,60 +1,78 @@
-//! Per-request key/value cache for incremental decoding.
+//! Per-request key/value cache: a page-table view over the shared
+//! [`KvPool`](crate::serve::KvPool).
 //!
 //! A [`KvCache`] stores, for every transformer layer, the K and V projection
 //! rows of every token processed so far. Decoding one more token then costs
 //! one linear pass over a single row plus O(seq) attention — instead of the
 //! O(seq²) full-sequence recompute that `GptModel::generate` pays per token.
 //!
-//! # Layout contract (the attention kernel reads panels, not rows)
+//! # Layout contract (the attention kernel reads page runs, not rows)
 //!
-//! Each layer's K (and V) buffer is **head-major**: head `h` owns the
-//! contiguous panel `[h · max_seq · head_dim .. (h+1) · max_seq · head_dim)`,
-//! holding its `head_dim`-wide slice of every cached position back to back.
-//! [`AttnKernel`](crate::model::AttnKernel) streams one `(layer, head)` panel
-//! per work item with zero strided reads; `append` pays the scatter (one
-//! `head_dim` copy per head) once per token instead of attention paying a
-//! `d_model`-strided gather once per *(token, step)*. Buffers are allocated
-//! at `max_seq` capacity up front so panels never move as the sequence
-//! grows — the append cursor is the only thing that advances.
+//! Each `(layer, head)` stream is a **chain of fixed-size pages**: page `p`
+//! holds positions `[p·page_positions, (p+1)·page_positions)` of that head's
+//! `head_dim`-wide K and V slices, position-major and contiguous within the
+//! page. [`KvCache::panel_runs`] iterates the chain as contiguous `(K, V)`
+//! runs — [`AttnKernel`](crate::model::AttnKernel) streams them with zero
+//! strided reads, exactly as it streamed the old monolithic head-major
+//! panel, just in `page_positions`-row pieces. `append` pays the scatter
+//! (one `head_dim` copy per head) once per token; pages never move once
+//! allocated, so runs stay stable as the sequence grows.
+//!
+//! # Sharing contract
+//!
+//! Chains hold `Arc<Page>`s: [`KvCache::fork_prefix`] clones a chain prefix
+//! by bumping refcounts — a shared prompt prefix is a shared page chain, not
+//! a copy. Full shared pages are never written again (appends only touch the
+//! page holding the current cursor); the single page that *can* be written
+//! while shared — the last, partial one — is copied on first write via
+//! `Arc::make_mut`. Divergence therefore costs one page copy per chain,
+//! never a panel copy.
 
 use crate::model::GptConfig;
+use crate::serve::kv_pool::{KvPool, Page};
+use std::sync::Arc;
 
-/// Append-only K/V store: per layer, head-major panels of `max_seq` capacity.
+/// Append-only K/V store: per `(layer, head)`, a refcounted page chain.
+///
+/// `Clone` is a full-length [`KvCache::fork_prefix`]: cheap (refcount bumps
+/// only), with copy-on-write on subsequent appends.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub d_model: usize,
     pub max_seq: usize,
     pub n_heads: usize,
     pub head_dim: usize,
+    page_positions: usize,
     /// tokens fully processed (all layers appended + committed)
     len: usize,
     /// per layer: rows appended so far (≥ `len` mid-step, == `len` after
     /// [`KvCache::advance`])
     filled: Vec<usize>,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    /// `chains[layer * n_heads + head]` — that stream's page chain
+    chains: Vec<Vec<Arc<Page>>>,
+    pool: KvPool,
 }
 
 impl KvCache {
+    /// Standalone cache over a private unbounded pool (solo generation,
+    /// tests). Serving paths share one budgeted pool via
+    /// [`KvPool::new_cache`] instead.
     pub fn new(cfg: &GptConfig) -> KvCache {
-        let n_layers = cfg.n_layers;
-        assert_eq!(
-            cfg.d_model % cfg.n_heads,
-            0,
-            "d_model {} not divisible by n_heads {}",
-            cfg.d_model,
-            cfg.n_heads
-        );
-        let panel = cfg.max_seq * cfg.d_model;
+        KvPool::unbounded(cfg).new_cache()
+    }
+
+    pub(crate) fn new_in(pool: &KvPool) -> KvCache {
+        let s = pool.state();
         KvCache {
-            d_model: cfg.d_model,
-            max_seq: cfg.max_seq,
-            n_heads: cfg.n_heads,
-            head_dim: cfg.head_dim(),
+            d_model: s.d_model,
+            max_seq: s.max_seq,
+            n_heads: s.n_heads,
+            head_dim: s.head_dim,
+            page_positions: s.page_positions,
             len: 0,
-            filled: vec![0; n_layers],
-            k: (0..n_layers).map(|_| vec![0.0; panel]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0; panel]).collect(),
+            filled: vec![0; s.n_layers],
+            chains: vec![Vec::new(); s.n_layers * s.n_heads],
+            pool: pool.clone(),
         }
     }
 
@@ -74,30 +92,76 @@ impl KvCache {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.k.len()
+        self.filled.len()
     }
 
-    /// Drop all cached state, keeping the allocations.
+    /// Positions per page of the backing pool.
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Pages this cache references across all chains (shared ones included —
+    /// the engine subtracts the pool's unique-page count to measure sharing).
+    pub fn pages_referenced(&self) -> usize {
+        self.chains.iter().map(|c| c.len()).sum()
+    }
+
+    /// Drop all cached state, returning every page reference to the pool.
     pub fn clear(&mut self) {
         self.len = 0;
         for f in self.filled.iter_mut() {
             *f = 0;
         }
+        for c in self.chains.iter_mut() {
+            c.clear();
+        }
+    }
+
+    /// A new cache sharing this cache's first `n` committed positions:
+    /// whole pages are shared by refcount; the trailing partial page (if
+    /// `n` is not page-aligned) is shared too and copied on first write by
+    /// either side. O(pages) refcount bumps, no K/V copies.
+    pub fn fork_prefix(&self, n: usize) -> KvCache {
+        assert!(n <= self.len, "fork_prefix({n}) beyond committed length {}", self.len);
+        let pages = n.div_ceil(self.page_positions);
+        KvCache {
+            d_model: self.d_model,
+            max_seq: self.max_seq,
+            n_heads: self.n_heads,
+            head_dim: self.head_dim,
+            page_positions: self.page_positions,
+            len: n,
+            filled: vec![n; self.filled.len()],
+            chains: self.chains.iter().map(|c| c[..pages].to_vec()).collect(),
+            pool: self.pool.clone(),
+        }
+    }
+
+    #[inline]
+    fn chain(&self, layer: usize, head: usize) -> &[Arc<Page>] {
+        &self.chains[layer * self.n_heads + head]
     }
 
     /// Append one token's K and V rows for `layer`, scattering each
-    /// `d_model` row into the per-head panels. Call for every layer, then
-    /// commit the token(s) with [`KvCache::advance`].
+    /// `d_model` row into the per-head page chains. Allocates the next page
+    /// from the pool at page boundaries; copies a shared trailing page
+    /// before writing (CoW). Call for every layer, then commit the token(s)
+    /// with [`KvCache::advance`].
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.d_model);
         debug_assert_eq!(v_row.len(), self.d_model);
         let t = self.filled[layer];
         assert!(t < self.max_seq, "kv cache overflow: position {t} >= max_seq {}", self.max_seq);
-        let (hd, ms) = (self.head_dim, self.max_seq);
+        let (hd, pp) = (self.head_dim, self.page_positions);
+        let (page_idx, off) = (t / pp, (t % pp) * hd);
         for h in 0..self.n_heads {
-            let dst = h * ms * hd + t * hd;
-            self.k[layer][dst..dst + hd].copy_from_slice(&k_row[h * hd..(h + 1) * hd]);
-            self.v[layer][dst..dst + hd].copy_from_slice(&v_row[h * hd..(h + 1) * hd]);
+            let chain = &mut self.chains[layer * self.n_heads + h];
+            if chain.len() == page_idx {
+                chain.push(self.pool.alloc_page());
+            }
+            let page = Arc::make_mut(&mut chain[page_idx]);
+            page.k[off..off + hd].copy_from_slice(&k_row[h * hd..(h + 1) * hd]);
+            page.v[off..off + hd].copy_from_slice(&v_row[h * hd..(h + 1) * hd]);
         }
         self.filled[layer] = t + 1;
     }
@@ -112,42 +176,69 @@ impl KvCache {
         }
     }
 
-    /// The first `n_ctx` cached K rows of one head: `n_ctx × head_dim`
-    /// values, contiguous. Appended-but-uncommitted rows are readable (a
-    /// prefill chunk attends over rows it appended this step).
+    /// Contiguous page runs covering the first `n_ctx` positions of one
+    /// `(layer, head)` stream, in position order: each item is that page's
+    /// `(K, V)` slice pair, `run_len × head_dim` values each, where
+    /// `run_len` is `page_positions` for full pages and the remainder for
+    /// the last one. Appended-but-uncommitted rows are readable (a prefill
+    /// chunk attends over rows it appended this step).
     #[inline]
-    pub fn k_panel(&self, layer: usize, head: usize, n_ctx: usize) -> &[f32] {
+    pub fn panel_runs(&self, layer: usize, head: usize, n_ctx: usize) -> PanelRuns<'_> {
         debug_assert!(n_ctx <= self.filled[layer]);
-        let base = head * self.max_seq * self.head_dim;
-        &self.k[layer][base..base + n_ctx * self.head_dim]
-    }
-
-    /// The first `n_ctx` cached V rows of one head (see [`KvCache::k_panel`]).
-    #[inline]
-    pub fn v_panel(&self, layer: usize, head: usize, n_ctx: usize) -> &[f32] {
-        debug_assert!(n_ctx <= self.filled[layer]);
-        let base = head * self.max_seq * self.head_dim;
-        &self.v[layer][base..base + n_ctx * self.head_dim]
+        PanelRuns {
+            chain: self.chain(layer, head),
+            head_dim: self.head_dim,
+            page_positions: self.page_positions,
+            next_page: 0,
+            remaining: n_ctx,
+        }
     }
 
     /// One head's K slice of position `t` (`head_dim` values).
     #[inline]
     pub fn k_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
-        let base = (head * self.max_seq + t) * self.head_dim;
-        &self.k[layer][base..base + self.head_dim]
+        let page = &self.chain(layer, head)[t / self.page_positions];
+        let off = (t % self.page_positions) * self.head_dim;
+        &page.k[off..off + self.head_dim]
     }
 
     /// One head's V slice of position `t` (`head_dim` values).
     #[inline]
     pub fn v_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
-        let base = (head * self.max_seq + t) * self.head_dim;
-        &self.v[layer][base..base + self.head_dim]
+        let page = &self.chain(layer, head)[t / self.page_positions];
+        let off = (t % self.page_positions) * self.head_dim;
+        &page.v[off..off + self.head_dim]
     }
 
     /// Resident bytes of the cached activations (appended rows, not the
-    /// `max_seq` capacity reservation).
+    /// page-capacity reservation; shared rows count here — per-cache view).
     pub fn memory_bytes(&self) -> usize {
         self.filled.iter().map(|&f| f * self.d_model * 4 * 2).sum()
+    }
+}
+
+/// Iterator of contiguous `(K, V)` page runs — see [`KvCache::panel_runs`].
+pub struct PanelRuns<'a> {
+    chain: &'a [Arc<Page>],
+    head_dim: usize,
+    page_positions: usize,
+    next_page: usize,
+    remaining: usize,
+}
+
+impl<'a> Iterator for PanelRuns<'a> {
+    type Item = (&'a [f32], &'a [f32]);
+
+    #[inline]
+    fn next(&mut self) -> Option<(&'a [f32], &'a [f32])> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let n = self.remaining.min(self.page_positions);
+        let page = &self.chain[self.next_page];
+        self.next_page += 1;
+        self.remaining -= n;
+        Some((&page.k[..n * self.head_dim], &page.v[..n * self.head_dim]))
     }
 }
 
@@ -156,14 +247,33 @@ mod tests {
     use super::*;
 
     fn cfg() -> GptConfig {
-        GptConfig { d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16, max_seq: 4, ..GptConfig::tiny() }
+        GptConfig { d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16, max_seq: 8, ..GptConfig::tiny() }
+    }
+
+    /// Pool with 2-position pages so every test crosses page boundaries.
+    fn paged_pool() -> KvPool {
+        KvPool::new(&cfg(), 2, None).unwrap()
+    }
+
+    fn row(t: usize) -> Vec<f32> {
+        (0..8).map(|i| (t * 8 + i) as f32).collect()
+    }
+
+    fn fill(c: &mut KvCache, n: usize) {
+        for t in c.len()..c.len() + n {
+            let r = row(t);
+            for l in 0..c.n_layers() {
+                c.append(l, &r, &r);
+            }
+            c.advance(1);
+        }
     }
 
     #[test]
     fn append_advance_roundtrip() {
-        let mut c = KvCache::new(&cfg());
+        let mut c = paged_pool().new_cache();
         assert!(c.is_empty());
-        assert_eq!(c.remaining(), 4);
+        assert_eq!(c.remaining(), 8);
         let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
         let v: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
         for l in 0..2 {
@@ -179,28 +289,85 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.memory_bytes(), 0);
+        assert_eq!(c.pages_referenced(), 0);
     }
 
     #[test]
-    fn panels_are_position_contiguous_per_head() {
-        let mut c = KvCache::new(&cfg());
-        for t in 0..3 {
-            let row: Vec<f32> = (0..8).map(|i| (t * 8 + i) as f32).collect();
-            for l in 0..2 {
-                c.append(l, &row, &row);
-            }
-            c.advance(1);
+    fn page_runs_are_position_contiguous_per_head() {
+        let mut c = paged_pool().new_cache();
+        fill(&mut c, 5); // 2-position pages → runs of 2, 2, 1
+        let runs: Vec<(Vec<f32>, Vec<f32>)> = c
+            .panel_runs(0, 1, 5)
+            .map(|(k, v)| (k.to_vec(), v.to_vec()))
+            .collect();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].0.len(), 8); // 2 positions × head_dim 4
+        assert_eq!(runs[2].0.len(), 4); // remainder run
+        // concatenated runs equal the per-position accessor, in order
+        let flat: Vec<f32> = runs.iter().flat_map(|(k, _)| k.iter().copied()).collect();
+        for t in 0..5 {
+            assert_eq!(&flat[t * 4..(t + 1) * 4], c.k_at(0, 1, t), "position {t}");
+            // head 1 of row t = values t*8+4 .. t*8+8
+            assert_eq!(flat[t * 4], (t * 8 + 4) as f32);
         }
-        // head 1's panel = [row0[4..8], row1[4..8], row2[4..8]] back to back
-        let p = c.k_panel(0, 1, 3);
-        assert_eq!(p.len(), 12);
-        for t in 0..3 {
-            for i in 0..4 {
-                assert_eq!(p[t * 4 + i], (t * 8 + 4 + i) as f32);
-            }
+        // truncated view stops mid-chain
+        assert_eq!(c.panel_runs(0, 1, 3).count(), 2);
+        let total: usize = c.panel_runs(0, 1, 3).map(|(k, _)| k.len()).sum();
+        assert_eq!(total, 3 * 4);
+    }
+
+    #[test]
+    fn fork_shares_pages_and_copies_on_divergence() {
+        let pool = paged_pool();
+        let mut base = pool.new_cache();
+        fill(&mut base, 3); // pages per chain: [full, half] → 2 × 4 chains = 8
+        assert_eq!(pool.pages_allocated(), 8);
+
+        let mut fork = base.fork_prefix(3);
+        // sharing is free: same pages, refcounts bumped
+        assert_eq!(pool.pages_allocated(), 8);
+        assert_eq!(fork.len(), 3);
+        assert_eq!(fork.k_at(0, 0, 2), base.k_at(0, 0, 2));
+
+        // divergence: both sides append their own position 3 — each write to
+        // the shared partial page copies it; the full prefix pages stay shared
+        let rf: Vec<f32> = vec![7.0; 8];
+        for l in 0..2 {
+            fork.append(l, &rf, &rf);
         }
-        // panel prefix equals the per-position accessor
-        assert_eq!(&p[4..8], c.k_at(0, 1, 1));
+        fork.advance(1);
+        assert_eq!(pool.pages_allocated(), 12, "CoW copied the 4 partial pages only");
+        let rb: Vec<f32> = vec![9.0; 8];
+        for l in 0..2 {
+            base.append(l, &rb, &rb);
+        }
+        base.advance(1);
+        // the fork's CoW left base sole owner of its partial pages again, so
+        // base's own append writes in place — no further copies
+        assert_eq!(pool.pages_allocated(), 12);
+        // the divergent position differs; the shared prefix is intact on both
+        assert_eq!(fork.k_at(0, 0, 3), &rf[0..4]);
+        assert_eq!(base.k_at(0, 0, 3), &rb[0..4]);
+        assert_eq!(fork.k_at(1, 1, 0), base.k_at(1, 1, 0));
+        assert_eq!(fork.k_at(0, 0, 2), base.k_at(0, 0, 2));
+
+        // retire: dropping a cache frees exactly its unshared pages
+        drop(fork);
+        assert_eq!(pool.pages_allocated(), 8);
+        drop(base);
+        assert_eq!(pool.pages_allocated(), 0);
+    }
+
+    #[test]
+    fn aligned_fork_never_copies() {
+        let pool = paged_pool();
+        let mut base = pool.new_cache();
+        fill(&mut base, 4); // exactly 2 full pages per chain
+        let allocated = pool.pages_allocated();
+        let mut fork = base.fork_prefix(2); // page-aligned prefix
+        fill(&mut fork, 1); // lands on a fresh page — no CoW of shared pages
+        assert_eq!(pool.pages_allocated(), allocated + 4, "one new page per chain, zero copies");
+        assert_eq!(fork.k_at(0, 0, 1), base.k_at(0, 0, 1));
     }
 
     #[test]
@@ -215,7 +382,7 @@ mod tests {
     #[should_panic(expected = "overflow")]
     fn overflow_detected() {
         let mut c = KvCache::new(&cfg());
-        for _ in 0..5 {
+        for _ in 0..9 {
             for l in 0..2 {
                 c.append(l, &[0.0; 8], &[0.0; 8]);
             }

@@ -1,0 +1,346 @@
+//! Shared, refcounted page pool backing every [`KvCache`].
+//!
+//! PR 2's `KvCache` reserved a full `max_seq` head-major panel per request
+//! up front — a 16-token request on a 128-position window held 8× the
+//! memory it would ever touch, and two requests with an identical prompt
+//! prefix stored that prefix twice. The pool makes the **page**, not the
+//! panel, the unit of ownership:
+//!
+//! - Each `(layer, head)` K/V stream is a chain of fixed-size [`Page`]s
+//!   (`page_positions × head_dim` floats for K and again for V), allocated
+//!   lazily as the sequence grows.
+//! - Pages are refcounted (`Arc<Page>`): a shared prompt prefix is a shared
+//!   page chain. Writes go through `Arc::make_mut`, so divergence triggers
+//!   copy-on-write on the last partial page only — full prefix pages are
+//!   immutable and shared for their whole lifetime.
+//! - The pool never owns page storage; it is the *accounting* authority.
+//!   [`KvPool::try_reserve`]/[`KvPool::release`] implement the engine's
+//!   admission budget (worst-case page demand, capacity-aware queueing) and
+//!   every allocation/drop/CoW-clone updates the live-unique-page counter,
+//!   so `allocated ≤ reserved ≤ capacity` holds whenever admission reserves
+//!   worst-case demand.
+//!
+//! Why `Arc` pages instead of a slab + free list: readers are the
+//! attention worker threads (shared `&KvCache`), writers always hold
+//! `&mut KvCache`, and refcounts are exactly the sharing metadata CoW
+//! needs. Drop accounting rides the `Arc` for free (see [`Page`]'s `Drop`),
+//! and a page is its own allocation, so chains never move and panel runs
+//! stay stable across growth — the property the attention kernel's
+//! zero-copy page-run streaming relies on.
+
+use crate::model::GptConfig;
+use crate::serve::KvCache;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Default positions per page (the serve engine's `--page-size` default).
+pub const DEFAULT_PAGE_POSITIONS: usize = 32;
+
+/// One fixed-size page of a single `(layer, head)` K/V stream:
+/// `page_positions × head_dim` K values plus the same for V, position-major
+/// (position `t` of the page owns `[t·head_dim .. (t+1)·head_dim)`).
+#[derive(Debug)]
+pub struct Page {
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pool: Arc<PoolState>,
+}
+
+/// CoW clone: `Arc::make_mut` on a shared page lands here. The copy is a
+/// new pool allocation and is accounted as such.
+impl Clone for Page {
+    fn clone(&self) -> Page {
+        self.pool.note_alloc();
+        Page { k: self.k.clone(), v: self.v.clone(), pool: Arc::clone(&self.pool) }
+    }
+}
+
+/// The accounting side of "refcount drop": when the last `Arc<KvCache>`
+/// chain entry referencing this page goes away, the pool's live count
+/// shrinks — retiring a request frees exactly the pages nobody else shares.
+impl Drop for Page {
+    fn drop(&mut self) {
+        self.pool.allocated.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct PoolState {
+    pub page_positions: usize,
+    pub head_dim: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub d_model: usize,
+    /// admission budget in pages (`usize::MAX` = unbounded)
+    pub capacity_pages: usize,
+    /// live unique pages (shared pages count once)
+    allocated: AtomicUsize,
+    peak_allocated: AtomicUsize,
+    /// worst-case page commitments of admitted work (engine-managed)
+    reserved: AtomicUsize,
+    peak_reserved: AtomicUsize,
+}
+
+impl PoolState {
+    fn note_alloc(&self) {
+        let now = self.allocated.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_allocated.fetch_max(now, Ordering::Relaxed);
+    }
+}
+
+/// Cheap shared handle to the pool accounting state. Clone freely — all
+/// clones observe and update the same counters.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    state: Arc<PoolState>,
+}
+
+impl KvPool {
+    /// Build a pool over a model shape. `budget_bytes = None` is unbounded
+    /// (solo generation, tests); `Some(b)` caps the pool at `b / page_bytes`
+    /// pages and is validated: the budget must hold at least one sequence's
+    /// first page row (one page per `(layer, head)` chain), otherwise no
+    /// request could ever be admitted and the configuration is unservable.
+    pub fn new(
+        cfg: &GptConfig,
+        page_positions: usize,
+        budget_bytes: Option<usize>,
+    ) -> crate::Result<KvPool> {
+        crate::ensure!(page_positions >= 1, "kv page size must be >= 1 position, got 0");
+        crate::ensure!(
+            cfg.d_model % cfg.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        // a page larger than the context window could never fill: it would
+        // out-reserve the monolithic panel this layout replaces, and skew
+        // the budget check below toward rejecting servable budgets
+        let page_positions = page_positions.min(cfg.max_seq.max(1));
+        let head_dim = cfg.d_model / cfg.n_heads;
+        let page_bytes = 2 * page_positions * head_dim * 4;
+        let chains = cfg.n_layers * cfg.n_heads;
+        let capacity_pages = match budget_bytes {
+            None => usize::MAX,
+            Some(b) => {
+                let pages = b / page_bytes;
+                crate::ensure!(
+                    pages >= chains,
+                    "kv budget {} bytes holds {} pages, but one sequence's first \
+                     token needs {} (one {}-byte page per layer×head chain)",
+                    b,
+                    pages,
+                    chains,
+                    page_bytes
+                );
+                pages
+            }
+        };
+        Ok(KvPool {
+            state: Arc::new(PoolState {
+                page_positions,
+                head_dim,
+                n_heads: cfg.n_heads,
+                n_layers: cfg.n_layers,
+                max_seq: cfg.max_seq,
+                d_model: cfg.d_model,
+                capacity_pages,
+                allocated: AtomicUsize::new(0),
+                peak_allocated: AtomicUsize::new(0),
+                reserved: AtomicUsize::new(0),
+                peak_reserved: AtomicUsize::new(0),
+            }),
+        })
+    }
+
+    /// Unbounded pool with the default page size — the implicit backing of
+    /// standalone `KvCache::new` callers (solo `generate`, tests).
+    pub fn unbounded(cfg: &GptConfig) -> KvPool {
+        KvPool::new(cfg, DEFAULT_PAGE_POSITIONS, None).expect("unbounded pool on a valid config")
+    }
+
+    /// A fresh, empty cache drawing its pages from this pool.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new_in(self)
+    }
+
+    pub(crate) fn state(&self) -> &Arc<PoolState> {
+        &self.state
+    }
+
+    /// Bytes of one page (K + V planes).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.state.page_positions * self.state.head_dim * 4
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.state.page_positions
+    }
+
+    /// Page chains per sequence: one per `(layer, head)` stream.
+    pub fn chains_per_seq(&self) -> usize {
+        self.state.n_layers * self.state.n_heads
+    }
+
+    /// Worst-case page demand of a sequence that grows to `len` positions.
+    pub fn pages_for_seq(&self, len: usize) -> usize {
+        len.div_ceil(self.state.page_positions) * self.chains_per_seq()
+    }
+
+    /// Longest sequence whose worst-case demand fits the whole budget —
+    /// the engine clamps oversized requests to this (best-effort serving).
+    pub fn budget_max_len(&self) -> usize {
+        if self.state.capacity_pages == usize::MAX {
+            return self.state.max_seq;
+        }
+        let pages_per_chain = self.state.capacity_pages / self.chains_per_seq();
+        (pages_per_chain * self.state.page_positions).min(self.state.max_seq)
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.state.capacity_pages
+    }
+
+    /// Live unique pages (a shared prefix counts once).
+    pub fn pages_allocated(&self) -> usize {
+        self.state.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Outstanding worst-case reservations, in pages.
+    pub fn pages_reserved(&self) -> usize {
+        self.state.reserved.load(Ordering::Relaxed)
+    }
+
+    /// Pages still reservable before the budget is exhausted.
+    pub fn pages_free(&self) -> usize {
+        self.state.capacity_pages.saturating_sub(self.pages_reserved())
+    }
+
+    /// Reserve `pages` of worst-case demand against the budget. Returns
+    /// `false` — request must queue — when it does not fit.
+    pub fn try_reserve(&self, pages: usize) -> bool {
+        let cap = self.state.capacity_pages;
+        let mut cur = self.state.reserved.load(Ordering::Relaxed);
+        loop {
+            if pages > cap - cur.min(cap) {
+                return false;
+            }
+            match self.state.reserved.compare_exchange_weak(
+                cur,
+                cur + pages,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.state.peak_reserved.fetch_max(cur + pages, Ordering::Relaxed);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Return a reservation (request retired, prefix entry evicted).
+    pub fn release(&self, pages: usize) {
+        let prev = self.state.reserved.fetch_sub(pages, Ordering::Relaxed);
+        debug_assert!(prev >= pages, "released {pages} pages with only {prev} reserved");
+    }
+
+    /// Peak live pages since the last call, then restart the peak window
+    /// from the current level (the engine snapshots this per drain).
+    pub fn take_peak_allocated(&self) -> usize {
+        let peak = self.state.peak_allocated.load(Ordering::Relaxed);
+        self.state.peak_allocated.store(self.pages_allocated(), Ordering::Relaxed);
+        peak
+    }
+
+    /// Peak reservation since the last call (see [`Self::take_peak_allocated`]).
+    pub fn take_peak_reserved(&self) -> usize {
+        let peak = self.state.peak_reserved.load(Ordering::Relaxed);
+        self.state.peak_reserved.store(self.pages_reserved(), Ordering::Relaxed);
+        peak
+    }
+
+    /// Allocate one zeroed page (counted live until its last `Arc` drops).
+    pub(crate) fn alloc_page(&self) -> Arc<Page> {
+        self.state.note_alloc();
+        let n = self.state.page_positions * self.state.head_dim;
+        Arc::new(Page { k: vec![0.0; n], v: vec![0.0; n], pool: Arc::clone(&self.state) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GptConfig {
+        GptConfig { d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16, max_seq: 16, ..GptConfig::tiny() }
+    }
+
+    #[test]
+    fn demand_and_budget_arithmetic() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap();
+        assert_eq!(pool.chains_per_seq(), 4);
+        assert_eq!(pool.page_bytes(), 2 * 4 * 4 * 4);
+        assert_eq!(pool.pages_for_seq(1), 4);
+        assert_eq!(pool.pages_for_seq(4), 4);
+        assert_eq!(pool.pages_for_seq(5), 8);
+        assert_eq!(pool.budget_max_len(), 16); // unbounded → max_seq
+
+        // 9 pages = 2 per chain + 1 spare → two full pages per chain fit
+        let budget = 9 * pool.page_bytes();
+        let pool = KvPool::new(&cfg(), 4, Some(budget)).unwrap();
+        assert_eq!(pool.capacity_pages(), 9);
+        assert_eq!(pool.budget_max_len(), 8);
+    }
+
+    #[test]
+    fn budget_below_first_page_is_structured_error() {
+        let err = match KvPool::new(&cfg(), 4, Some(10)) {
+            Ok(_) => panic!("a 10-byte budget cannot hold a page per chain"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("budget"), "{err}");
+        let err = match KvPool::new(&cfg(), 0, None) {
+            Ok(_) => panic!("page size 0 must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("page size"), "{err}");
+    }
+
+    #[test]
+    fn reserve_release_respects_capacity() {
+        let pool = KvPool::new(&cfg(), 4, Some(8 * 2 * 4 * 4 * 4)).unwrap();
+        assert_eq!(pool.capacity_pages(), 8);
+        assert!(pool.try_reserve(4));
+        assert!(pool.try_reserve(4));
+        assert!(!pool.try_reserve(1), "budget rejection: pool is fully reserved");
+        pool.release(4);
+        assert!(pool.try_reserve(3));
+        assert_eq!(pool.pages_reserved(), 7);
+        assert_eq!(pool.take_peak_reserved(), 8);
+        // peak window restarted at the current level
+        assert_eq!(pool.take_peak_reserved(), 7);
+    }
+
+    #[test]
+    fn alloc_drop_and_cow_accounting() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap();
+        let a = pool.alloc_page();
+        let b = pool.alloc_page();
+        assert_eq!(pool.pages_allocated(), 2);
+        // sharing bumps the refcount, not the live count
+        let shared = Arc::clone(&a);
+        assert_eq!(pool.pages_allocated(), 2);
+        // CoW clone is a real allocation
+        let mut owner = shared;
+        let _ = Arc::make_mut(&mut owner);
+        assert_eq!(pool.pages_allocated(), 3);
+        drop(owner);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.pages_allocated(), 0, "refcount drop frees every page");
+        assert_eq!(pool.take_peak_allocated(), 3);
+    }
+}

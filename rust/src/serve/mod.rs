@@ -2,26 +2,38 @@
 //!
 //! The paper's claim is that ARMOR "retains the inference speedups and
 //! substantial memory usage reductions of 2:4 pruning" — this subsystem is
-//! where the repo cashes that in. Three pieces:
+//! where the repo cashes that in. Five pieces:
 //!
-//! - [`KvCache`]: per-request K/V storage in head-major panels, so decoding
-//!   one token costs O(seq) attention instead of a full-sequence recompute
-//!   and the attention kernel reads contiguous per-head panels;
-//! - [`Scheduler`]: FIFO admission + in-flight batch bookkeeping for
-//!   continuous batching;
+//! - [`KvPool`]: a shared, refcounted pool of fixed-size K/V pages plus the
+//!   byte-budget accounting (`try_reserve`/`release`) that makes admission
+//!   capacity-aware;
+//! - [`KvCache`]: per-request page-table view over the pool — each
+//!   `(layer, head)` stream is a chain of pages, forked chains share prompt
+//!   prefixes by refcount with copy-on-write at divergence;
+//! - [`PrefixRegistry`]: retained page-aligned prompt prefixes, so
+//!   templated traffic attaches to an existing chain and prefills only its
+//!   suffix;
+//! - [`Scheduler`]: FIFO queue + in-flight batch bookkeeping for continuous
+//!   batching;
 //! - [`Engine`]: drives a [`crate::model::CompiledModel`] — batched
 //!   compressed matmuls across the active batch, blocked batch-shared
-//!   attention ([`crate::model::AttnKernel`]) over every in-flight
-//!   sequence — and reports per-request latency plus aggregate tokens/sec
+//!   attention ([`crate::model::AttnKernel`]) streaming page runs over
+//!   every in-flight sequence — admits requests against the pool budget,
+//!   and reports latency, throughput, pool bytes, and prefix-hit counters
 //!   in a [`ServeReport`].
 //!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
-//! dense-recompute vs KV-cached-compressed comparison.
+//! dense-recompute vs KV-cached-compressed comparison and the
+//! prefix-sharing sweep.
 
 mod engine;
 mod kv_cache;
+mod kv_pool;
+mod prefix;
 mod scheduler;
 
 pub use engine::{Engine, EngineConfig, RequestStats, ServeReport};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, PanelRuns};
+pub use kv_pool::{KvPool, DEFAULT_PAGE_POSITIONS};
+pub use prefix::{PrefixRegistry, DEFAULT_PREFIX_ENTRIES};
 pub use scheduler::{ActiveSeq, GenRequest, RequestId, Scheduler};

@@ -1,0 +1,339 @@
+//! Prompt prefix-cache registry: templated traffic stops re-prefilling
+//! identical prefixes.
+//!
+//! Production request streams are heavily templated — a system prompt or
+//! few-shot header shared by thousands of requests. Without sharing, every
+//! admission prefills that prefix from scratch and stores its K/V again.
+//! The registry keeps, per distinct prefix, one **page-aligned** forked
+//! chain ([`KvCache::fork_prefix`]): page alignment means every retained
+//! page is full and immutable, so attaching a new request is pure refcount
+//! bumps and the only copy-on-write ever paid is by the request's own first
+//! append into a fresh page.
+//!
+//! Lookup finds the retained entry sharing the longest page-aligned common
+//! prefix with the prompt — a hash of the first page gates the scan, token
+//! comparison decides, so hash collisions cannot serve wrong K/V, and a
+//! templated request reuses the template pages even though every retained
+//! entry carries its own request's tail. Reuse is capped at
+//! `prompt_len - 1`: the suffix prefill must process at least one token to
+//! produce the next-token logits.
+//!
+//! Registered chains hold pool pages, so each entry carries a worst-case
+//! reservation against the same budget the engine admits requests with;
+//! when admission runs out of room it sheds registry entries LRU-first
+//! ([`PrefixRegistry::evict_lru`]) — cached prefixes never starve live
+//! traffic.
+
+use crate::serve::{KvCache, KvPool};
+
+/// Default number of retained prefixes (engine-level knob).
+pub const DEFAULT_PREFIX_ENTRIES: usize = 16;
+
+struct PrefixEntry {
+    /// hash of `tokens[..page_positions]` — cheap scan filter, never trusted
+    /// without the token comparison
+    first_page_hash: u64,
+    tokens: Vec<u16>,
+    /// page-aligned forked chain, `cache.len() == tokens.len()`
+    cache: KvCache,
+    reserved_pages: usize,
+    last_used: u64,
+}
+
+/// LRU map from hashed token prefixes to retained page chains.
+pub struct PrefixRegistry {
+    pool: KvPool,
+    entries: Vec<PrefixEntry>,
+    max_entries: usize,
+    tick: u64,
+    hits: usize,
+    misses: usize,
+    reused_tokens: usize,
+}
+
+/// FNV-1a over the token stream — stable, dependency-free, and cheap to
+/// compute incrementally at page boundaries.
+fn fnv1a(tokens: &[u16]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+impl PrefixRegistry {
+    pub fn new(pool: KvPool, max_entries: usize) -> PrefixRegistry {
+        PrefixRegistry {
+            pool,
+            entries: Vec::new(),
+            max_entries,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            reused_tokens: 0,
+        }
+    }
+
+    /// A registry that never retains anything (`prefix_sharing: false`).
+    pub fn disabled(pool: KvPool) -> PrefixRegistry {
+        PrefixRegistry::new(pool, 0)
+    }
+
+    fn touch(&mut self, idx: usize) {
+        self.tick += 1;
+        self.entries[idx].last_used = self.tick;
+    }
+
+    /// Length of the longest page-aligned common prefix of `entry` and
+    /// `prompt`, capped at `cap` positions.
+    fn common_aligned(entry: &[u16], prompt: &[u16], cap: usize, pp: usize) -> usize {
+        let lim = entry.len().min(prompt.len()).min(cap);
+        let mut l = 0;
+        while l < lim && entry[l] == prompt[l] {
+            l += 1;
+        }
+        l / pp * pp
+    }
+
+    /// The retained chain sharing the longest page-aligned common prefix
+    /// with `prompt` (at least one full page), as a truncation-forked cache
+    /// ready to prefill the suffix into; `None` counts as a miss. Reuse is
+    /// capped at `prompt_len - 1`.
+    pub fn lookup(&mut self, prompt: &[u16]) -> Option<KvCache> {
+        let pp = self.pool.page_positions();
+        if self.max_entries == 0 || prompt.len() <= pp {
+            return None;
+        }
+        let gate = fnv1a(&prompt[..pp]);
+        let cap = prompt.len() - 1;
+        let mut best: Option<(usize, usize)> = None; // (len, idx)
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.first_page_hash != gate {
+                continue;
+            }
+            let l = Self::common_aligned(&e.tokens, prompt, cap, pp);
+            if l >= pp && l > best.map_or(0, |(bl, _)| bl) {
+                best = Some((l, i));
+            }
+        }
+        let Some((len, idx)) = best else {
+            self.misses += 1;
+            return None;
+        };
+        self.touch(idx);
+        self.hits += 1;
+        self.reused_tokens += len;
+        Some(self.entries[idx].cache.fork_prefix(len))
+    }
+
+    /// Retain `prompt`'s longest page-aligned prefix out of a cache that has
+    /// prefilled it (`cache.len() >= that prefix`). No-op if the prefix is
+    /// empty, already covered by a retained entry, or the pool cannot spare
+    /// the pages even after LRU eviction.
+    pub fn register(&mut self, prompt: &[u16], cache: &KvCache) {
+        let pp = self.pool.page_positions();
+        let len = prompt.len() / pp * pp;
+        if self.max_entries == 0 || len == 0 || len > cache.len() {
+            return;
+        }
+        // covered: some entry already shares this whole aligned prefix, so a
+        // future request would attach to it — a second overlapping entry
+        // would only double-reserve the same pages
+        if let Some(idx) = self
+            .entries
+            .iter()
+            .position(|e| Self::common_aligned(&e.tokens, prompt, len, pp) == len)
+        {
+            self.touch(idx);
+            return;
+        }
+        // worst-case reservation: the entry's pages, counted even though they
+        // are (initially) shared with `cache` — conservative against the
+        // budget, so `allocated <= reserved` stays true after the donor dies
+        let reserved_pages = self.pool.pages_for_seq(len);
+        while self.entries.len() >= self.max_entries {
+            if !self.evict_lru() {
+                return;
+            }
+        }
+        while !self.pool.try_reserve(reserved_pages) {
+            if !self.evict_lru() {
+                return; // budget too tight to cache this prefix — skip it
+            }
+        }
+        self.tick += 1;
+        self.entries.push(PrefixEntry {
+            first_page_hash: fnv1a(&prompt[..pp]),
+            tokens: prompt[..len].to_vec(),
+            cache: cache.fork_prefix(len),
+            reserved_pages,
+            last_used: self.tick,
+        });
+    }
+
+    /// Drop the least-recently-used entry, returning its reservation to the
+    /// pool. `false` when the registry is already empty.
+    pub fn evict_lru(&mut self) -> bool {
+        let Some(idx) = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let e = self.entries.swap_remove(idx);
+        self.pool.release(e.reserved_pages);
+        true
+    }
+
+    /// Drop everything (drain boundary, tests).
+    pub fn clear(&mut self) {
+        while self.evict_lru() {}
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pages referenced by retained chains (for the engine's shared-bytes
+    /// accounting).
+    pub fn pages_referenced(&self) -> usize {
+        self.entries.iter().map(|e| e.cache.pages_referenced()).sum()
+    }
+
+    /// Pool pages currently reserved by retained entries — the most that
+    /// evicting the whole registry could hand back to admission.
+    pub fn reserved_pages(&self) -> usize {
+        self.entries.iter().map(|e| e.reserved_pages).sum()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Total prompt tokens served from retained chains instead of prefill.
+    pub fn reused_tokens(&self) -> usize {
+        self.reused_tokens
+    }
+
+    /// Reset the hit/miss/reuse counters (drain boundary).
+    pub fn take_counters(&mut self) -> (usize, usize, usize) {
+        let out = (self.hits, self.misses, self.reused_tokens);
+        self.hits = 0;
+        self.misses = 0;
+        self.reused_tokens = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptConfig;
+
+    fn cfg() -> GptConfig {
+        GptConfig { d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16, max_seq: 16, ..GptConfig::tiny() }
+    }
+
+    fn filled(pool: &KvPool, rows: &[Vec<f32>]) -> KvCache {
+        let mut c = pool.new_cache();
+        for r in rows {
+            c.append(0, r, r);
+            c.advance(1);
+        }
+        c
+    }
+
+    fn rows(n: usize, tag: f32) -> Vec<Vec<f32>> {
+        (0..n).map(|t| (0..8).map(|i| tag + (t * 8 + i) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn register_lookup_roundtrip_page_aligned() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap();
+        let mut reg = PrefixRegistry::new(pool.clone(), 4);
+        let prompt: Vec<u16> = (0..10).collect();
+        assert!(reg.lookup(&prompt).is_none(), "empty registry misses");
+
+        let cache = filled(&pool, &rows(10, 0.0));
+        reg.register(&prompt, &cache);
+        assert_eq!(reg.len(), 1);
+        // a templated request: same 8-token (2-page) prefix, new tail
+        let mut templ = prompt[..9].to_vec();
+        templ.push(99);
+        let hit = reg.lookup(&templ).expect("aligned prefix must hit");
+        assert_eq!(hit.len(), 8, "reuse is the longest aligned prefix");
+        assert_eq!(hit.k_at(0, 0, 7), cache.k_at(0, 0, 7));
+        assert_eq!((reg.hits(), reg.misses(), reg.reused_tokens()), (1, 1, 8));
+
+        // same hash bucket, different tokens → verified, not served
+        let mut other: Vec<u16> = (0..10).collect();
+        other[3] = 77;
+        assert!(reg.lookup(&other).is_none());
+
+        // reuse is capped at prompt_len - 1: an exactly-aligned 8-token
+        // prompt cannot attach the whole 8-token entry (the suffix prefill
+        // needs >= 1 token) — it attaches one page short instead
+        let hit = reg.lookup(&prompt[..8]).expect("partial attach");
+        assert_eq!(hit.len(), 4);
+    }
+
+    #[test]
+    fn eviction_returns_reservations() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap();
+        let mut reg = PrefixRegistry::new(pool.clone(), 2);
+        for tag in 0..3u16 {
+            let prompt: Vec<u16> = (0..8).map(|t| t + 100 * tag).collect();
+            let cache = filled(&pool, &rows(8, tag as f32));
+            reg.register(&prompt, &cache);
+        }
+        // capacity 2: the oldest entry was evicted
+        assert_eq!(reg.len(), 2);
+        let first: Vec<u16> = (0..8).collect();
+        assert!(reg.lookup(&[&first[..], &[9]].concat()).is_none(), "LRU victim gone");
+        let reserved_before = pool.pages_reserved();
+        reg.clear();
+        assert_eq!(pool.pages_reserved(), reserved_before - 2 * pool.pages_for_seq(8));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn tight_budget_skips_registration() {
+        // room for exactly one sequence's pages — the registry must not
+        // reserve what live traffic needs
+        let cfg = cfg();
+        let pool = KvPool::new(&cfg, 4, Some(4 * 128)).unwrap(); // 4 × 128-byte pages
+        let mut reg = PrefixRegistry::new(pool.clone(), 4);
+        assert!(pool.try_reserve(3));
+        let cache = filled(&pool, &rows(8, 0.0));
+        let prompt: Vec<u16> = (0..8).collect();
+        reg.register(&prompt, &cache); // needs 4 pages, only 1 spare
+        assert!(reg.is_empty(), "registration skipped under pressure");
+        assert_eq!(pool.pages_reserved(), 3, "no reservation leaked");
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap();
+        let mut reg = PrefixRegistry::disabled(pool.clone());
+        let cache = filled(&pool, &rows(8, 0.0));
+        let prompt: Vec<u16> = (0..8).collect();
+        reg.register(&prompt, &cache);
+        assert!(reg.is_empty());
+        assert!(reg.lookup(&prompt).is_none());
+        assert_eq!(reg.misses(), 0, "disabled lookups are not counted as misses");
+    }
+}

@@ -30,6 +30,11 @@ pub struct ActiveSeq {
     pub cache: KvCache,
     pub prompt_len: usize,
     pub max_new: usize,
+    /// worst-case page demand reserved against the pool at admission;
+    /// returned via `KvPool::release` when the sequence retires
+    pub reserved_pages: usize,
+    /// prompt tokens attached from the prefix cache instead of prefilled
+    pub reused_tokens: usize,
     /// tokens generated so far (first one comes from the prefill)
     pub generated: Vec<u16>,
     /// most recent token — the next decode step's input
@@ -72,6 +77,18 @@ impl Scheduler {
         self.active.len() < self.max_batch
     }
 
+    /// Next waiting request, if a batch slot is free — without dequeuing,
+    /// so the engine can check its page demand against the pool budget
+    /// first (FIFO order: a request that does not fit blocks the queue
+    /// rather than being skipped, to keep admission starvation-free).
+    pub fn peek_admittable(&self) -> Option<&GenRequest> {
+        if self.has_capacity() {
+            self.pending.front()
+        } else {
+            None
+        }
+    }
+
     /// Next waiting request, if a batch slot is free.
     pub fn pop_admittable(&mut self) -> Option<GenRequest> {
         if self.has_capacity() {
@@ -87,17 +104,13 @@ impl Scheduler {
         self.active.push(seq);
     }
 
-    /// Remove and return every finished sequence, keeping in-flight order.
+    /// Remove and return every finished sequence in one stable-order pass
+    /// (`partition` keeps in-flight order on both sides; the old
+    /// `Vec::remove` loop was O(batch²) per step).
     pub fn retire_finished(&mut self) -> Vec<ActiveSeq> {
-        let mut done = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].finished() {
-                done.push(self.active.remove(i));
-            } else {
-                i += 1;
-            }
-        }
+        let (done, keep) =
+            std::mem::take(&mut self.active).into_iter().partition(|s| s.finished());
+        self.active = keep;
         done
     }
 
@@ -127,6 +140,8 @@ mod tests {
             cache: KvCache::new(&cfg),
             prompt_len: 1,
             max_new,
+            reserved_pages: 0,
+            reused_tokens: 0,
             generated: vec![0; generated],
             last_token: 0,
             submitted: Instant::now(),
@@ -161,6 +176,9 @@ mod tests {
         s.admit(seq(2, 1, 1)); // done
         let done = s.retire_finished();
         assert_eq!(done.len(), 2);
+        // stable on both sides of the partition
+        assert_eq!(done[0].id, RequestId(0));
+        assert_eq!(done[1].id, RequestId(2));
         assert_eq!(s.active_len(), 1);
         assert_eq!(s.active[0].id, RequestId(1));
     }

@@ -335,6 +335,147 @@ fn prop_blocked_attention_matches_scalar() {
     });
 }
 
+struct PagedCase {
+    n_heads: usize,
+    head_dim: usize,
+    page_positions: usize,
+    /// committed positions of the shared base cache
+    base_len: usize,
+    /// per sequence: (fork split point <= base_len, divergent suffix rows)
+    forks: Vec<(usize, usize)>,
+    seed: u64,
+}
+
+fn gen_paged_case(rng: &mut Pcg64) -> PagedCase {
+    let max_seq = 32;
+    let base_len = 1 + rng.next_below(20) as usize;
+    let bsz = 1 + rng.next_below(5) as usize;
+    let forks = (0..bsz)
+        .map(|_| {
+            let split = rng.next_below(base_len as u32 + 1) as usize;
+            let suffix_max = (max_seq - split) as u32;
+            let mut suffix = rng.next_below(suffix_max.min(9)) as usize;
+            if split + suffix == 0 {
+                suffix = 1; // a sequence must attend over >= 1 position
+            }
+            (split, suffix)
+        })
+        .collect();
+    PagedCase {
+        n_heads: [1usize, 2, 4][rng.next_below(3) as usize],
+        head_dim: [4usize, 8, 10][rng.next_below(3) as usize],
+        page_positions: [1usize, 2, 3, 5, 8, 32][rng.next_below(6) as usize],
+        base_len,
+        forks,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Paged-pool attention parity: sequences forked from a shared prefix
+/// chain (CoW-diverged at random, unaligned split points) under random
+/// page sizes attend identically — to f32 reassociation — to the scalar
+/// reference over independently built single-page (contiguous) caches
+/// holding the same rows. Pins both the page-run streaming and the
+/// sharing/CoW machinery to the monolithic-layout semantics.
+#[test]
+fn prop_paged_pool_attention_matches_contiguous() {
+    forall("paged attention parity", num_cases(10), gen_paged_case, |case| {
+        let d_model = case.n_heads * case.head_dim;
+        let max_seq = 32;
+        let cfg = GptConfig {
+            d_model,
+            n_layers: 2,
+            n_heads: case.n_heads,
+            d_ff: 2 * d_model,
+            max_seq,
+            ..GptConfig::tiny()
+        };
+        let mut rng = Pcg64::seed_from_u64(case.seed);
+        let row = |rng: &mut Pcg64| -> (Vec<f32>, Vec<f32>) {
+            let k: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+            (k, v)
+        };
+        let base_rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..case.base_len).map(|_| row(&mut rng)).collect();
+        let suffix_rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> = case
+            .forks
+            .iter()
+            .map(|&(_, n)| (0..n).map(|_| row(&mut rng)).collect())
+            .collect();
+        let append_all = |c: &mut KvCache, rows: &[(Vec<f32>, Vec<f32>)]| {
+            for (k, v) in rows {
+                for l in 0..cfg.n_layers {
+                    c.append(l, k, v);
+                }
+                c.advance(1);
+            }
+        };
+
+        // paged side: every sequence forks the shared base at its split
+        let pool = armor::serve::KvPool::new(&cfg, case.page_positions, None)
+            .map_err(|e| e.to_string())?;
+        let mut base = pool.new_cache();
+        append_all(&mut base, &base_rows);
+        let paged: Vec<KvCache> = case
+            .forks
+            .iter()
+            .zip(&suffix_rows)
+            .map(|(&(split, _), suffix)| {
+                let mut c = base.fork_prefix(split);
+                append_all(&mut c, suffix);
+                c
+            })
+            .collect();
+        // contiguous side: single-page caches built independently
+        let mono_pool =
+            armor::serve::KvPool::new(&cfg, max_seq, None).map_err(|e| e.to_string())?;
+        let contiguous: Vec<KvCache> = case
+            .forks
+            .iter()
+            .zip(&suffix_rows)
+            .map(|(&(split, _), suffix)| {
+                let mut c = mono_pool.new_cache();
+                append_all(&mut c, &base_rows[..split]);
+                append_all(&mut c, suffix);
+                c
+            })
+            .collect();
+
+        let lens: Vec<usize> = case.forks.iter().map(|&(s, n)| s + n).collect();
+        let paged_refs: Vec<&KvCache> = paged.iter().collect();
+        let mono_refs: Vec<&KvCache> = contiguous.iter().collect();
+        let q = Matrix::randn(lens.len(), d_model, &mut rng);
+        let kern = AttnKernel::new(cfg.n_heads, cfg.head_dim());
+        for layer in 0..cfg.n_layers {
+            let blocked = kern.attend_batch(&paged_refs, layer, &q, &lens);
+            let scalar = attend_batch_scalar(&mono_refs, layer, &q, &lens, cfg.n_heads);
+            for i in 0..lens.len() {
+                for c in 0..d_model {
+                    let (b, s) = (blocked[(i, c)], scalar[(i, c)]);
+                    if (b - s).abs() > 1e-5 * (1.0 + s.abs()) {
+                        return Err(format!(
+                            "page {} layer {layer} seq {i} (split {} len {}) col {c}: \
+                             paged {b} vs contiguous {s}",
+                            case.page_positions, case.forks[i].0, lens[i]
+                        ));
+                    }
+                }
+            }
+            // the scalar route over the paged chains must agree bit-exactly
+            // with the scalar route over the contiguous copies: paging and
+            // CoW never change stored values, only their placement
+            let scalar_paged = attend_batch_scalar(&paged_refs, layer, &q, &lens, cfg.n_heads);
+            if scalar_paged.max_abs_diff(&scalar) != 0.0 {
+                return Err(format!(
+                    "layer {layer}: scalar-over-paged drifted from scalar-over-contiguous"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// NoWag normalization always denormalizes back to the original matrix,
 /// even with zero columns/rows and extreme scales.
 #[test]
