@@ -14,6 +14,9 @@
 //!      prompt prefix — through a page-budgeted engine, showing prefix-cache
 //!      hits and the paged pool reserving less KV memory than the old
 //!      monolithic full-panel layout at the same batch
+//!   6. replay the same workload through the `--quant q8-kv` plane — int8
+//!      2:4 weight cores plus int8 KV pages — and check the peak resident
+//!      KV bytes land well under 0.55× of the f32 run
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
@@ -86,8 +89,16 @@ fn main() -> armor::Result<()> {
     let n_requests = 8u64;
     let template: Vec<u16> = (0..48).map(|_| rng.next_below(256) as u16).collect();
     let max_new = 16;
+    let templated_prompts: Vec<Vec<u16>> = (0..n_requests)
+        .map(|i| {
+            let mut prng = Pcg64::seed_from_u64(500 + i);
+            let mut prompt = template.clone();
+            prompt.extend((0..6).map(|_| prng.next_below(256) as u16));
+            prompt
+        })
+        .collect();
     let mut engine = Engine::new(
-        compiled,
+        compiled.clone(),
         EngineConfig {
             max_batch: 4,
             page_positions: 16,
@@ -95,11 +106,8 @@ fn main() -> armor::Result<()> {
             ..EngineConfig::default()
         },
     )?;
-    for i in 0..n_requests {
-        let mut prng = Pcg64::seed_from_u64(500 + i);
-        let mut prompt = template.clone();
-        prompt.extend((0..6).map(|_| prng.next_below(256) as u16));
-        engine.submit(&prompt, max_new);
+    for prompt in &templated_prompts {
+        engine.submit(prompt, max_new);
     }
     let report = engine.drain();
     println!("\ntemplated traffic ({n_requests} requests, 48-token shared prefix):");
@@ -119,6 +127,44 @@ fn main() -> armor::Result<()> {
     assert!(
         report.kv_reserved_bytes < monolithic,
         "paged reservations must undercut monolithic panels"
+    );
+
+    // 6. the --quant q8-kv plane: int8 2:4 cores (fused dequant matmul) and
+    // int8 KV pages with per-position scales, on the identical workload
+    let q8_compiled = compiled.quantize_weights(armor::sparsity::DEFAULT_Q8_GROUP)?;
+    println!(
+        "\nquantized plane: exec forms {:?}, deployed weights {} KiB",
+        q8_compiled.exec_summary(),
+        q8_compiled.storage_bytes() / 1024
+    );
+    let mut q8_engine = Engine::new(
+        q8_compiled,
+        EngineConfig {
+            max_batch: 4,
+            page_positions: 16,
+            kv_budget_bytes: Some(2 << 20),
+            kv_quant: armor::serve::KvQuant::Q8,
+            ..EngineConfig::default()
+        },
+    )?;
+    for prompt in &templated_prompts {
+        q8_engine.submit(prompt, max_new);
+    }
+    let q8_report = q8_engine.drain();
+    println!("q8-kv templated traffic:");
+    print!("{}", q8_report.render());
+    let ratio = q8_report.kv_resident_bytes as f64 / report.kv_resident_bytes as f64;
+    println!(
+        "peak resident KV: q8 {:.1} KiB vs f32 {:.1} KiB ({:.0}% of the f32 bytes)",
+        q8_report.kv_resident_bytes as f64 / 1024.0,
+        report.kv_resident_bytes as f64 / 1024.0,
+        ratio * 100.0
+    );
+    assert!(q8_report.prefix_hits > 0, "q8 pages must not break prefix sharing");
+    assert_eq!(q8_report.requests.len(), report.requests.len());
+    assert!(
+        ratio < 0.55,
+        "q8-kv peak resident KV bytes must land under 0.55x the f32 run, got {ratio:.2}"
     );
     Ok(())
 }

@@ -1,17 +1,20 @@
 """Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
 
 from .armor_matmul import armor_matmul, masked_armor_matmul
-from .attn_decode import attn_decode, attn_decode_paged
+from .attn_decode import attn_decode, attn_decode_paged, attn_decode_paged_q8
 from .mask_init import mask_topk_nm
 from .proxy_loss import proxy_loss
+from .sparse_matmul_q8 import sparse_matmul_q8
 from .sparse_update import sparse_group_ls
 
 __all__ = [
     "armor_matmul",
     "attn_decode",
     "attn_decode_paged",
+    "attn_decode_paged_q8",
     "masked_armor_matmul",
     "mask_topk_nm",
     "proxy_loss",
     "sparse_group_ls",
+    "sparse_matmul_q8",
 ]

@@ -23,6 +23,13 @@ TPU twins of the Rust serve path's blocked attention kernel
 - **Softmax**: the same two-pass max/exp/normalize the Rust kernel runs —
   no online rescaling, so both twins agree with the scalar reference to
   f32 rounding.
+- **Quantized pages** (`attn_decode_paged_q8`): the pool stores int8 K/V
+  codes with one f32 scale per (page, head, position) slot — the layout
+  `serve::KvPool` uses under `--quant q8-kv`, where each appended head
+  slice is quantized once and its scale never rewritten. The kernel
+  dequantizes after the gather, in VMEM (`codes · scale[..., None]`), the
+  vectorized mirror of the Rust kernel folding the K scale into each row's
+  score and the V scale into its softmax weight.
 
 Lowered with `interpret=True`: the CPU PJRT plugin cannot run Mosaic
 custom-calls; correctness is asserted against `ref.attn_decode_ref`. A
@@ -156,6 +163,99 @@ def attn_decode_paged(
         q.astype(jnp.float32),
         k_pages.astype(jnp.float32),
         v_pages.astype(jnp.float32),
+        page_table.astype(jnp.int32),
+        seq_lens.astype(jnp.int32),
+    )
+
+
+def _paged_q8_kernel(
+    q_ref, kp_ref, vp_ref, ks_ref, vs_ref, table_ref, len_ref, o_ref, *, scale
+):
+    q = q_ref[0, 0]  # (head_dim,) query slice of this (batch, head) task
+    k_pool = kp_ref[:, 0]  # (n_pool, page, head_dim) int8 codes, this head
+    v_pool = vp_ref[:, 0]
+    k_sc = ks_ref[:, 0]  # (n_pool, page) per-position dequant scales
+    v_sc = vs_ref[:, 0]
+    table = table_ref[0]  # (n_chain,) page ids of this sequence's chain
+    n = len_ref[0]
+    n_chain, page, head_dim = table.shape[0], k_pool.shape[1], k_pool.shape[2]
+    # gather chain + dequantize in VMEM: codes widen to f32 and pick up
+    # their position's scale; the f32 panel exists only on-chip
+    k = (
+        jnp.take(k_pool, table, axis=0).astype(jnp.float32)
+        * jnp.take(k_sc, table, axis=0)[..., None]
+    ).reshape(n_chain * page, head_dim)
+    v = (
+        jnp.take(v_pool, table, axis=0).astype(jnp.float32)
+        * jnp.take(v_sc, table, axis=0)[..., None]
+    ).reshape(n_chain * page, head_dim)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_chain * page, 1), 0)[:, 0]
+    scores = jnp.where(idx < n, (k @ q) * scale, -jnp.inf)
+    m = jnp.max(scores)
+    e = jnp.where(idx < n, jnp.exp(scores - m), 0.0)
+    o_ref[0, 0] = (e / jnp.sum(e)) @ v
+
+
+def attn_decode_paged_q8(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_scales: jax.Array,
+    v_scales: jax.Array,
+    page_table: jax.Array,
+    seq_lens: jax.Array,
+) -> jax.Array:
+    """Ragged batched decode attention over a shared int8 page pool.
+
+    q:          (batch, n_heads, head_dim) f32  one query token per sequence
+    k_pages:    (n_pool, n_heads, page_positions, head_dim) int8 codes
+    v_pages:    (n_pool, n_heads, page_positions, head_dim) int8 codes
+    k_scales:   (n_pool, n_heads, page_positions) f32  per-position scales
+    v_scales:   (n_pool, n_heads, page_positions) f32
+    page_table: (batch, n_chain) int32  pool ids of each sequence's chain
+    seq_lens:   (batch,) int32  cached positions per sequence
+
+    Position `t` of page `p`/head `h` dequantizes as
+    `k_pages[p, h, t] * k_scales[p, h, t]` — the scale travels with its
+    page, so prefix-shared and CoW-copied chains stay consistent for free.
+    Returns (batch, n_heads, head_dim) f32 context rows.
+    """
+    bsz, n_heads, head_dim = q.shape
+    n_pool, _, page, _ = k_pages.shape
+    assert k_pages.shape == v_pages.shape == (n_pool, n_heads, page, head_dim), (
+        q.shape,
+        k_pages.shape,
+        v_pages.shape,
+    )
+    assert k_scales.shape == v_scales.shape == (n_pool, n_heads, page), (
+        k_scales.shape,
+        v_scales.shape,
+    )
+    n_chain = page_table.shape[1]
+    assert page_table.shape == (bsz, n_chain), page_table.shape
+    assert seq_lens.shape == (bsz,), seq_lens.shape
+    scale = 1.0 / float(head_dim) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_paged_q8_kernel, scale=scale),
+        grid=(bsz, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((n_pool, 1, page, head_dim), lambda b, h: (0, h, 0, 0)),
+            pl.BlockSpec((n_pool, 1, page, head_dim), lambda b, h: (0, h, 0, 0)),
+            pl.BlockSpec((n_pool, 1, page), lambda b, h: (0, h, 0)),
+            pl.BlockSpec((n_pool, 1, page), lambda b, h: (0, h, 0)),
+            pl.BlockSpec((1, n_chain), lambda b, h: (b, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(
+        q.astype(jnp.float32),
+        k_pages.astype(jnp.int8),
+        v_pages.astype(jnp.int8),
+        k_scales.astype(jnp.float32),
+        v_scales.astype(jnp.float32),
         page_table.astype(jnp.int32),
         seq_lens.astype(jnp.int32),
     )

@@ -44,6 +44,42 @@ def attn_decode_ref(q, k, v, seq_lens):
     return jnp.einsum("bhs,bhsd->bhd", w, v)
 
 
+def q8_dequant_ref(codes, scales, group):
+    """Dequantize a packed int8 value plane: one f32 scale per `group`
+    consecutive packed values per row (last group ragged), matching
+    `sparsity::q8_quantize`'s symmetric layout."""
+    rows, n_packed = codes.shape
+    expanded = jnp.repeat(scales.astype(jnp.float32), group, axis=1)[:, :n_packed]
+    return codes.astype(jnp.float32) * expanded
+
+
+def sparse_matmul_q8_ref(qvalues, col_idx, scales, x, group):
+    """Dequantize-then-matmul oracle for the fused `sparse_matmul_q8`
+    kernel: scatter the dequantized survivors into a dense matrix and run
+    the dense contraction (the survivors' column indices are distinct
+    within a row by 2:4 construction)."""
+    rows, n_packed = qvalues.shape
+    cols = x.shape[0]
+    w = q8_dequant_ref(qvalues, scales, group)
+    dense = jnp.zeros((rows, cols), dtype=jnp.float32)
+    r_idx = jnp.broadcast_to(jnp.arange(rows)[:, None], (rows, n_packed))
+    dense = dense.at[r_idx, col_idx].set(w)
+    return dense @ x.astype(jnp.float32)
+
+
+def attn_decode_paged_q8_ref(q, k_pages, v_pages, k_scales, v_scales, page_table, seq_lens):
+    """Dequantize the int8 page pool (per-position scales travel with their
+    page), assemble each sequence's virtual panel through its page table,
+    and defer to the contiguous `attn_decode_ref` oracle."""
+    k = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)[..., None]
+    v = v_pages.astype(jnp.float32) * v_scales.astype(jnp.float32)[..., None]
+    n_heads, page = k.shape[1], k.shape[2]
+    bsz, n_chain = page_table.shape
+    gathered_k = jnp.moveaxis(k[page_table], 2, 1).reshape(bsz, n_heads, n_chain * page, -1)
+    gathered_v = jnp.moveaxis(v[page_table], 2, 1).reshape(bsz, n_heads, n_chain * page, -1)
+    return attn_decode_ref(q, gathered_k, gathered_v, seq_lens)
+
+
 def proxy_loss_ref(w_bar, w_hat, d):
     """NoWag proxy loss: Σ_ij (w_bar − w_hat)²_ij d_j  (paper Eq. 2)."""
     diff = (w_bar - w_hat).astype(jnp.float32)

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: fused dequant 2:4 sparse matmul over an int8
+value plane.
+
+TPU twin of `Compressed24Q8::matmul_q8` (`rust/src/sparsity/compressed.rs`),
+mirroring its execution plan:
+
+- **One-shot metadata decode**: the kernel takes the 2:4 metadata already
+  decoded into absolute column indices (`col_idx`), exactly like the Rust
+  path's `decode_meta_columns` — the nibble decode is hoisted out of the
+  hot loop on both sides.
+- **Value plane**: `qvalues` holds the packed survivors as symmetric int8
+  codes, one f32 scale per `group` consecutive packed values of a row
+  (`group` even, so the two survivors of a 4-column group always share a
+  scale). Dequantization happens in VMEM as the codes stream — the f32
+  weight matrix is never materialized, the HBM traffic is ~¼ of the
+  f32-compressed layout.
+- **Work decomposition**: grid over output rows; each step owns one row's
+  codes/scales/column indices, gathers the matching rows of the activation
+  slab `x` (resident in VMEM across the whole grid, the analog of the Rust
+  kernel's cache-resident `X[:, jb..jend]` batch block), and contracts.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is asserted against `ref.sparse_matmul_q8_ref`.
+A production Mosaic lowering would tile rows × batch over the MXU and
+prefetch `col_idx` via SMEM (`PrefetchScalarGridSpec`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(qv_ref, idx_ref, sc_ref, x_ref, o_ref, *, group):
+    qv = qv_ref[0]  # (2g,) int8 packed values of this output row
+    idx = idx_ref[0]  # (2g,) absolute column indices (decoded metadata)
+    sc = sc_ref[0]  # (n_groups,) per-group scales
+    x = x_ref[...]  # (cols, batch) activation slab, VMEM-resident
+    n_packed = qv.shape[0]
+    # fused dequant: codes widen to f32 and pick up their group's scale in
+    # registers; `repeat` broadcasts each scale over its `group` codes (the
+    # last group of a row may be ragged -> slice back to n_packed)
+    w = qv.astype(jnp.float32) * jnp.repeat(sc, group)[:n_packed]
+    # gather the two surviving activation rows per 4-column group and
+    # contract: (2g,) @ (2g, batch)
+    o_ref[0] = w @ jnp.take(x, idx, axis=0)
+
+
+def sparse_matmul_q8(
+    qvalues: jax.Array,
+    col_idx: jax.Array,
+    scales: jax.Array,
+    x: jax.Array,
+    *,
+    group: int,
+) -> jax.Array:
+    """Fused dequant 2:4 sparse matmul `y = Ŵ x` from the packed layout.
+
+    qvalues: (rows, 2·g) int8   packed survivors, g = cols // 4 groups/row
+    col_idx: (rows, 2·g) int32  absolute column index of each survivor
+    scales:  (rows, ceil(2g / group)) f32  per-group dequant scales
+    x:       (cols, batch) f32  activation slab
+    group:   packed values per scale (even, matching the Rust plane)
+
+    Returns (rows, batch) f32.
+    """
+    rows, n_packed = qvalues.shape
+    assert col_idx.shape == (rows, n_packed), (qvalues.shape, col_idx.shape)
+    assert group >= 2 and group % 2 == 0, group
+    n_groups = max(-(-n_packed // group), 1)
+    assert scales.shape == (rows, n_groups), (scales.shape, n_groups)
+    cols, batch = x.shape
+    assert n_packed == (cols // 4) * 2, (n_packed, cols)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, n_packed), lambda r: (r, 0)),
+            pl.BlockSpec((1, n_packed), lambda r: (r, 0)),
+            pl.BlockSpec((1, n_groups), lambda r: (r, 0)),
+            pl.BlockSpec((cols, batch), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, batch), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, batch), jnp.float32),
+        interpret=True,
+    )(
+        qvalues.astype(jnp.int8),
+        col_idx.astype(jnp.int32),
+        scales.astype(jnp.float32),
+        x.astype(jnp.float32),
+    )

@@ -229,6 +229,101 @@ def test_attn_decode_single_position_returns_value_row():
 
 
 # --------------------------------------------------------------------- #
+# sparse_matmul_q8
+# --------------------------------------------------------------------- #
+
+def _quantize_packed(w_packed, group):
+    """Symmetric int8 quantization of a packed value plane, matching
+    `sparsity::q8_quantize`: one scale per `group` packed values per row
+    (scale = group_max / 127; all-zero groups get scale 0)."""
+    w = np.asarray(w_packed, dtype=np.float32)
+    rows, n_packed = w.shape
+    n_groups = max(-(-n_packed // group), 1)
+    codes = np.zeros((rows, n_packed), dtype=np.int8)
+    scales = np.zeros((rows, n_groups), dtype=np.float32)
+    for g in range(n_groups):
+        seg = w[:, g * group : min((g + 1) * group, n_packed)]
+        if seg.shape[1] == 0:
+            continue
+        max_abs = np.abs(seg).max(axis=1)
+        s = np.where(max_abs > 0, max_abs / 127.0, 0.0)
+        scales[:, g] = s
+        q = np.divide(seg, s[:, None], out=np.zeros_like(seg), where=s[:, None] > 0)
+        codes[:, g * group : g * group + seg.shape[1]] = np.clip(
+            np.rint(q), -127, 127
+        ).astype(np.int8)
+    return jnp.asarray(codes), jnp.asarray(scales)
+
+
+def _random_24_columns(rng, rows, cols):
+    """Random 2:4 metadata as absolute column indices: two distinct kept
+    positions per group of 4 columns, ascending within the group."""
+    g = cols // 4
+    pairs = np.array([(i, j) for i in range(4) for j in range(i + 1, 4)])
+    sel = pairs[rng.integers(0, len(pairs), size=(rows, g))]  # (rows, g, 2)
+    base = (np.arange(g) * 4)[None, :, None]
+    return jnp.asarray((sel + base).reshape(rows, 2 * g).astype(np.int32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([1, 4, 9, 16]),
+    g=st.integers(1, 6),
+    batch=st.sampled_from([1, 3, 8]),
+    group=st.sampled_from([2, 4, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_sparse_matmul_q8_matches_ref(rows, g, batch, group, seed):
+    """The fused dequant kernel equals the dequantize-then-dense oracle for
+    random shapes, metadata, scale-group sizes (ragged last group), and
+    batch widths."""
+    cols = 4 * g
+    rng = np.random.default_rng(seed)
+    col_idx = _random_24_columns(rng, rows, cols)
+    packed = rand(seed + 1, rows, 2 * g)
+    codes, scales = _quantize_packed(packed, group)
+    x = rand(seed + 2, cols, batch)
+    got = kernels.sparse_matmul_q8(codes, col_idx, scales, x, group=group)
+    want = ref.sparse_matmul_q8_ref(codes, col_idx, scales, x, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_matmul_q8_close_to_f32_within_quant_bound():
+    """Quantize a real f32 value plane: the q8 product stays within the
+    per-value error envelope (scale/2 <= wmax/254 per weight, summed over
+    each activation column's L1 mass)."""
+    rows, g, batch, group = 8, 8, 5, 4
+    cols = 4 * g
+    rng = np.random.default_rng(7)
+    col_idx = _random_24_columns(rng, rows, cols)
+    packed = rand(8, rows, 2 * g)
+    codes, scales = _quantize_packed(packed, group)
+    x = rand(9, cols, batch)
+    got = np.asarray(kernels.sparse_matmul_q8(codes, col_idx, scales, x, group=group))
+    # f32 reference on the *original* (unquantized) values
+    dense = np.zeros((rows, cols), dtype=np.float32)
+    np.put_along_axis(dense, np.asarray(col_idx), np.asarray(packed), axis=1)
+    want = dense @ np.asarray(x)
+    wmax = np.abs(np.asarray(packed)).max()
+    for j in range(batch):
+        tol = wmax / 254.0 * np.abs(np.asarray(x)[:, j]).sum() * 1.5 + 1e-5
+        np.testing.assert_allclose(got[:, j], want[:, j], atol=tol)
+
+
+def test_sparse_matmul_q8_zero_groups_contribute_nothing():
+    """An all-zero scale group (scale 0) must contribute exactly 0, not NaN."""
+    rows, g, group = 2, 2, 2
+    cols = 4 * g
+    rng = np.random.default_rng(11)
+    col_idx = _random_24_columns(rng, rows, cols)
+    packed = jnp.zeros((rows, 2 * g))
+    codes, scales = _quantize_packed(packed, group)
+    x = rand(12, cols, 3)
+    out = np.asarray(kernels.sparse_matmul_q8(codes, col_idx, scales, x, group=group))
+    np.testing.assert_array_equal(out, np.zeros((rows, 3), dtype=np.float32))
+
+
+# --------------------------------------------------------------------- #
 # attn_decode_paged
 # --------------------------------------------------------------------- #
 
@@ -308,3 +403,89 @@ def test_attn_decode_paged_ignores_pages_past_length():
     v2 = v_pages.at[1, :, 2:].set(1e6).at[2].set(-1e6)
     got = kernels.attn_decode_paged(q, k2, v2, table, lens)
     np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# attn_decode_paged_q8
+# --------------------------------------------------------------------- #
+
+def _quantize_pages(pages):
+    """Per-(page, head, position) symmetric int8 quantization of an f32
+    page pool — the `serve::KvPool` q8 append layout: one scale per
+    head-slice, fixed when the position is written."""
+    p = np.asarray(pages, dtype=np.float32)
+    max_abs = np.abs(p).max(axis=-1)
+    scales = np.where(max_abs > 0, max_abs / 127.0, 0.0).astype(np.float32)
+    q = np.divide(p, scales[..., None], out=np.zeros_like(p), where=scales[..., None] > 0)
+    codes = np.clip(np.rint(q), -127, 127).astype(np.int8)
+    return jnp.asarray(codes), jnp.asarray(scales)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    n_heads=st.sampled_from([1, 2]),
+    head_dim=st.sampled_from([4, 8]),
+    page=st.sampled_from([1, 2, 4]),
+    n_chain=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_attn_decode_paged_q8_matches_ref(bsz, n_heads, head_dim, page, n_chain, seed):
+    """The q8 paged kernel equals the dequantize-then-attend oracle for
+    random page sizes, chain lengths, shared tables, and ragged lens —
+    quantization is an addressing-plus-dtype change, never an arithmetic
+    one."""
+    n_pool = bsz * n_chain
+    q = rand(seed, bsz, n_heads, head_dim)
+    k_codes, k_sc = _quantize_pages(rand(seed + 1, n_pool, n_heads, page, head_dim))
+    v_codes, v_sc = _quantize_pages(rand(seed + 2, n_pool, n_heads, page, head_dim))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 3), 2)
+    table = jax.random.randint(keys[0], (bsz, n_chain), 0, n_pool)
+    lens = jax.random.randint(keys[1], (bsz,), 1, n_chain * page + 1)
+    got = kernels.attn_decode_paged_q8(q, k_codes, v_codes, k_sc, v_sc, table, lens)
+    want = ref.attn_decode_paged_q8_ref(q, k_codes, v_codes, k_sc, v_sc, table, lens)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attn_decode_paged_q8_close_to_f32_attention():
+    """Quantizing real pages perturbs the attention output only within the
+    int8 error envelope of the f32 paged kernel on the same values."""
+    bsz, n_heads, head_dim, page, n_chain = 2, 2, 8, 4, 3
+    n_pool = bsz * n_chain
+    q = rand(20, bsz, n_heads, head_dim)
+    k_pages = rand(21, n_pool, n_heads, page, head_dim)
+    v_pages = rand(22, n_pool, n_heads, page, head_dim)
+    table = jnp.arange(n_pool, dtype=jnp.int32).reshape(bsz, n_chain)
+    lens = jnp.array([7, 12], dtype=jnp.int32)
+    f32_out = np.asarray(kernels.attn_decode_paged(q, k_pages, v_pages, table, lens))
+    k_codes, k_sc = _quantize_pages(k_pages)
+    v_codes, v_sc = _quantize_pages(v_pages)
+    q8_out = np.asarray(
+        kernels.attn_decode_paged_q8(q, k_codes, v_codes, k_sc, v_sc, table, lens)
+    )
+    # score shift <= ||q||_1 * kmax/254 / sqrt(hd) per position; softmax
+    # weights move by at most e^{2D}; V rows carry their own vmax/254
+    kmax = float(np.abs(np.asarray(k_pages)).max())
+    vmax = float(np.abs(np.asarray(v_pages)).max())
+    q_l1 = float(np.abs(np.asarray(q)).sum(axis=-1).max())
+    d_max = q_l1 * (kmax / 254.0) / head_dim**0.5
+    tol = (np.exp(2 * d_max) - 1.0) * vmax + vmax / 254.0 + 1e-4
+    np.testing.assert_allclose(q8_out, f32_out, atol=tol)
+
+
+def test_attn_decode_paged_q8_shared_prefix_scales_travel_with_pages():
+    """Two chains sharing prefix pages share codes AND scales — identical
+    outputs inside the shared span, divergent past it (the CoW contract the
+    Rust pool enforces)."""
+    n_heads, head_dim, page = 2, 8, 4
+    q = rand(30, 2, n_heads, head_dim)
+    q = q.at[1].set(q[0])
+    k_codes, k_sc = _quantize_pages(rand(31, 4, n_heads, page, head_dim))
+    v_codes, v_sc = _quantize_pages(rand(32, 4, n_heads, page, head_dim))
+    table = jnp.array([[0, 1, 2], [0, 1, 3]], dtype=jnp.int32)
+    lens = jnp.array([8, 8], dtype=jnp.int32)
+    out = kernels.attn_decode_paged_q8(q, k_codes, v_codes, k_sc, v_sc, table, lens)
+    np.testing.assert_allclose(out[0], out[1], rtol=1e-6, atol=1e-6)
+    lens = jnp.array([12, 12], dtype=jnp.int32)
+    out = kernels.attn_decode_paged_q8(q, k_codes, v_codes, k_sc, v_sc, table, lens)
+    assert not np.allclose(out[0], out[1], rtol=1e-3, atol=1e-3)

@@ -27,7 +27,8 @@ fn main() {
     println!("{}  ({:.2} GFLOP/s)", r.line(), 2.0 * 256f64.powi(3) / (r.mean_ms / 1e3) / 1e9);
     emit_json("perf_hotpath", "gemm_256", result_fields(&r));
 
-    // ---- compressed 2:4 batched matmul: per-column reference vs blocked ----
+    // ---- compressed 2:4 batched matmul: per-column reference vs blocked,
+    //      f32 value plane vs fused-dequant q8 ----
     {
         let wc = Matrix::randn(512, 1024, &mut rng);
         let imp = wc.hadamard(&wc);
@@ -44,6 +45,30 @@ fn main() {
         println!("{}  ({:.2}x vs per-column)", r_blk.line(), r_ref.mean_ms / r_blk.mean_ms);
         emit_json("perf_hotpath", "c24_matmul_ref", result_fields(&r_ref));
         emit_json("perf_hotpath", "c24_matmul_blocked", result_fields(&r_blk));
+
+        // quantized value plane: same blocked loop, int8 codes dequantized
+        // in registers — ~1/4 the weight bytes of the f32 compressed path
+        let q8 = c24.quantize(armor::sparsity::DEFAULT_Q8_GROUP).unwrap();
+        let r_q8 = bench("c24 matmul 512x1024 b64 (blocked q8)", 2, scaled(30), 10.0, || {
+            black_box(q8.matmul_q8(&xs));
+        });
+        println!(
+            "{}  ({:.2}x vs f32 blocked, {} vs {} weight KiB)",
+            r_q8.line(),
+            r_blk.mean_ms / r_q8.mean_ms,
+            q8.storage_bytes() / 1024,
+            c24.storage_bytes() / 1024
+        );
+        emit_json(
+            "perf_hotpath",
+            "c24_matmul_blocked_q8",
+            {
+                let mut f = result_fields(&r_q8);
+                f.push(("weight_bytes", Json::Num(q8.storage_bytes() as f64)));
+                f.push(("f32_weight_bytes", Json::Num(c24.storage_bytes() as f64)));
+                f
+            },
+        );
     }
 
     // ---- batched decode attention: scalar per-sequence vs blocked kernel ----
@@ -88,18 +113,24 @@ fn main() {
         // overhead the kernel pays for bounded KV memory (one run per page
         // instead of one monolithic panel)
         let paged_pool = armor::serve::KvPool::new(&cfg, 16, None).unwrap();
+        let q8_pool =
+            armor::serve::KvPool::new_with_quant(&cfg, 16, None, armor::serve::KvQuant::Q8)
+                .unwrap();
         let mut paged: Vec<KvCache> = (0..bsz).map(|_| paged_pool.new_cache()).collect();
-        for (c, src) in paged.iter_mut().zip(&caches) {
+        let mut paged_q8: Vec<KvCache> = (0..bsz).map(|_| q8_pool.new_cache()).collect();
+        for ((c, cq), src) in paged.iter_mut().zip(paged_q8.iter_mut()).zip(&caches) {
             for t in 0..src.len() {
                 // reassemble the d_model rows from the per-head slices
                 let mut kr = Vec::with_capacity(cfg.d_model);
                 let mut vr = Vec::with_capacity(cfg.d_model);
                 for h in 0..cfg.n_heads {
-                    kr.extend_from_slice(src.k_at(0, h, t));
-                    vr.extend_from_slice(src.v_at(0, h, t));
+                    kr.extend_from_slice(&src.k_at(0, h, t));
+                    vr.extend_from_slice(&src.v_at(0, h, t));
                 }
                 c.append(0, &kr, &vr);
                 c.advance(1);
+                cq.append(0, &kr, &vr);
+                cq.advance(1);
             }
         }
         let paged_refs: Vec<&KvCache> = paged.iter().collect();
@@ -108,6 +139,32 @@ fn main() {
         });
         println!("{}  ({:.2}x vs default 32-pos pages)", r_pg.line(), r_bk.mean_ms / r_pg.mean_ms);
         emit_json("perf_hotpath", "attn_decode_blocked_paged16", result_fields(&r_pg));
+
+        // the same pages quantized to int8 with per-position scales: the
+        // kernel dequantizes in flight while reading ~1/4 of the K/V bytes
+        let q8_refs: Vec<&KvCache> = paged_q8.iter().collect();
+        let r_q8 = bench(
+            "attn decode b16 h4 d128 (blocked, 16-pos q8 pages)",
+            2,
+            scaled(200),
+            10.0,
+            || {
+                black_box(kern.attend_batch(&q8_refs, 0, &q, &n_ctx));
+            },
+        );
+        println!(
+            "{}  ({:.2}x vs f32 pages, {} vs {} page B)",
+            r_q8.line(),
+            r_pg.mean_ms / r_q8.mean_ms,
+            q8_pool.page_bytes(),
+            paged_pool.page_bytes()
+        );
+        emit_json("perf_hotpath", "attn_decode_blocked_paged16_q8", {
+            let mut f = result_fields(&r_q8);
+            f.push(("page_bytes", Json::Num(q8_pool.page_bytes() as f64)));
+            f.push(("f32_page_bytes", Json::Num(paged_pool.page_bytes() as f64)));
+            f
+        });
     }
 
     let (fact, problem, _) = initialize(&w, &d, db, Pattern::TWO_FOUR);

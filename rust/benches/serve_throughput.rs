@@ -262,6 +262,7 @@ fn main() {
         page_positions,
         kv_budget_bytes: None,
         prefix_sharing: sharing,
+        ..EngineConfig::default()
     };
     let mut share_rows = Vec::new();
     let mut shared_report = None;
@@ -329,6 +330,82 @@ fn main() {
             report.prefix_hits,
             report.kv_reserved_bytes / 1024,
             monolithic / 1024
+        );
+    }
+
+    // --- int8 execution plane: quant off vs q8 (weight cores) vs q8-kv
+    //     (cores + KV pages) on the same 2:4 model and traffic ---
+    // The f32 blocked row is the baseline: q8-kv must roughly halve (and
+    // better) the steady-state KV bytes without giving up decode
+    // throughput.
+    println!("\nquantized execution plane: off / q8 / q8-kv on the 2:4 model");
+    use armor::model::WeightQuant;
+    use armor::serve::KvQuant;
+    let quant_burst = traffic(&mut rng, scaled(12).max(4), prompt_len);
+    let quant_new = scaled(24).max(4);
+    let mut quant_rows = Vec::new();
+    let mut quant_results: Vec<(&str, f64, usize, f64)> = Vec::new();
+    for (case, wq, kq) in [
+        ("off", WeightQuant::F32, KvQuant::F32),
+        ("q8", WeightQuant::q8(), KvQuant::F32),
+        ("q8_kv", WeightQuant::q8(), KvQuant::Q8),
+    ] {
+        let compiled = CompiledModel::compile_with_quant(&nowag_model, None, wq).unwrap();
+        let weight_bytes = compiled.storage_bytes();
+        let (report, p50) = run_engine(
+            compiled,
+            &quant_burst,
+            quant_new,
+            EngineConfig { max_batch, page_positions, kv_quant: kq, ..EngineConfig::default() },
+        );
+        // steady-state KV cost: peak resident pool bytes per cached token
+        // (prompt + generated tokens all land in the cache)
+        let cached_tokens = report.prefill_tokens + report.generated_tokens;
+        let bytes_per_token = report.kv_resident_bytes as f64 / cached_tokens.max(1) as f64;
+        quant_rows.push(TableRow::new(
+            case,
+            vec![
+                format!("{:.1}", report.tokens_per_sec()),
+                format!("{}", report.kv_resident_bytes / 1024),
+                format!("{bytes_per_token:.0}"),
+                format!("{}", weight_bytes / 1024),
+            ],
+        ));
+        emit_json(
+            "serve_quant",
+            case,
+            vec![
+                ("tok_s", Json::Num(report.tokens_per_sec())),
+                ("p50_ms", Json::Num(p50)),
+                ("kv_resident_bytes", Json::Num(report.kv_resident_bytes as f64)),
+                ("kv_reserved_bytes", Json::Num(report.kv_reserved_bytes as f64)),
+                ("kv_bytes_per_token", Json::Num(bytes_per_token)),
+                ("weight_bytes", Json::Num(weight_bytes as f64)),
+            ],
+        );
+        quant_results.push((case, report.tokens_per_sec(), report.kv_resident_bytes, bytes_per_token));
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Quantized execution plane (KV-cached 2:4, paged pool)",
+            &["tok/s (↑)", "KV resident KiB (↓)", "KV B/token (↓)", "weights KiB (↓)"],
+            &quant_rows
+        )
+    );
+    let off = quant_results.iter().find(|r| r.0 == "off").unwrap();
+    let q8kv = quant_results.iter().find(|r| r.0 == "q8_kv").unwrap();
+    let byte_ratio = q8kv.2 as f64 / off.2.max(1) as f64;
+    let tps_ratio = q8kv.1 / off.1.max(1e-9);
+    if byte_ratio <= 0.55 && tps_ratio >= 0.9 {
+        println!(
+            "OK: q8-kv holds {:.0}% of the f32 KV bytes at {:.2}x the f32 decode throughput",
+            byte_ratio * 100.0,
+            tps_ratio
+        );
+    } else {
+        println!(
+            "WARN: q8-kv byte ratio {byte_ratio:.2} (want <= 0.55), throughput ratio {tps_ratio:.2} (want >= 0.9)"
         );
     }
 }

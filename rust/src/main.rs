@@ -63,6 +63,7 @@ fn print_usage() {
                 OptSpec { name: "max-new", help: "serve: tokens to generate per request", default: Some("32") },
                 OptSpec { name: "batch", help: "serve: max in-flight sequences", default: Some("8") },
                 OptSpec { name: "page-size", help: "serve: KV page size in positions", default: Some("32") },
+                OptSpec { name: "quant", help: "serve: int8 execution plane — off, q8 (2:4 weight cores), or q8-kv (cores + KV pages)", default: Some("off") },
                 OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
                 OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
@@ -271,9 +272,19 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
         let (pruned, rep) = prune_model(&model, &stats, &job, rt.as_ref());
         (pruned, Some(rep))
     };
-    let compiled = CompiledModel::compile(&serving_model, prune_report.as_ref())?;
+    // --quant lowering switch: off = f32 everywhere; q8 = int8 2:4 weight
+    // cores; q8-kv = q8 cores plus int8 KV pages with per-position scales
+    let quant_name = args.get_or("quant", "off");
+    let (weight_quant, kv_quant) = match quant_name.as_str() {
+        "off" => (armor::model::WeightQuant::F32, armor::serve::KvQuant::F32),
+        "q8" => (armor::model::WeightQuant::q8(), armor::serve::KvQuant::F32),
+        "q8-kv" => (armor::model::WeightQuant::q8(), armor::serve::KvQuant::Q8),
+        other => armor::bail!("--quant must be off, q8, or q8-kv, got '{other}'"),
+    };
+    let compiled =
+        CompiledModel::compile_with_quant(&serving_model, prune_report.as_ref(), weight_quant)?;
     println!(
-        "[serve] compiled: exec forms {:?}, deployed weights {:.2} MiB",
+        "[serve] compiled: exec forms {:?}, deployed weights {:.2} MiB, quant {quant_name}",
         compiled.exec_summary(),
         compiled.storage_bytes() as f64 / (1 << 20) as f64
     );
@@ -320,6 +331,7 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             page_positions,
             kv_budget_bytes,
             prefix_sharing: !args.flag("no-prefix-share"),
+            kv_quant,
         },
     )?;
     for p in &prompts {

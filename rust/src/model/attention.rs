@@ -22,6 +22,13 @@
 //!   pattern is identical to the old monolithic head-major panel; the
 //!   kernel carries its position cursor across run boundaries, so paging
 //!   changes the iteration shape, never the arithmetic.
+//! - **Quantized runs**: a q8 pool's runs carry int8 codes plus one f32
+//!   scale per position. The kernel dequantizes in flight — the K scale is
+//!   folded into each row's score after the int8 dot, the V scale into the
+//!   row's softmax weight before the tile accumulation — reading ~¼ of the
+//!   f32 K/V bytes without ever materializing f32 rows. The scalar path
+//!   reads dequantized rows through `KvCache::{k_at, v_at}`, so
+//!   scalar-over-f32 stays the parity oracle for both pool dtypes.
 //! - **Blocking**: scores are computed in one sequential sweep (4-lane
 //!   unrolled dot products), then the weighted V-sum is accumulated in
 //!   4-row context tiles *within each run* so each pass over the output
@@ -112,7 +119,10 @@ impl AttnKernel {
 }
 
 /// One `(sequence, head)` task: fused score/softmax/weighted-sum of a single
-/// query head-slice, streaming the stream's contiguous K/V page runs.
+/// query head-slice, streaming the stream's contiguous K/V page runs. Q8
+/// runs are dequantized on the fly: scores fold each row's scale into the
+/// dot product's final multiply, and the V accumulation folds `v_scales[j]`
+/// into the softmax weight — the f32 rows are never materialized.
 fn attend_head_blocked(
     cache: &KvCache,
     layer: usize,
@@ -122,6 +132,7 @@ fn attend_head_blocked(
     scale: f32,
     out: &mut [f32],
 ) {
+    use crate::serve::PageRun;
     let hd = q.len();
 
     // pass 1: scores over the K page runs, tracking the running max; the
@@ -129,12 +140,26 @@ fn attend_head_blocked(
     let mut scores = vec![0.0f32; n_ctx];
     let mut maxs = f32::NEG_INFINITY;
     let mut j = 0usize;
-    for (kp, _) in cache.panel_runs(layer, head, n_ctx) {
-        for krow in kp.chunks_exact(hd) {
-            let sj = dot4(q, krow) * scale;
-            maxs = maxs.max(sj);
-            scores[j] = sj;
-            j += 1;
+    for run in cache.panel_runs(layer, head, n_ctx) {
+        match run {
+            PageRun::F32 { k: kp, .. } => {
+                for krow in kp.chunks_exact(hd) {
+                    let sj = dot4(q, krow) * scale;
+                    maxs = maxs.max(sj);
+                    scores[j] = sj;
+                    j += 1;
+                }
+            }
+            PageRun::Q8 { k: kp, k_scales, .. } => {
+                for (krow, &ks) in kp.chunks_exact(hd).zip(k_scales) {
+                    // fused dequant: int8 dot accumulated in f32, one
+                    // scale multiply per row instead of per element
+                    let sj = dot4_q8(q, krow) * ks * scale;
+                    maxs = maxs.max(sj);
+                    scores[j] = sj;
+                    j += 1;
+                }
+            }
         }
     }
     debug_assert_eq!(j, n_ctx, "page runs must cover exactly n_ctx positions");
@@ -151,34 +176,93 @@ fn attend_head_blocked(
     // read-modify-write sweep of `out` folds in four positions' values;
     // the ragged tail of a run (page remainder) folds in single rows
     let mut base = 0usize;
-    for (_, vp) in cache.panel_runs(layer, head, n_ctx) {
-        let run = vp.len() / hd;
-        let w = &scores[base..base + run];
-        let mut j = 0;
-        while j + CTX_TILE <= run {
-            let w0 = w[j] * inv;
-            let w1 = w[j + 1] * inv;
-            let w2 = w[j + 2] * inv;
-            let w3 = w[j + 3] * inv;
-            let v0 = &vp[j * hd..(j + 1) * hd];
-            let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
-            let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
-            let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
-            for t in 0..hd {
-                out[t] += w0 * v0[t] + w1 * v1[t] + w2 * v2[t] + w3 * v3[t];
+    for run_v in cache.panel_runs(layer, head, n_ctx) {
+        match run_v {
+            PageRun::F32 { v: vp, .. } => {
+                let run = vp.len() / hd;
+                let w = &scores[base..base + run];
+                let mut j = 0;
+                while j + CTX_TILE <= run {
+                    let w0 = w[j] * inv;
+                    let w1 = w[j + 1] * inv;
+                    let w2 = w[j + 2] * inv;
+                    let w3 = w[j + 3] * inv;
+                    let v0 = &vp[j * hd..(j + 1) * hd];
+                    let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
+                    let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
+                    let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
+                    for t in 0..hd {
+                        out[t] += w0 * v0[t] + w1 * v1[t] + w2 * v2[t] + w3 * v3[t];
+                    }
+                    j += CTX_TILE;
+                }
+                while j < run {
+                    let wj = w[j] * inv;
+                    let vj = &vp[j * hd..(j + 1) * hd];
+                    for t in 0..hd {
+                        out[t] += wj * vj[t];
+                    }
+                    j += 1;
+                }
+                base += run;
             }
-            j += CTX_TILE;
-        }
-        while j < run {
-            let wj = w[j] * inv;
-            let vj = &vp[j * hd..(j + 1) * hd];
-            for t in 0..hd {
-                out[t] += wj * vj[t];
+            PageRun::Q8 { v: vp, v_scales, .. } => {
+                let run = v_scales.len();
+                let w = &scores[base..base + run];
+                let mut j = 0;
+                // same CTX_TILE shape, with each row's dequant scale folded
+                // into its softmax weight (one multiply per row)
+                while j + CTX_TILE <= run {
+                    let w0 = w[j] * inv * v_scales[j];
+                    let w1 = w[j + 1] * inv * v_scales[j + 1];
+                    let w2 = w[j + 2] * inv * v_scales[j + 2];
+                    let w3 = w[j + 3] * inv * v_scales[j + 3];
+                    let v0 = &vp[j * hd..(j + 1) * hd];
+                    let v1 = &vp[(j + 1) * hd..(j + 2) * hd];
+                    let v2 = &vp[(j + 2) * hd..(j + 3) * hd];
+                    let v3 = &vp[(j + 3) * hd..(j + 4) * hd];
+                    for t in 0..hd {
+                        out[t] += w0 * v0[t] as f32
+                            + w1 * v1[t] as f32
+                            + w2 * v2[t] as f32
+                            + w3 * v3[t] as f32;
+                    }
+                    j += CTX_TILE;
+                }
+                while j < run {
+                    let wj = w[j] * inv * v_scales[j];
+                    let vj = &vp[j * hd..(j + 1) * hd];
+                    for t in 0..hd {
+                        out[t] += wj * vj[t] as f32;
+                    }
+                    j += 1;
+                }
+                base += run;
             }
-            j += 1;
         }
-        base += run;
     }
+}
+
+/// 4-lane unrolled dot of a f32 query against an int8 K row (codes widened
+/// in registers; the caller applies the row's dequant scale once).
+#[inline]
+fn dot4_q8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        acc[0] += x[0] * y[0] as f32;
+        acc[1] += x[1] * y[1] as f32;
+        acc[2] += x[2] * y[2] as f32;
+        acc[3] += x[3] * y[3] as f32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * *y as f32;
+    }
+    s
 }
 
 /// 4-lane unrolled dot product (independent accumulators so the compiler
@@ -428,6 +512,87 @@ mod tests {
             let a = kern.attend_batch(&[&forked], layer, &q, &[11]);
             let b = kern.attend_batch(&[&private], layer, &q, &[11]);
             assert_eq!(a.data, b.data, "layer {layer}: fork must be bit-identical");
+        }
+    }
+
+    /// The blocked kernel's fused q8 dequant agrees with the scalar oracle
+    /// reading the *same* quantized cache through the dequantizing
+    /// accessors: identical values, different association — bit-close.
+    #[test]
+    fn q8_blocked_matches_scalar_over_same_codes() {
+        let cfg = cfg(20, 2); // head_dim 10: dot4 remainder + page remainders
+        for pp in [1usize, 3, 5, 8] {
+            let pool =
+                crate::serve::KvPool::new_with_quant(&cfg, pp, None, crate::serve::KvQuant::Q8)
+                    .unwrap();
+            let mut rng = Pcg64::seed_from_u64(47 + pp as u64);
+            let lens = [1usize, 4, 7, 17, 24];
+            let caches: Vec<KvCache> = lens
+                .iter()
+                .map(|&n| {
+                    let mut c = pool.new_cache();
+                    for _ in 0..n {
+                        let k: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                        let v: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+                        for l in 0..cfg.n_layers {
+                            c.append(l, &k, &v);
+                        }
+                        c.advance(1);
+                    }
+                    c
+                })
+                .collect();
+            let refs: Vec<&KvCache> = caches.iter().collect();
+            let q = Matrix::randn(lens.len(), cfg.d_model, &mut rng);
+            let blocked = AttnKernel::new(2, 10).attend_batch(&refs, 0, &q, &lens);
+            let scalar = attend_batch_scalar(&refs, 0, &q, &lens, 2);
+            let diff = blocked.max_abs_diff(&scalar);
+            assert!(diff < 1e-5, "page size {pp}: q8 blocked vs scalar diff {diff}");
+        }
+    }
+
+    /// Q8 attention stays close to the f32 attention over the same rows:
+    /// the error is bounded by the quantization perturbation (scores shift
+    /// by at most `D = scale·Σ|q|·kmax/254` per position, softmax weights by
+    /// `e^{2D}`, plus the V rows' own `vmax/254` dequant error).
+    #[test]
+    fn q8_attention_close_to_f32_attention() {
+        let cfg = cfg(16, 2);
+        let f32_pool = crate::serve::KvPool::new(&cfg, 4, None).unwrap();
+        let q8_pool =
+            crate::serve::KvPool::new_with_quant(&cfg, 4, None, crate::serve::KvQuant::Q8)
+                .unwrap();
+        let mut rng = Pcg64::seed_from_u64(71);
+        let n = 14usize;
+        let mut cf = f32_pool.new_cache();
+        let mut cq = q8_pool.new_cache();
+        let mut kmax = 0.0f32;
+        let mut vmax = 0.0f32;
+        for _ in 0..n {
+            let k: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f32> = (0..cfg.d_model).map(|_| rng.next_gaussian()).collect();
+            kmax = k.iter().fold(kmax, |a, &x| a.max(x.abs()));
+            vmax = v.iter().fold(vmax, |a, &x| a.max(x.abs()));
+            for l in 0..cfg.n_layers {
+                cf.append(l, &k, &v);
+                cq.append(l, &k, &v);
+            }
+            cf.advance(1);
+            cq.advance(1);
+        }
+        let q = Matrix::randn(1, cfg.d_model, &mut rng);
+        let kern = AttnKernel::new(2, 8);
+        let f32_out = kern.attend_batch(&[&cf], 0, &q, &[n]);
+        let q8_out = kern.attend_batch(&[&cq], 0, &q, &[n]);
+        let hd = 8usize;
+        for h in 0..2 {
+            let q_l1: f32 = q.row(0)[h * hd..(h + 1) * hd].iter().map(|x| x.abs()).sum();
+            let d_max = q_l1 * (kmax / 254.0) / (hd as f32).sqrt();
+            let tol = ((2.0 * d_max).exp() - 1.0) * vmax + vmax / 254.0 + 1e-4;
+            for t in 0..hd {
+                let d = (q8_out[(0, h * hd + t)] - f32_out[(0, h * hd + t)]).abs();
+                assert!(d <= tol, "head {h} col {t}: diff {d} > tol {tol}");
+            }
         }
     }
 

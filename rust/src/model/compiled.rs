@@ -24,9 +24,26 @@ use crate::model::attention::{attend_batch_scalar, AttnImpl, AttnKernel};
 use crate::model::gpt::{gelu_inplace, layer_norm};
 use crate::model::{prunable_layers, GptConfig, GptModel, MoeConfig};
 use crate::serve::{KvCache, KvPool, PrefixRegistry};
-use crate::sparsity::{Compressed24, Mask};
+use crate::sparsity::{Compressed24, Compressed24Q8, Mask, DEFAULT_Q8_GROUP};
 use crate::tensor::{BlockDiag, Matrix};
 use std::collections::BTreeMap;
+
+/// Storage dtype of the 2:4 value plane in compiled linears
+/// (`armor serve --quant q8` lowers through [`WeightQuant::Q8`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WeightQuant {
+    #[default]
+    F32,
+    /// Symmetric int8 codes, one f32 scale per `group` packed values.
+    Q8 { group: usize },
+}
+
+impl WeightQuant {
+    /// The `--quant q8` default: [`DEFAULT_Q8_GROUP`]-value scale groups.
+    pub fn q8() -> WeightQuant {
+        WeightQuant::Q8 { group: DEFAULT_Q8_GROUP }
+    }
+}
 
 /// One prunable linear in its deployment form. All variants compute
 /// `y = x Ŵᵀ` for row-major activations `x` (`n × d_in` → `n × d_out`).
@@ -36,9 +53,15 @@ pub enum ExecLinear {
     Dense(Matrix),
     /// Compressed 2:4 weight, executed from the packed layout.
     Sparse24(Compressed24),
+    /// Compressed 2:4 weight with an int8 value plane, executed through the
+    /// fused dequant-accumulate [`Compressed24Q8::matmul_q8`].
+    Sparse24Q8(Compressed24Q8),
     /// ARMOR factorization `Ŵ = post · core · pre` (paper's `A · S · B`),
     /// applied input-to-output: `y = A (S (B x))`.
     Armor { pre: BlockDiag, core: Compressed24, post: BlockDiag },
+    /// ARMOR with a quantized 2:4 core: the block-diagonal wrappers stay
+    /// f32 (they are a few percent of the bytes), the core streams int8.
+    ArmorQ8 { pre: BlockDiag, core: Compressed24Q8, post: BlockDiag },
 }
 
 impl ExecLinear {
@@ -46,7 +69,9 @@ impl ExecLinear {
         match self {
             ExecLinear::Dense(w) => w.rows,
             ExecLinear::Sparse24(c) => c.rows,
+            ExecLinear::Sparse24Q8(c) => c.rows,
             ExecLinear::Armor { core, .. } => core.rows,
+            ExecLinear::ArmorQ8 { core, .. } => core.rows,
         }
     }
 
@@ -54,7 +79,9 @@ impl ExecLinear {
         match self {
             ExecLinear::Dense(w) => w.cols,
             ExecLinear::Sparse24(c) => c.cols,
+            ExecLinear::Sparse24Q8(c) => c.cols,
             ExecLinear::Armor { core, .. } => core.cols,
+            ExecLinear::ArmorQ8 { core, .. } => core.cols,
         }
     }
 
@@ -66,11 +93,18 @@ impl ExecLinear {
         match self {
             ExecLinear::Dense(w) => gemm_nt(x, w),
             ExecLinear::Sparse24(c) => c.matmul(&x.transpose()).transpose(),
+            ExecLinear::Sparse24Q8(c) => c.matmul_q8(&x.transpose()).transpose(),
             ExecLinear::Armor { pre, core, post } => {
                 let xt = x.transpose(); // d_in × n
                 let bx = pre.matmul_right(&xt); // B x
                 let sx = core.matmul(&bx); // S (B x)
                 post.matmul_right(&sx).transpose() // (A (S (B x)))ᵀ
+            }
+            ExecLinear::ArmorQ8 { pre, core, post } => {
+                let xt = x.transpose();
+                let bx = pre.matmul_right(&xt);
+                let sx = core.matmul_q8(&bx);
+                post.matmul_right(&sx).transpose()
             }
         }
     }
@@ -80,7 +114,11 @@ impl ExecLinear {
         match self {
             ExecLinear::Dense(w) => w.rows * w.cols * 4,
             ExecLinear::Sparse24(c) => c.storage_bytes(),
+            ExecLinear::Sparse24Q8(c) => c.storage_bytes(),
             ExecLinear::Armor { pre, core, post } => {
+                core.storage_bytes() + (pre.param_count() + post.param_count()) * 4
+            }
+            ExecLinear::ArmorQ8 { pre, core, post } => {
                 core.storage_bytes() + (pre.param_count() + post.param_count()) * 4
             }
         }
@@ -90,8 +128,22 @@ impl ExecLinear {
         match self {
             ExecLinear::Dense(_) => "dense",
             ExecLinear::Sparse24(_) => "2:4",
+            ExecLinear::Sparse24Q8(_) => "2:4-q8",
             ExecLinear::Armor { .. } => "armor",
+            ExecLinear::ArmorQ8 { .. } => "armor-q8",
         }
+    }
+
+    /// Lower this linear's 2:4 value plane to int8 (dense linears have no
+    /// 2:4 plane and pass through unchanged; quantizing twice is a no-op).
+    pub fn quantize(self, group: usize) -> crate::Result<ExecLinear> {
+        Ok(match self {
+            ExecLinear::Sparse24(c) => ExecLinear::Sparse24Q8(c.quantize(group)?),
+            ExecLinear::Armor { pre, core, post } => {
+                ExecLinear::ArmorQ8 { pre, core: core.quantize(group)?, post }
+            }
+            other => other,
+        })
     }
 }
 
@@ -187,6 +239,34 @@ impl CompiledModel {
             .map(|(name, m)| (name.clone(), m.clone()))
             .collect();
         Ok(CompiledModel { cfg: model.cfg.clone(), tensors, linears, attn: AttnImpl::default() })
+    }
+
+    /// Lowering switch for the weight value plane: compile, then quantize
+    /// every 2:4 linear to int8 when `quant` asks for it (`armor serve
+    /// --quant q8`/`q8-kv`). [`WeightQuant::F32`] is exactly
+    /// [`CompiledModel::compile`].
+    pub fn compile_with_quant(
+        model: &GptModel,
+        report: Option<&PruneRunReport>,
+        quant: WeightQuant,
+    ) -> crate::Result<CompiledModel> {
+        let compiled = CompiledModel::compile(model, report)?;
+        match quant {
+            WeightQuant::F32 => Ok(compiled),
+            WeightQuant::Q8 { group } => compiled.quantize_weights(group),
+        }
+    }
+
+    /// Quantize every compiled 2:4 value plane to symmetric int8 with
+    /// per-`group` scales (builder-style; dense linears pass through — they
+    /// carry no 2:4 plane to quantize). The 2:4 metadata, block-diagonal
+    /// wrappers, embeddings, and LayerNorm tensors stay f32.
+    pub fn quantize_weights(mut self, group: usize) -> crate::Result<CompiledModel> {
+        let linears = std::mem::take(&mut self.linears);
+        for (name, lin) in linears {
+            self.linears.insert(name, lin.quantize(group)?);
+        }
+        Ok(self)
     }
 
     /// Select the attention implementation (builder-style). The scalar
@@ -614,6 +694,84 @@ mod tests {
         // A(S(Bx)) vs the folded dense (ASB)x: same values, different
         // association — tolerance covers the f32 reassociation only
         assert!(a.max_abs_diff(&b) < 1e-3, "diff {}", a.max_abs_diff(&b));
+    }
+
+    /// The q8 lowering switch: 2:4 and ARMOR cores become their int8
+    /// variants, storage shrinks toward ¼ of the f32-compressed bytes, and
+    /// the quantized forward stays within the quantization error envelope
+    /// of the f32-compressed forward.
+    #[test]
+    fn quantized_lowering_shrinks_storage_and_tracks_f32_forward() {
+        let (model, _) = pruned(Method::Wanda, 80);
+        let f32_compiled = CompiledModel::compile(&model, None).unwrap();
+        let q8_compiled =
+            CompiledModel::compile_with_quant(&model, None, WeightQuant::q8()).unwrap();
+        assert!(
+            q8_compiled.linears.values().all(|l| matches!(l, ExecLinear::Sparse24Q8(_))),
+            "{:?}",
+            q8_compiled.exec_summary()
+        );
+        assert_eq!(q8_compiled.exec_summary().get("2:4-q8"), Some(&q8_compiled.linears.len()));
+        let f32_lin: usize = f32_compiled.linears.values().map(|l| l.storage_bytes()).sum();
+        let q8_lin: usize = q8_compiled.linears.values().map(|l| l.storage_bytes()).sum();
+        assert!(q8_lin * 10 < f32_lin * 4, "q8 linears {q8_lin} vs f32 {f32_lin}");
+        assert!(q8_compiled.storage_bytes() < f32_compiled.storage_bytes());
+        let t = toks(10, 81);
+        let a = f32_compiled.forward(&t);
+        let b = q8_compiled.forward(&t);
+        // per-weight error <= wmax/254 (~0.4%) compounds across the 2-layer
+        // residual stream; 5% of the logit scale is a comfortable envelope,
+        // and the outputs must not be wildly different either
+        let scale = a.data.iter().fold(1.0f32, |acc, &x| acc.max(x.abs()));
+        assert!(a.max_abs_diff(&b) < 5e-2 * scale, "diff {}", a.max_abs_diff(&b));
+        assert!(a.max_abs_diff(&b) > 0.0, "quantization must actually perturb the forward");
+
+        // ARMOR cores quantize the same way, wrappers untouched
+        let cfg = crate::armor::ArmorConfig { d_block: 8, n_iters: 6, ..Default::default() };
+        let (am, ar) = pruned(Method::Armor(cfg), 82);
+        let aq = CompiledModel::compile_with_quant(&am, Some(&ar), WeightQuant::q8()).unwrap();
+        assert!(
+            aq.linears.values().all(|l| matches!(l, ExecLinear::ArmorQ8 { .. })),
+            "{:?}",
+            aq.exec_summary()
+        );
+        // idempotent: quantizing an already-q8 model is a no-op lowering
+        let again = aq.clone().quantize_weights(DEFAULT_Q8_GROUP).unwrap();
+        assert_eq!(again.exec_summary(), aq.exec_summary());
+    }
+
+    /// Q8 execution keeps the serve stack's core invariant: KV-cached
+    /// decode reproduces the quantized model's own full forward bit-close
+    /// (prefill and decode run identical arithmetic over identical weights,
+    /// quantized or not).
+    #[test]
+    fn q8_decode_step_matches_q8_full_forward() {
+        for (label, model, report) in [
+            ("2:4-q8", pruned(Method::NoWagP, 85).0, None),
+            {
+                let cfg = crate::armor::ArmorConfig { d_block: 8, n_iters: 6, ..Default::default() };
+                let (m, r) = pruned(Method::Armor(cfg), 86);
+                ("armor-q8", m, Some(r))
+            },
+        ] {
+            let compiled =
+                CompiledModel::compile_with_quant(&model, report.as_ref(), WeightQuant::q8())
+                    .unwrap();
+            let t = toks(12, 87);
+            let full = compiled.forward(&t);
+            let mut cache = KvCache::new(&compiled.cfg);
+            for (i, &tok) in t.iter().enumerate() {
+                let logits = compiled.decode_step(&mut cache, tok);
+                for c in 0..full.cols {
+                    assert!(
+                        (logits[c] - full[(i, c)]).abs() < 1e-4,
+                        "{label}: pos {i} logit {c}: {} vs {}",
+                        logits[c],
+                        full[(i, c)]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod gpt;
 mod layers;
 
 pub use attention::{attend_batch_scalar, attend_scalar, AttnImpl, AttnKernel};
-pub use compiled::{argmax, mask_24_from_zeros, CompiledModel, ExecLinear};
+pub use compiled::{argmax, mask_24_from_zeros, CompiledModel, ExecLinear, WeightQuant};
 pub use config::{GptConfig, MoeConfig};
 pub use gpt::{ActivationCapture, GptModel, NoCapture};
 pub use layers::{prunable_layers, LayerRef};

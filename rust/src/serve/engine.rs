@@ -13,7 +13,7 @@
 
 use crate::model::{argmax, CompiledModel};
 use crate::serve::scheduler::{ActiveSeq, Scheduler};
-use crate::serve::{KvPool, PrefixRegistry, RequestId, DEFAULT_PREFIX_ENTRIES};
+use crate::serve::{KvPool, KvQuant, PrefixRegistry, RequestId, DEFAULT_PREFIX_ENTRIES};
 use crate::util::timer::Stats;
 use std::time::Instant;
 
@@ -29,6 +29,11 @@ pub struct EngineConfig {
     pub kv_budget_bytes: Option<usize>,
     /// Retain prompt-prefix page chains for reuse across requests.
     pub prefix_sharing: bool,
+    /// Storage dtype of the KV pages (`armor serve --quant q8-kv` serves
+    /// from int8 pages). Admission demand is computed from the pool's
+    /// actual page bytes, so a byte budget admits proportionally more
+    /// sequences when pages are q8.
+    pub kv_quant: KvQuant,
 }
 
 impl Default for EngineConfig {
@@ -38,6 +43,7 @@ impl Default for EngineConfig {
             page_positions: crate::serve::DEFAULT_PAGE_POSITIONS,
             kv_budget_bytes: None,
             prefix_sharing: true,
+            kv_quant: KvQuant::F32,
         }
     }
 }
@@ -182,7 +188,8 @@ impl Engine {
             "model context window {} cannot hold a prompt token plus a generated token",
             model.cfg.max_seq
         );
-        let pool = KvPool::new(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes)?;
+        let pool =
+            KvPool::new_with_quant(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes, cfg.kv_quant)?;
         let prefix = if cfg.prefix_sharing {
             PrefixRegistry::new(pool.clone(), DEFAULT_PREFIX_ENTRIES)
         } else {
@@ -510,6 +517,7 @@ mod tests {
                 page_positions: 4,
                 kv_budget_bytes: Some(budget),
                 prefix_sharing: false,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -523,6 +531,66 @@ mod tests {
         for r in &report.requests {
             assert_eq!(r.n_generated, 8);
         }
+    }
+
+    /// Q8 KV pages shrink the admission unit: under the same `--kv-budget-mb`
+    /// byte budget, worst-case reservations are recomputed from the pool's
+    /// actual (smaller) page bytes, so a q8-kv engine runs sequences
+    /// concurrently where the f32 engine must serialize them — and still
+    /// completes every request.
+    #[test]
+    fn q8_kv_budget_admits_proportionally_more_sequences() {
+        let compiled = small_model();
+        // budget sized to exactly one f32 sequence's worst case (12
+        // positions -> 3 pages x 4 chains)
+        let probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let budget = probe.pages_for_seq(12) * probe.page_bytes();
+        let mk = |quant: crate::serve::KvQuant| {
+            Engine::new(
+                compiled.clone(),
+                EngineConfig {
+                    max_batch: 4,
+                    page_positions: 4,
+                    kv_budget_bytes: Some(budget),
+                    prefix_sharing: false,
+                    kv_quant: quant,
+                },
+            )
+            .unwrap()
+        };
+        let mut f32_engine = mk(crate::serve::KvQuant::F32);
+        let mut q8_engine = mk(crate::serve::KvQuant::Q8);
+        // q8 page = (hd + 4) / (4·hd) of the f32 page: head_dim 16 -> 31.25%
+        assert!(q8_engine.pool().page_bytes() * 3 < f32_engine.pool().page_bytes());
+        assert!(
+            q8_engine.pool().capacity_pages() >= 3 * f32_engine.pool().capacity_pages(),
+            "same budget must hold >= 3x the q8 pages: {} vs {}",
+            q8_engine.pool().capacity_pages(),
+            f32_engine.pool().capacity_pages()
+        );
+        for i in 0..3 {
+            f32_engine.submit(&toks(5, i), 8);
+            q8_engine.submit(&toks(5, i), 8);
+        }
+        let f32_report = f32_engine.drain();
+        let q8_report = q8_engine.drain();
+        assert_eq!(f32_report.peak_batch, 1, "f32 budget serializes");
+        assert!(
+            q8_report.peak_batch >= 3,
+            "q8 pages must let all 3 sequences run concurrently, got peak {}",
+            q8_report.peak_batch
+        );
+        assert_eq!(f32_report.requests.len(), 3, "serialized f32 requests still complete");
+        for r in &q8_report.requests {
+            assert_eq!(r.n_generated, 8, "quantized serving still completes requests");
+        }
+        // at 3x the concurrency the q8 run still peaked below the f32
+        // byte budget: 36 pages x 160 B < 12 pages x 512 B
+        assert!(
+            q8_report.kv_reserved_bytes <= budget,
+            "q8 reserved {} exceeded the byte budget {budget}",
+            q8_report.kv_reserved_bytes
+        );
     }
 
     #[test]

@@ -27,9 +27,22 @@
 //! while shared — the last, partial one — is copied on first write via
 //! `Arc::make_mut`. Divergence therefore costs one page copy per chain,
 //! never a panel copy.
+//!
+//! # Quantized pages
+//!
+//! A pool built with [`KvQuant::Q8`](crate::serve::KvQuant) stores each
+//! position's K (and V) head-slice as symmetric int8 codes plus one f32
+//! scale, quantized inside [`KvCache::append`] — a slice's scale is computed
+//! once when its position is written and never rewritten, so CoW copies and
+//! prefix forks carry codes and scales together by construction. Readers see
+//! the dtype through [`PageRun`]: the blocked attention kernel dequantizes
+//! q8 runs on the fly, while [`KvCache::k_at`]/[`KvCache::v_at`] hand back
+//! dequantized rows (borrowed for f32 pages, owned for q8) for the scalar
+//! oracle and tests.
 
 use crate::model::GptConfig;
-use crate::serve::kv_pool::{KvPool, Page};
+use crate::serve::kv_pool::{KvPool, Page, PageValues};
+use std::borrow::Cow;
 use std::sync::Arc;
 
 /// Append-only K/V store: per `(layer, head)`, a refcounted page chain.
@@ -100,6 +113,11 @@ impl KvCache {
         self.page_positions
     }
 
+    /// Storage dtype of the backing pool's pages.
+    pub fn quant(&self) -> crate::serve::KvQuant {
+        self.pool.quant()
+    }
+
     /// Pages this cache references across all chains (shared ones included —
     /// the engine subtracts the pool's unique-page count to measure sharing).
     pub fn pages_referenced(&self) -> usize {
@@ -145,23 +163,23 @@ impl KvCache {
     /// Append one token's K and V rows for `layer`, scattering each
     /// `d_model` row into the per-head page chains. Allocates the next page
     /// from the pool at page boundaries; copies a shared trailing page
-    /// before writing (CoW). Call for every layer, then commit the token(s)
-    /// with [`KvCache::advance`].
+    /// before writing (CoW). On a q8 pool the head-slices are quantized
+    /// here (one scale per slice, fixed at write time). Call for every
+    /// layer, then commit the token(s) with [`KvCache::advance`].
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.d_model);
         debug_assert_eq!(v_row.len(), self.d_model);
         let t = self.filled[layer];
         assert!(t < self.max_seq, "kv cache overflow: position {t} >= max_seq {}", self.max_seq);
         let (hd, pp) = (self.head_dim, self.page_positions);
-        let (page_idx, off) = (t / pp, (t % pp) * hd);
+        let (page_idx, pos) = (t / pp, t % pp);
         for h in 0..self.n_heads {
             let chain = &mut self.chains[layer * self.n_heads + h];
             if chain.len() == page_idx {
                 chain.push(self.pool.alloc_page());
             }
             let page = Arc::make_mut(&mut chain[page_idx]);
-            page.k[off..off + hd].copy_from_slice(&k_row[h * hd..(h + 1) * hd]);
-            page.v[off..off + hd].copy_from_slice(&v_row[h * hd..(h + 1) * hd]);
+            page.write_position(pos, hd, &k_row[h * hd..(h + 1) * hd], &v_row[h * hd..(h + 1) * hd]);
         }
         self.filled[layer] = t + 1;
     }
@@ -194,30 +212,74 @@ impl KvCache {
         }
     }
 
-    /// One head's K slice of position `t` (`head_dim` values).
+    /// One head's K slice of position `t` (`head_dim` values) in f32:
+    /// borrowed straight from an f32 page, dequantized into an owned row
+    /// from a q8 page. The scalar attention oracle reads through this, so
+    /// "scalar over f32" stays the parity reference for every pool dtype.
     #[inline]
-    pub fn k_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
+    pub fn k_at(&self, layer: usize, head: usize, t: usize) -> Cow<'_, [f32]> {
         let page = &self.chain(layer, head)[t / self.page_positions];
-        let off = (t % self.page_positions) * self.head_dim;
-        &page.k[off..off + self.head_dim]
+        let pos = t % self.page_positions;
+        let off = pos * self.head_dim;
+        match &page.vals {
+            PageValues::F32 { k, .. } => Cow::Borrowed(&k[off..off + self.head_dim]),
+            PageValues::Q8 { k, k_scales, .. } => {
+                let s = k_scales[pos];
+                Cow::Owned(k[off..off + self.head_dim].iter().map(|&q| q as f32 * s).collect())
+            }
+        }
     }
 
-    /// One head's V slice of position `t` (`head_dim` values).
+    /// One head's V slice of position `t` (`head_dim` values) in f32 — see
+    /// [`KvCache::k_at`].
     #[inline]
-    pub fn v_at(&self, layer: usize, head: usize, t: usize) -> &[f32] {
+    pub fn v_at(&self, layer: usize, head: usize, t: usize) -> Cow<'_, [f32]> {
         let page = &self.chain(layer, head)[t / self.page_positions];
-        let off = (t % self.page_positions) * self.head_dim;
-        &page.v[off..off + self.head_dim]
+        let pos = t % self.page_positions;
+        let off = pos * self.head_dim;
+        match &page.vals {
+            PageValues::F32 { v, .. } => Cow::Borrowed(&v[off..off + self.head_dim]),
+            PageValues::Q8 { v, v_scales, .. } => {
+                let s = v_scales[pos];
+                Cow::Owned(v[off..off + self.head_dim].iter().map(|&q| q as f32 * s).collect())
+            }
+        }
     }
 
     /// Resident bytes of the cached activations (appended rows, not the
     /// page-capacity reservation; shared rows count here — per-cache view).
+    /// Quant-aware: a q8 row costs 1 byte per value plus one f32 scale per
+    /// head per plane.
     pub fn memory_bytes(&self) -> usize {
-        self.filled.iter().map(|&f| f * self.d_model * 4 * 2).sum()
+        let per_pos = match self.pool.quant() {
+            crate::serve::KvQuant::F32 => self.d_model * 4 * 2,
+            crate::serve::KvQuant::Q8 => self.d_model * 2 + self.n_heads * 2 * 4,
+        };
+        self.filled.iter().map(|&f| f * per_pos).sum()
     }
 }
 
-/// Iterator of contiguous `(K, V)` page runs — see [`KvCache::panel_runs`].
+/// One contiguous page run of a `(layer, head)` stream, in the page's
+/// storage dtype — what [`KvCache::panel_runs`] yields and the blocked
+/// attention kernel streams. A q8 run carries one scale per position
+/// (`k_scales[j]` covers K codes `[j·head_dim, (j+1)·head_dim)`).
+pub enum PageRun<'a> {
+    F32 { k: &'a [f32], v: &'a [f32] },
+    Q8 { k: &'a [i8], v: &'a [i8], k_scales: &'a [f32], v_scales: &'a [f32] },
+}
+
+impl PageRun<'_> {
+    /// Positions covered by this run.
+    #[inline]
+    pub fn positions(&self, head_dim: usize) -> usize {
+        match self {
+            PageRun::F32 { k, .. } => k.len() / head_dim,
+            PageRun::Q8 { k_scales, .. } => k_scales.len(),
+        }
+    }
+}
+
+/// Iterator of contiguous page runs — see [`KvCache::panel_runs`].
 pub struct PanelRuns<'a> {
     chain: &'a [Arc<Page>],
     head_dim: usize,
@@ -227,10 +289,10 @@ pub struct PanelRuns<'a> {
 }
 
 impl<'a> Iterator for PanelRuns<'a> {
-    type Item = (&'a [f32], &'a [f32]);
+    type Item = PageRun<'a>;
 
     #[inline]
-    fn next(&mut self) -> Option<(&'a [f32], &'a [f32])> {
+    fn next(&mut self) -> Option<PageRun<'a>> {
         if self.remaining == 0 {
             return None;
         }
@@ -238,7 +300,17 @@ impl<'a> Iterator for PanelRuns<'a> {
         let page = &self.chain[self.next_page];
         self.next_page += 1;
         self.remaining -= n;
-        Some((&page.k[..n * self.head_dim], &page.v[..n * self.head_dim]))
+        Some(match &page.vals {
+            PageValues::F32 { k, v } => {
+                PageRun::F32 { k: &k[..n * self.head_dim], v: &v[..n * self.head_dim] }
+            }
+            PageValues::Q8 { k, v, k_scales, v_scales } => PageRun::Q8 {
+                k: &k[..n * self.head_dim],
+                v: &v[..n * self.head_dim],
+                k_scales: &k_scales[..n],
+                v_scales: &v_scales[..n],
+            },
+        })
     }
 }
 
@@ -282,9 +354,9 @@ mod tests {
         c.advance(1);
         assert_eq!(c.len(), 1);
         // head-major: head h of position 0 holds the row's h-th head_dim slice
-        assert_eq!(c.k_at(0, 0, 0), &k[0..4]);
-        assert_eq!(c.k_at(0, 1, 0), &k[4..8]);
-        assert_eq!(c.v_at(1, 1, 0), &v[4..8]);
+        assert_eq!(&*c.k_at(0, 0, 0), &k[0..4]);
+        assert_eq!(&*c.k_at(0, 1, 0), &k[4..8]);
+        assert_eq!(&*c.v_at(1, 1, 0), &v[4..8]);
         assert_eq!(c.memory_bytes(), 2 * 2 * 8 * 4);
         c.clear();
         assert!(c.is_empty());
@@ -296,23 +368,24 @@ mod tests {
     fn page_runs_are_position_contiguous_per_head() {
         let mut c = paged_pool().new_cache();
         fill(&mut c, 5); // 2-position pages → runs of 2, 2, 1
-        let runs: Vec<(Vec<f32>, Vec<f32>)> = c
-            .panel_runs(0, 1, 5)
-            .map(|(k, v)| (k.to_vec(), v.to_vec()))
-            .collect();
+        let unpack = |r: PageRun<'_>| match r {
+            PageRun::F32 { k, v } => (k.to_vec(), v.to_vec()),
+            PageRun::Q8 { .. } => panic!("f32 pool must yield f32 runs"),
+        };
+        let runs: Vec<(Vec<f32>, Vec<f32>)> = c.panel_runs(0, 1, 5).map(unpack).collect();
         assert_eq!(runs.len(), 3);
         assert_eq!(runs[0].0.len(), 8); // 2 positions × head_dim 4
         assert_eq!(runs[2].0.len(), 4); // remainder run
         // concatenated runs equal the per-position accessor, in order
         let flat: Vec<f32> = runs.iter().flat_map(|(k, _)| k.iter().copied()).collect();
         for t in 0..5 {
-            assert_eq!(&flat[t * 4..(t + 1) * 4], c.k_at(0, 1, t), "position {t}");
+            assert_eq!(&flat[t * 4..(t + 1) * 4], &*c.k_at(0, 1, t), "position {t}");
             // head 1 of row t = values t*8+4 .. t*8+8
             assert_eq!(flat[t * 4], (t * 8 + 4) as f32);
         }
         // truncated view stops mid-chain
         assert_eq!(c.panel_runs(0, 1, 3).count(), 2);
-        let total: usize = c.panel_runs(0, 1, 3).map(|(k, _)| k.len()).sum();
+        let total: usize = c.panel_runs(0, 1, 3).map(|r| r.positions(4) * 4).sum();
         assert_eq!(total, 3 * 4);
     }
 
@@ -327,7 +400,7 @@ mod tests {
         // sharing is free: same pages, refcounts bumped
         assert_eq!(pool.pages_allocated(), 8);
         assert_eq!(fork.len(), 3);
-        assert_eq!(fork.k_at(0, 0, 2), base.k_at(0, 0, 2));
+        assert_eq!(&*fork.k_at(0, 0, 2), &*base.k_at(0, 0, 2));
 
         // divergence: both sides append their own position 3 — each write to
         // the shared partial page copies it; the full prefix pages stay shared
@@ -346,10 +419,10 @@ mod tests {
         // base's own append writes in place — no further copies
         assert_eq!(pool.pages_allocated(), 12);
         // the divergent position differs; the shared prefix is intact on both
-        assert_eq!(fork.k_at(0, 0, 3), &rf[0..4]);
-        assert_eq!(base.k_at(0, 0, 3), &rb[0..4]);
-        assert_eq!(fork.k_at(1, 1, 0), base.k_at(1, 1, 0));
-        assert_eq!(fork.k_at(0, 0, 2), base.k_at(0, 0, 2));
+        assert_eq!(&*fork.k_at(0, 0, 3), &rf[0..4]);
+        assert_eq!(&*base.k_at(0, 0, 3), &rb[0..4]);
+        assert_eq!(&*fork.k_at(1, 1, 0), &*base.k_at(1, 1, 0));
+        assert_eq!(&*fork.k_at(0, 0, 2), &*base.k_at(0, 0, 2));
 
         // retire: dropping a cache frees exactly its unshared pages
         drop(fork);
@@ -367,7 +440,71 @@ mod tests {
         let mut fork = base.fork_prefix(2); // page-aligned prefix
         fill(&mut fork, 1); // lands on a fresh page — no CoW of shared pages
         assert_eq!(pool.pages_allocated(), allocated + 4, "one new page per chain, zero copies");
-        assert_eq!(fork.k_at(0, 0, 1), base.k_at(0, 0, 1));
+        assert_eq!(&*fork.k_at(0, 0, 1), &*base.k_at(0, 0, 1));
+    }
+
+    /// Q8 pages quantize on append (error ≤ scale/2 per value) and CoW
+    /// forks preserve the prefix scales together with the codes: the forked
+    /// chain dequantizes bit-identically to the base across the shared
+    /// prefix even after both sides diverge mid-page.
+    #[test]
+    fn q8_append_quantizes_and_cow_preserves_scales() {
+        use crate::serve::KvQuant;
+        let pool = KvPool::new_with_quant(&cfg(), 2, None, KvQuant::Q8).unwrap();
+        let mut base = pool.new_cache();
+        assert_eq!(base.quant(), KvQuant::Q8);
+        // rows with per-position magnitudes so every position gets its own scale
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|t| (0..8).map(|i| (t as f32 + 1.0) * (i as f32 - 3.5) / 3.5).collect())
+            .collect();
+        for r in &rows {
+            for l in 0..2 {
+                base.append(l, r, r);
+            }
+            base.advance(1);
+        }
+        // quantization error bound: |deq - orig| <= max_abs/254 per head slice
+        for (t, r) in rows.iter().enumerate() {
+            for h in 0..2 {
+                let slice = &r[h * 4..(h + 1) * 4];
+                let max_abs = slice.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let deq = base.k_at(0, h, t);
+                for i in 0..4 {
+                    assert!(
+                        (deq[i] - slice[i]).abs() <= max_abs / 254.0 + 1e-7,
+                        "pos {t} head {h} elem {i}: {} vs {}",
+                        deq[i],
+                        slice[i]
+                    );
+                }
+            }
+        }
+        // fork mid-page (position 3 shares page 1 with base position 2)
+        let mut fork = base.fork_prefix(3);
+        let divergent: Vec<f32> = vec![0.25; 8];
+        for l in 0..2 {
+            fork.append(l, &divergent, &divergent);
+        }
+        fork.advance(1);
+        let huge: Vec<f32> = vec![100.0; 8];
+        for l in 0..2 {
+            base.append(l, &huge, &huge);
+        }
+        base.advance(1);
+        // shared prefix: identical codes AND scales on both sides of the CoW
+        for t in 0..3 {
+            for h in 0..2 {
+                assert_eq!(&*fork.k_at(0, h, t), &*base.k_at(0, h, t), "prefix pos {t} drifted");
+                assert_eq!(&*fork.v_at(1, h, t), &*base.v_at(1, h, t), "prefix pos {t} drifted");
+            }
+        }
+        // the divergent position carries its own scale per side: the fork's
+        // 0.25-max slice must not be flattened by base's 100.0-max write
+        assert!((fork.k_at(0, 0, 3)[0] - 0.25).abs() <= 0.25 / 254.0 + 1e-7);
+        assert!((base.k_at(0, 0, 3)[0] - 100.0).abs() <= 100.0 / 254.0 + 1e-4);
+        // memory accounting: q8 rows are 1 byte per value + 2 scales per head
+        let per_pos = 8 * 2 + 2 * 2 * 4;
+        assert_eq!(base.memory_bytes(), 2 * 4 * per_pos);
     }
 
     #[test]

@@ -30,28 +30,70 @@
 
 use crate::model::GptConfig;
 use crate::serve::KvCache;
+use crate::sparsity::q8_quantize;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Default positions per page (the serve engine's `--page-size` default).
 pub const DEFAULT_PAGE_POSITIONS: usize = 32;
 
+/// Storage dtype of the pool's K/V pages (`armor serve --quant q8-kv`).
+///
+/// `Q8` stores each position's `head_dim`-wide K (and V) slice as symmetric
+/// int8 with one f32 scale per slice, computed at append time and immutable
+/// thereafter — so copy-on-write clones and prefix forks carry their scales
+/// with the codes by construction, and there is no re-seal pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvQuant {
+    #[default]
+    F32,
+    Q8,
+}
+
+/// Page payload: the K and V planes in the pool's storage dtype. For `Q8`
+/// the scale vectors hold one entry per position slot (`page_positions`),
+/// `k_scales[t]` covering codes `k[t·head_dim .. (t+1)·head_dim)`.
+#[derive(Clone, Debug)]
+pub(crate) enum PageValues {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Q8 { k: Vec<i8>, v: Vec<i8>, k_scales: Vec<f32>, v_scales: Vec<f32> },
+}
+
 /// One fixed-size page of a single `(layer, head)` K/V stream:
 /// `page_positions × head_dim` K values plus the same for V, position-major
 /// (position `t` of the page owns `[t·head_dim .. (t+1)·head_dim)`).
 #[derive(Debug)]
 pub struct Page {
-    pub(crate) k: Vec<f32>,
-    pub(crate) v: Vec<f32>,
+    pub(crate) vals: PageValues,
     pool: Arc<PoolState>,
 }
 
+impl Page {
+    /// Write one position's K and V head-slices, quantizing on the way in
+    /// for q8 pages (the slice's scale is computed here, once, and never
+    /// rewritten — appends only ever touch fresh position slots).
+    pub(crate) fn write_position(&mut self, pos: usize, hd: usize, k_row: &[f32], v_row: &[f32]) {
+        let off = pos * hd;
+        match &mut self.vals {
+            PageValues::F32 { k, v } => {
+                k[off..off + hd].copy_from_slice(k_row);
+                v[off..off + hd].copy_from_slice(v_row);
+            }
+            PageValues::Q8 { k, v, k_scales, v_scales } => {
+                k_scales[pos] = q8_quantize(k_row, &mut k[off..off + hd]);
+                v_scales[pos] = q8_quantize(v_row, &mut v[off..off + hd]);
+            }
+        }
+    }
+}
+
 /// CoW clone: `Arc::make_mut` on a shared page lands here. The copy is a
-/// new pool allocation and is accounted as such.
+/// new pool allocation and is accounted as such; the payload clone carries
+/// q8 scales together with their codes.
 impl Clone for Page {
     fn clone(&self) -> Page {
         self.pool.note_alloc();
-        Page { k: self.k.clone(), v: self.v.clone(), pool: Arc::clone(&self.pool) }
+        Page { vals: self.vals.clone(), pool: Arc::clone(&self.pool) }
     }
 }
 
@@ -72,6 +114,8 @@ pub(crate) struct PoolState {
     pub n_layers: usize,
     pub max_seq: usize,
     pub d_model: usize,
+    /// storage dtype of every page in this pool
+    pub quant: KvQuant,
     /// admission budget in pages (`usize::MAX` = unbounded)
     pub capacity_pages: usize,
     /// live unique pages (shared pages count once)
@@ -96,16 +140,42 @@ pub struct KvPool {
     state: Arc<PoolState>,
 }
 
+/// Bytes of one page (K + V planes) under a given storage dtype. Q8 pays
+/// 1 byte per value plus one f32 scale per position slot per plane; the
+/// budget admission math divides by this, so a `--kv-budget-mb` pool admits
+/// proportionally more sequences when its pages are q8.
+pub(crate) fn page_bytes_for(quant: KvQuant, page_positions: usize, head_dim: usize) -> usize {
+    match quant {
+        KvQuant::F32 => 2 * page_positions * head_dim * 4,
+        KvQuant::Q8 => 2 * page_positions * head_dim + 2 * page_positions * 4,
+    }
+}
+
 impl KvPool {
-    /// Build a pool over a model shape. `budget_bytes = None` is unbounded
-    /// (solo generation, tests); `Some(b)` caps the pool at `b / page_bytes`
-    /// pages and is validated: the budget must hold at least one sequence's
-    /// first page row (one page per `(layer, head)` chain), otherwise no
-    /// request could ever be admitted and the configuration is unservable.
+    /// Build an f32-paged pool over a model shape (see
+    /// [`KvPool::new_with_quant`] for the general form). `budget_bytes =
+    /// None` is unbounded (solo generation, tests); `Some(b)` caps the pool
+    /// at `b / page_bytes` pages and is validated: the budget must hold at
+    /// least one sequence's first page row (one page per `(layer, head)`
+    /// chain), otherwise no request could ever be admitted and the
+    /// configuration is unservable.
     pub fn new(
         cfg: &GptConfig,
         page_positions: usize,
         budget_bytes: Option<usize>,
+    ) -> crate::Result<KvPool> {
+        KvPool::new_with_quant(cfg, page_positions, budget_bytes, KvQuant::F32)
+    }
+
+    /// Build a pool whose pages store K/V as `quant` (`--quant q8-kv`
+    /// serves from a [`KvQuant::Q8`] pool). The worst-case reservation unit
+    /// — [`KvPool::page_bytes`] — shrinks with the dtype, so the same byte
+    /// budget holds more pages.
+    pub fn new_with_quant(
+        cfg: &GptConfig,
+        page_positions: usize,
+        budget_bytes: Option<usize>,
+        quant: KvQuant,
     ) -> crate::Result<KvPool> {
         crate::ensure!(page_positions >= 1, "kv page size must be >= 1 position, got 0");
         crate::ensure!(
@@ -119,7 +189,7 @@ impl KvPool {
         // the budget check below toward rejecting servable budgets
         let page_positions = page_positions.min(cfg.max_seq.max(1));
         let head_dim = cfg.d_model / cfg.n_heads;
-        let page_bytes = 2 * page_positions * head_dim * 4;
+        let page_bytes = page_bytes_for(quant, page_positions, head_dim);
         let chains = cfg.n_layers * cfg.n_heads;
         let capacity_pages = match budget_bytes {
             None => usize::MAX,
@@ -145,6 +215,7 @@ impl KvPool {
                 n_layers: cfg.n_layers,
                 max_seq: cfg.max_seq,
                 d_model: cfg.d_model,
+                quant,
                 capacity_pages,
                 allocated: AtomicUsize::new(0),
                 peak_allocated: AtomicUsize::new(0),
@@ -169,13 +240,19 @@ impl KvPool {
         &self.state
     }
 
-    /// Bytes of one page (K + V planes).
+    /// Bytes of one page (K + V planes, plus the per-position scales for a
+    /// q8 pool).
     pub fn page_bytes(&self) -> usize {
-        2 * self.state.page_positions * self.state.head_dim * 4
+        page_bytes_for(self.state.quant, self.state.page_positions, self.state.head_dim)
     }
 
     pub fn page_positions(&self) -> usize {
         self.state.page_positions
+    }
+
+    /// Storage dtype of this pool's pages.
+    pub fn quant(&self) -> KvQuant {
+        self.state.quant
     }
 
     /// Page chains per sequence: one per `(layer, head)` stream.
@@ -266,7 +343,16 @@ impl KvPool {
     pub(crate) fn alloc_page(&self) -> Arc<Page> {
         self.state.note_alloc();
         let n = self.state.page_positions * self.state.head_dim;
-        Arc::new(Page { k: vec![0.0; n], v: vec![0.0; n], pool: Arc::clone(&self.state) })
+        let vals = match self.state.quant {
+            KvQuant::F32 => PageValues::F32 { k: vec![0.0; n], v: vec![0.0; n] },
+            KvQuant::Q8 => PageValues::Q8 {
+                k: vec![0; n],
+                v: vec![0; n],
+                k_scales: vec![0.0; self.state.page_positions],
+                v_scales: vec![0.0; self.state.page_positions],
+            },
+        };
+        Arc::new(Page { vals, pool: Arc::clone(&self.state) })
     }
 }
 
@@ -322,6 +408,25 @@ mod tests {
         assert_eq!(pool.take_peak_reserved(), 8);
         // peak window restarted at the current level
         assert_eq!(pool.take_peak_reserved(), 7);
+    }
+
+    #[test]
+    fn q8_pages_shrink_the_reservation_unit() {
+        // head_dim 4, 4-position pages: f32 page = 2·4·4·4 = 128 B,
+        // q8 page = 2·4·4 codes + 2·4 scales·4 B = 64 B
+        let pool_f32 = KvPool::new(&cfg(), 4, None).unwrap();
+        let pool_q8 = KvPool::new_with_quant(&cfg(), 4, None, KvQuant::Q8).unwrap();
+        assert_eq!(pool_f32.page_bytes(), 128);
+        assert_eq!(pool_q8.page_bytes(), 64);
+        assert_eq!(pool_q8.quant(), KvQuant::Q8);
+        // the same byte budget therefore holds proportionally more q8 pages
+        let budget = 16 * pool_f32.page_bytes();
+        let f32_cap = KvPool::new(&cfg(), 4, Some(budget)).unwrap().capacity_pages();
+        let q8_cap = KvPool::new_with_quant(&cfg(), 4, Some(budget), KvQuant::Q8)
+            .unwrap()
+            .capacity_pages();
+        assert_eq!(f32_cap, 16);
+        assert_eq!(q8_cap, 32, "half-size pages double the page budget");
     }
 
     #[test]

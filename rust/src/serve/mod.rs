@@ -6,7 +6,9 @@
 //!
 //! - [`KvPool`]: a shared, refcounted pool of fixed-size K/V pages plus the
 //!   byte-budget accounting (`try_reserve`/`release`) that makes admission
-//!   capacity-aware;
+//!   capacity-aware; pages store f32 or — under `--quant q8-kv` — int8
+//!   codes with per-position scales ([`KvQuant`]), shrinking both resident
+//!   bytes and the reservation unit the budget divides by;
 //! - [`KvCache`]: per-request page-table view over the pool — each
 //!   `(layer, head)` stream is a chain of pages, forked chains share prompt
 //!   prefixes by refcount with copy-on-write at divergence;
@@ -33,7 +35,7 @@ mod prefix;
 mod scheduler;
 
 pub use engine::{Engine, EngineConfig, RequestStats, ServeReport};
-pub use kv_cache::{KvCache, PanelRuns};
-pub use kv_pool::{KvPool, DEFAULT_PAGE_POSITIONS};
+pub use kv_cache::{KvCache, PageRun, PanelRuns};
+pub use kv_pool::{KvPool, KvQuant, DEFAULT_PAGE_POSITIONS};
 pub use prefix::{PrefixRegistry, DEFAULT_PREFIX_ENTRIES};
 pub use scheduler::{ActiveSeq, GenRequest, RequestId, Scheduler};

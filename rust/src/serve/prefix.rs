@@ -276,7 +276,7 @@ mod tests {
         templ.push(99);
         let hit = reg.lookup(&templ).expect("aligned prefix must hit");
         assert_eq!(hit.len(), 8, "reuse is the longest aligned prefix");
-        assert_eq!(hit.k_at(0, 0, 7), cache.k_at(0, 0, 7));
+        assert_eq!(&*hit.k_at(0, 0, 7), &*cache.k_at(0, 0, 7));
         assert_eq!((reg.hits(), reg.misses(), reg.reused_tokens()), (1, 1, 8));
 
         // same hash bucket, different tokens → verified, not served

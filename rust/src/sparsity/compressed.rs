@@ -1,4 +1,4 @@
-//! Compressed 2:4 storage and matvec.
+//! Compressed 2:4 storage and matvec — f32 and int8 value planes.
 //!
 //! This is the CPU analog of NVIDIA's sparse-tensor-core format: for each
 //! group of 4 consecutive columns we store the 2 surviving values plus a
@@ -9,9 +9,42 @@
 //! `matvec` walks the compressed layout directly, reading half the weight
 //! bytes of the dense path. This is what reproduces the *shape* of the
 //! paper's Table 4 (dense vs 2:4 vs ARMOR timings) on CPU.
+//!
+//! [`Compressed24Q8`] stacks a second compression axis on top: the packed
+//! values are symmetric int8 with one f32 scale per [`DEFAULT_Q8_GROUP`]
+//! consecutive packed values of a row (the 2:4 metadata is unchanged —
+//! quantization touches the value plane only). The fused
+//! [`Compressed24Q8::matmul_q8`] dequantizes on the fly inside the same
+//! one-shot-metadata-decode + row-panel-threaded loop as the f32 blocked
+//! path, so steady-state decode reads ~¼ of the f32-compressed weight
+//! bytes. Quantization error per value is bounded by `scale/2 =
+//! group_max/254` (symmetric round-to-nearest at 127 steps).
 
 use crate::sparsity::Mask;
 use crate::tensor::Matrix;
+
+/// Default packed values per quantization scale group (must be even so the
+/// two survivors of a 2:4 column group always share one scale).
+pub const DEFAULT_Q8_GROUP: usize = 16;
+
+/// Symmetric int8 quantization of one slice: returns the scale
+/// (`max_abs / 127`; 0.0 for an all-zero slice) and writes the rounded,
+/// clamped codes. Shared by the weight plane here and the KV page plane
+/// (`serve::kv_pool`).
+pub fn q8_quantize(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let max_abs = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if max_abs == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
 
 /// A 2:4-compressed matrix: per row, `cols/4` groups of (2 values, 2+2 bits).
 #[derive(Clone, Debug)]
@@ -93,14 +126,7 @@ impl Compressed24 {
     /// across every batch column in [`Compressed24::matmul`] instead of being
     /// re-derived per output element.
     fn decode_columns(&self) -> Vec<u32> {
-        let gpr = self.cols / 4;
-        let mut cols = Vec::with_capacity(self.meta.len() * 2);
-        for (g, &m) in self.meta.iter().enumerate() {
-            let base = ((g % gpr.max(1)) * 4) as u32;
-            cols.push(base + (m & 3) as u32);
-            cols.push(base + ((m >> 2) & 3) as u32);
-        }
-        cols
+        decode_meta_columns(&self.meta, self.cols / 4)
     }
 
     /// Batched matvec over the columns of `X` (`cols × batch`), producing
@@ -176,6 +202,207 @@ impl Compressed24 {
     /// (nibble-packable; we count the packed size for parity with hardware).
     pub fn storage_bytes(&self) -> usize {
         self.values.len() * 4 + self.meta.len().div_ceil(2)
+    }
+
+    /// Quantize the value plane to symmetric int8 with one f32 scale per
+    /// `group` consecutive packed values of each row (the last group of a
+    /// row may be ragged). The 2:4 metadata is shared unchanged. `group`
+    /// must be even so the two survivors of a 4-column group never straddle
+    /// a scale boundary.
+    pub fn quantize(&self, group: usize) -> crate::Result<Compressed24Q8> {
+        crate::ensure!(group >= 2 && group % 2 == 0, "q8 group must be even and >= 2, got {group}");
+        let vals_per_row = (self.cols / 4) * 2;
+        let groups_per_row = vals_per_row.div_ceil(group).max(1);
+        let mut qvalues = vec![0i8; self.values.len()];
+        let mut scales = Vec::with_capacity(self.rows * groups_per_row);
+        for r in 0..self.rows {
+            let base = r * vals_per_row;
+            for g0 in (0..vals_per_row.max(1)).step_by(group) {
+                let end = (g0 + group).min(vals_per_row);
+                scales.push(q8_quantize(
+                    &self.values[base + g0..base + end],
+                    &mut qvalues[base + g0..base + end],
+                ));
+            }
+        }
+        Ok(Compressed24Q8 {
+            rows: self.rows,
+            cols: self.cols,
+            group,
+            qvalues,
+            scales,
+            meta: self.meta.clone(),
+        })
+    }
+}
+
+/// Metadata nibbles → absolute column indices (`[c0, c1]` per group), the
+/// one-shot decode shared by the f32 and q8 blocked matmuls.
+fn decode_meta_columns(meta: &[u8], gpr: usize) -> Vec<u32> {
+    let mut cols = Vec::with_capacity(meta.len() * 2);
+    for (g, &m) in meta.iter().enumerate() {
+        let base = ((g % gpr.max(1)) * 4) as u32;
+        cols.push(base + (m & 3) as u32);
+        cols.push(base + ((m >> 2) & 3) as u32);
+    }
+    cols
+}
+
+/// A 2:4-compressed matrix with an int8 value plane: the same per-group
+/// metadata as [`Compressed24`], values stored as symmetric int8 codes with
+/// one f32 scale per `group` packed values per row. Memory per 4-column
+/// group: 2 bytes of codes + 0.5 metadata byte + `8/group` scale bytes —
+/// ~¼ of the f32-compressed layout at the default group of 16.
+#[derive(Clone, Debug)]
+pub struct Compressed24Q8 {
+    pub rows: usize,
+    pub cols: usize,
+    /// packed values per scale group (even; last group of a row ragged)
+    pub group: usize,
+    /// int8 codes, same layout as [`Compressed24::values`]
+    pub qvalues: Vec<i8>,
+    /// row-major scales: `rows × ceil(vals_per_row / group)`
+    pub scales: Vec<f32>,
+    /// one metadata byte per 4-column group (same encoding as f32)
+    pub meta: Vec<u8>,
+}
+
+impl Compressed24Q8 {
+    /// Compress and quantize in one step (`compress` → [`Compressed24::quantize`]).
+    pub fn compress(w: &Matrix, mask: &Mask, group: usize) -> crate::Result<Compressed24Q8> {
+        Compressed24::compress(w, mask)?.quantize(group)
+    }
+
+    #[inline]
+    fn vals_per_row(&self) -> usize {
+        (self.cols / 4) * 2
+    }
+
+    #[inline]
+    fn scale_groups_per_row(&self) -> usize {
+        self.vals_per_row().div_ceil(self.group).max(1)
+    }
+
+    /// Dequantize one packed value.
+    #[inline]
+    fn deq(&self, r: usize, i: usize) -> f32 {
+        let sbase = r * self.scale_groups_per_row();
+        self.qvalues[r * self.vals_per_row() + i] as f32 * self.scales[sbase + i / self.group]
+    }
+
+    /// Decompress + dequantize to a dense matrix (tests / verification).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let gpr = self.cols / 4;
+        for r in 0..self.rows {
+            for k in 0..gpr {
+                let m = self.meta[r * gpr + k];
+                let (i0, i1) = ((m & 3) as usize, ((m >> 2) & 3) as usize);
+                out[(r, k * 4 + i0)] = self.deq(r, 2 * k);
+                out[(r, k * 4 + i1)] = self.deq(r, 2 * k + 1);
+            }
+        }
+        out
+    }
+
+    /// Scalar sparse matvec with on-the-fly dequantization — the q8 analog
+    /// of [`Compressed24::matvec`] and the accumulation-order reference for
+    /// the blocked path.
+    pub fn matvec_q8(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let gpr = self.cols / 4;
+        let sgpr = self.scale_groups_per_row();
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let vbase = r * gpr * 2;
+            let mbase = r * gpr;
+            let sbase = r * sgpr;
+            let mut acc = 0.0f32;
+            for k in 0..gpr {
+                let m = self.meta[mbase + k];
+                let xg = &x[k * 4..k * 4 + 4];
+                // the value pair never straddles a scale group (group is even)
+                let s = self.scales[sbase + (2 * k) / self.group];
+                let w0 = self.qvalues[vbase + 2 * k] as f32 * s;
+                let w1 = self.qvalues[vbase + 2 * k + 1] as f32 * s;
+                acc += w0 * xg[(m & 3) as usize] + w1 * xg[((m >> 2) & 3) as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Fused dequant-accumulate batched matvec (`cols × batch` → `rows ×
+    /// batch`): the same one-shot metadata decode, JB batch blocking, and
+    /// row-panel threading as [`Compressed24::matmul`], with the int8 codes
+    /// dequantized in registers as they stream — the f32 weights are never
+    /// materialized. Accumulation order per output element is identical to
+    /// [`Compressed24Q8::matmul_q8_ref`], so the two are bit-exact.
+    pub fn matmul_q8(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.cols);
+        let gpr = self.cols / 4;
+        let sgpr = self.scale_groups_per_row();
+        let b = x.cols;
+        let mut out = Matrix::zeros(self.rows, b);
+        if self.rows == 0 || b == 0 || gpr == 0 {
+            return out;
+        }
+        let cols_dec = decode_meta_columns(&self.meta, gpr);
+        const JB: usize = 64;
+        let n_threads = crate::util::threadpool::num_threads().max(1);
+        let rows_per = self.rows.div_ceil(n_threads).max(1);
+        crate::util::threadpool::parallel_chunks_mut(&mut out.data, rows_per * b, |start, chunk| {
+            let r0 = start / b;
+            let nrows = chunk.len() / b;
+            for jb in (0..b).step_by(JB) {
+                let jend = (jb + JB).min(b);
+                for ri in 0..nrows {
+                    let r = r0 + ri;
+                    let vbase = r * gpr * 2;
+                    let dbase = r * gpr * 2;
+                    let sbase = r * sgpr;
+                    let orow = &mut chunk[ri * b + jb..ri * b + jend];
+                    for k in 0..gpr {
+                        let c0 = cols_dec[dbase + 2 * k] as usize;
+                        let c1 = cols_dec[dbase + 2 * k + 1] as usize;
+                        let s = self.scales[sbase + (2 * k) / self.group];
+                        let v0 = self.qvalues[vbase + 2 * k] as f32 * s;
+                        let v1 = self.qvalues[vbase + 2 * k + 1] as f32 * s;
+                        let x0 = &x.row(c0)[jb..jend];
+                        let x1 = &x.row(c1)[jb..jend];
+                        for ((o, &a0), &a1) in orow.iter_mut().zip(x0).zip(x1) {
+                            *o += v0 * a0 + v1 * a1;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Reference batched matvec: one [`Compressed24Q8::matvec_q8`] per batch
+    /// column — the scalar oracle the blocked path is bit-exact against.
+    pub fn matmul_q8_ref(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.cols);
+        let b = x.cols;
+        let mut out = Matrix::zeros(self.rows, b);
+        let mut col = vec![0.0f32; self.cols];
+        for j in 0..b {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = x[(i, j)];
+            }
+            let y = self.matvec_q8(&col);
+            for (i, &yi) in y.iter().enumerate() {
+                out[(i, j)] = yi;
+            }
+        }
+        out
+    }
+
+    /// Stored bytes: 1 int8 code per kept value + 0.5 metadata byte per
+    /// 4-column group + 4 bytes per scale group.
+    pub fn storage_bytes(&self) -> usize {
+        self.qvalues.len() + self.meta.len().div_ceil(2) + self.scales.len() * 4
     }
 }
 
@@ -254,5 +481,110 @@ mod tests {
         let w = Matrix::ones(2, 8);
         let mask = Mask::ones(2, 8);
         assert!(Compressed24::compress(&w, &mask).is_err());
+    }
+
+    // ---- int8 value plane ----
+
+    #[test]
+    fn q8_quantize_slice_bounds_and_zero_guard() {
+        let src = [0.5f32, -1.0, 0.25, 0.0];
+        let mut dst = [0i8; 4];
+        let scale = q8_quantize(&src, &mut dst);
+        assert_eq!(scale, 1.0 / 127.0);
+        assert_eq!(dst[1], -127);
+        for (i, &q) in dst.iter().enumerate() {
+            assert!((q as f32 * scale - src[i]).abs() <= scale / 2.0 + 1e-7, "elem {i}");
+        }
+        let mut dst = [7i8; 3];
+        assert_eq!(q8_quantize(&[0.0; 3], &mut dst), 0.0);
+        assert_eq!(dst, [0, 0, 0]);
+    }
+
+    #[test]
+    fn q8_roundtrip_error_bounded_by_group_scale() {
+        let (w, mask, c) = random_compressed(16, 64, 21);
+        for group in [2usize, 8, 16, 32] {
+            let q = c.quantize(group).unwrap();
+            assert_eq!(q.meta, c.meta, "metadata must be untouched by quantization");
+            let dense = mask.apply(&w);
+            let deq = q.to_dense();
+            // per-element error <= scale/2, scale = group_max/127 <= w_max/127
+            let wmax = w.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            assert!(
+                deq.max_abs_diff(&dense) <= wmax / 254.0 + 1e-6,
+                "group {group}: err {}",
+                deq.max_abs_diff(&dense)
+            );
+        }
+    }
+
+    #[test]
+    fn q8_rejects_odd_or_tiny_group() {
+        let (_, _, c) = random_compressed(4, 16, 22);
+        assert!(c.quantize(3).is_err(), "odd group straddles 2:4 value pairs");
+        assert!(c.quantize(0).is_err());
+        assert!(c.quantize(2).is_ok());
+    }
+
+    #[test]
+    fn q8_matvec_matches_dequantized_dense() {
+        let (_, _, c) = random_compressed(8, 24, 23);
+        let q = c.quantize(4).unwrap();
+        let mut rng = Pcg64::seed_from_u64(24);
+        let x: Vec<f32> = (0..24).map(|_| rng.next_gaussian()).collect();
+        let want = crate::linalg::matvec(&q.to_dense(), &x);
+        let got = q.matvec_q8(&x);
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-4, "row {i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn q8_blocked_matmul_bit_exact_with_reference() {
+        // shapes straddling the JB=64 batch block, the row-panel split, and
+        // ragged scale groups (24 cols -> 12 packed values, group 16 ragged)
+        for (rows, cols, batch, group, seed) in
+            [(8, 16, 1, 2, 30), (16, 32, 63, 16, 31), (33, 24, 130, 16, 32), (5, 64, 70, 8, 33)]
+        {
+            let (_, _, c) = random_compressed(rows, cols, seed);
+            let q = c.quantize(group).unwrap();
+            let mut rng = Pcg64::seed_from_u64(seed + 100);
+            let x = Matrix::randn(cols, batch, &mut rng);
+            let blocked = q.matmul_q8(&x);
+            let reference = q.matmul_q8_ref(&x);
+            assert_eq!(blocked, reference, "{rows}x{cols} batch {batch} group {group}");
+        }
+    }
+
+    #[test]
+    fn q8_matmul_close_to_f32_matmul() {
+        let (_, _, c) = random_compressed(16, 32, 40);
+        let q = c.quantize(DEFAULT_Q8_GROUP).unwrap();
+        let mut rng = Pcg64::seed_from_u64(41);
+        let x = Matrix::randn(32, 7, &mut rng);
+        let f32_out = c.matmul(&x);
+        let q8_out = q.matmul_q8(&x);
+        // bound: per-weight error <= wmax/254, each output sums 16 group
+        // contributions of 2 values -> err <= wmax/254 * sum|x| over the row
+        let wmax = c.values.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        for j in 0..7 {
+            let l1: f32 = (0..32).map(|i| x[(i, j)].abs()).sum();
+            let tol = wmax / 254.0 * l1 * 1.5 + 1e-5;
+            for i in 0..16 {
+                let d = (q8_out[(i, j)] - f32_out[(i, j)]).abs();
+                assert!(d <= tol, "({i},{j}): diff {d} > tol {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_storage_is_quarter_of_f32_compressed() {
+        let (_, _, c) = random_compressed(64, 128, 42);
+        let q = c.quantize(DEFAULT_Q8_GROUP).unwrap();
+        // codes: values/4 of the f32 bytes; meta identical; scales amortized
+        assert!(q.storage_bytes() * 10 < c.storage_bytes() * 4, "q8 {} vs f32 {}", q.storage_bytes(), c.storage_bytes());
+        // 1B code + 0.5B meta per 4-col group + amortized scales ≈ 19% of dense
+        let dense_bytes = 64 * 128 * 4;
+        assert!(q.storage_bytes() < dense_bytes / 5, "q8 {} vs dense {}", q.storage_bytes(), dense_bytes);
     }
 }

@@ -2,7 +2,7 @@
 //! unstructured top-k, and compressed 2:4 storage.
 
 mod compressed;
-pub use compressed::Compressed24;
+pub use compressed::{q8_quantize, Compressed24, Compressed24Q8, DEFAULT_Q8_GROUP};
 
 use crate::tensor::Matrix;
 

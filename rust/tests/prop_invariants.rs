@@ -476,6 +476,155 @@ fn prop_paged_pool_attention_matches_contiguous() {
     });
 }
 
+struct Q8Case {
+    layer: Layer,
+    group: usize,
+    batch: usize,
+}
+
+fn gen_q8_case(rng: &mut Pcg64) -> Q8Case {
+    Q8Case {
+        layer: gen_layer(rng),
+        group: [2usize, 4, 8, 16, 32][rng.next_below(5) as usize],
+        batch: 1 + rng.next_below(80) as usize,
+    }
+}
+
+/// The fused dequant q8 core matmul stays within the analytic int8 error
+/// envelope of the f32 compressed matmul — per weight the quantization
+/// error is at most `group_max/254 <= wmax/254`, so each output element
+/// can drift by at most that times the L1 mass of its activation column —
+/// across random shapes, scale-group sizes (ragged last groups included),
+/// and batch widths. The blocked path must also stay bit-exact with its
+/// scalar oracle, like the f32 path.
+#[test]
+fn prop_q8_core_matmul_close_to_f32() {
+    forall("q8 core matmul", num_cases(12), gen_q8_case, |case| {
+        let l = &case.layer;
+        if l.w.cols % 4 != 0 {
+            return Ok(());
+        }
+        let imp = l.w.hadamard(&l.w);
+        let mask = mask_from_importance(&imp, Pattern::TWO_FOUR);
+        let c = armor::sparsity::Compressed24::compress(&l.w, &mask)
+            .map_err(|e| e.to_string())?;
+        let q = c.quantize(case.group).map_err(|e| e.to_string())?;
+        let mut rng = Pcg64::seed_from_u64(l.seed);
+        let x = Matrix::randn(l.w.cols, case.batch, &mut rng);
+        let f32_out = c.matmul(&x);
+        let q8_out = q.matmul_q8(&x);
+        if q8_out != q.matmul_q8_ref(&x) {
+            return Err("blocked q8 drifted from its scalar oracle".into());
+        }
+        let wmax = c.values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for j in 0..case.batch {
+            let l1: f32 = (0..l.w.cols).map(|i| x[(i, j)].abs()).sum();
+            let tol = wmax / 254.0 * l1 * 1.5 + 1e-5;
+            for i in 0..l.w.rows {
+                let d = (q8_out[(i, j)] - f32_out[(i, j)]).abs();
+                if d > tol {
+                    return Err(format!(
+                        "group {} ({}x{} b{}): out ({i},{j}) diff {d} > tol {tol}",
+                        case.group, l.w.rows, l.w.cols, case.batch
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Q8 paged attention matches f32 attention over the same rows within the
+/// quantization envelope: per position the score shifts by at most
+/// `D = Σ|q_h| · kmax/254 / √hd`, so softmax weights move by at most a
+/// factor `e^{2D}`, and every V row carries its own `vmax/254` dequant
+/// error — the bound is computed per case from the actual data. The
+/// blocked q8 kernel must also agree bit-close with the scalar oracle
+/// dequantizing the same codes (scalar-over-f32 stays the parity path).
+#[test]
+fn prop_q8_paged_attention_matches_f32_within_tol() {
+    forall("q8 paged attention", num_cases(10), gen_paged_case, |case| {
+        let d_model = case.n_heads * case.head_dim;
+        let cfg = GptConfig {
+            d_model,
+            n_layers: 1,
+            n_heads: case.n_heads,
+            d_ff: 2 * d_model,
+            max_seq: 32,
+            ..GptConfig::tiny()
+        };
+        let f32_pool = armor::serve::KvPool::new(&cfg, case.page_positions, None)
+            .map_err(|e| e.to_string())?;
+        let q8_pool = armor::serve::KvPool::new_with_quant(
+            &cfg,
+            case.page_positions,
+            None,
+            armor::serve::KvQuant::Q8,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut rng = Pcg64::seed_from_u64(case.seed);
+        let lens: Vec<usize> = case.forks.iter().map(|&(s, n)| (s + n).max(1)).collect();
+        let mut kmax = 0.0f32;
+        let mut vmax = 0.0f32;
+        let mut f32_caches = Vec::new();
+        let mut q8_caches = Vec::new();
+        for &n in &lens {
+            let mut cf = f32_pool.new_cache();
+            let mut cq = q8_pool.new_cache();
+            for _ in 0..n {
+                let k: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+                let v: Vec<f32> = (0..d_model).map(|_| rng.next_gaussian()).collect();
+                kmax = k.iter().fold(kmax, |a, &x| a.max(x.abs()));
+                vmax = v.iter().fold(vmax, |a, &x| a.max(x.abs()));
+                cf.append(0, &k, &v);
+                cq.append(0, &k, &v);
+                cf.advance(1);
+                cq.advance(1);
+            }
+            f32_caches.push(cf);
+            q8_caches.push(cq);
+        }
+        let f32_refs: Vec<&KvCache> = f32_caches.iter().collect();
+        let q8_refs: Vec<&KvCache> = q8_caches.iter().collect();
+        let q = Matrix::randn(lens.len(), d_model, &mut rng);
+        let kern = AttnKernel::new(case.n_heads, case.head_dim);
+        let f32_out = kern.attend_batch(&f32_refs, 0, &q, &lens);
+        let q8_out = kern.attend_batch(&q8_refs, 0, &q, &lens);
+        // blocked-over-q8 vs scalar-over-the-same-dequantized-rows: the
+        // fused dequant is a reassociation, not a value change
+        let scalar_q8 = attend_batch_scalar(&q8_refs, 0, &q, &lens, case.n_heads);
+        for i in 0..lens.len() {
+            for c in 0..d_model {
+                let (b, s) = (q8_out[(i, c)], scalar_q8[(i, c)]);
+                if (b - s).abs() > 1e-5 * (1.0 + s.abs()) {
+                    return Err(format!(
+                        "page {} seq {i} col {c}: blocked q8 {b} vs scalar-over-q8 {s}",
+                        case.page_positions
+                    ));
+                }
+            }
+        }
+        for (i, &_n) in lens.iter().enumerate() {
+            for h in 0..case.n_heads {
+                let hd = case.head_dim;
+                let q_l1: f32 = q.row(i)[h * hd..(h + 1) * hd].iter().map(|x| x.abs()).sum();
+                let d_max = q_l1 * (kmax / 254.0) / (hd as f32).sqrt();
+                let tol = ((2.0 * d_max).exp() - 1.0) * vmax + vmax / 254.0 + 1e-4;
+                for t in 0..hd {
+                    let d = (q8_out[(i, h * hd + t)] - f32_out[(i, h * hd + t)]).abs();
+                    if d > tol {
+                        return Err(format!(
+                            "page {} seq {i} head {h} col {t}: q8 vs f32 diff {d} > tol {tol}",
+                            case.page_positions
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// NoWag normalization always denormalizes back to the original matrix,
 /// even with zero columns/rows and extreme scales.
 #[test]
