@@ -20,9 +20,16 @@
 //! work (hits > 0) and the paged pool must reserve less KV memory than the
 //! monolithic full-panel layout at equal batch.
 //!
+//! A final sweep replays *mixed* traffic — long prompts submitted ahead of
+//! short ones — through the scheduler policies (`fifo`, `fifo` + chunked
+//! prefill, `priority` + chunked, `deadline` + chunked), recording
+//! short-request TTFT p50/p99, deadline misses, and the per-step prefill
+//! bound: priority + chunking must cut short TTFT p99 without giving up
+//! more than 10% of FIFO's aggregate tok/s.
+//!
 //! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
-//! artifact (CI's bench-smoke job uploads it as `BENCH_3.json`), including
-//! prefix-hit rates and pool bytes alongside throughput.
+//! artifact (CI's bench-smoke job uploads it as `BENCH_5.json`), including
+//! prefix-hit rates, pool bytes, and per-policy TTFT alongside throughput.
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
@@ -182,6 +189,10 @@ fn main() {
             vec![
                 ("tok_s", Json::Num(rep.tokens_per_sec())),
                 ("p50_ms", Json::Num(p50)),
+                // explicit sample count: latency fields are dropped from the
+                // record when non-finite, so a zero-request drain must stay
+                // distinguishable from a missing measurement
+                ("requests", Json::Num(rep.requests.len() as f64)),
                 ("prefix_hit_rate", Json::Num(rep.prefix_hit_rate())),
                 ("kv_reserved_bytes", Json::Num(rep.kv_reserved_bytes as f64)),
                 ("kv_resident_bytes", Json::Num(rep.kv_resident_bytes as f64)),
@@ -407,5 +418,108 @@ fn main() {
         println!(
             "WARN: q8-kv byte ratio {byte_ratio:.2} (want <= 0.55), throughput ratio {tps_ratio:.2} (want >= 0.9)"
         );
+    }
+
+    // --- scheduler policies: mixed long/short traffic ---
+    // The tail-latency shape ARMOR's serving pitch cares about: a couple of
+    // long prompts arrive *first* and, under FIFO with monolithic prefill,
+    // head-of-line-block every short request behind a full long-prompt
+    // prefill. Priority lanes put the shorts first and chunked prefill
+    // bounds how much prefill any step may do, so short-request TTFT p99
+    // must drop — without giving up aggregate throughput (> 0.9x FIFO).
+    println!("\nscheduler policies: 2 long + {} short prompts, long prompts submitted first", scaled(12).max(6));
+    use armor::serve::SchedPolicy;
+    use std::time::Duration;
+    let long_len = 64usize;
+    let short_len = 8usize;
+    let n_short = scaled(12).max(6);
+    let policy_new = scaled(16).max(4);
+    let chunk = 16usize;
+    let longs = traffic(&mut rng, 2, long_len);
+    let shorts = traffic(&mut rng, n_short, short_len);
+    let mut policy_rows = Vec::new();
+    let mut policy_results: Vec<(&str, f64, f64, usize)> = Vec::new();
+    for (case, policy, prefill_chunk) in [
+        ("fifo", SchedPolicy::Fifo, None),
+        ("fifo_chunked", SchedPolicy::Fifo, Some(chunk)),
+        ("priority_chunked", SchedPolicy::Priority, Some(chunk)),
+        ("deadline_chunked", SchedPolicy::Deadline, Some(chunk)),
+    ] {
+        let mut engine = Engine::new(
+            attn_compiled.clone(),
+            EngineConfig { max_batch, policy, prefill_chunk, ..EngineConfig::default() },
+        )
+        .expect("policy engine config");
+        // longs first (the head-of-line shape), low priority, loose deadline
+        for p in &longs {
+            engine.submit_with(p, policy_new, 3, Some(Duration::from_millis(2000)));
+        }
+        for p in &shorts {
+            engine.submit_with(p, policy_new, 0, Some(Duration::from_millis(250)));
+        }
+        let report = engine.drain();
+        let short_p50 = report.ttft_percentile_short(short_len, 50.0);
+        let short_p99 = report.ttft_percentile_short(short_len, 99.0);
+        policy_rows.push(TableRow::new(
+            case,
+            vec![
+                format!("{:.1}", report.tokens_per_sec()),
+                format!("{short_p50:.2}"),
+                format!("{short_p99:.2}"),
+                format!("{}", report.max_step_prefill),
+                format!("{}", report.deadline_misses),
+            ],
+        ));
+        emit_json(
+            "serve_policy",
+            case,
+            vec![
+                ("tok_s", Json::Num(report.tokens_per_sec())),
+                ("ttft_short_p50_ms", Json::Num(short_p50)),
+                ("ttft_short_p99_ms", Json::Num(short_p99)),
+                ("requests", Json::Num(report.requests.len() as f64)),
+                ("max_step_prefill", Json::Num(report.max_step_prefill as f64)),
+                ("deadline_misses", Json::Num(report.deadline_misses as f64)),
+            ],
+        );
+        policy_results.push((case, report.tokens_per_sec(), short_p99, report.max_step_prefill));
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Scheduler policies on mixed long/short traffic (KV-cached 2:4)",
+            &[
+                "tok/s (↑)",
+                "short ttft p50 ms (↓)",
+                "short ttft p99 ms (↓)",
+                "max step prefill",
+                "deadline misses",
+            ],
+            &policy_rows
+        )
+    );
+    let fifo = policy_results.iter().find(|r| r.0 == "fifo").unwrap();
+    let prio = policy_results.iter().find(|r| r.0 == "priority_chunked").unwrap();
+    assert!(
+        prio.3 <= chunk,
+        "chunk-budget invariant violated: max step prefill {} > {chunk}",
+        prio.3
+    );
+    if prio.2 < fifo.2 {
+        println!(
+            "OK: priority + chunked prefill cuts short-request TTFT p99 ({:.2} vs {:.2} ms under FIFO)",
+            prio.2, fifo.2
+        );
+    } else {
+        println!(
+            "WARN: priority + chunked prefill did not cut short-request TTFT p99 ({:.2} vs {:.2} ms)",
+            prio.2, fifo.2
+        );
+    }
+    let tps_ratio = prio.1 / fifo.1.max(1e-9);
+    if tps_ratio >= 0.9 {
+        println!("OK: chunked prefill holds {tps_ratio:.2}x of FIFO aggregate throughput (>= 0.9x)");
+    } else {
+        println!("WARN: chunked prefill regressed aggregate throughput to {tps_ratio:.2}x of FIFO (< 0.9x)");
     }
 }

@@ -18,7 +18,7 @@ pub use sparse_core::{sparse_core_step, SelectionHeuristic};
 use crate::sparsity::Pattern;
 
 /// Hyperparameters for one ARMOR pruning run (paper Appendix H defaults,
-/// scaled to this testbed — see DESIGN.md §6).
+/// scaled to this testbed — see DESIGN.md §7).
 #[derive(Clone, Debug)]
 pub struct ArmorConfig {
     /// Block size of the `A`/`B` wrappers (paper: 128; small models: 16–64).

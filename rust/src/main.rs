@@ -15,7 +15,7 @@ use armor::coordinator::{calibrate, prune_model, PruneJob};
 use armor::data::{generate_corpus, sample_calibration, tokenize, CorpusSpec, Split};
 use armor::eval::{evaluate_tasks, perplexity};
 use armor::model::{CompiledModel, GptModel};
-use armor::serve::{Engine, EngineConfig};
+use armor::serve::{Engine, EngineConfig, SchedPolicy, PRIORITY_LANES};
 use armor::sparsity::Pattern;
 use armor::util::cli::{usage, Args, OptSpec};
 use armor::util::rng::Pcg64;
@@ -64,6 +64,10 @@ fn print_usage() {
                 OptSpec { name: "batch", help: "serve: max in-flight sequences", default: Some("8") },
                 OptSpec { name: "page-size", help: "serve: KV page size in positions", default: Some("32") },
                 OptSpec { name: "quant", help: "serve: int8 execution plane — off, q8 (2:4 weight cores), or q8-kv (cores + KV pages)", default: Some("off") },
+                OptSpec { name: "policy", help: "serve: admission policy — fifo, priority (lanes + aging), or deadline (EDF)", default: Some("fifo") },
+                OptSpec { name: "priority-mix", help: "serve: fraction of requests submitted high-priority (rest low); needs --policy priority", default: Some("0.5") },
+                OptSpec { name: "deadline-ms", help: "serve: soft per-request deadline in ms (misses are counted, not dropped)", default: None },
+                OptSpec { name: "prefill-chunk", help: "serve: max prompt tokens prefilled per engine step (omit for unbounded)", default: None },
                 OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
                 OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
@@ -307,6 +311,51 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             Some((mb * (1 << 20) as f64) as usize)
         }
     };
+    // scheduler-policy flags, validated up front like the paging ones
+    let policy_name = args.get_or("policy", "fifo");
+    let policy = SchedPolicy::parse(&policy_name)
+        .ok_or_else(|| armor::err!("--policy must be fifo, priority, or deadline, got '{policy_name}'"))?;
+    let priority_mix = match args.get("priority-mix") {
+        None => 0.5f64,
+        Some(v) => {
+            let mix: f64 = v
+                .parse()
+                .map_err(|_| armor::err!("--priority-mix must be a number, got '{v}'"))?;
+            armor::ensure!(
+                (0.0..=1.0).contains(&mix),
+                "--priority-mix must be in [0, 1], got {mix}"
+            );
+            armor::ensure!(
+                policy == SchedPolicy::Priority,
+                "--priority-mix only applies under --policy priority"
+            );
+            mix
+        }
+    };
+    let deadline = match args.get("deadline-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v
+                .parse()
+                .map_err(|_| armor::err!("--deadline-ms must be a number, got '{v}'"))?;
+            // finite + bounded: Duration::from_secs_f64 panics on inf/huge
+            armor::ensure!(
+                ms > 0.0 && ms <= 1e12,
+                "--deadline-ms must be in (0, 1e12] ms, got {v}"
+            );
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+    };
+    let prefill_chunk = match args.get("prefill-chunk") {
+        None => None,
+        Some(v) => {
+            let chunk: usize = v
+                .parse()
+                .map_err(|_| armor::err!("--prefill-chunk must be an integer, got '{v}'"))?;
+            armor::ensure!(chunk >= 1, "--prefill-chunk must be >= 1 prompt token per step");
+            Some(chunk)
+        }
+    };
     // validate flags against the serving model up front: bad values come
     // back as structured errors, never as panics inside the scheduler or
     // KvCache mid-burst
@@ -320,7 +369,7 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
     // the semantic budget check (budget >= one page per layer×head chain)
     // lives in KvPool::new — Engine::new below surfaces it as the same
     // structured error, without this file duplicating the page-bytes formula
-    // --max-new 0 stays legal: the engine clamps it to 1 (best-effort serving)
+    // --max-new 0 stays legal: the engine completes it with no tokens
     let mut rng = Pcg64::seed_from_u64(args.get_u64("seed", 0) ^ 0x5E47E);
     let prompts = sample_calibration(&tokens, prompt_len, n_requests, &mut rng);
 
@@ -332,10 +381,22 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             kv_budget_bytes,
             prefix_sharing: !args.flag("no-prefix-share"),
             kv_quant,
+            policy,
+            prefill_chunk,
         },
     )?;
-    for p in &prompts {
-        engine.submit(p, max_new);
+    println!(
+        "[serve] policy {}  prefill chunk {}  deadline {}",
+        policy.label(),
+        prefill_chunk.map_or("unbounded".to_string(), |c| c.to_string()),
+        deadline.map_or("none".to_string(), |d| format!("{:.0} ms", d.as_secs_f64() * 1e3)),
+    );
+    for (i, p) in prompts.iter().enumerate() {
+        // spread the high-priority fraction evenly through the burst so
+        // lanes interleave instead of front-loading one class
+        let high = ((i + 1) as f64 * priority_mix).floor() > (i as f64 * priority_mix).floor();
+        let priority = if high { 0 } else { (PRIORITY_LANES - 1) as u8 };
+        engine.submit_with(p, max_new, priority, deadline);
     }
     let report = engine.drain();
     print!("{}", report.render());
@@ -347,7 +408,11 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
         let mut generated = 0usize;
         for p in &prompts {
             let plen = p.len().min(max_seq);
-            let eff_new = max_new.clamp(1, max_seq + 1 - plen);
+            // mirror the engine: max_new 0 generates nothing at all
+            let eff_new = max_new.min(max_seq + 1 - plen);
+            if eff_new == 0 {
+                continue;
+            }
             let out = serving_model.generate(&p[p.len() - plen..], eff_new);
             generated += out.len() - plen;
         }

@@ -344,6 +344,16 @@ impl CompiledModel {
     /// K/V for every new position. Returns per-position logits for the chunk
     /// (`chunk_len × vocab`). With an empty cache this *is* the full forward.
     ///
+    /// **Resumable by construction**: every op in the stack is
+    /// row-independent (linears, LayerNorm, MoE routing) or depends only on
+    /// strictly earlier positions (causal attention over the cache), so
+    /// splitting a prompt across several `prefill` calls produces the same
+    /// K/V pages and, row for row, bit-identical logits as one monolithic
+    /// call — the serve engine's chunked prefill
+    /// ([`Self::prefill_chunked`], `--prefill-chunk`) rests on this, and
+    /// `prefill_chunked_matches_monolithic` plus
+    /// `prop_prefill_chunked_matches_monolithic` enforce it.
+    ///
     /// The per-layer body must stay in lock-step with [`Self::decode_batch`]
     /// (same ops, same accumulation order) — the serve engine's correctness
     /// rests on their bit-exact parity, which the `decode_step_matches_*`
@@ -424,17 +434,51 @@ impl CompiledModel {
         pool: &KvPool,
         tokens: &[u16],
     ) -> (KvCache, Matrix, usize) {
-        let (mut cache, reused) = match registry.lookup(tokens) {
+        let (mut cache, reused) = Self::prefill_attach(registry, pool, tokens);
+        let logits = self.prefill(&mut cache, &tokens[reused..]);
+        registry.register(tokens, &cache);
+        (cache, logits, reused)
+    }
+
+    /// First stage of a (possibly chunked) prefix-reuse prefill: look the
+    /// prompt up in the registry and return `(cache, reused)` — a forked
+    /// chain already holding `reused` prompt tokens on a hit, a fresh empty
+    /// cache from `pool` on a miss. The caller prefills `tokens[reused..]`
+    /// (in one call or in chunks) and, once the prompt is complete,
+    /// registers the page-aligned prefix via
+    /// [`PrefixRegistry::register`] — exactly what [`Self::prefill_reuse`]
+    /// does monolithically and the serve engine does across steps.
+    /// `reused < tokens.len()` always: at least one suffix token remains so
+    /// the final chunk's last logits row is the next-token distribution.
+    pub fn prefill_attach(
+        registry: &mut PrefixRegistry,
+        pool: &KvPool,
+        tokens: &[u16],
+    ) -> (KvCache, usize) {
+        match registry.lookup(tokens) {
             Some(c) => {
                 let n = c.len();
                 debug_assert!(n < tokens.len());
                 (c, n)
             }
             None => (pool.new_cache(), 0),
-        };
-        let logits = self.prefill(&mut cache, &tokens[reused..]);
-        registry.register(tokens, &cache);
-        (cache, logits, reused)
+        }
+    }
+
+    /// Prefill `tokens` as the continuation of `cache` in pieces of at most
+    /// `chunk` tokens, returning the *last* chunk's logits (its final row is
+    /// the next-token distribution). Bit-exact versus one monolithic
+    /// [`Self::prefill`] call — see the resumability note there. The serve
+    /// engine spreads the chunks across steps instead of looping here; this
+    /// driver is the single-call form for solo paths and parity tests.
+    pub fn prefill_chunked(&self, cache: &mut KvCache, tokens: &[u16], chunk: usize) -> Matrix {
+        assert!(chunk > 0, "prefill chunk must be >= 1 token");
+        assert!(!tokens.is_empty(), "empty chunked prefill");
+        let mut logits = None;
+        for piece in tokens.chunks(chunk) {
+            logits = Some(self.prefill(cache, piece));
+        }
+        logits.expect("at least one chunk")
     }
 
     /// Decode one token for one sequence; returns the next-token logits.
@@ -888,6 +932,47 @@ mod tests {
             assert_eq!(shared, fresh, "decode step {step} drifted on the shared chain");
             tok = argmax(&shared) as u16;
         }
+    }
+
+    /// Chunked prefill is bit-exact against the monolithic path: same KV
+    /// pages, same logits, same greedy continuation — for every chunk size,
+    /// including chunks that straddle page boundaries, and on top of a
+    /// prefix-cache hit.
+    #[test]
+    fn prefill_chunked_matches_monolithic() {
+        let (model, _) = pruned(Method::NoWagP, 90);
+        let compiled = CompiledModel::compile(&model, None).unwrap();
+        let pool = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let prompt = toks(14, 91);
+        let mut mono = pool.new_cache();
+        let full = compiled.prefill(&mut mono, &prompt);
+        for chunk in [1usize, 3, 4, 5, 13, 14, 100] {
+            let mut cache = pool.new_cache();
+            let last = compiled.prefill_chunked(&mut cache, &prompt, chunk);
+            assert_eq!(cache.len(), mono.len(), "chunk {chunk}: cache length");
+            // the last chunk's logits equal the tail rows of the monolithic
+            // logits, bit for bit
+            for (i, row) in (full.rows - last.rows..full.rows).enumerate() {
+                assert_eq!(last.row(i), full.row(row), "chunk {chunk}: logits row {i}");
+            }
+            // KV pages are identical: decode the same token on both caches
+            let tok = argmax(full.row(full.rows - 1)) as u16;
+            let mut m2 = mono.clone();
+            assert_eq!(
+                compiled.decode_step(&mut cache, tok),
+                compiled.decode_step(&mut m2, tok),
+                "chunk {chunk}: decode after chunked prefill drifted"
+            );
+        }
+        // chunked suffix prefill over an attached prefix chain matches too
+        let mut reg = PrefixRegistry::new(pool.clone(), 4);
+        let (c0, _, r0) = compiled.prefill_reuse(&mut reg, &pool, &prompt);
+        assert_eq!(r0, 0);
+        drop(c0);
+        let (mut hit, reused) = CompiledModel::prefill_attach(&mut reg, &pool, &prompt);
+        assert_eq!(reused, 12, "page-aligned prefix of 14 tokens at page size 4");
+        let last = compiled.prefill_chunked(&mut hit, &prompt[reused..], 1);
+        assert_eq!(last.row(last.rows - 1), full.row(full.rows - 1));
     }
 
     #[test]

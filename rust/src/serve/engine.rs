@@ -1,21 +1,32 @@
 //! The serving engine: continuous batching over a [`CompiledModel`].
 //!
 //! `submit` enqueues generation requests; each `step` admits waiting
-//! requests into the in-flight batch — admission is **capacity-aware**: a
-//! request enters iff its worst-case KV page demand fits the shared
-//! [`KvPool`] budget (and a batch slot is free), otherwise it queues — then
-//! prefills admitted prompts through the [`PrefixRegistry`] (a templated
-//! prompt attaches to a retained page chain and prefills only its suffix),
-//! runs one batched KV-cached decode across every active sequence, and
-//! retires the finished ones, returning their page reservations. `drain`
-//! steps until idle and returns a [`ServeReport`] with per-request latency,
-//! aggregate throughput, pool memory peaks, and prefix-hit counters.
+//! requests into the in-flight batch — admission order follows the
+//! configured [`SchedPolicy`] (FIFO, priority lanes with aging, or
+//! earliest-deadline-first) and is **capacity-aware**: a request enters iff
+//! its worst-case KV page demand fits the shared [`KvPool`] budget (and a
+//! batch slot is free), otherwise it queues. Admitted prompts prefill in
+//! **chunks**: each step spends at most `prefill_chunk` prompt tokens on
+//! prefill (policy order decides who gets the budget), carrying the cursor
+//! in a [`SeqPhase::Prefilling`] phase, so an arriving long prompt cannot
+//! stall the decode batch for more than one chunk per step. The prefix
+//! registry still applies — a templated prompt attaches to a retained page
+//! chain on its first chunk and prefills only its suffix. Then one batched
+//! KV-cached decode runs across every *decoding* sequence, and finished
+//! ones retire, returning their page reservations and recording soft
+//! deadline misses. `drain` steps until idle and returns a [`ServeReport`]
+//! with per-request latency, aggregate throughput, pool memory peaks,
+//! prefix-hit counters, deadline misses, and the per-step prefill bound
+//! actually observed.
 
 use crate::model::{argmax, CompiledModel};
-use crate::serve::scheduler::{ActiveSeq, Scheduler};
-use crate::serve::{KvPool, KvQuant, PrefixRegistry, RequestId, DEFAULT_PREFIX_ENTRIES};
+use crate::serve::scheduler::{edf_key, ActiveSeq, Scheduler, SeqPhase};
+use crate::serve::{
+    KvPool, KvQuant, PrefixRegistry, RequestId, SchedPolicy, DEFAULT_PREFIX_ENTRIES,
+    PRIORITY_LANES,
+};
 use crate::util::timer::Stats;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -34,6 +45,11 @@ pub struct EngineConfig {
     /// actual page bytes, so a byte budget admits proportionally more
     /// sequences when pages are q8.
     pub kv_quant: KvQuant,
+    /// Admission-ordering policy (`armor serve --policy`).
+    pub policy: SchedPolicy,
+    /// Per-step prefill budget in prompt tokens (`--prefill-chunk`);
+    /// `None` = unbounded (a prompt prefills whole in its admission step).
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -44,6 +60,8 @@ impl Default for EngineConfig {
             kv_budget_bytes: None,
             prefix_sharing: true,
             kv_quant: KvQuant::F32,
+            policy: SchedPolicy::Fifo,
+            prefill_chunk: None,
         }
     }
 }
@@ -56,6 +74,12 @@ pub struct RequestStats {
     pub n_generated: usize,
     /// prompt tokens served from the prefix cache instead of prefill
     pub reused_tokens: usize,
+    /// priority lane the request was submitted at (0 = most urgent)
+    pub priority: u8,
+    /// the request's soft deadline as submit-relative milliseconds
+    pub deadline_ms: Option<f64>,
+    /// completed after its soft deadline (always false without one)
+    pub deadline_missed: bool,
     /// submit → first generated token (queue wait + prefill)
     pub ttft_ms: f64,
     /// submit → last generated token
@@ -76,6 +100,11 @@ pub struct ServeReport {
     /// decode steps executed and the largest batch observed
     pub decode_steps: usize,
     pub peak_batch: usize,
+    /// most prompt tokens prefilled within any single engine step — bounded
+    /// by `--prefill-chunk` when set (the chunk-budget invariant)
+    pub max_step_prefill: usize,
+    /// completed requests that blew their soft deadline
+    pub deadline_misses: usize,
     /// admissions that attached to a retained prefix chain
     pub prefix_hits: usize,
     /// prompt tokens those hits skipped re-prefilling
@@ -88,6 +117,17 @@ pub struct ServeReport {
     /// peak bytes referenced beyond the unique pages — memory that page
     /// sharing avoided duplicating
     pub kv_shared_bytes: usize,
+}
+
+/// Format a latency statistic, rendering the empty-sample `NaN` as `-`
+/// instead of leaking `NaN ms` into the report (an empty drain has no
+/// latency samples; that is a count of zero, not a number).
+fn fmt_ms(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.2}")
+    } else {
+        "-".to_string()
+    }
 }
 
 impl ServeReport {
@@ -117,6 +157,17 @@ impl ServeReport {
         (lat, ttft)
     }
 
+    /// TTFT percentile over the subset of requests whose prompt length is
+    /// at most `max_prompt` (the policy sweeps track short-request TTFT in
+    /// a mixed long/short batch). `NaN` when no request qualifies.
+    pub fn ttft_percentile_short(&self, max_prompt: usize, p: f64) -> f64 {
+        let mut s = Stats::default();
+        for r in self.requests.iter().filter(|r| r.prompt_len <= max_prompt) {
+            s.push(r.ttft_ms);
+        }
+        s.percentile(p)
+    }
+
     /// Human-readable summary block.
     pub fn render(&self) -> String {
         let (lat, ttft) = self.latency_stats();
@@ -130,22 +181,30 @@ impl ServeReport {
             self.tokens_per_sec()
         ));
         s.push_str(&format!(
-            "decode steps {}  peak batch {}  latency mean {:.2} ms  p50 {:.2}  p99 {:.2}  ttft p50 {:.2} ms\n",
+            "decode steps {}  peak batch {}  max step prefill {} tok  latency mean {} ms  p50 {}  p99 {}  ttft p50 {} ms  p99 {}\n",
             self.decode_steps,
             self.peak_batch,
-            lat.mean(),
-            lat.percentile(50.0),
-            lat.percentile(99.0),
-            ttft.percentile(50.0)
+            self.max_step_prefill,
+            fmt_ms(lat.mean()),
+            fmt_ms(lat.percentile(50.0)),
+            fmt_ms(lat.percentile(99.0)),
+            fmt_ms(ttft.percentile(50.0)),
+            fmt_ms(ttft.percentile(99.0))
         ));
+        let with_deadline = self.requests.iter().filter(|r| r.deadline_ms.is_some()).count();
         s.push_str(&format!(
-            "kv pool peaks: resident {:.1} KiB  reserved {:.1} KiB  shared {:.1} KiB  |  prefix hits {} ({:.0}% of requests, {} tok reused)\n",
-            self.kv_resident_bytes as f64 / 1024.0,
-            self.kv_reserved_bytes as f64 / 1024.0,
-            self.kv_shared_bytes as f64 / 1024.0,
+            "deadline misses {} (of {} with deadlines)  |  prefix hits {} ({:.0}% of requests, {} tok reused)\n",
+            self.deadline_misses,
+            with_deadline,
             self.prefix_hits,
             self.prefix_hit_rate() * 100.0,
             self.prefix_hit_tokens
+        ));
+        s.push_str(&format!(
+            "kv pool peaks: resident {:.1} KiB  reserved {:.1} KiB  shared {:.1} KiB\n",
+            self.kv_resident_bytes as f64 / 1024.0,
+            self.kv_reserved_bytes as f64 / 1024.0,
+            self.kv_shared_bytes as f64 / 1024.0,
         ));
         s
     }
@@ -158,11 +217,15 @@ pub struct Engine {
     sched: Scheduler,
     pool: KvPool,
     prefix: PrefixRegistry,
+    /// per-step prefill budget in prompt tokens (`usize::MAX` = unbounded)
+    prefill_chunk: usize,
     finished: Vec<RequestStats>,
     prefill_tokens: usize,
     generated_tokens: usize,
     decode_steps: usize,
     peak_batch: usize,
+    max_step_prefill: usize,
+    deadline_misses: usize,
     /// peak of (pages referenced − unique pages) × page_bytes, sampled per
     /// step — duplication that sharing avoided
     peak_shared_bytes: usize,
@@ -174,9 +237,10 @@ pub struct Engine {
 
 impl Engine {
     /// Build an engine over a compiled model. Returns a structured error
-    /// (not a panic) on an unservable configuration — zero batch or page
-    /// size, a KV budget below one sequence's first page row — so callers
-    /// like the `armor serve` CLI can surface bad flags cleanly.
+    /// (not a panic) on an unservable configuration — zero batch, page, or
+    /// prefill-chunk size, a KV budget below one sequence's first page
+    /// row — so callers like the `armor serve` CLI can surface bad flags
+    /// cleanly.
     pub fn new(model: CompiledModel, cfg: EngineConfig) -> crate::Result<Engine> {
         crate::ensure!(
             cfg.max_batch >= 1,
@@ -188,6 +252,10 @@ impl Engine {
             "model context window {} cannot hold a prompt token plus a generated token",
             model.cfg.max_seq
         );
+        crate::ensure!(
+            cfg.prefill_chunk != Some(0),
+            "prefill chunk must be >= 1 prompt token per step (omit it for unbounded)"
+        );
         let pool =
             KvPool::new_with_quant(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes, cfg.kv_quant)?;
         let prefix = if cfg.prefix_sharing {
@@ -197,14 +265,17 @@ impl Engine {
         };
         Ok(Engine {
             model,
-            sched: Scheduler::new(cfg.max_batch),
+            sched: Scheduler::with_policy(cfg.max_batch, cfg.policy),
             pool,
             prefix,
+            prefill_chunk: cfg.prefill_chunk.unwrap_or(usize::MAX),
             finished: Vec::new(),
             prefill_tokens: 0,
             generated_tokens: 0,
             decode_steps: 0,
             peak_batch: 0,
+            max_step_prefill: 0,
+            deadline_misses: 0,
             peak_shared_bytes: 0,
             window_start: None,
         })
@@ -219,13 +290,38 @@ impl Engine {
         &self.pool
     }
 
+    /// The configured admission policy.
+    pub fn policy(&self) -> SchedPolicy {
+        self.sched.policy()
+    }
+
+    /// Enqueue a generation request at default priority with no deadline —
+    /// see [`Engine::submit_with`].
+    pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> RequestId {
+        self.submit_with(prompt, max_new, 0, None)
+    }
+
     /// Enqueue a generation request. Served best-effort rather than
     /// rejected: the prompt is truncated to the last `window` tokens and
-    /// `max_new` clamped to `[1, window+1-prompt_len]`, where `window` is
+    /// `max_new` clamped to `window + 1 - prompt_len`, where `window` is
     /// the context window shrunk — if necessary — to the longest sequence
     /// whose worst-case page demand fits the whole pool budget (a request
-    /// that could never be admitted would queue forever).
-    pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> RequestId {
+    /// that could never be admitted would queue forever). A `max_new` of
+    /// **zero** completes immediately with an empty continuation
+    /// (`ttft_ms == latency_ms`) instead of silently generating an
+    /// unrequested token.
+    ///
+    /// `priority` picks the lane under [`SchedPolicy::Priority`] (0 = most
+    /// urgent, clamped to the lane count); `deadline` is the soft
+    /// completion budget [`SchedPolicy::Deadline`] orders by — misses are
+    /// counted in the [`ServeReport`] under every policy.
+    pub fn submit_with(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> RequestId {
         let window = self.pool.budget_max_len();
         let start = prompt.len().saturating_sub(window);
         let prompt: Vec<u16> = if prompt.is_empty() {
@@ -234,14 +330,38 @@ impl Engine {
         } else {
             prompt[start..].to_vec()
         };
-        let max_new = max_new.clamp(1, window + 1 - prompt.len());
         self.window_start.get_or_insert_with(Instant::now);
-        self.sched.enqueue(prompt, max_new)
+        if max_new == 0 {
+            // nothing to generate: complete now, touching neither the
+            // queue nor the pool — first token and last token coincide in
+            // the degenerate "no tokens" sense, so ttft == latency
+            let id = self.sched.issue_id();
+            self.finished.push(RequestStats {
+                id,
+                prompt_len: prompt.len(),
+                n_generated: 0,
+                reused_tokens: 0,
+                priority: priority.min((PRIORITY_LANES - 1) as u8),
+                deadline_ms: deadline.map(|d| d.as_secs_f64() * 1e3),
+                deadline_missed: false,
+                ttft_ms: 0.0,
+                latency_ms: 0.0,
+                generated: Vec::new(),
+            });
+            return id;
+        }
+        let max_new = max_new.clamp(1, window + 1 - prompt.len());
+        self.sched.enqueue_with(prompt, max_new, priority, deadline.map(|d| Instant::now() + d))
     }
 
     /// Requests not yet completed (waiting or in flight).
     pub fn outstanding(&self) -> usize {
         self.sched.pending_len() + self.sched.active_len()
+    }
+
+    /// Whether `id` has completed and awaits the next [`Engine::drain`].
+    pub fn completed(&self, id: RequestId) -> bool {
+        self.finished.iter().any(|r| r.id == id)
     }
 
     /// Cache positions this request may occupy: the whole prompt plus all
@@ -251,13 +371,51 @@ impl Engine {
         (prompt_len + max_new - 1).min(self.model.cfg.max_seq)
     }
 
-    /// One engine iteration: admit + prefill new requests (page budget
-    /// permitting), one batched decode over the active batch, retire
-    /// finished sequences. Returns the number of tokens generated this step.
+    /// Prefilling sequences in the order the policy hands out this step's
+    /// chunk budget: FIFO by admission, priority lanes by (aged lane, id),
+    /// EDF by (deadline, id) — the same urgency order as admission. The
+    /// priority key uses [`ActiveSeq::effective_priority`], which drops one
+    /// lane per `AGING_TICKS` steps in flight, so the queue's
+    /// anti-starvation guarantee extends to the chunk budget: a saturating
+    /// stream of freshly admitted urgent prompts cannot hold an admitted
+    /// low-priority prefill at zero tokens forever (once aged to lane 0 its
+    /// older id wins the tie). EDF deliberately has no such guard: like the
+    /// admission queue, deadline-less requests are best-effort under a
+    /// saturating deadlined stream.
+    fn prefill_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = self
+            .sched
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_prefilling())
+            .map(|(i, _)| i)
+            .collect();
+        let tick = self.sched.current_tick();
+        match self.sched.policy() {
+            // active is admission-ordered, which is id-ordered under FIFO
+            SchedPolicy::Fifo => {}
+            SchedPolicy::Priority => idx.sort_by_key(|&i| {
+                let s = &self.sched.active[i];
+                (s.effective_priority(tick), s.id)
+            }),
+            SchedPolicy::Deadline => idx.sort_by_key(|&i| {
+                let s = &self.sched.active[i];
+                edf_key(s.deadline, s.id)
+            }),
+        }
+        idx
+    }
+
+    /// One engine iteration: admit new requests (policy order, page budget
+    /// permitting), spend up to `prefill_chunk` prompt tokens prefilling
+    /// in-flight prompts, one batched decode over the decoding batch,
+    /// retire finished sequences. Returns the tokens generated this step.
     pub fn step(&mut self) -> usize {
+        self.sched.tick();
         let mut produced = 0usize;
 
-        // --- admission: budget-gated prefill into free batch slots ---
+        // --- admission: budget-gated entry into free batch slots ---
         loop {
             let Some(req) = self.sched.peek_admittable() else { break };
             let need = self.worst_case_len(req.prompt.len(), req.max_new);
@@ -274,42 +432,102 @@ impl Engine {
                 continue;
             }
             let req = self.sched.pop_admittable().expect("peeked request vanished");
-            let (cache, logits, reused) =
-                self.model.prefill_reuse(&mut self.prefix, &self.pool, &req.prompt);
-            let first = argmax(logits.row(logits.rows - 1)) as u16;
-            self.prefill_tokens += req.prompt.len() - reused;
-            self.generated_tokens += 1;
-            produced += 1;
+            let admitted_tick = self.sched.current_tick();
             self.sched.admit(ActiveSeq {
                 id: req.id,
-                cache,
-                prompt_len: req.prompt.len(),
+                cache: self.pool.new_cache(),
+                prompt: req.prompt,
                 max_new: req.max_new,
+                phase: SeqPhase::Prefilling { next: 0 },
+                priority: req.priority,
+                admitted_tick,
+                deadline: req.deadline,
                 reserved_pages: demand,
-                reused_tokens: reused,
-                generated: vec![first],
-                last_token: first,
+                reused_tokens: 0,
+                generated: Vec::new(),
+                last_token: 0,
                 submitted: req.submitted,
-                first_token_at: Some(Instant::now()),
+                first_token_at: None,
             });
         }
+
+        // --- prefill: spend the chunk budget across prefilling prompts in
+        //     policy order; a sequence whose prompt completes produces its
+        //     first token from the final chunk's logits ---
+        let mut budget = self.prefill_chunk;
+        let mut spent = 0usize;
+        for i in self.prefill_order() {
+            if budget == 0 {
+                break;
+            }
+            let seq = &mut self.sched.active[i];
+            let SeqPhase::Prefilling { mut next } = seq.phase else { unreachable!() };
+            if seq.cache.is_empty() {
+                // first touch: prefix-cache lookup. Deferred to here (not
+                // admission) so a prefix registered by an earlier request
+                // this same step is already visible.
+                debug_assert_eq!(next, 0);
+                if let Some(c) = self.prefix.lookup(&seq.prompt) {
+                    next = c.len();
+                    seq.reused_tokens = next;
+                    seq.cache = c;
+                }
+            }
+            let n = (seq.prompt.len() - next).min(budget);
+            let logits = self.model.prefill(&mut seq.cache, &seq.prompt[next..next + n]);
+            next += n;
+            budget -= n;
+            spent += n;
+            self.prefill_tokens += n;
+            if next == seq.prompt.len() {
+                self.prefix.register(&seq.prompt, &seq.cache);
+                let first = argmax(logits.row(logits.rows - 1)) as u16;
+                seq.generated.push(first);
+                seq.last_token = first;
+                seq.first_token_at = Some(Instant::now());
+                seq.phase = SeqPhase::Decoding;
+                self.generated_tokens += 1;
+                produced += 1;
+            } else {
+                seq.phase = SeqPhase::Prefilling { next };
+            }
+        }
+        self.max_step_prefill = self.max_step_prefill.max(spent);
         self.sample_sharing();
         // a prefill alone may satisfy max_new == 1
         self.retire();
 
-        // --- batched decode over the in-flight batch ---
-        let bsz = self.sched.active_len();
+        // --- batched decode over the decoding subset of the batch ---
+        let bsz =
+            self.sched.active.iter().filter(|s| s.phase == SeqPhase::Decoding).count();
         if bsz > 0 {
             self.peak_batch = self.peak_batch.max(bsz);
             self.decode_steps += 1;
-            let tokens: Vec<u16> = self.sched.active.iter().map(|s| s.last_token).collect();
+            let tokens: Vec<u16> = self
+                .sched
+                .active
+                .iter()
+                .filter(|s| s.phase == SeqPhase::Decoding)
+                .map(|s| s.last_token)
+                .collect();
             let logits = {
-                let mut caches: Vec<&mut crate::serve::KvCache> =
-                    self.sched.active.iter_mut().map(|s| &mut s.cache).collect();
+                let mut caches: Vec<&mut crate::serve::KvCache> = self
+                    .sched
+                    .active
+                    .iter_mut()
+                    .filter(|s| s.phase == SeqPhase::Decoding)
+                    .map(|s| &mut s.cache)
+                    .collect();
                 self.model.decode_batch(&mut caches, &tokens)
             };
-            for (i, seq) in self.sched.active.iter_mut().enumerate() {
-                let next = argmax(logits.row(i)) as u16;
+            for (row, seq) in self
+                .sched
+                .active
+                .iter_mut()
+                .filter(|s| s.phase == SeqPhase::Decoding)
+                .enumerate()
+            {
+                let next = argmax(logits.row(row)) as u16;
                 seq.generated.push(next);
                 seq.last_token = next;
             }
@@ -341,11 +559,20 @@ impl Engine {
                 .first_token_at
                 .map(|t| t.duration_since(seq.submitted).as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
+            let missed = seq.deadline.is_some_and(|d| now > d);
+            if missed {
+                self.deadline_misses += 1;
+            }
             self.finished.push(RequestStats {
                 id: seq.id,
-                prompt_len: seq.prompt_len,
+                prompt_len: seq.prompt.len(),
                 n_generated: seq.generated.len(),
                 reused_tokens: seq.reused_tokens,
+                priority: seq.priority,
+                deadline_ms: seq
+                    .deadline
+                    .map(|d| d.duration_since(seq.submitted).as_secs_f64() * 1e3),
+                deadline_missed: missed,
                 ttft_ms: ttft,
                 latency_ms: now.duration_since(seq.submitted).as_secs_f64() * 1e3,
                 generated: seq.generated,
@@ -373,6 +600,8 @@ impl Engine {
             generated_tokens: std::mem::take(&mut self.generated_tokens),
             decode_steps: std::mem::take(&mut self.decode_steps),
             peak_batch: std::mem::take(&mut self.peak_batch),
+            max_step_prefill: std::mem::take(&mut self.max_step_prefill),
+            deadline_misses: std::mem::take(&mut self.deadline_misses),
             prefix_hits: hits,
             prefix_hit_tokens: reused,
             kv_resident_bytes: self.pool.take_peak_allocated() * pb,
@@ -429,6 +658,40 @@ mod tests {
                 "request {i} diverged under batching"
             );
         }
+    }
+
+    /// Chunked prefill must not change outputs either — the same traffic
+    /// through a 3-token-per-step chunk budget generates exactly the
+    /// unchunked continuations, and the report records the chunk-budget
+    /// invariant (`max_step_prefill <= chunk`).
+    #[test]
+    fn chunked_serving_matches_unchunked() {
+        let compiled = small_model();
+        let mk = |chunk: Option<usize>| {
+            Engine::new(
+                compiled.clone(),
+                EngineConfig { max_batch: 3, prefill_chunk: chunk, ..EngineConfig::default() },
+            )
+            .unwrap()
+        };
+        let mut plain = mk(None);
+        let mut chunked = mk(Some(3));
+        let prompts: Vec<Vec<u16>> = (0..5).map(|i| toks(4 + 3 * i, 200 + i as u64)).collect();
+        for p in &prompts {
+            plain.submit(p, 5);
+            chunked.submit(p, 5);
+        }
+        let a = plain.drain();
+        let b = chunked.drain();
+        assert!(a.max_step_prefill > 3, "unchunked run prefills whole prompts per step");
+        assert!(b.max_step_prefill <= 3, "chunk budget violated: {}", b.max_step_prefill);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.generated, y.generated, "request {:?} diverged under chunking", x.id);
+        }
+        // chunking splits prefill across steps but never duplicates work
+        assert_eq!(a.prefill_tokens, b.prefill_tokens);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
     }
 
     /// Templated traffic: requests sharing a long prompt prefix must hit
@@ -554,6 +817,7 @@ mod tests {
                     kv_budget_bytes: Some(budget),
                     prefix_sharing: false,
                     kv_quant: quant,
+                    ..EngineConfig::default()
                 },
             )
             .unwrap()
@@ -610,18 +874,144 @@ mod tests {
         assert!(report.tokens_per_sec() > 0.0);
         assert!(report.kv_resident_bytes > 0);
         assert!(report.kv_reserved_bytes >= report.kv_resident_bytes);
+        assert_eq!(report.max_step_prefill, 10, "two 5-token prompts admitted per step");
+        assert_eq!(report.deadline_misses, 0, "no deadlines were set");
         for r in &report.requests {
             assert!(r.latency_ms >= r.ttft_ms);
+            assert_eq!(r.deadline_ms, None);
+            assert!(!r.deadline_missed);
         }
         let text = report.render();
         assert!(text.contains("tok/s"), "{text}");
         assert!(text.contains("prefix hits"), "{text}");
+        assert!(text.contains("deadline misses 0"), "{text}");
         // engine is reusable after a drain, and reservations were returned
         assert_eq!(engine.pool().pages_reserved(), 0);
         engine.submit(&toks(3, 99), 2);
         let again = engine.drain();
         assert_eq!(again.requests.len(), 1);
         assert_eq!(again.generated_tokens, 2);
+    }
+
+    /// Regression (max_new == 0): the old clamp silently generated one
+    /// unrequested token. It must complete immediately with an empty
+    /// continuation and `ttft == latency`, and flow through the next drain.
+    #[test]
+    fn max_new_zero_completes_with_no_tokens() {
+        let mut engine = Engine::new(small_model(), EngineConfig::default()).unwrap();
+        let zero = engine.submit(&toks(5, 1), 0);
+        assert!(engine.completed(zero), "zero-token request completes at submit");
+        assert_eq!(engine.outstanding(), 0);
+        let real = engine.submit(&toks(4, 2), 3);
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 2);
+        let r = &report.requests[0];
+        assert_eq!(r.id, zero);
+        assert_eq!(r.n_generated, 0);
+        assert!(r.generated.is_empty(), "no unrequested token");
+        assert_eq!(r.ttft_ms, r.latency_ms);
+        assert_eq!(r.prompt_len, 5);
+        // accounting skips it entirely: only the real request generated
+        assert_eq!(report.generated_tokens, 3);
+        assert_eq!(report.prefill_tokens, 4);
+        assert_eq!(report.requests[1].id, real);
+    }
+
+    /// Regression (empty drain): draining an engine that served nothing
+    /// must render `-` placeholders, not `NaN ms`.
+    #[test]
+    fn empty_drain_report_renders_clean() {
+        let mut engine = Engine::new(small_model(), EngineConfig::default()).unwrap();
+        let report = engine.drain();
+        assert!(report.requests.is_empty());
+        assert_eq!(report.generated_tokens, 0);
+        assert_eq!(report.tokens_per_sec(), 0.0);
+        let text = report.render();
+        assert!(!text.contains("NaN"), "NaN leaked into the report: {text}");
+        assert!(text.contains("latency mean - ms"), "{text}");
+        assert!(text.contains("requests 0"), "{text}");
+        // the engine still serves normally afterwards
+        engine.submit(&toks(3, 5), 2);
+        assert_eq!(engine.drain().requests.len(), 1);
+    }
+
+    /// Under `Priority`, a high-priority request submitted after a
+    /// low-priority one is admitted first; both still complete.
+    #[test]
+    fn priority_policy_admits_urgent_first() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 1, policy: SchedPolicy::Priority, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let low = engine.submit_with(&toks(4, 1), 3, 3, None);
+        let high = engine.submit_with(&toks(4, 2), 3, 0, None);
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 2);
+        let (rl, rh) = (&report.requests[0], &report.requests[1]);
+        assert_eq!((rl.id, rh.id), (low, high));
+        assert_eq!((rl.priority, rh.priority), (3, 0));
+        // max_batch 1 serializes: the high-priority request ran first, so
+        // its first token strictly precedes the low one's
+        assert!(rh.ttft_ms < rl.ttft_ms, "high {} vs low {}", rh.ttft_ms, rl.ttft_ms);
+    }
+
+    /// The chunk budget cannot starve an admitted prompt: with a
+    /// saturating high-priority stream grabbing the whole per-step prefill
+    /// budget, in-flight aging must still drive a low-priority prompt's
+    /// prefill to completion in bounded steps.
+    #[test]
+    fn chunk_budget_cannot_starve_admitted_prefill() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig {
+                max_batch: 2,
+                policy: SchedPolicy::Priority,
+                prefill_chunk: Some(4),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        // low-priority 12-token prompt: needs 3 full chunks of budget; the
+        // out-of-range priority must clamp to the last lane, keeping the
+        // aging bound at (PRIORITY_LANES - 1) · AGING_TICKS
+        let low = engine.submit_with(&toks(12, 1), 1, 255, None);
+        let bound = 64;
+        let mut steps = 0;
+        while !engine.completed(low) {
+            assert!(steps < bound, "admitted low-priority prefill starved of chunk budget");
+            // every step a fresh urgent 4-token prompt wants the whole chunk
+            engine.submit_with(&toks(4, 100 + steps as u64), 1, 0, None);
+            engine.step();
+            steps += 1;
+        }
+        let report = engine.drain();
+        assert!(report.max_step_prefill <= 4);
+        assert!(report.requests.iter().any(|r| r.id == low && r.n_generated == 1));
+    }
+
+    /// Under `Deadline`, EDF reorders admission and blown soft deadlines
+    /// are counted per request and in aggregate.
+    #[test]
+    fn deadline_policy_orders_and_counts_misses() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 1, policy: SchedPolicy::Deadline, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let loose = engine.submit_with(&toks(4, 1), 3, 0, Some(Duration::from_secs(3600)));
+        // tighter deadline submitted later must run first; zero budget
+        // guarantees a recorded miss without waiting in the test
+        let tight = engine.submit_with(&toks(4, 2), 3, 0, Some(Duration::ZERO));
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 2);
+        let (rl, rt) = (&report.requests[0], &report.requests[1]);
+        assert_eq!((rl.id, rt.id), (loose, tight));
+        assert!(rt.ttft_ms < rl.ttft_ms, "EDF runs the tight deadline first");
+        assert!(rt.deadline_missed && !rl.deadline_missed);
+        assert_eq!(report.deadline_misses, 1);
+        assert_eq!(rt.deadline_ms, Some(0.0));
+        assert!(report.render().contains("deadline misses 1 (of 2 with deadlines)"));
     }
 
     /// `--max-batch 0` must come back as a structured `error.rs` error,
@@ -638,8 +1028,9 @@ mod tests {
         assert!(err.to_string().contains("max_batch"), "{err}");
     }
 
-    /// Bad paging flags are structured errors too: page size 0, and a KV
-    /// budget that cannot hold one sequence's first page row.
+    /// Bad paging flags are structured errors too: page size 0, a KV
+    /// budget that cannot hold one sequence's first page row, and a zero
+    /// prefill chunk.
     #[test]
     fn bad_pool_flags_are_structured_errors() {
         let err = match Engine::new(
@@ -658,6 +1049,14 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("budget"), "{err}");
+        let err = match Engine::new(
+            small_model(),
+            EngineConfig { prefill_chunk: Some(0), ..EngineConfig::default() },
+        ) {
+            Ok(_) => panic!("prefill chunk 0 must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("prefill chunk"), "{err}");
     }
 
     #[test]

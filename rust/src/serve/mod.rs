@@ -15,14 +15,17 @@
 //! - [`PrefixRegistry`]: retained page-aligned prompt prefixes, so
 //!   templated traffic attaches to an existing chain and prefills only its
 //!   suffix;
-//! - [`Scheduler`]: FIFO queue + in-flight batch bookkeeping for continuous
-//!   batching;
+//! - [`Scheduler`]: policy-ordered admission queues ([`SchedPolicy`]:
+//!   FIFO, priority lanes with aging, earliest-deadline-first) +
+//!   in-flight batch bookkeeping for continuous batching;
 //! - [`Engine`]: drives a [`crate::model::CompiledModel`] — batched
 //!   compressed matmuls across the active batch, blocked batch-shared
 //!   attention ([`crate::model::AttnKernel`]) streaming page runs over
 //!   every in-flight sequence — admits requests against the pool budget,
-//!   and reports latency, throughput, pool bytes, and prefix-hit counters
-//!   in a [`ServeReport`].
+//!   prefills prompts in `--prefill-chunk`-bounded pieces interleaved
+//!   with decode ([`SeqPhase`]), and reports latency, throughput, pool
+//!   bytes, prefix-hit counters, and deadline misses in a
+//!   [`ServeReport`].
 //!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
 //! dense-recompute vs KV-cached-compressed comparison and the
@@ -38,4 +41,7 @@ pub use engine::{Engine, EngineConfig, RequestStats, ServeReport};
 pub use kv_cache::{KvCache, PageRun, PanelRuns};
 pub use kv_pool::{KvPool, KvQuant, DEFAULT_PAGE_POSITIONS};
 pub use prefix::{PrefixRegistry, DEFAULT_PREFIX_ENTRIES};
-pub use scheduler::{ActiveSeq, GenRequest, RequestId, Scheduler};
+pub use scheduler::{
+    ActiveSeq, GenRequest, RequestId, SchedPolicy, Scheduler, SeqPhase, AGING_TICKS,
+    PRIORITY_LANES,
+};

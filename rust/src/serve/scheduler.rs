@@ -1,18 +1,91 @@
 //! Request queue and continuous-batching state.
 //!
-//! The scheduler owns two collections: a FIFO of waiting [`GenRequest`]s and
-//! the in-flight batch of [`ActiveSeq`]s. Every engine step admits waiting
-//! requests into free batch slots and retires finished sequences, so new
-//! traffic joins the batch mid-flight instead of waiting for a full drain —
-//! continuous batching, not static batching.
+//! The scheduler owns two collections: the waiting [`GenRequest`]s (lane
+//! queues ordered by the admission [`SchedPolicy`]) and the in-flight batch
+//! of [`ActiveSeq`]s. Every engine step admits waiting requests into free
+//! batch slots and retires finished sequences, so new traffic joins the
+//! batch mid-flight instead of waiting for a full drain — continuous
+//! batching, not static batching.
+//!
+//! # Admission policies
+//!
+//! - [`SchedPolicy::Fifo`] — strict arrival order. The selected head blocks
+//!   admission when it does not fit the page budget (no skipping), so FIFO
+//!   is trivially starvation-free.
+//! - [`SchedPolicy::Priority`] — [`PRIORITY_LANES`] lanes, lane 0 most
+//!   urgent; selection takes the front of the lowest non-empty lane (FIFO
+//!   within a lane). **Aging** keeps low lanes live: every
+//!   [`Scheduler::tick`] (one per engine step), a request that has waited
+//!   [`AGING_TICKS`] ticks in its lane is promoted one lane up, so any
+//!   request reaches lane 0 within `(PRIORITY_LANES - 1) · AGING_TICKS`
+//!   ticks and then drains FIFO ahead of later arrivals — a saturating
+//!   high-priority stream cannot starve it.
+//! - [`SchedPolicy::Deadline`] — earliest-deadline-first over the soft
+//!   per-request deadlines; requests without a deadline order last, FIFO
+//!   among themselves. Deadlines are *soft*: a late request still runs, and
+//!   the engine counts the miss at retirement.
+//!
+//! In every policy the *selected* request blocks admission until it fits —
+//! reordering happens at selection time, never by skipping the chosen head,
+//! so budget pressure cannot starve whichever request the policy picked.
 
 use crate::serve::KvCache;
 use std::collections::VecDeque;
 use std::time::Instant;
 
+/// Admission-ordering policy of the [`Scheduler`] (`armor serve --policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict arrival order.
+    #[default]
+    Fifo,
+    /// Priority lanes with aging promotion (lane 0 first, FIFO within).
+    Priority,
+    /// Earliest soft deadline first; deadline-less requests last.
+    Deadline,
+}
+
+impl SchedPolicy {
+    /// Parse a `--policy` flag value.
+    pub fn parse(name: &str) -> Option<SchedPolicy> {
+        match name {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "priority" => Some(SchedPolicy::Priority),
+            "deadline" => Some(SchedPolicy::Deadline),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Priority => "priority",
+            SchedPolicy::Deadline => "deadline",
+        }
+    }
+}
+
+/// Priority lanes under [`SchedPolicy::Priority`]; priorities clamp to
+/// `0..PRIORITY_LANES` (0 = most urgent).
+pub const PRIORITY_LANES: usize = 4;
+
+/// Ticks a request waits in a lane before aging promotes it one lane up.
+pub const AGING_TICKS: u64 = 4;
+
 /// Opaque handle returned by `Engine::submit`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RequestId(pub u64);
+
+/// The earliest-deadline-first sort key shared by queue selection and the
+/// engine's prefill-budget ordering: earliest `(deadline, id)` first,
+/// deadline-less requests last (FIFO among themselves). One definition so
+/// admission order and chunk-budget order can never drift apart.
+pub(crate) fn edf_key(
+    deadline: Option<Instant>,
+    id: RequestId,
+) -> (bool, Option<Instant>, RequestId) {
+    (deadline.is_none(), deadline, id)
+}
 
 /// A queued generation request (prompt/max_new already clamped to the
 /// model's context window by the engine).
@@ -21,21 +94,52 @@ pub struct GenRequest {
     pub id: RequestId,
     pub prompt: Vec<u16>,
     pub max_new: usize,
+    /// lane under [`SchedPolicy::Priority`] (0 = most urgent); recorded in
+    /// the final [`RequestStats`](crate::serve::RequestStats) either way
+    pub priority: u8,
+    /// soft completion deadline ([`SchedPolicy::Deadline`] orders by it;
+    /// the engine counts misses at retirement under every policy)
+    pub deadline: Option<Instant>,
     pub submitted: Instant,
+    /// scheduler tick at which the request entered its current lane
+    /// (aging bookkeeping — see [`Scheduler::tick`])
+    lane_since: u64,
+}
+
+/// Where an in-flight sequence is in its lifecycle: still prefilling its
+/// prompt in `--prefill-chunk`-bounded pieces, or decoding new tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Prompt tokens `[0, next)` are in the cache; `[next..]` still to
+    /// prefill. `next == 0` additionally means the prefix-cache lookup has
+    /// not happened yet (the engine attaches on first touch, so a
+    /// same-step earlier request can register the prefix first).
+    Prefilling { next: usize },
+    /// Prompt fully prefilled; one token per decode step.
+    Decoding,
 }
 
 /// One in-flight sequence: its KV cache plus generation progress.
 pub struct ActiveSeq {
     pub id: RequestId,
     pub cache: KvCache,
-    pub prompt_len: usize,
+    /// the (clamped) prompt — kept whole so chunked prefill can resume and
+    /// the prefix registry can retain the page-aligned prefix at the end
+    pub prompt: Vec<u16>,
     pub max_new: usize,
+    pub phase: SeqPhase,
+    pub priority: u8,
+    /// scheduler tick at admission — the engine ages the *in-flight*
+    /// prefill-budget order from it ([`ActiveSeq::effective_priority`]),
+    /// extending the queue's anti-starvation guarantee to the chunk budget
+    pub admitted_tick: u64,
+    pub deadline: Option<Instant>,
     /// worst-case page demand reserved against the pool at admission;
     /// returned via `KvPool::release` when the sequence retires
     pub reserved_pages: usize,
     /// prompt tokens attached from the prefix cache instead of prefilled
     pub reused_tokens: usize,
-    /// tokens generated so far (first one comes from the prefill)
+    /// tokens generated so far (first one comes from the final prefill chunk)
     pub generated: Vec<u16>,
     /// most recent token — the next decode step's input
     pub last_token: u16,
@@ -44,32 +148,134 @@ pub struct ActiveSeq {
 }
 
 impl ActiveSeq {
-    /// Finished when the token budget is spent or the context window is full.
+    /// Priority aged by time spent in flight: drops one lane per
+    /// [`AGING_TICKS`] scheduler ticks since admission, exactly like the
+    /// queue-side promotion — so a saturating stream of fresh urgent
+    /// prompts cannot monopolize the prefill chunk budget forever.
+    pub fn effective_priority(&self, now_tick: u64) -> u64 {
+        (self.priority as u64).saturating_sub((now_tick - self.admitted_tick) / AGING_TICKS)
+    }
+
+    /// Still owes prefill work before it can join the decode batch.
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.phase, SeqPhase::Prefilling { .. })
+    }
+
+    /// Finished when the token budget is spent or the context window is
+    /// full. A prefilling sequence is never finished: `generated` is empty
+    /// and its cache may legitimately fill the window mid-prompt.
     pub fn finished(&self) -> bool {
-        self.generated.len() >= self.max_new || self.cache.remaining() == 0
+        !self.is_prefilling()
+            && (self.generated.len() >= self.max_new || self.cache.remaining() == 0)
     }
 }
 
-/// FIFO admission + in-flight batch bookkeeping.
+/// Policy-ordered admission + in-flight batch bookkeeping.
 pub struct Scheduler {
     pub max_batch: usize,
+    policy: SchedPolicy,
     next_id: u64,
-    pending: VecDeque<GenRequest>,
+    /// monotone step counter driving priority aging
+    tick: u64,
+    /// `lanes[0]` first; Fifo and Deadline keep everything in `lanes[0]`
+    lanes: Vec<VecDeque<GenRequest>>,
     pub active: Vec<ActiveSeq>,
 }
 
 impl Scheduler {
     pub fn new(max_batch: usize) -> Scheduler {
-        assert!(max_batch > 0, "batch must admit at least one sequence");
-        Scheduler { max_batch, next_id: 0, pending: VecDeque::new(), active: Vec::new() }
+        Scheduler::with_policy(max_batch, SchedPolicy::Fifo)
     }
 
-    /// Enqueue a request; returns its id.
-    pub fn enqueue(&mut self, prompt: Vec<u16>, max_new: usize) -> RequestId {
+    pub fn with_policy(max_batch: usize, policy: SchedPolicy) -> Scheduler {
+        assert!(max_batch > 0, "batch must admit at least one sequence");
+        Scheduler {
+            max_batch,
+            policy,
+            next_id: 0,
+            tick: 0,
+            lanes: vec![VecDeque::new(); PRIORITY_LANES],
+            active: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// The aging clock (one tick per engine step).
+    pub fn current_tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Allocate the next request id (shared by queued requests and the
+    /// engine's immediately-completed `max_new == 0` submissions, so ids
+    /// stay globally ordered by submission).
+    pub fn issue_id(&mut self) -> RequestId {
         let id = RequestId(self.next_id);
         self.next_id += 1;
-        self.pending.push_back(GenRequest { id, prompt, max_new, submitted: Instant::now() });
         id
+    }
+
+    /// Enqueue a request at default priority with no deadline.
+    pub fn enqueue(&mut self, prompt: Vec<u16>, max_new: usize) -> RequestId {
+        self.enqueue_with(prompt, max_new, 0, None)
+    }
+
+    /// Enqueue a request; returns its id. `priority` is clamped into the
+    /// lane range up front, so everything downstream — lane placement,
+    /// in-flight aging ([`ActiveSeq::effective_priority`]), and the
+    /// reported `RequestStats.priority` — sees the actual lane and the
+    /// aging bound stays `(PRIORITY_LANES - 1) · AGING_TICKS` regardless
+    /// of the submitted value. Under [`SchedPolicy::Priority`] the request
+    /// enters its lane; other policies keep one arrival-ordered lane
+    /// (priority is still recorded).
+    pub fn enqueue_with(
+        &mut self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        priority: u8,
+        deadline: Option<Instant>,
+    ) -> RequestId {
+        let id = self.issue_id();
+        let priority = priority.min((PRIORITY_LANES - 1) as u8);
+        let lane = match self.policy {
+            SchedPolicy::Priority => priority as usize,
+            SchedPolicy::Fifo | SchedPolicy::Deadline => 0,
+        };
+        self.lanes[lane].push_back(GenRequest {
+            id,
+            prompt,
+            max_new,
+            priority,
+            deadline,
+            submitted: Instant::now(),
+            lane_since: self.tick,
+        });
+        id
+    }
+
+    /// Advance the aging clock by one engine step. Under
+    /// [`SchedPolicy::Priority`], promote every request that has waited
+    /// [`AGING_TICKS`] ticks in lane `l > 0` to the back of lane `l - 1` —
+    /// within a lane `lane_since` is non-decreasing front to back (both
+    /// enqueue and promotion push at the current tick), so promotion only
+    /// ever pops fronts.
+    pub fn tick(&mut self) {
+        self.tick += 1;
+        if self.policy != SchedPolicy::Priority {
+            return;
+        }
+        for lane in 1..PRIORITY_LANES {
+            while self.lanes[lane]
+                .front()
+                .is_some_and(|r| self.tick - r.lane_since >= AGING_TICKS)
+            {
+                let mut req = self.lanes[lane].pop_front().expect("front checked");
+                req.lane_since = self.tick;
+                self.lanes[lane - 1].push_back(req);
+            }
+        }
     }
 
     /// Whether the in-flight batch has a free slot.
@@ -77,28 +283,48 @@ impl Scheduler {
         self.active.len() < self.max_batch
     }
 
-    /// Next waiting request, if a batch slot is free — without dequeuing,
-    /// so the engine can check its page demand against the pool budget
-    /// first (FIFO order: a request that does not fit blocks the queue
-    /// rather than being skipped, to keep admission starvation-free).
+    /// `(lane, index)` of the request the policy would admit next.
+    fn select(&self) -> Option<(usize, usize)> {
+        match self.policy {
+            // front of the first non-empty lane: plain FIFO (everything in
+            // lane 0) or priority order with FIFO within a lane
+            SchedPolicy::Fifo | SchedPolicy::Priority => self
+                .lanes
+                .iter()
+                .position(|q| !q.is_empty())
+                .map(|lane| (lane, 0)),
+            // EDF scan: earliest (deadline, id); deadline-less last
+            SchedPolicy::Deadline => self.lanes[0]
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| edf_key(r.deadline, r.id))
+                .map(|(i, _)| (0, i)),
+        }
+    }
+
+    /// Next waiting request per policy, if a batch slot is free — without
+    /// dequeuing, so the engine can check its page demand against the pool
+    /// budget first. The selected request blocks the queue rather than
+    /// being skipped when it does not fit, keeping admission
+    /// starvation-free under every policy.
     pub fn peek_admittable(&self) -> Option<&GenRequest> {
         if self.has_capacity() {
-            self.pending.front()
+            self.select().map(|(lane, i)| &self.lanes[lane][i])
         } else {
             None
         }
     }
 
-    /// Next waiting request, if a batch slot is free.
+    /// Dequeue the request [`Scheduler::peek_admittable`] selected.
     pub fn pop_admittable(&mut self) -> Option<GenRequest> {
         if self.has_capacity() {
-            self.pending.pop_front()
+            self.select().and_then(|(lane, i)| self.lanes[lane].remove(i))
         } else {
             None
         }
     }
 
-    /// Place a prefilled sequence into the in-flight batch.
+    /// Place an admitted sequence into the in-flight batch.
     pub fn admit(&mut self, seq: ActiveSeq) {
         assert!(self.has_capacity(), "admitting past max_batch");
         self.active.push(seq);
@@ -115,7 +341,7 @@ impl Scheduler {
     }
 
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.lanes.iter().map(|q| q.len()).sum()
     }
 
     pub fn active_len(&self) -> usize {
@@ -124,7 +350,7 @@ impl Scheduler {
 
     /// True when no request is waiting or in flight.
     pub fn is_idle(&self) -> bool {
-        self.pending.is_empty() && self.active.is_empty()
+        self.active.is_empty() && self.lanes.iter().all(|q| q.is_empty())
     }
 }
 
@@ -132,14 +358,19 @@ impl Scheduler {
 mod tests {
     use super::*;
     use crate::model::GptConfig;
+    use std::time::Duration;
 
     fn seq(id: u64, max_new: usize, generated: usize) -> ActiveSeq {
         let cfg = GptConfig { d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16, max_seq: 64, ..GptConfig::tiny() };
         ActiveSeq {
             id: RequestId(id),
             cache: KvCache::new(&cfg),
-            prompt_len: 1,
+            prompt: vec![0],
             max_new,
+            phase: SeqPhase::Decoding,
+            priority: 0,
+            admitted_tick: 0,
+            deadline: None,
             reserved_pages: 0,
             reused_tokens: 0,
             generated: vec![0; generated],
@@ -181,5 +412,70 @@ mod tests {
         assert_eq!(done[1].id, RequestId(2));
         assert_eq!(s.active_len(), 1);
         assert_eq!(s.active[0].id, RequestId(1));
+    }
+
+    #[test]
+    fn prefilling_sequence_is_never_finished() {
+        let mut s = seq(0, 1, 0);
+        s.phase = SeqPhase::Prefilling { next: 0 };
+        assert!(!s.finished(), "prefilling must not retire even at max_new 1");
+        s.phase = SeqPhase::Decoding;
+        s.generated.push(7);
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn priority_selects_lowest_lane_fifo_within() {
+        let mut s = Scheduler::with_policy(4, SchedPolicy::Priority);
+        let low = s.enqueue_with(vec![1], 2, 3, None);
+        let hi_a = s.enqueue_with(vec![2], 2, 0, None);
+        let hi_b = s.enqueue_with(vec![3], 2, 0, None);
+        let mid = s.enqueue_with(vec![4], 2, 1, None);
+        assert_eq!(s.pop_admittable().unwrap().id, hi_a, "lane 0 first");
+        assert_eq!(s.pop_admittable().unwrap().id, hi_b, "FIFO within lane 0");
+        assert_eq!(s.pop_admittable().unwrap().id, mid);
+        assert_eq!(s.pop_admittable().unwrap().id, low);
+    }
+
+    #[test]
+    fn aging_promotes_waiting_requests_to_lane_zero() {
+        let mut s = Scheduler::with_policy(4, SchedPolicy::Priority);
+        let low = s.enqueue_with(vec![1], 2, 3, None);
+        // a saturating high-priority stream: one new lane-0 request per tick
+        let mut highs = VecDeque::new();
+        for t in 0..3 * AGING_TICKS {
+            highs.push_back(s.enqueue_with(vec![t as u16], 2, 0, None));
+            s.tick();
+        }
+        // after 3·AGING_TICKS ticks the low request sits in lane 0, FIFO
+        // behind the highs enqueued before its final promotion but ahead of
+        // later arrivals — pop everything and find it before the stream end
+        let late = s.enqueue_with(vec![99], 2, 0, None);
+        let mut order = Vec::new();
+        while let Some(r) = s.pop_admittable() {
+            s.admit(seq(r.id.0, 2, 2)); // finished immediately
+            s.retire_finished();
+            order.push(r.id);
+        }
+        let low_pos = order.iter().position(|&i| i == low).expect("low-priority completed");
+        let late_pos = order.iter().position(|&i| i == late).unwrap();
+        assert!(low_pos < late_pos, "aged request drains ahead of later lane-0 arrivals");
+        assert!(highs.iter().all(|h| order.contains(h)));
+    }
+
+    #[test]
+    fn deadline_policy_is_edf_with_none_last() {
+        let mut s = Scheduler::with_policy(4, SchedPolicy::Deadline);
+        let now = Instant::now();
+        let loose = s.enqueue_with(vec![1], 2, 0, Some(now + Duration::from_millis(500)));
+        let none = s.enqueue_with(vec![2], 2, 0, None);
+        let tight = s.enqueue_with(vec![3], 2, 0, Some(now + Duration::from_millis(10)));
+        let none2 = s.enqueue_with(vec![4], 2, 0, None);
+        assert_eq!(s.peek_admittable().unwrap().id, tight, "EDF picks the tightest");
+        assert_eq!(s.pop_admittable().unwrap().id, tight);
+        assert_eq!(s.pop_admittable().unwrap().id, loose);
+        // deadline-less requests come last, FIFO among themselves
+        assert_eq!(s.pop_admittable().unwrap().id, none);
+        assert_eq!(s.pop_admittable().unwrap().id, none2);
     }
 }

@@ -72,12 +72,15 @@ impl Stats {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
     /// Percentile via nearest-rank on a sorted copy; `p` in [0, 100].
+    /// Sorting uses `f64::total_cmp` so a NaN sample (e.g. a ratio over an
+    /// empty denominator pushed by a caller) sorts deterministically to an
+    /// end instead of panicking the whole report inside `partial_cmp`.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
         v[rank.min(v.len() - 1)]
     }
@@ -107,6 +110,21 @@ mod tests {
         let s = Stats::default();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    /// Regression: a NaN sample used to panic `percentile` via
+    /// `partial_cmp(..).unwrap()`. With `total_cmp` the positive-bit NaN
+    /// sorts past +inf, so low/mid percentiles stay finite and p100 is the
+    /// NaN itself rather than a crash.
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        let mut s = Stats::default();
+        for x in [2.0, f64::NAN, 1.0, 3.0, 0.5] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(0.0), 0.5);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert!(s.percentile(100.0).is_nan());
     }
 
     #[test]
