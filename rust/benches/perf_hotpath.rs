@@ -191,21 +191,30 @@ fn main() {
     }
 
     // ---- end-to-end optimizer step: native vs XLA ----
+    // Per-iteration samples go through the shared obs::Stats accumulator,
+    // so the mean and tail come from the same percentile implementation as
+    // the serve report and bench harness.
     let steps = scaled(20);
-    let t0 = std::time::Instant::now();
     let mut native = ArmorOptimizer::new(&w, &d, &cfg, Pcg64::seed_from_u64(2));
+    let mut iter_ms = armor::obs::Stats::default();
     for _ in 0..steps {
+        let t0 = std::time::Instant::now();
         native.step();
+        iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    let native_per_iter = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    let native_per_iter = iter_ms.mean();
     println!(
-        "\nnative BCD iteration ({d_out}x{d_in}, db={db}):      {native_per_iter:8.2} ms/iter (loss {:.4})",
+        "\nnative BCD iteration ({d_out}x{d_in}, db={db}):      {native_per_iter:8.2} ms/iter (p90 {:.2}, loss {:.4})",
+        iter_ms.percentile(90.0),
         native.current_loss()
     );
     emit_json(
         "perf_hotpath",
         "native_bcd_iter",
-        vec![("mean_ms", Json::Num(native_per_iter))],
+        vec![
+            ("mean_ms", Json::Num(native_per_iter)),
+            ("p90_ms", Json::Num(iter_ms.percentile(90.0))),
+        ],
     );
 
     if let Some(ctx) = ExperimentCtx::load_with(2, false) {

@@ -20,16 +20,23 @@
 //! work (hits > 0) and the paged pool must reserve less KV memory than the
 //! monolithic full-panel layout at equal batch.
 //!
-//! A final sweep replays *mixed* traffic — long prompts submitted ahead of
+//! A fifth sweep replays *mixed* traffic — long prompts submitted ahead of
 //! short ones — through the scheduler policies (`fifo`, `fifo` + chunked
 //! prefill, `priority` + chunked, `deadline` + chunked), recording
 //! short-request TTFT p50/p99, deadline misses, and the per-step prefill
 //! bound: priority + chunking must cut short TTFT p99 without giving up
 //! more than 10% of FIFO's aggregate tok/s.
 //!
+//! A final sweep measures observability overhead: the same burst with
+//! timing metrics off, on, and on + a Chrome trace recorder attached.
+//! Metrics-on and metrics+trace must hold >= 0.97x of the metrics-off
+//! tok/s — the lock-free registry and in-memory trace buffer are designed
+//! to be invisible on the decode hot path (DESIGN.md §8).
+//!
 //! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
-//! artifact (CI's bench-smoke job uploads it as `BENCH_5.json`), including
-//! prefix-hit rates, pool bytes, and per-policy TTFT alongside throughput.
+//! artifact (CI's bench-smoke job uploads it as `BENCH_6.json`), including
+//! prefix-hit rates, pool bytes, per-policy TTFT, and the obs-overhead
+//! ratios alongside throughput.
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
@@ -68,11 +75,9 @@ fn run_engine(
         engine.submit(p, max_new);
     }
     let report = engine.drain();
-    let mut lat = armor::util::timer::Stats::default();
-    for r in &report.requests {
-        lat.push(r.latency_ms);
-    }
-    let p50 = lat.percentile(50.0);
+    // p50 comes straight off the report's shared Stats path — no
+    // hand-rolled percentile loop (obs::Stats is the one implementation)
+    let p50 = report.latency_percentile(50.0);
     (report, p50)
 }
 
@@ -521,5 +526,88 @@ fn main() {
         println!("OK: chunked prefill holds {tps_ratio:.2}x of FIFO aggregate throughput (>= 0.9x)");
     } else {
         println!("WARN: chunked prefill regressed aggregate throughput to {tps_ratio:.2}x of FIFO (< 0.9x)");
+    }
+
+    // --- observability overhead: metrics off / on / on + trace ---
+    // Counters are always on (they are how the report is derived), so
+    // "off" here disables only the timing histograms, gauges, and the
+    // per-layer attention series. Best-of-3 per case to keep the ratio
+    // gate from tripping on scheduler noise at this tiny model size.
+    println!("\nobservability overhead: timing metrics off / on / on + trace recorder");
+    use armor::obs::{validate_trace, TraceRecorder};
+    let obs_burst = traffic(&mut rng, scaled(12).max(4), prompt_len);
+    let obs_new = scaled(24).max(4);
+    let run_obs = |metrics: bool, with_trace: bool| -> (f64, usize) {
+        let mut best = 0.0f64;
+        let mut events = 0usize;
+        for _ in 0..3 {
+            let mut engine = Engine::new(
+                attn_compiled.clone(),
+                EngineConfig { max_batch, metrics, ..EngineConfig::default() },
+            )
+            .expect("obs engine config");
+            let trace = with_trace.then(TraceRecorder::new);
+            if let Some(t) = &trace {
+                engine.set_trace(t.clone());
+            }
+            for p in &obs_burst {
+                engine.submit(p, obs_new);
+            }
+            let report = engine.drain();
+            best = best.max(report.tokens_per_sec());
+            if let Some(t) = &trace {
+                let summary =
+                    validate_trace(&t.to_json().to_string_compact())
+                        .expect("traced drain produces a valid timeline");
+                events = summary.events;
+            }
+        }
+        (best, events)
+    };
+    let (off_tps, _) = run_obs(false, false);
+    let (on_tps, _) = run_obs(true, false);
+    let (trace_tps, trace_events) = run_obs(true, true);
+    assert!(trace_events > 0, "traced drain recorded no events");
+    let on_ratio = on_tps / off_tps.max(1e-9);
+    let trace_ratio = trace_tps / off_tps.max(1e-9);
+    let obs_rows = vec![
+        TableRow::new("metrics off", vec![format!("{off_tps:.1}"), "1.00x".to_string()]),
+        TableRow::new("metrics on", vec![format!("{on_tps:.1}"), format!("{on_ratio:.3}x")]),
+        TableRow::new(
+            "metrics + trace",
+            vec![format!("{trace_tps:.1}"), format!("{trace_ratio:.3}x")],
+        ),
+    ];
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Observability overhead (KV-cached 2:4, best of 3)",
+            &["tok/s (↑)", "vs metrics-off"],
+            &obs_rows
+        )
+    );
+    for (case, tps, ratio, events) in [
+        ("metrics_off", off_tps, 1.0, 0usize),
+        ("metrics_on", on_tps, on_ratio, 0),
+        ("metrics_trace", trace_tps, trace_ratio, trace_events),
+    ] {
+        emit_json(
+            "serve_obs",
+            case,
+            vec![
+                ("tok_s", Json::Num(tps)),
+                ("ratio_vs_off", Json::Num(ratio)),
+                ("trace_events", Json::Num(events as f64)),
+            ],
+        );
+    }
+    if on_ratio >= 0.97 && trace_ratio >= 0.97 {
+        println!(
+            "OK: obs overhead within budget (metrics {on_ratio:.3}x, +trace {trace_ratio:.3}x of metrics-off tok/s)"
+        );
+    } else {
+        println!(
+            "WARN: obs overhead over budget (metrics {on_ratio:.3}x, +trace {trace_ratio:.3}x; want >= 0.97x)"
+        );
     }
 }

@@ -3,7 +3,7 @@
 //! black-box value sinking, plus shared helpers for the per-table bench
 //! binaries under `rust/benches/`.
 
-use crate::util::timer::Stats;
+use crate::obs::Stats;
 use std::time::Instant;
 
 /// Prevent the optimizer from deleting a computed value.

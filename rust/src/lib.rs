@@ -25,6 +25,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod error;
+pub mod obs;
 pub mod util;
 pub mod tensor;
 pub mod linalg;

@@ -71,6 +71,10 @@ fn print_usage() {
                 OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
                 OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
+                OptSpec { name: "trace", help: "serve: write a Chrome trace-event timeline of the drain to this path", default: None },
+                OptSpec { name: "metrics-every", help: "serve: print a [metrics] snapshot line every N engine steps", default: None },
+                OptSpec { name: "no-metrics", help: "serve: disable timing histograms/gauges (counters stay on)", default: None },
+                OptSpec { name: "metrics-out", help: "serve: write the Prometheus exposition to this path after the drain", default: None },
             ]
         )
     );
@@ -346,6 +350,16 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             Some(std::time::Duration::from_secs_f64(ms / 1e3))
         }
     };
+    let metrics_every = match args.get("metrics-every") {
+        None => 0usize,
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| armor::err!("--metrics-every must be an integer, got '{v}'"))?;
+            armor::ensure!(n >= 1, "--metrics-every must be >= 1 engine step, got {n}");
+            n
+        }
+    };
     let prefill_chunk = match args.get("prefill-chunk") {
         None => None,
         Some(v) => {
@@ -383,8 +397,17 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             kv_quant,
             policy,
             prefill_chunk,
+            metrics: !args.flag("no-metrics"),
+            metrics_every,
         },
     )?;
+    // --trace attaches a Chrome trace-event recorder before any work runs;
+    // the recorder handle is cloned so the timeline can be written after drain
+    let trace = args.get("trace").map(|path| {
+        let rec = armor::obs::TraceRecorder::new();
+        engine.set_trace(rec.clone());
+        (path, rec)
+    });
     println!(
         "[serve] policy {}  prefill chunk {}  deadline {}",
         policy.label(),
@@ -400,6 +423,15 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
     }
     let report = engine.drain();
     print!("{}", report.render());
+    if let Some((path, rec)) = trace {
+        rec.write_to(Path::new(&path))?;
+        println!("[serve] trace: {} events written to {path}", rec.event_count());
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(&path, engine.render_prometheus())
+            .map_err(|e| armor::err!("writing --metrics-out {path}: {e}"))?;
+        println!("[serve] metrics: Prometheus exposition written to {path}");
+    }
 
     if args.flag("compare") {
         // mirror the engine's window clamping so both sides do the same work

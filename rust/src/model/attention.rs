@@ -118,6 +118,19 @@ impl AttnKernel {
     }
 }
 
+/// K/V bytes one ragged-batch kernel dispatch reads: every item streams
+/// `n_ctx[i]` positions of every head's K and V plane. Per position per head
+/// that is `8·head_dim` bytes for f32 pages and `2·(head_dim + 4)` for q8
+/// (int8 codes + one f32 scale per plane) — the same per-position cost
+/// [`page_bytes`](crate::serve::KvPool::page_bytes) charges. Pure
+/// arithmetic, so the observability layer can account bytes touched without
+/// instrumenting the kernel's inner loops.
+pub fn attn_bytes_touched(n_ctx: &[usize], n_heads: usize, head_dim: usize, q8: bool) -> usize {
+    let per_pos_per_head =
+        if q8 { 2 * (head_dim + 4) } else { 8 * head_dim };
+    n_ctx.iter().sum::<usize>() * n_heads * per_pos_per_head
+}
+
 /// One `(sequence, head)` task: fused score/softmax/weighted-sum of a single
 /// query head-slice, streaming the stream's contiguous K/V page runs. Q8
 /// runs are dequantized on the fly: scores fold each row's scale into the
@@ -594,6 +607,15 @@ mod tests {
                 assert!(d <= tol, "head {h} col {t}: diff {d} > tol {tol}");
             }
         }
+    }
+
+    #[test]
+    fn bytes_touched_matches_page_cost() {
+        // 3 positions × 2 heads × head_dim 8: f32 = 3·2·64, q8 = 3·2·24 —
+        // the same per-position cost the pool's page_bytes charges
+        assert_eq!(attn_bytes_touched(&[1, 2], 2, 8, false), 3 * 2 * 64);
+        assert_eq!(attn_bytes_touched(&[1, 2], 2, 8, true), 3 * 2 * 24);
+        assert_eq!(attn_bytes_touched(&[], 2, 8, false), 0);
     }
 
     #[test]

@@ -20,13 +20,17 @@
 
 use crate::coordinator::PruneRunReport;
 use crate::linalg::gemm_nt;
-use crate::model::attention::{attend_batch_scalar, AttnImpl, AttnKernel};
+use crate::model::attention::{attend_batch_scalar, attn_bytes_touched, AttnImpl, AttnKernel};
 use crate::model::gpt::{gelu_inplace, layer_norm};
 use crate::model::{prunable_layers, GptConfig, GptModel, MoeConfig};
-use crate::serve::{KvCache, KvPool, PrefixRegistry};
+use crate::obs::{Counter, Histogram, MetricsRegistry, TraceRecorder};
+use crate::serve::{KvCache, KvPool, KvQuant, PrefixRegistry};
 use crate::sparsity::{Compressed24, Compressed24Q8, Mask, DEFAULT_Q8_GROUP};
 use crate::tensor::{BlockDiag, Matrix};
+use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Storage dtype of the 2:4 value plane in compiled linears
 /// (`armor serve --quant q8` lowers through [`WeightQuant::Q8`]).
@@ -184,6 +188,48 @@ pub fn mask_24_from_zeros(w: &Matrix) -> Option<Mask> {
     Some(mask)
 }
 
+/// Attention-kernel observability handles, attached to a [`CompiledModel`]
+/// by the serve engine when metrics are enabled. Every [`Self::plane`]-labeled
+/// sample is two relaxed atomic adds into pre-registered metric cells
+/// (`armor_attn_us{plane}`, `armor_attn_bytes_total{plane}`); the optional
+/// [`TraceRecorder`] additionally emits one `attention` span per layer
+/// dispatch. `CompiledModel.obs == None` (the default) keeps the forward
+/// pass untouched.
+#[derive(Clone, Debug)]
+pub struct AttnObs {
+    /// quant-plane label: `"f32"`, `"q8"` (int8 weight plane), or `"q8-kv"`
+    pub plane: &'static str,
+    pub attn_us: Arc<Histogram>,
+    pub attn_bytes: Arc<Counter>,
+    pub trace: Option<TraceRecorder>,
+}
+
+impl AttnObs {
+    /// Register the attention series under `plane` in `registry` and build
+    /// the handle set. Idempotent per plane — re-attaching returns handles
+    /// to the same cells.
+    pub fn new(
+        registry: &MetricsRegistry,
+        plane: &'static str,
+        trace: Option<TraceRecorder>,
+    ) -> AttnObs {
+        AttnObs {
+            plane,
+            attn_us: registry.histogram(
+                "armor_attn_us",
+                &[("plane", plane)],
+                "Attention kernel wall time per layer dispatch (microseconds).",
+            ),
+            attn_bytes: registry.counter(
+                "armor_attn_bytes_total",
+                &[("plane", plane)],
+                "K/V bytes touched by the attention kernel.",
+            ),
+            trace,
+        }
+    }
+}
+
 /// A [`GptModel`] lowered to its deployment form: prunable linears as
 /// [`ExecLinear`]s, everything else (embeddings, LayerNorm gains, MoE
 /// routers, final LN) as dense tensors.
@@ -197,6 +243,8 @@ pub struct CompiledModel {
     /// attention route: the blocked batch kernel (default) or the scalar
     /// per-sequence reference (parity tests, bench baselines)
     pub attn: AttnImpl,
+    /// attention observability handles; `None` (the default) records nothing
+    pub obs: Option<AttnObs>,
 }
 
 impl CompiledModel {
@@ -238,7 +286,13 @@ impl CompiledModel {
             .filter(|(name, _)| !linears.contains_key(*name))
             .map(|(name, m)| (name.clone(), m.clone()))
             .collect();
-        Ok(CompiledModel { cfg: model.cfg.clone(), tensors, linears, attn: AttnImpl::default() })
+        Ok(CompiledModel {
+            cfg: model.cfg.clone(),
+            tensors,
+            linears,
+            attn: AttnImpl::default(),
+            obs: None,
+        })
     }
 
     /// Lowering switch for the weight value plane: compile, then quantize
@@ -277,14 +331,61 @@ impl CompiledModel {
         self
     }
 
+    /// Attach (or detach) attention observability handles (builder-style).
+    /// With `Some(obs)`, every [`Self::attend_ctx`] dispatch records wall
+    /// time and bytes touched; the arithmetic itself is untouched, so the
+    /// prefill/decode lock-step parity is unaffected.
+    pub fn with_obs(mut self, obs: Option<AttnObs>) -> CompiledModel {
+        self.obs = obs;
+        self
+    }
+
+    /// The quant-plane label this model executes on: `"q8-kv"` when the KV
+    /// pages are int8, `"q8"` when only the weight value plane is, `"f32"`
+    /// otherwise. Labels the attention series and the serve trace.
+    pub fn quant_plane(&self, kv_q8: bool) -> &'static str {
+        if kv_q8 {
+            "q8-kv"
+        } else if self.linears.values().any(|l| l.label().contains("q8")) {
+            "q8"
+        } else {
+            "f32"
+        }
+    }
+
     /// Ragged-batch attention dispatch for one layer (see
-    /// [`AttnKernel::attend_batch`] for the panel/blocking contract).
+    /// [`AttnKernel::attend_batch`] for the panel/blocking contract). With
+    /// [`Self::obs`] attached, the dispatch is wrapped in wall-time + bytes
+    /// accounting and an optional `attention` trace span — observation only,
+    /// never a change to the computed context.
     fn attend_ctx(&self, caches: &[&KvCache], layer: usize, q: &Matrix, n_ctx: &[usize]) -> Matrix {
-        match self.attn {
+        let watch = self.obs.as_ref().map(|o| {
+            (o, Instant::now(), o.trace.as_ref().map(|t| t.now_us()))
+        });
+        let out = match self.attn {
             AttnImpl::Blocked => AttnKernel::new(self.cfg.n_heads, self.cfg.head_dim())
                 .attend_batch(caches, layer, q, n_ctx),
             AttnImpl::ScalarRef => attend_batch_scalar(caches, layer, q, n_ctx, self.cfg.n_heads),
+        };
+        if let Some((o, t0, trace_start)) = watch {
+            let kv_q8 = caches.first().is_some_and(|c| c.quant() == KvQuant::Q8);
+            let bytes = attn_bytes_touched(n_ctx, self.cfg.n_heads, self.cfg.head_dim(), kv_q8);
+            o.attn_us.record(t0.elapsed().as_micros() as u64);
+            o.attn_bytes.add(bytes as u64);
+            if let (Some(tr), Some(start)) = (o.trace.as_ref(), trace_start) {
+                tr.complete(
+                    "attention",
+                    "model",
+                    start,
+                    vec![
+                        ("layer".to_string(), Json::Num(layer as f64)),
+                        ("batch".to_string(), Json::Num(n_ctx.len() as f64)),
+                        ("bytes".to_string(), Json::Num(bytes as f64)),
+                    ],
+                );
+            }
         }
+        out
     }
 
     fn tensor(&self, name: &str) -> &Matrix {
@@ -1011,6 +1112,42 @@ mod tests {
                 assert!((logits[c] - full[(i, c)]).abs() < 1e-4, "pos {i}");
             }
         }
+    }
+
+    /// Attention observability is observation only: attaching [`AttnObs`]
+    /// leaves the forward bit-identical, records one histogram sample per
+    /// layer dispatch, and accounts exactly the bytes the kernel touched.
+    #[test]
+    fn attn_obs_records_without_perturbing_forward() {
+        let mut rng = Pcg64::seed_from_u64(95);
+        let model = GptModel::random_init(&small_cfg(), &mut rng);
+        let plain = CompiledModel::compile(&model, None).unwrap();
+        let reg = MetricsRegistry::new();
+        let trace = TraceRecorder::new();
+        let observed = plain
+            .clone()
+            .with_obs(Some(AttnObs::new(&reg, "f32", Some(trace.clone()))));
+        assert_eq!(plain.quant_plane(false), "f32");
+        assert_eq!(plain.quant_plane(true), "q8-kv");
+
+        let t = toks(8, 96);
+        let a = plain.forward(&t);
+        let b = observed.forward(&t);
+        assert_eq!(a.data, b.data, "observation changed the forward");
+
+        // one monolithic prefill = one attend_ctx per layer
+        let obs = observed.obs.as_ref().unwrap();
+        assert_eq!(obs.attn_us.count(), small_cfg().n_layers as u64);
+        // prefill rows i attend over i+1 positions: sum over rows, per layer
+        let per_layer: usize = (0..t.len())
+            .map(|i| {
+                attn_bytes_touched(&[i + 1], small_cfg().n_heads, small_cfg().head_dim(), false)
+            })
+            .sum();
+        assert_eq!(obs.attn_bytes.get(), (per_layer * small_cfg().n_layers) as u64);
+        // one attention trace span per layer, and the document validates
+        assert_eq!(trace.event_count(), small_cfg().n_layers);
+        crate::obs::validate_trace(&trace.to_json().to_string_compact()).unwrap();
     }
 
     #[test]

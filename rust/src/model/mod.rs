@@ -12,8 +12,8 @@ mod config;
 mod gpt;
 mod layers;
 
-pub use attention::{attend_batch_scalar, attend_scalar, AttnImpl, AttnKernel};
-pub use compiled::{argmax, mask_24_from_zeros, CompiledModel, ExecLinear, WeightQuant};
+pub use attention::{attend_batch_scalar, attend_scalar, attn_bytes_touched, AttnImpl, AttnKernel};
+pub use compiled::{argmax, mask_24_from_zeros, AttnObs, CompiledModel, ExecLinear, WeightQuant};
 pub use config::{GptConfig, MoeConfig};
 pub use gpt::{ActivationCapture, GptModel, NoCapture};
 pub use layers::{prunable_layers, LayerRef};

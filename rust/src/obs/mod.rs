@@ -1,0 +1,45 @@
+//! Observability: metrics registry, per-step trace timeline, Prometheus
+//! exposition (hermetic, std-only — the offline stand-in for
+//! prometheus/metrics/tracing crates).
+//!
+//! Three pieces, one contract (DESIGN.md §8):
+//!
+//! - [`MetricsRegistry`]: named [`Counter`]s, [`Gauge`]s, and fixed
+//!   log2-bucket [`Histogram`]s. The hot path is one relaxed atomic add
+//!   per event (two for histograms) through pre-registered `Arc` handles —
+//!   no lock, no allocation after registration. [`MetricsRegistry::
+//!   render_prometheus`] emits the text exposition the future HTTP
+//!   front-end will serve at `/metrics`.
+//! - [`TraceRecorder`]: Chrome trace-event-format JSON timeline
+//!   (`armor serve --trace <path>`): complete `X` spans per engine step
+//!   with nested admission/prefill/decode/attention/retire spans, `i`
+//!   instants for pool and prefix events, `C` counters for queue depth.
+//!   [`validate_trace`] is the shared checker (unit tests + CI).
+//! - [`Stats`]: sample statistics (mean/std/percentiles) for offline
+//!   summaries — benches and the serve report share this one
+//!   implementation instead of hand-rolled percentile code.
+//!
+//! The serve engine owns a per-engine registry (`Engine::metrics()`), so
+//! concurrent engines — e.g. parallel tests — never share counters. The
+//! process-global registry here ([`global`]) backs ambient instruments
+//! like [`crate::util::timer::Timer`], which records every timed scope
+//! into an `armor_timer_us` histogram labeled by scope name.
+
+mod registry;
+mod stats;
+mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, HIST_BUCKETS};
+pub use stats::Stats;
+pub use trace::{validate_trace, TraceRecorder, TraceSummary};
+
+use std::sync::OnceLock;
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-global registry (ambient instruments: `Timer` histograms).
+/// Subsystems with a natural owner — the serve engine — keep their own
+/// registry instead.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}

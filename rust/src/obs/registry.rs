@@ -1,0 +1,395 @@
+//! Metrics registry: atomic counters, gauges, and fixed log2-bucket
+//! histograms with Prometheus text exposition.
+//!
+//! Hot-path contract: after registration, recording an event is one relaxed
+//! atomic add (two for histograms: bucket + sum) and zero allocation. The
+//! registry itself is only locked at registration time — callers hold
+//! `Arc` handles to the metric cells and never touch the registry again.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written (or max-tracked) f64 value, stored as IEEE-754 bits.
+///
+/// `set_max` relies on the fact that for non-negative finite f64 values the
+/// bit pattern orders the same way as the value, so an integer `fetch_max`
+/// is a lock-free floating-point max. All serve-plane gauges (byte peaks,
+/// batch sizes, queue depths) are non-negative, which keeps that valid.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    /// Raise the gauge to `v` if larger; requires `v >= 0` (see type docs).
+    pub fn set_max(&self, v: f64) {
+        debug_assert!(v >= 0.0);
+        self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of histogram buckets (including the +Inf catch-all).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed log2-bucket histogram over `u64` samples (typically microseconds
+/// or bytes). Bucket `i` covers `(2^(i-1), 2^i]` — so the Prometheus
+/// cumulative `le = 2^i` boundary is exact, not approximated — with bucket 0
+/// holding samples `<= 1` and the last bucket acting as +Inf.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    fn bucket_index(v: u64) -> usize {
+        let i = if v <= 1 { 0 } else { (64 - (v - 1).leading_zeros()) as usize };
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one sample: two relaxed atomic adds, no allocation.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+    /// Per-bucket counts (non-cumulative), index 0 first.
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    metric: Metric,
+}
+
+/// Named metric registry. Registration (`counter`/`gauge`/`histogram`) is
+/// idempotent get-or-create under a mutex; the returned `Arc` handles are
+/// the lock-free hot path. `render_prometheus` exposes everything in the
+/// Prometheus text format.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries
+            .iter()
+            .find(|e| e.name == name && labels_eq(&e.labels, labels))
+        {
+            return e.metric.clone();
+        }
+        let metric = make();
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            help: help.to_string(),
+            metric: metric.clone(),
+        });
+        metric
+    }
+
+    /// Get or register a counter. Panics if the (name, labels) series was
+    /// already registered as a different metric type.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Counter> {
+        match self.get_or_insert(name, labels, help, || Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c,
+            m => panic!("metric {name} registered as {}", m.type_name()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Gauge> {
+        match self.get_or_insert(name, labels, help, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            m => panic!("metric {name} registered as {}", m.type_name()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Histogram> {
+        match self
+            .get_or_insert(name, labels, help, || Metric::Histogram(Arc::new(Histogram::default())))
+        {
+            Metric::Histogram(h) => h,
+            m => panic!("metric {name} registered as {}", m.type_name()),
+        }
+    }
+
+    /// Current value of a registered counter series, if any.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .iter()
+            .find(|e| e.name == name && labels_eq(&e.labels, labels))
+            .and_then(|e| match &e.metric {
+                Metric::Counter(c) => Some(c.get()),
+                _ => None,
+            })
+    }
+
+    /// Current value of a registered gauge series, if any.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .iter()
+            .find(|e| e.name == name && labels_eq(&e.labels, labels))
+            .and_then(|e| match &e.metric {
+                Metric::Gauge(g) => Some(g.get()),
+                _ => None,
+            })
+    }
+
+    /// Prometheus text exposition: `# HELP` / `# TYPE` once per metric name
+    /// (names sorted, series in registration order within a name),
+    /// histograms as cumulative `_bucket{le=...}` plus `_sum` / `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+
+        let mut out = String::new();
+        for name in names {
+            let group: Vec<&Entry> = entries.iter().filter(|e| e.name == name).collect();
+            let first = group[0];
+            if !first.help.is_empty() {
+                out.push_str(&format!("# HELP {name} {}\n", first.help));
+            }
+            out.push_str(&format!("# TYPE {name} {}\n", first.metric.type_name()));
+            for e in &group {
+                match &e.metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            render_labels(&e.labels, None),
+                            c.get()
+                        ));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&format!(
+                            "{name}{} {}\n",
+                            render_labels(&e.labels, None),
+                            fmt_value(g.get())
+                        ));
+                    }
+                    Metric::Histogram(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (i, n) in counts.iter().enumerate() {
+                            cum += n;
+                            let le = if i == HIST_BUCKETS - 1 {
+                                "+Inf".to_string()
+                            } else {
+                                format!("{}", 1u64 << i)
+                            };
+                            out.push_str(&format!(
+                                "{name}_bucket{} {cum}\n",
+                                render_labels(&e.labels, Some(&le)),
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_sum{} {}\n",
+                            render_labels(&e.labels, None),
+                            h.sum()
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{} {cum}\n",
+                            render_labels(&e.labels, None),
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn labels_eq(have: &[(String, String)], want: &[(&str, &str)]) -> bool {
+    have.len() == want.len()
+        && have.iter().zip(want).all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
+}
+
+/// `{k="v",...}` with Prometheus label-value escaping; empty string when
+/// there are no labels. `le` appends the histogram bucket boundary.
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+/// Gauge values are counts/bytes in f64; emit whole numbers without a
+/// fractional part so exposition matches the integer bookkeeping exactly.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("armor_test_total", &[], "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(reg.counter_value("armor_test_total", &[]), Some(5));
+
+        let g = reg.gauge("armor_test_peak", &[("plane", "f32")], "test gauge");
+        g.set(3.0);
+        g.set_max(7.0);
+        g.set_max(2.0);
+        assert_eq!(g.get(), 7.0);
+        assert_eq!(reg.gauge_value("armor_test_peak", &[("plane", "f32")]), Some(7.0));
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_series() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("armor_x_total", &[("k", "a")], "");
+        let a2 = reg.counter("armor_x_total", &[("k", "a")], "");
+        let b = reg.counter("armor_x_total", &[("k", "b")], "");
+        a.inc();
+        a2.inc();
+        b.inc();
+        assert_eq!(reg.counter_value("armor_x_total", &[("k", "a")]), Some(2));
+        assert_eq!(reg.counter_value("armor_x_total", &[("k", "b")]), Some(1));
+    }
+
+    #[test]
+    fn histogram_buckets_are_exact_powers_of_two() {
+        // bucket i covers (2^(i-1), 2^i]: boundary values land *inside*
+        // their le bucket, one past lands in the next.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(1025), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+
+        let h = Histogram::default();
+        for v in [1u64, 2, 3, 4, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1010);
+        assert!((h.mean() - 202.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_all_kinds() {
+        let reg = MetricsRegistry::new();
+        reg.counter("armor_reqs_total", &[], "requests").add(3);
+        reg.gauge("armor_depth", &[("q", "a\"b\\c\nd")], "depth").set(2.0);
+        let h = reg.histogram("armor_lat_us", &[], "latency");
+        h.record(1);
+        h.record(3);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE armor_reqs_total counter"));
+        assert!(text.contains("armor_reqs_total 3"));
+        // label value escaping: backslash, quote, newline
+        assert!(text.contains("armor_depth{q=\"a\\\"b\\\\c\\nd\"} 2"));
+        assert!(text.contains("# TYPE armor_lat_us histogram"));
+        assert!(text.contains("armor_lat_us_bucket{le=\"1\"} 1"));
+        assert!(text.contains("armor_lat_us_bucket{le=\"4\"} 2"));
+        assert!(text.contains("armor_lat_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("armor_lat_us_sum 4"));
+        assert!(text.contains("armor_lat_us_count 2"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Accumulating statistics over f64 samples — the single percentile
+//! implementation for the bench harness, the serve report, and the
+//! coordinator's per-layer metrics (moved here from `util::timer`; the old
+//! path re-exports it for compatibility).
+
+/// Accumulating statistics over f64 samples.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+    /// Percentile via nearest-rank on a sorted copy; `p` in [0, 100].
+    /// Sorting uses `f64::total_cmp` so a NaN sample (e.g. a ratio over an
+    /// empty denominator pushed by a caller) sorts deterministically to an
+    /// end instead of panicking the whole report inside `partial_cmp`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(f64::total_cmp);
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        let s = Stats::default();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    /// Regression: a NaN sample used to panic `percentile` via
+    /// `partial_cmp(..).unwrap()`. With `total_cmp` the positive-bit NaN
+    /// sorts past +inf, so low/mid percentiles stay finite and p100 is the
+    /// NaN itself rather than a crash.
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        let mut s = Stats::default();
+        for x in [2.0, f64::NAN, 1.0, 3.0, 0.5] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(0.0), 0.5);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert!(s.percentile(100.0).is_nan());
+    }
+}

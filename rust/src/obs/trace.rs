@@ -1,0 +1,309 @@
+//! Per-step trace recorder emitting Chrome trace-event-format JSON.
+//!
+//! The recorder produces a `{"traceEvents": [...]}` document loadable in
+//! `chrome://tracing` / Perfetto. Three event phases are emitted:
+//!
+//! - `X` **complete spans** (`ts` + `dur`, microseconds): one per engine
+//!   step with nested spans — by time-range enclosure on the shared
+//!   `(pid, tid)` — for admission, prefix lookup, prefill chunks, the
+//!   decode batch, the attention kernel, and retirement. Using complete
+//!   spans only (never `B`/`E` pairs) makes the "every `B` has a matching
+//!   `E`" invariant hold by construction.
+//! - `i` **instant events**: pool page alloc/free, CoW copies, prefix
+//!   hits/evictions, deadline misses.
+//! - `C` **counter events**: queue depth, active sequences, pool pages.
+//!
+//! Recording is opt-in (`armor serve --trace <path>`) and happens on the
+//! engine thread, so a mutex-guarded event vec is fine — the lock-free
+//! budget applies to the always-on metrics registry, not the tracer.
+
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: char,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    args: Vec<(String, Json)>,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    t0: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Cloneable handle to a shared trace buffer; clones record into the same
+/// timeline (the engine hands one to the compiled model for attention
+/// spans).
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    inner: Arc<TraceInner>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> TraceRecorder {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder {
+            inner: Arc::new(TraceInner { t0: Instant::now(), events: Mutex::new(Vec::new()) }),
+        }
+    }
+
+    /// Microseconds since the recorder was created (the trace clock).
+    pub fn now_us(&self) -> f64 {
+        self.inner.t0.elapsed().as_nanos() as f64 / 1e3
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        self.inner.events.lock().unwrap().push(ev);
+    }
+
+    /// Record a complete (`X`) span that started at `start_us` (from
+    /// [`now_us`](Self::now_us)) and ends now.
+    pub fn complete(&self, name: &str, cat: &'static str, start_us: f64, args: Vec<(String, Json)>) {
+        let dur = (self.now_us() - start_us).max(0.0);
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'X',
+            ts_us: start_us,
+            dur_us: Some(dur),
+            args,
+        });
+    }
+
+    /// Record an instant (`i`) event at the current time.
+    pub fn instant(&self, name: &str, cat: &'static str, args: Vec<(String, Json)>) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            ts_us: self.now_us(),
+            dur_us: None,
+            args,
+        });
+    }
+
+    /// Record a counter (`C`) sample at the current time.
+    pub fn counter(&self, name: &str, values: Vec<(String, f64)>) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: "counter",
+            ph: 'C',
+            ts_us: self.now_us(),
+            dur_us: None,
+            args: values.into_iter().map(|(k, v)| (k, Json::Num(v))).collect(),
+        });
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.inner.events.lock().unwrap().len()
+    }
+
+    /// Build the Chrome trace document. Events are sorted by timestamp so
+    /// `ts` is monotonic per `(pid, tid)` regardless of recording order
+    /// (a nested span is pushed *after* its parent started but *before*
+    /// the parent's `complete` call).
+    pub fn to_json(&self) -> Json {
+        let mut events = self.inner.events.lock().unwrap().clone();
+        events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+        let rows = events
+            .into_iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("name", Json::Str(e.name)),
+                    ("cat", Json::Str(e.cat.to_string())),
+                    ("ph", Json::Str(e.ph.to_string())),
+                    ("ts", Json::Num(e.ts_us)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(1.0)),
+                ];
+                if let Some(dur) = e.dur_us {
+                    fields.push(("dur", Json::Num(dur)));
+                }
+                if e.ph == 'i' {
+                    // instant scope: thread
+                    fields.push(("s", Json::Str("t".to_string())));
+                }
+                if !e.args.is_empty() {
+                    fields.push((
+                        "args",
+                        Json::Obj(e.args.into_iter().collect()),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(rows)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+
+    /// Serialize and write the trace document to `path`.
+    pub fn write_to(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())
+            .map_err(|e| crate::err!("writing trace {}: {e}", path.display()))
+    }
+}
+
+/// Summary returned by a successful [`validate_trace`] pass.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub events: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub counters: usize,
+}
+
+/// Validate a Chrome trace document (the satellite contract for the trace
+/// recorder, shared by the unit tests and the CI trace-validation step):
+/// the text parses as JSON, every event carries `name`/`ph`/`ts` with a
+/// known phase, `ts` is monotonic non-decreasing per `(pid, tid)`, every
+/// `B` has a matching `E` (vacuous here — the recorder emits only complete
+/// `X` spans), and `X` durations are non-negative.
+pub fn validate_trace(text: &str) -> crate::Result<TraceSummary> {
+    let doc = Json::parse(text).map_err(|e| crate::err!("trace is not valid JSON: {e}"))?;
+    let events = match doc.get("traceEvents").as_arr() {
+        Some(a) => a,
+        // the array form (no wrapper object) is also legal Chrome trace
+        None => doc
+            .as_arr()
+            .ok_or_else(|| crate::err!("trace has no traceEvents array"))?,
+    };
+
+    let mut summary = TraceSummary::default();
+    // per-(pid, tid): (last ts, open B-span stack)
+    let mut threads: std::collections::BTreeMap<(i64, i64), (f64, Vec<String>)> =
+        std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .as_str()
+            .ok_or_else(|| crate::err!("event {i} has no name"))?;
+        let ph = ev
+            .get("ph")
+            .as_str()
+            .ok_or_else(|| crate::err!("event {i} ({name}) has no ph"))?;
+        let ts = ev
+            .get("ts")
+            .as_f64()
+            .ok_or_else(|| crate::err!("event {i} ({name}) has no ts"))?;
+        crate::ensure!(ts.is_finite(), "event {i} ({name}) has non-finite ts");
+        let pid = ev.get("pid").as_f64().unwrap_or(0.0) as i64;
+        let tid = ev.get("tid").as_f64().unwrap_or(0.0) as i64;
+        let (last_ts, stack) = threads.entry((pid, tid)).or_insert((f64::NEG_INFINITY, Vec::new()));
+        crate::ensure!(
+            ts >= *last_ts,
+            "event {i} ({name}) ts {ts} precedes {last_ts} on (pid {pid}, tid {tid})"
+        );
+        *last_ts = ts;
+        match ph {
+            "X" => {
+                let dur = ev
+                    .get("dur")
+                    .as_f64()
+                    .ok_or_else(|| crate::err!("X event {i} ({name}) has no dur"))?;
+                crate::ensure!(dur >= 0.0, "X event {i} ({name}) has negative dur {dur}");
+                summary.spans += 1;
+            }
+            "B" => stack.push(name.to_string()),
+            "E" => {
+                let open = stack
+                    .pop()
+                    .ok_or_else(|| crate::err!("E event {i} ({name}) closes nothing"))?;
+                crate::ensure!(
+                    open == name,
+                    "E event {i} ({name}) closes mismatched span ({open})"
+                );
+            }
+            "i" | "I" => summary.instants += 1,
+            "C" => summary.counters += 1,
+            "M" => {} // metadata (process/thread names) — legal, uncounted
+            other => crate::bail!("event {i} ({name}) has unknown phase '{other}'"),
+        }
+        summary.events += 1;
+    }
+    for ((pid, tid), (_, stack)) in &threads {
+        crate::ensure!(
+            stack.is_empty(),
+            "unclosed B span '{}' on (pid {pid}, tid {tid})",
+            stack.last().unwrap()
+        );
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_validates_nested_spans() {
+        let tr = TraceRecorder::new();
+        let step = tr.now_us();
+        let inner = tr.now_us();
+        tr.instant("prefix_hit", "prefix", vec![("reused".into(), Json::Num(16.0))]);
+        tr.counter("queue", vec![("depth".into(), 3.0)]);
+        tr.complete("decode", "engine", inner, vec![("batch".into(), Json::Num(4.0))]);
+        tr.complete("step", "engine", step, vec![]);
+        let text = tr.to_json().to_string_compact();
+        let s = validate_trace(&text).unwrap();
+        assert_eq!(s, TraceSummary { events: 4, spans: 2, instants: 1, counters: 1 });
+    }
+
+    #[test]
+    fn empty_trace_is_valid() {
+        let tr = TraceRecorder::new();
+        let s = validate_trace(&tr.to_json().to_string_compact()).unwrap();
+        assert_eq!(s, TraceSummary::default());
+    }
+
+    #[test]
+    fn validator_rejects_broken_traces() {
+        assert!(validate_trace("not json").is_err());
+        assert!(validate_trace("{\"traceEvents\": 3}").is_err());
+        // non-monotonic ts on one thread
+        let bad = r#"{"traceEvents":[
+            {"name":"a","ph":"i","ts":10,"pid":1,"tid":1,"s":"t"},
+            {"name":"b","ph":"i","ts":5,"pid":1,"tid":1,"s":"t"}]}"#;
+        assert!(validate_trace(bad).is_err());
+        // same timestamps on *different* threads are fine
+        let ok = r#"{"traceEvents":[
+            {"name":"a","ph":"i","ts":10,"pid":1,"tid":1,"s":"t"},
+            {"name":"b","ph":"i","ts":5,"pid":1,"tid":2,"s":"t"}]}"#;
+        assert!(validate_trace(ok).is_ok());
+        // unmatched B
+        let open = r#"{"traceEvents":[{"name":"a","ph":"B","ts":1,"pid":1,"tid":1}]}"#;
+        assert!(validate_trace(open).is_err());
+        // matched B/E passes
+        let closed = r#"{"traceEvents":[
+            {"name":"a","ph":"B","ts":1,"pid":1,"tid":1},
+            {"name":"a","ph":"E","ts":2,"pid":1,"tid":1}]}"#;
+        assert_eq!(validate_trace(closed).unwrap().events, 2);
+        // negative X duration
+        let neg = r#"{"traceEvents":[{"name":"a","ph":"X","ts":1,"dur":-2,"pid":1,"tid":1}]}"#;
+        assert!(validate_trace(neg).is_err());
+    }
+
+    #[test]
+    fn span_names_with_quotes_and_backslashes_survive() {
+        // trace span names include request ids / policy labels — the JSON
+        // emitter must escape them for the document to stay parseable
+        let tr = TraceRecorder::new();
+        let t = tr.now_us();
+        tr.complete("prefill \"req\\7\"\n", "engine", t, vec![]);
+        let text = tr.to_json().to_string_compact();
+        let s = validate_trace(&text).unwrap();
+        assert_eq!(s.spans, 1);
+    }
+}

@@ -18,14 +18,30 @@
 //! with per-request latency, aggregate throughput, pool memory peaks,
 //! prefix-hit counters, deadline misses, and the per-step prefill bound
 //! actually observed.
+//!
+//! **Observability.** Every engine owns a [`MetricsRegistry`] (per-engine,
+//! not global, so parallel engines and tests never share counters). The
+//! counters behind the [`ServeReport`] totals are *always* recorded — the
+//! report is re-derived from the registry at drain time (counter minus its
+//! window base), so the drain summary and the live `render_prometheus`
+//! exposition can never disagree. [`EngineConfig::metrics`] gates only the
+//! extra cost: wall-time histograms per step/phase, queue-depth gauges, and
+//! the attention-kernel series ([`AttnObs`]). A [`TraceRecorder`] attached
+//! via [`Engine::set_trace`] additionally captures a Chrome trace timeline:
+//! one complete span per step with nested admission / prefix-lookup /
+//! prefill-chunk / decode / attention / retire spans, instant events for
+//! page alloc/free, CoW copies, prefix hits/evictions, and deadline misses,
+//! and counter tracks for queue depth and pool pages.
 
-use crate::model::{argmax, CompiledModel};
+use crate::model::{argmax, AttnObs, CompiledModel};
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, Stats, TraceRecorder};
 use crate::serve::scheduler::{edf_key, ActiveSeq, Scheduler, SeqPhase};
 use crate::serve::{
     KvPool, KvQuant, PrefixRegistry, RequestId, SchedPolicy, DEFAULT_PREFIX_ENTRIES,
     PRIORITY_LANES,
 };
-use crate::util::timer::Stats;
+use crate::util::json::Json;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Engine tuning knobs.
@@ -50,6 +66,14 @@ pub struct EngineConfig {
     /// Per-step prefill budget in prompt tokens (`--prefill-chunk`);
     /// `None` = unbounded (a prompt prefills whole in its admission step).
     pub prefill_chunk: Option<usize>,
+    /// Record wall-time histograms, gauges, and the attention-kernel series.
+    /// The counters behind the [`ServeReport`] totals are recorded
+    /// regardless — they are the report's source of truth. `armor serve
+    /// --no-metrics` turns this off for overhead comparisons.
+    pub metrics: bool,
+    /// Emit a `[metrics]` snapshot line to stderr every N engine steps
+    /// (`armor serve --metrics-every N`; 0 = off).
+    pub metrics_every: usize,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +86,8 @@ impl Default for EngineConfig {
             kv_quant: KvQuant::F32,
             policy: SchedPolicy::Fifo,
             prefill_chunk: None,
+            metrics: true,
+            metrics_every: 0,
         }
     }
 }
@@ -157,6 +183,18 @@ impl ServeReport {
         (lat, ttft)
     }
 
+    /// Percentile over completed-request latencies, in milliseconds
+    /// (`NaN` with no requests) — the single percentile path shared by the
+    /// benches instead of hand-rolled sorts.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency_stats().0.percentile(p)
+    }
+
+    /// Percentile over completed-request TTFTs, in milliseconds.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        self.latency_stats().1.percentile(p)
+    }
+
     /// TTFT percentile over the subset of requests whose prompt length is
     /// at most `max_prompt` (the policy sweeps track short-request TTFT in
     /// a mixed long/short batch). `NaN` when no request qualifies.
@@ -210,6 +248,215 @@ impl ServeReport {
     }
 }
 
+/// Pre-registered handles into the engine's [`MetricsRegistry`]: one cell
+/// per serve-plane series, resolved once at construction so the hot path is
+/// relaxed atomic adds and never locks the registry.
+#[derive(Clone)]
+struct ServeMetrics {
+    registry: Arc<MetricsRegistry>,
+    requests: Arc<Counter>,
+    prefill_tokens: Arc<Counter>,
+    generated_tokens: Arc<Counter>,
+    decode_steps: Arc<Counter>,
+    deadline_misses: Arc<Counter>,
+    prefix_hits: Arc<Counter>,
+    prefix_misses: Arc<Counter>,
+    prefix_hit_tokens: Arc<Counter>,
+    prefix_evictions: Arc<Counter>,
+    kv_pages_alloc: Arc<Counter>,
+    kv_pages_freed: Arc<Counter>,
+    kv_cow_copies: Arc<Counter>,
+    sched_promotions: Arc<Counter>,
+    peak_batch: Arc<Gauge>,
+    max_step_prefill: Arc<Gauge>,
+    kv_resident_peak: Arc<Gauge>,
+    kv_reserved_peak: Arc<Gauge>,
+    kv_shared_peak: Arc<Gauge>,
+    serve_wall_ms: Arc<Gauge>,
+    queue_depth: Arc<Gauge>,
+    active_seqs: Arc<Gauge>,
+    step_us: Arc<Histogram>,
+    admit_us: Arc<Histogram>,
+    lookup_us: Arc<Histogram>,
+    prefill_us: Arc<Histogram>,
+    decode_us: Arc<Histogram>,
+    retire_us: Arc<Histogram>,
+    ttft_us: Arc<Histogram>,
+    latency_us: Arc<Histogram>,
+}
+
+impl ServeMetrics {
+    fn new(plane: &'static str) -> ServeMetrics {
+        let r = Arc::new(MetricsRegistry::new());
+        let phase = |name: &'static str| {
+            r.histogram(
+                "armor_phase_us",
+                &[("phase", name), ("plane", plane)],
+                "Engine step-phase wall time (microseconds), labeled by phase and quant plane.",
+            )
+        };
+        ServeMetrics {
+            requests: r.counter("armor_requests_total", &[], "Completed generation requests."),
+            prefill_tokens: r.counter(
+                "armor_prefill_tokens_total",
+                &[],
+                "Prompt tokens processed by prefill (prefix-cache hits excluded).",
+            ),
+            generated_tokens: r.counter(
+                "armor_generated_tokens_total",
+                &[],
+                "Tokens generated (the serving throughput numerator).",
+            ),
+            decode_steps: r.counter("armor_decode_steps_total", &[], "Batched decode passes executed."),
+            deadline_misses: r.counter(
+                "armor_deadline_misses_total",
+                &[],
+                "Completed requests that blew their soft deadline.",
+            ),
+            prefix_hits: r.counter(
+                "armor_prefix_hits_total",
+                &[],
+                "Admissions that attached to a retained prefix chain.",
+            ),
+            prefix_misses: r.counter(
+                "armor_prefix_misses_total",
+                &[],
+                "Prefix-cache lookups that found no reusable chain.",
+            ),
+            prefix_hit_tokens: r.counter(
+                "armor_prefix_hit_tokens_total",
+                &[],
+                "Prompt tokens served from the prefix cache instead of prefill.",
+            ),
+            prefix_evictions: r.counter(
+                "armor_prefix_evictions_total",
+                &[],
+                "Prefix chains evicted (LRU shedding and clears).",
+            ),
+            kv_pages_alloc: r.counter("armor_kv_pages_alloc_total", &[], "KV pool pages allocated."),
+            kv_pages_freed: r.counter("armor_kv_pages_freed_total", &[], "KV pool pages freed."),
+            kv_cow_copies: r.counter(
+                "armor_kv_cow_copies_total",
+                &[],
+                "Copy-on-write page copies (shared page mutated).",
+            ),
+            sched_promotions: r.counter(
+                "armor_sched_promotions_total",
+                &[],
+                "Anti-starvation lane promotions under the priority policy.",
+            ),
+            peak_batch: r.gauge(
+                "armor_peak_batch",
+                &[],
+                "Largest decode batch observed in the last drain window.",
+            ),
+            max_step_prefill: r.gauge(
+                "armor_max_step_prefill",
+                &[],
+                "Most prompt tokens prefilled in any single step of the last drain window.",
+            ),
+            kv_resident_peak: r.gauge(
+                "armor_kv_resident_bytes_peak",
+                &[],
+                "Peak unique pool pages held, in bytes (last drain window).",
+            ),
+            kv_reserved_peak: r.gauge(
+                "armor_kv_reserved_bytes_peak",
+                &[],
+                "Peak worst-case page reservations, in bytes (last drain window).",
+            ),
+            kv_shared_peak: r.gauge(
+                "armor_kv_shared_bytes_peak",
+                &[],
+                "Peak bytes referenced beyond unique pages (sharing savings, last drain window).",
+            ),
+            serve_wall_ms: r.gauge(
+                "armor_serve_wall_ms",
+                &[],
+                "Wall-clock milliseconds of the last drain window.",
+            ),
+            queue_depth: r.gauge("armor_queue_depth", &[], "Requests waiting for admission."),
+            active_seqs: r.gauge("armor_active_seqs", &[], "Sequences in the in-flight batch."),
+            step_us: r.histogram(
+                "armor_step_us",
+                &[("plane", plane)],
+                "Engine step wall time (microseconds).",
+            ),
+            admit_us: phase("admit"),
+            lookup_us: phase("prefix_lookup"),
+            prefill_us: phase("prefill"),
+            decode_us: phase("decode"),
+            retire_us: phase("retire"),
+            ttft_us: r.histogram(
+                "armor_ttft_us",
+                &[],
+                "Submit to first generated token (microseconds).",
+            ),
+            latency_us: r.histogram(
+                "armor_latency_us",
+                &[],
+                "Submit to last generated token (microseconds).",
+            ),
+            registry: r,
+        }
+    }
+}
+
+/// Registry counter values at the start of the current accounting window;
+/// [`Engine::drain`] reports `counter − base` so the report is re-derived
+/// from the registry rather than kept in parallel.
+#[derive(Clone, Copy, Default)]
+struct CounterBase {
+    requests: u64,
+    prefill_tokens: u64,
+    generated_tokens: u64,
+    decode_steps: u64,
+    deadline_misses: u64,
+    prefix_hits: u64,
+    prefix_hit_tokens: u64,
+}
+
+/// Last-synced values of the monotonic counters owned by the pool, prefix
+/// registry, and scheduler — [`Engine::sync_sources`] folds their per-step
+/// deltas into the metrics registry (and the trace, as instant events).
+#[derive(Clone, Copy, Default)]
+struct SourceCounters {
+    prefix_hits: usize,
+    prefix_misses: usize,
+    prefix_reused: usize,
+    prefix_evictions: usize,
+    pages_alloc: usize,
+    pages_freed: usize,
+    cow_copies: usize,
+    promotions: u64,
+}
+
+/// Phase-timing anchor: wall-clock start plus the trace-clock start
+/// (`None` when both metrics timing and tracing are off, making the
+/// instrumented path a no-op).
+type PhaseStart = Option<(Instant, f64)>;
+
+fn begin_phase(timing: bool, trace: &Option<TraceRecorder>) -> PhaseStart {
+    if !timing {
+        return None;
+    }
+    Some((Instant::now(), trace.as_ref().map_or(0.0, |t| t.now_us())))
+}
+
+fn end_phase(
+    name: &'static str,
+    start: PhaseStart,
+    hist: &Histogram,
+    trace: &Option<TraceRecorder>,
+    args: Vec<(String, Json)>,
+) {
+    let Some((t0, ts)) = start else { return };
+    hist.record(t0.elapsed().as_micros() as u64);
+    if let Some(tr) = trace {
+        tr.complete(name, "engine", ts, args);
+    }
+}
+
 /// Compressed-execution inference engine with KV-cached continuous batching
 /// over a paged, budgeted KV pool.
 pub struct Engine {
@@ -220,12 +467,8 @@ pub struct Engine {
     /// per-step prefill budget in prompt tokens (`usize::MAX` = unbounded)
     prefill_chunk: usize,
     finished: Vec<RequestStats>,
-    prefill_tokens: usize,
-    generated_tokens: usize,
-    decode_steps: usize,
     peak_batch: usize,
     max_step_prefill: usize,
-    deadline_misses: usize,
     /// peak of (pages referenced − unique pages) × page_bytes, sampled per
     /// step — duplication that sharing avoided
     peak_shared_bytes: usize,
@@ -233,6 +476,17 @@ pub struct Engine {
     /// a drain, so throughput covers all work since then, not just the
     /// final drain loop
     window_start: Option<Instant>,
+    /// quant-plane label on the step/phase/attention series
+    plane: &'static str,
+    /// timing histograms + gauges + attention series enabled
+    metrics_on: bool,
+    /// `[metrics]` snapshot line every N steps (0 = off)
+    metrics_every: usize,
+    steps_seen: u64,
+    metrics: ServeMetrics,
+    trace: Option<TraceRecorder>,
+    base: CounterBase,
+    src: SourceCounters,
 }
 
 impl Engine {
@@ -263,6 +517,14 @@ impl Engine {
         } else {
             PrefixRegistry::disabled(pool.clone())
         };
+        let plane = model.quant_plane(cfg.kv_quant == KvQuant::Q8);
+        let metrics = ServeMetrics::new(plane);
+        let model = if cfg.metrics {
+            let obs = AttnObs::new(&metrics.registry, plane, None);
+            model.with_obs(Some(obs))
+        } else {
+            model
+        };
         Ok(Engine {
             model,
             sched: Scheduler::with_policy(cfg.max_batch, cfg.policy),
@@ -270,14 +532,18 @@ impl Engine {
             prefix,
             prefill_chunk: cfg.prefill_chunk.unwrap_or(usize::MAX),
             finished: Vec::new(),
-            prefill_tokens: 0,
-            generated_tokens: 0,
-            decode_steps: 0,
             peak_batch: 0,
             max_step_prefill: 0,
-            deadline_misses: 0,
             peak_shared_bytes: 0,
             window_start: None,
+            plane,
+            metrics_on: cfg.metrics,
+            metrics_every: cfg.metrics_every,
+            steps_seen: 0,
+            metrics,
+            trace: None,
+            base: CounterBase::default(),
+            src: SourceCounters::default(),
         })
     }
 
@@ -293,6 +559,39 @@ impl Engine {
     /// The configured admission policy.
     pub fn policy(&self) -> SchedPolicy {
         self.sched.policy()
+    }
+
+    /// The engine's metrics registry. Each engine owns one (rather than a
+    /// process-global), so parallel engines — and parallel tests — never
+    /// share counters.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics.registry
+    }
+
+    /// Prometheus text exposition of every serve-plane series — the payload
+    /// a `/metrics` front-end would serve.
+    pub fn render_prometheus(&self) -> String {
+        self.metrics.registry.render_prometheus()
+    }
+
+    /// Attach a trace recorder (`armor serve --trace <path>`): subsequent
+    /// steps record the span timeline into it, and the compiled model gains
+    /// attention spans (attaching [`AttnObs`] if `metrics: false` left it
+    /// off — tracing implies observation).
+    pub fn set_trace(&mut self, trace: TraceRecorder) {
+        match &mut self.model.obs {
+            Some(obs) => obs.trace = Some(trace.clone()),
+            None => {
+                let obs = AttnObs::new(&self.metrics.registry, self.plane, Some(trace.clone()));
+                self.model.obs = Some(obs);
+            }
+        }
+        self.trace = Some(trace);
+    }
+
+    /// The attached trace recorder, if any.
+    pub fn trace(&self) -> Option<&TraceRecorder> {
+        self.trace.as_ref()
     }
 
     /// Enqueue a generation request at default priority with no deadline —
@@ -336,6 +635,9 @@ impl Engine {
             // queue nor the pool — first token and last token coincide in
             // the degenerate "no tokens" sense, so ttft == latency
             let id = self.sched.issue_id();
+            self.metrics.requests.inc();
+            self.metrics.ttft_us.record(0);
+            self.metrics.latency_us.record(0);
             self.finished.push(RequestStats {
                 id,
                 prompt_len: prompt.len(),
@@ -411,11 +713,23 @@ impl Engine {
     /// permitting), spend up to `prefill_chunk` prompt tokens prefilling
     /// in-flight prompts, one batched decode over the decoding batch,
     /// retire finished sequences. Returns the tokens generated this step.
+    ///
+    /// Instrumentation is observation only: the counter adds are
+    /// unconditional (they back the report), while the `begin_phase` /
+    /// `end_phase` timing anchors collapse to `None` when neither metrics
+    /// nor a trace is attached.
     pub fn step(&mut self) -> usize {
+        let m = self.metrics.clone();
+        let trace = self.trace.clone();
+        let timing = self.metrics_on || trace.is_some();
+        let step_start = begin_phase(timing, &trace);
+        self.steps_seen += 1;
         self.sched.tick();
         let mut produced = 0usize;
 
         // --- admission: budget-gated entry into free batch slots ---
+        let admit_start = begin_phase(timing, &trace);
+        let mut admitted = 0usize;
         loop {
             let Some(req) = self.sched.peek_admittable() else { break };
             let need = self.worst_case_len(req.prompt.len(), req.max_new);
@@ -449,7 +763,15 @@ impl Engine {
                 submitted: req.submitted,
                 first_token_at: None,
             });
+            admitted += 1;
         }
+        end_phase(
+            "admit",
+            admit_start,
+            &m.admit_us,
+            &trace,
+            vec![("admitted".to_string(), Json::Num(admitted as f64))],
+        );
 
         // --- prefill: spend the chunk budget across prefilling prompts in
         //     policy order; a sequence whose prompt completes produces its
@@ -460,6 +782,7 @@ impl Engine {
             if budget == 0 {
                 break;
             }
+            let seq_start = begin_phase(timing, &trace);
             let seq = &mut self.sched.active[i];
             let SeqPhase::Prefilling { mut next } = seq.phase else { unreachable!() };
             if seq.cache.is_empty() {
@@ -467,30 +790,61 @@ impl Engine {
                 // admission) so a prefix registered by an earlier request
                 // this same step is already visible.
                 debug_assert_eq!(next, 0);
+                let lookup_start = begin_phase(timing, &trace);
                 if let Some(c) = self.prefix.lookup(&seq.prompt) {
                     next = c.len();
                     seq.reused_tokens = next;
                     seq.cache = c;
+                    if let Some(tr) = &trace {
+                        tr.instant(
+                            "prefix_hit",
+                            "prefix",
+                            vec![
+                                ("id".to_string(), Json::Num(seq.id.0 as f64)),
+                                ("reused".to_string(), Json::Num(next as f64)),
+                            ],
+                        );
+                    }
                 }
+                end_phase(
+                    "prefix_lookup",
+                    lookup_start,
+                    &m.lookup_us,
+                    &trace,
+                    vec![("reused".to_string(), Json::Num(next as f64))],
+                );
             }
             let n = (seq.prompt.len() - next).min(budget);
             let logits = self.model.prefill(&mut seq.cache, &seq.prompt[next..next + n]);
             next += n;
             budget -= n;
             spent += n;
-            self.prefill_tokens += n;
-            if next == seq.prompt.len() {
+            m.prefill_tokens.add(n as u64);
+            let id = seq.id.0;
+            let done = next == seq.prompt.len();
+            if done {
                 self.prefix.register(&seq.prompt, &seq.cache);
                 let first = argmax(logits.row(logits.rows - 1)) as u16;
                 seq.generated.push(first);
                 seq.last_token = first;
                 seq.first_token_at = Some(Instant::now());
                 seq.phase = SeqPhase::Decoding;
-                self.generated_tokens += 1;
+                m.generated_tokens.inc();
                 produced += 1;
             } else {
                 seq.phase = SeqPhase::Prefilling { next };
             }
+            end_phase(
+                "prefill",
+                seq_start,
+                &m.prefill_us,
+                &trace,
+                vec![
+                    ("id".to_string(), Json::Num(id as f64)),
+                    ("tokens".to_string(), Json::Num(n as f64)),
+                    ("done".to_string(), Json::Bool(done)),
+                ],
+            );
         }
         self.max_step_prefill = self.max_step_prefill.max(spent);
         self.sample_sharing();
@@ -501,8 +855,9 @@ impl Engine {
         let bsz =
             self.sched.active.iter().filter(|s| s.phase == SeqPhase::Decoding).count();
         if bsz > 0 {
+            let decode_start = begin_phase(timing, &trace);
             self.peak_batch = self.peak_batch.max(bsz);
-            self.decode_steps += 1;
+            m.decode_steps.inc();
             let tokens: Vec<u16> = self
                 .sched
                 .active
@@ -531,12 +886,101 @@ impl Engine {
                 seq.generated.push(next);
                 seq.last_token = next;
             }
-            self.generated_tokens += bsz;
+            m.generated_tokens.add(bsz as u64);
             produced += bsz;
+            end_phase(
+                "decode",
+                decode_start,
+                &m.decode_us,
+                &trace,
+                vec![("batch".to_string(), Json::Num(bsz as f64))],
+            );
             self.sample_sharing();
             self.retire();
         }
+
+        // --- end-of-step bookkeeping: fold source counters into the
+        //     registry, sample depth gauges / counter tracks ---
+        self.sync_sources();
+        if self.metrics_on {
+            m.queue_depth.set(self.sched.pending_len() as f64);
+            m.active_seqs.set(self.sched.active_len() as f64);
+        }
+        if let Some(tr) = &trace {
+            tr.counter(
+                "queue",
+                vec![
+                    ("pending".to_string(), self.sched.pending_len() as f64),
+                    ("active".to_string(), self.sched.active_len() as f64),
+                ],
+            );
+            tr.counter(
+                "kv_pages",
+                vec![
+                    ("allocated".to_string(), self.pool.pages_allocated() as f64),
+                    ("reserved".to_string(), self.pool.pages_reserved() as f64),
+                ],
+            );
+        }
+        end_phase(
+            "step",
+            step_start,
+            &m.step_us,
+            &trace,
+            vec![("produced".to_string(), Json::Num(produced as f64))],
+        );
+        if self.metrics_every > 0 && self.steps_seen % self.metrics_every as u64 == 0 {
+            eprintln!(
+                "[metrics] step {} | generated {} tok | queue {} | active {} | kv pages {} held / {} reserved",
+                self.steps_seen,
+                m.generated_tokens.get(),
+                self.sched.pending_len(),
+                self.sched.active_len(),
+                self.pool.pages_allocated(),
+                self.pool.pages_reserved(),
+            );
+        }
         produced
+    }
+
+    /// Fold the monotonic counters owned by the pool, prefix registry, and
+    /// scheduler into the metrics registry as deltas since the previous
+    /// sync, emitting matching trace instants. Runs once per step and at
+    /// drain, so exposition lags a source by at most one step.
+    fn sync_sources(&mut self) {
+        let cur = SourceCounters {
+            prefix_hits: self.prefix.hits(),
+            prefix_misses: self.prefix.misses(),
+            prefix_reused: self.prefix.reused_tokens(),
+            prefix_evictions: self.prefix.evictions(),
+            pages_alloc: self.pool.pages_alloc_total(),
+            pages_freed: self.pool.pages_freed_total(),
+            cow_copies: self.pool.cow_copies(),
+            promotions: self.sched.promotions(),
+        };
+        let d = |new: usize, old: usize| new.saturating_sub(old) as u64;
+        let m = &self.metrics;
+        m.prefix_hits.add(d(cur.prefix_hits, self.src.prefix_hits));
+        m.prefix_misses.add(d(cur.prefix_misses, self.src.prefix_misses));
+        m.prefix_hit_tokens.add(d(cur.prefix_reused, self.src.prefix_reused));
+        m.prefix_evictions.add(d(cur.prefix_evictions, self.src.prefix_evictions));
+        m.kv_pages_alloc.add(d(cur.pages_alloc, self.src.pages_alloc));
+        m.kv_pages_freed.add(d(cur.pages_freed, self.src.pages_freed));
+        m.kv_cow_copies.add(d(cur.cow_copies, self.src.cow_copies));
+        m.sched_promotions.add(cur.promotions.saturating_sub(self.src.promotions));
+        if let Some(tr) = &self.trace {
+            for (name, cat, delta) in [
+                ("page_alloc", "pool", d(cur.pages_alloc, self.src.pages_alloc)),
+                ("page_free", "pool", d(cur.pages_freed, self.src.pages_freed)),
+                ("cow_copy", "pool", d(cur.cow_copies, self.src.cow_copies)),
+                ("prefix_evict", "prefix", d(cur.prefix_evictions, self.src.prefix_evictions)),
+            ] {
+                if delta > 0 {
+                    tr.instant(name, cat, vec![("count".to_string(), Json::Num(delta as f64))]);
+                }
+            }
+        }
+        self.src = cur;
     }
 
     /// Record how much duplication page sharing is currently avoiding:
@@ -552,8 +996,18 @@ impl Engine {
     }
 
     fn retire(&mut self) {
+        let m = self.metrics.clone();
+        let trace = self.trace.clone();
+        let timing = self.metrics_on || trace.is_some();
+        let start = begin_phase(timing, &trace);
+        let retired = self.sched.retire_finished();
+        if retired.is_empty() {
+            // skip the span/histogram for the (common) no-op calls
+            return;
+        }
+        let count = retired.len();
         let now = Instant::now();
-        for seq in self.sched.retire_finished() {
+        for seq in retired {
             self.pool.release(seq.reserved_pages);
             let ttft = seq
                 .first_token_at
@@ -561,8 +1015,19 @@ impl Engine {
                 .unwrap_or(0.0);
             let missed = seq.deadline.is_some_and(|d| now > d);
             if missed {
-                self.deadline_misses += 1;
+                m.deadline_misses.inc();
+                if let Some(tr) = &trace {
+                    tr.instant(
+                        "deadline_miss",
+                        "engine",
+                        vec![("id".to_string(), Json::Num(seq.id.0 as f64))],
+                    );
+                }
             }
+            let latency_ms = now.duration_since(seq.submitted).as_secs_f64() * 1e3;
+            m.requests.inc();
+            m.ttft_us.record((ttft * 1e3) as u64);
+            m.latency_us.record((latency_ms * 1e3) as u64);
             self.finished.push(RequestStats {
                 id: seq.id,
                 prompt_len: seq.prompt.len(),
@@ -574,40 +1039,80 @@ impl Engine {
                     .map(|d| d.duration_since(seq.submitted).as_secs_f64() * 1e3),
                 deadline_missed: missed,
                 ttft_ms: ttft,
-                latency_ms: now.duration_since(seq.submitted).as_secs_f64() * 1e3,
+                latency_ms,
                 generated: seq.generated,
             });
         }
+        end_phase(
+            "retire",
+            start,
+            &m.retire_us,
+            &trace,
+            vec![("retired".to_string(), Json::Num(count as f64))],
+        );
     }
 
     /// Step until every submitted request completes; returns the report for
     /// everything finished since the last drain. Wall time covers the whole
     /// accounting window (from the first submit after the previous drain),
     /// so tokens generated by explicit `step` calls are not overcounted.
+    ///
+    /// Every total in the report is re-derived from the metrics registry
+    /// (counter minus its window base) — the registry is the single source
+    /// of truth, so this summary and [`Engine::render_prometheus`] can
+    /// never disagree. The window peaks (batch, prefill bound, pool bytes)
+    /// are published to their gauges here for the same reason.
     pub fn drain(&mut self) -> ServeReport {
         let t0 = self.window_start.take().unwrap_or_else(Instant::now);
         while !self.sched.is_idle() {
             self.step();
         }
+        self.sync_sources();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mut requests = std::mem::take(&mut self.finished);
         requests.sort_by_key(|r| r.id);
-        let (hits, _misses, reused) = self.prefix.take_counters();
         let pb = self.pool.page_bytes();
-        ServeReport {
+        let kv_resident_bytes = self.pool.take_peak_allocated() * pb;
+        let kv_reserved_bytes = self.pool.take_peak_reserved() * pb;
+        let kv_shared_bytes = std::mem::take(&mut self.peak_shared_bytes);
+        let peak_batch = std::mem::take(&mut self.peak_batch);
+        let max_step_prefill = std::mem::take(&mut self.max_step_prefill);
+
+        let m = &self.metrics;
+        m.peak_batch.set(peak_batch as f64);
+        m.max_step_prefill.set(max_step_prefill as f64);
+        m.kv_resident_peak.set(kv_resident_bytes as f64);
+        m.kv_reserved_peak.set(kv_reserved_bytes as f64);
+        m.kv_shared_peak.set(kv_shared_bytes as f64);
+        m.serve_wall_ms.set(wall_ms);
+
+        let base = self.base;
+        let report = ServeReport {
             requests,
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-            prefill_tokens: std::mem::take(&mut self.prefill_tokens),
-            generated_tokens: std::mem::take(&mut self.generated_tokens),
-            decode_steps: std::mem::take(&mut self.decode_steps),
-            peak_batch: std::mem::take(&mut self.peak_batch),
-            max_step_prefill: std::mem::take(&mut self.max_step_prefill),
-            deadline_misses: std::mem::take(&mut self.deadline_misses),
-            prefix_hits: hits,
-            prefix_hit_tokens: reused,
-            kv_resident_bytes: self.pool.take_peak_allocated() * pb,
-            kv_reserved_bytes: self.pool.take_peak_reserved() * pb,
-            kv_shared_bytes: std::mem::take(&mut self.peak_shared_bytes),
-        }
+            wall_ms,
+            prefill_tokens: (m.prefill_tokens.get() - base.prefill_tokens) as usize,
+            generated_tokens: (m.generated_tokens.get() - base.generated_tokens) as usize,
+            decode_steps: (m.decode_steps.get() - base.decode_steps) as usize,
+            peak_batch,
+            max_step_prefill,
+            deadline_misses: (m.deadline_misses.get() - base.deadline_misses) as usize,
+            prefix_hits: (m.prefix_hits.get() - base.prefix_hits) as usize,
+            prefix_hit_tokens: (m.prefix_hit_tokens.get() - base.prefix_hit_tokens) as usize,
+            kv_resident_bytes,
+            kv_reserved_bytes,
+            kv_shared_bytes,
+        };
+        debug_assert_eq!(report.requests.len() as u64, m.requests.get() - base.requests);
+        self.base = CounterBase {
+            requests: m.requests.get(),
+            prefill_tokens: m.prefill_tokens.get(),
+            generated_tokens: m.generated_tokens.get(),
+            decode_steps: m.decode_steps.get(),
+            deadline_misses: m.deadline_misses.get(),
+            prefix_hits: m.prefix_hits.get(),
+            prefix_hit_tokens: m.prefix_hit_tokens.get(),
+        };
+        report
     }
 }
 
@@ -1117,5 +1622,195 @@ mod tests {
         assert_eq!(report.requests.len(), 2);
         // both ran concurrently at some point
         assert!(report.peak_batch == 2, "peak {}", report.peak_batch);
+    }
+
+    /// The consistency contract: after a mixed-policy drain, every report
+    /// total is bit-identical to its registry counter, and every window
+    /// peak to its gauge — the report *is* the registry, re-derived.
+    #[test]
+    fn report_totals_match_registry_counters() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig {
+                max_batch: 3,
+                page_positions: 4,
+                policy: SchedPolicy::Priority,
+                prefill_chunk: Some(3),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        // templated prompts under priority + chunking, with a mix of loose,
+        // blown, and absent deadlines: every counter family moves
+        let prefix = toks(9, 300);
+        for i in 0..5u64 {
+            let mut p = prefix.clone();
+            p.push(i as u16);
+            let deadline = (i % 2 == 0).then(|| {
+                if i == 2 { Duration::ZERO } else { Duration::from_secs(3600) }
+            });
+            engine.submit_with(&p, 4, (i % 3) as u8, deadline);
+        }
+        engine.submit(&toks(4, 301), 0); // the zero-token fast path counts too
+        let report = engine.drain();
+        assert!(report.prefix_hits > 0 && report.deadline_misses > 0, "{report:?}");
+
+        let reg = engine.metrics();
+        let c = |name: &str| reg.counter_value(name, &[]).unwrap();
+        assert_eq!(c("armor_requests_total"), report.requests.len() as u64);
+        assert_eq!(c("armor_prefill_tokens_total"), report.prefill_tokens as u64);
+        assert_eq!(c("armor_generated_tokens_total"), report.generated_tokens as u64);
+        assert_eq!(c("armor_decode_steps_total"), report.decode_steps as u64);
+        assert_eq!(c("armor_deadline_misses_total"), report.deadline_misses as u64);
+        assert_eq!(c("armor_prefix_hits_total"), report.prefix_hits as u64);
+        assert_eq!(c("armor_prefix_hit_tokens_total"), report.prefix_hit_tokens as u64);
+        let g = |name: &str| reg.gauge_value(name, &[]).unwrap();
+        assert_eq!(g("armor_peak_batch"), report.peak_batch as f64);
+        assert_eq!(g("armor_max_step_prefill"), report.max_step_prefill as f64);
+        assert_eq!(g("armor_kv_resident_bytes_peak"), report.kv_resident_bytes as f64);
+        assert_eq!(g("armor_kv_reserved_bytes_peak"), report.kv_reserved_bytes as f64);
+        assert_eq!(g("armor_kv_shared_bytes_peak"), report.kv_shared_bytes as f64);
+        assert_eq!(g("armor_serve_wall_ms"), report.wall_ms);
+        // pool/prefix/scheduler counters were folded in; the retained
+        // prefix chains keep some pages alive past the drain
+        assert!(c("armor_kv_pages_alloc_total") > 0);
+        assert!(c("armor_kv_pages_freed_total") > 0);
+        assert!(c("armor_kv_pages_alloc_total") >= c("armor_kv_pages_freed_total"));
+
+        // a second window: its report covers only its own deltas, while the
+        // registry keeps lifetime totals
+        engine.submit(&toks(5, 302), 3);
+        let second = engine.drain();
+        assert_eq!(second.generated_tokens, 3);
+        assert_eq!(
+            engine.metrics().counter_value("armor_generated_tokens_total", &[]),
+            Some((report.generated_tokens + second.generated_tokens) as u64)
+        );
+    }
+
+    /// Acceptance: `render_prometheus` covers every [`ServeReport`] field
+    /// with the drained value, plus the step/phase/attention series.
+    #[test]
+    fn prometheus_exposition_covers_every_report_field() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 3, page_positions: 4, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let prefix = toks(9, 310);
+        for i in 0..4u16 {
+            let mut p = prefix.clone();
+            p.push(i);
+            engine.submit(&p, 4);
+        }
+        let report = engine.drain();
+        let text = engine.render_prometheus();
+        for (name, value) in [
+            ("armor_requests_total", report.requests.len()),
+            ("armor_prefill_tokens_total", report.prefill_tokens),
+            ("armor_generated_tokens_total", report.generated_tokens),
+            ("armor_decode_steps_total", report.decode_steps),
+            ("armor_deadline_misses_total", report.deadline_misses),
+            ("armor_prefix_hits_total", report.prefix_hits),
+            ("armor_prefix_hit_tokens_total", report.prefix_hit_tokens),
+            ("armor_peak_batch", report.peak_batch),
+            ("armor_max_step_prefill", report.max_step_prefill),
+            ("armor_kv_resident_bytes_peak", report.kv_resident_bytes),
+            ("armor_kv_reserved_bytes_peak", report.kv_reserved_bytes),
+            ("armor_kv_shared_bytes_peak", report.kv_shared_bytes),
+        ] {
+            let line = format!("{name} {value}");
+            assert!(text.contains(&line), "missing '{line}' in exposition:\n{text}");
+        }
+        assert!(text.contains("armor_serve_wall_ms "), "{text}");
+        // the timing histograms recorded, on the f32 plane
+        for needle in [
+            "armor_step_us_count{plane=\"f32\"}",
+            "armor_phase_us_bucket{phase=\"prefill\",plane=\"f32\",le=",
+            "armor_attn_us_count{plane=\"f32\"}",
+            "armor_attn_bytes_total{plane=\"f32\"}",
+            "armor_ttft_us_count",
+            "armor_latency_us_count",
+        ] {
+            assert!(text.contains(needle), "missing '{needle}' in exposition:\n{text}");
+        }
+        assert!(
+            !text.contains("armor_step_us_count{plane=\"f32\"} 0"),
+            "step timing must have recorded:\n{text}"
+        );
+    }
+
+    /// A traced drain produces a valid Chrome timeline: nested step →
+    /// admit/prefill/decode/retire spans, model attention spans, prefix and
+    /// pool instants, queue counter tracks. An idle drain traces nothing
+    /// and still validates.
+    #[test]
+    fn traced_drain_emits_valid_nested_timeline() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { max_batch: 2, page_positions: 4, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let trace = crate::obs::TraceRecorder::new();
+        engine.set_trace(trace.clone());
+        // idle drain first: an empty trace is a valid trace
+        engine.drain();
+        let empty = crate::obs::validate_trace(&trace.to_json().to_string_compact()).unwrap();
+        assert_eq!(empty.events, 0);
+
+        let prefix = toks(9, 320);
+        for i in 0..3u16 {
+            let mut p = prefix.clone();
+            p.push(i);
+            engine.submit(&p, 4);
+        }
+        let report = engine.drain();
+        assert!(report.generated_tokens > 0);
+        let text = trace.to_json().to_string_compact();
+        let summary = crate::obs::validate_trace(&text).unwrap();
+        assert!(summary.spans > 0 && summary.instants > 0 && summary.counters > 0, "{summary:?}");
+        for needle in [
+            "\"name\":\"step\"",
+            "\"name\":\"admit\"",
+            "\"name\":\"prefix_lookup\"",
+            "\"name\":\"prefill\"",
+            "\"name\":\"decode\"",
+            "\"name\":\"attention\"",
+            "\"name\":\"retire\"",
+            "\"name\":\"prefix_hit\"",
+            "\"name\":\"page_alloc\"",
+            "\"name\":\"page_free\"",
+            "\"name\":\"queue\"",
+            "\"name\":\"kv_pages\"",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in trace:\n{text}");
+        }
+    }
+
+    /// `metrics: false` silences the timing histograms and the attention
+    /// series, but the counters stay exact — the report is registry-derived
+    /// under every configuration.
+    #[test]
+    fn metrics_off_keeps_counters_exact() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { metrics: false, ..EngineConfig::default() },
+        )
+        .unwrap();
+        for i in 0..3 {
+            engine.submit(&toks(5, 500 + i), 4);
+        }
+        let report = engine.drain();
+        assert_eq!(report.generated_tokens, 12);
+        let reg = engine.metrics();
+        assert_eq!(reg.counter_value("armor_generated_tokens_total", &[]), Some(12));
+        assert_eq!(reg.counter_value("armor_requests_total", &[]), Some(3));
+        let text = engine.render_prometheus();
+        assert!(
+            text.contains("armor_step_us_count{plane=\"f32\"} 0"),
+            "no step timing with metrics off:\n{text}"
+        );
+        assert!(!text.contains("armor_attn_us"), "attention series must stay unregistered");
+        assert!(engine.model().obs.is_none(), "no AttnObs attached with metrics off");
     }
 }

@@ -93,6 +93,7 @@ impl Page {
 impl Clone for Page {
     fn clone(&self) -> Page {
         self.pool.note_alloc();
+        self.pool.cow_copies.fetch_add(1, Ordering::Relaxed);
         Page { vals: self.vals.clone(), pool: Arc::clone(&self.pool) }
     }
 }
@@ -124,12 +125,17 @@ pub(crate) struct PoolState {
     /// worst-case page commitments of admitted work (engine-managed)
     reserved: AtomicUsize,
     peak_reserved: AtomicUsize,
+    /// lifetime page allocations (monotonic; frees = total − allocated)
+    total_allocs: AtomicUsize,
+    /// lifetime copy-on-write page copies (monotonic, subset of allocs)
+    cow_copies: AtomicUsize,
 }
 
 impl PoolState {
     fn note_alloc(&self) {
         let now = self.allocated.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_allocated.fetch_max(now, Ordering::Relaxed);
+        self.total_allocs.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -221,6 +227,8 @@ impl KvPool {
                 peak_allocated: AtomicUsize::new(0),
                 reserved: AtomicUsize::new(0),
                 peak_reserved: AtomicUsize::new(0),
+                total_allocs: AtomicUsize::new(0),
+                cow_copies: AtomicUsize::new(0),
             }),
         })
     }
@@ -282,6 +290,24 @@ impl KvPool {
     /// Live unique pages (a shared prefix counts once).
     pub fn pages_allocated(&self) -> usize {
         self.state.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime page allocations (monotonic — includes pages since freed;
+    /// the observability counters sample this per engine step).
+    pub fn pages_alloc_total(&self) -> usize {
+        self.state.total_allocs.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime pages freed back to the pool (monotonic).
+    pub fn pages_freed_total(&self) -> usize {
+        self.pages_alloc_total().saturating_sub(self.pages_allocated())
+    }
+
+    /// Lifetime copy-on-write page copies (monotonic, a subset of
+    /// [`Self::pages_alloc_total`]): shared-prefix divergences that paid a
+    /// one-page copy.
+    pub fn cow_copies(&self) -> usize {
+        self.state.cow_copies.load(Ordering::Relaxed)
     }
 
     /// Outstanding worst-case reservations, in pages.
@@ -442,10 +468,15 @@ mod tests {
         let mut owner = shared;
         let _ = Arc::make_mut(&mut owner);
         assert_eq!(pool.pages_allocated(), 3);
+        assert_eq!(pool.cow_copies(), 1, "the make_mut copy is the only CoW");
         drop(owner);
         drop(a);
         drop(b);
         assert_eq!(pool.pages_allocated(), 0, "refcount drop frees every page");
         assert_eq!(pool.take_peak_allocated(), 3);
+        // monotonic lifetime counters survive the frees
+        assert_eq!(pool.pages_alloc_total(), 3);
+        assert_eq!(pool.pages_freed_total(), 3);
+        assert_eq!(pool.cow_copies(), 1);
     }
 }

@@ -27,6 +27,13 @@
 //!   bytes, prefix-hit counters, and deadline misses in a
 //!   [`ServeReport`].
 //!
+//! Every engine carries its own [`crate::obs::MetricsRegistry`]: step
+//! counters are always on (the [`ServeReport`] is re-derived from them, so
+//! report and `/metrics` exposition can never disagree), timing
+//! histograms/gauges toggle with [`EngineConfig::metrics`], and
+//! [`Engine::set_trace`] attaches a Chrome trace-event timeline of the
+//! drain (`armor serve --trace`). See `DESIGN.md` §8 for the contract.
+//!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
 //! dense-recompute vs KV-cached-compressed comparison and the
 //! prefix-sharing sweep.

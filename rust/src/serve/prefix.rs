@@ -49,6 +49,7 @@ pub struct PrefixRegistry {
     hits: usize,
     misses: usize,
     reused_tokens: usize,
+    evictions: usize,
 }
 
 /// FNV-1a over the token stream — stable, dependency-free, and cheap to
@@ -74,6 +75,7 @@ impl PrefixRegistry {
             hits: 0,
             misses: 0,
             reused_tokens: 0,
+            evictions: 0,
         }
     }
 
@@ -188,6 +190,7 @@ impl PrefixRegistry {
         };
         let e = self.entries.swap_remove(idx);
         self.pool.release(e.reserved_pages);
+        self.evictions += 1;
         true
     }
 
@@ -227,6 +230,11 @@ impl PrefixRegistry {
     /// Total prompt tokens served from retained chains instead of prefill.
     pub fn reused_tokens(&self) -> usize {
         self.reused_tokens
+    }
+
+    /// Lifetime LRU evictions (capacity or budget pressure).
+    pub fn evictions(&self) -> usize {
+        self.evictions
     }
 
     /// Reset the hit/miss/reuse counters (drain boundary).
@@ -308,6 +316,7 @@ mod tests {
         reg.clear();
         assert_eq!(pool.pages_reserved(), reserved_before - 2 * pool.pages_for_seq(8));
         assert!(reg.is_empty());
+        assert_eq!(reg.evictions(), 3, "one capacity eviction + two from clear()");
     }
 
     #[test]

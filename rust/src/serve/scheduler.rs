@@ -177,6 +177,8 @@ pub struct Scheduler {
     next_id: u64,
     /// monotone step counter driving priority aging
     tick: u64,
+    /// lifetime aging promotions (observability counter)
+    promotions: u64,
     /// `lanes[0]` first; Fifo and Deadline keep everything in `lanes[0]`
     lanes: Vec<VecDeque<GenRequest>>,
     pub active: Vec<ActiveSeq>,
@@ -194,6 +196,7 @@ impl Scheduler {
             policy,
             next_id: 0,
             tick: 0,
+            promotions: 0,
             lanes: vec![VecDeque::new(); PRIORITY_LANES],
             active: Vec::new(),
         }
@@ -274,8 +277,14 @@ impl Scheduler {
                 let mut req = self.lanes[lane].pop_front().expect("front checked");
                 req.lane_since = self.tick;
                 self.lanes[lane - 1].push_back(req);
+                self.promotions += 1;
             }
         }
+    }
+
+    /// Lifetime aging promotions (observability counter).
+    pub fn promotions(&self) -> u64 {
+        self.promotions
     }
 
     /// Whether the in-flight batch has a free slot.
@@ -447,6 +456,7 @@ mod tests {
             highs.push_back(s.enqueue_with(vec![t as u16], 2, 0, None));
             s.tick();
         }
+        assert_eq!(s.promotions(), 3, "lane 3 → 0 is three promotions");
         // after 3·AGING_TICKS ticks the low request sits in lane 0, FIFO
         // behind the highs enqueued before its final promotion but ahead of
         // later arrivals — pop everything and find it before the stream end

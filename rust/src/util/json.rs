@@ -264,6 +264,18 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| self.err("invalid number"))
     }
 
+    /// Four hex digits of a `\u` escape, consumed as one UTF-16 code unit.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(cp)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut s = String::new();
@@ -285,14 +297,30 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.pos + 4 > self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            self.pos += 4;
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..=0xDBFF).contains(&hi) {
+                                // A high surrogate must pair with a following
+                                // \uDC00-\uDFFF low surrogate to form one
+                                // supplementary-plane scalar; anything else
+                                // decodes leniently to U+FFFD (and an escape
+                                // that wasn't a low surrogate is left for the
+                                // main loop to parse on its own).
+                                if self.b[self.pos..].starts_with(b"\\u") {
+                                    let mark = self.pos;
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..=0xDFFF).contains(&lo) {
+                                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                    } else {
+                                        self.pos = mark;
+                                        0xFFFD
+                                    }
+                                } else {
+                                    0xFFFD
+                                }
+                            } else {
+                                hi
+                            };
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
                         _ => return Err(self.err("unknown escape")),
@@ -412,6 +440,46 @@ mod tests {
         assert_eq!(v.as_str(), Some("éé"));
         let round = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(round, v);
+    }
+
+    /// Strings full of quote/backslash/control characters must survive an
+    /// emit → parse round trip byte-for-byte — the trace recorder and the
+    /// Prometheus label escaper both lean on this emitter.
+    #[test]
+    fn escaping_roundtrips_hostile_strings() {
+        for s in [
+            "quote \" backslash \\ slash /",
+            "newline \n tab \t cr \r",
+            "bell \u{7} esc \u{1b} nul \u{0} unit-sep \u{1f}",
+            "mixed é \" \\ \n \u{1} end",
+        ] {
+            let v = Json::Str(s.to_string());
+            let compact = v.to_string_compact();
+            assert_eq!(Json::parse(&compact).unwrap().as_str(), Some(s), "via {compact}");
+            assert_eq!(Json::parse(&v.to_string_pretty()).unwrap().as_str(), Some(s));
+        }
+    }
+
+    /// `\u` surrogate pairs combine into one supplementary-plane scalar;
+    /// unpaired or malformed surrogates decode leniently to U+FFFD instead
+    /// of erroring (matching the pre-existing lone-\u behavior).
+    #[test]
+    fn surrogate_pairs_combine() {
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap().as_str(), Some("😀"));
+        assert_eq!(Json::parse("\"\\ud834\\udd1e\"").unwrap().as_str(), Some("\u{1D11E}"));
+        // pair embedded in surrounding text, and raw UTF-8 passthrough
+        assert_eq!(Json::parse("\"a\\ud83d\\ude00b\"").unwrap().as_str(), Some("a😀b"));
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+        // lone high surrogate at end-of-string and mid-string
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{fffd}x"));
+        // lone low surrogate
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // high surrogate followed by a non-surrogate escape: the second
+        // escape is re-parsed as its own character
+        assert_eq!(Json::parse(r#""\ud83dA""#).unwrap().as_str(), Some("\u{fffd}A"));
+        // truncated second escape is still a structural error
+        assert!(Json::parse(r#""\ud83d\u00""#).is_err());
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! Lightweight timing / metrics helpers shared by the coordinator and the
-//! bench harness.
+//! Lightweight timing helpers shared by the coordinator and the bench
+//! harness. Every timed scope now lands in the process-global metrics
+//! registry (`obs::global()`) as an `armor_timer_us` histogram sample
+//! labeled by scope name; the `ARMOR_TIMING=1` stderr print survives as an
+//! opt-in sink on top of that.
 
 use std::time::Instant;
 
-/// Scope timer: `let _t = Timer::new("phase");` prints elapsed on drop when
-/// `ARMOR_TIMING=1`.
+/// Scope timer: `let _t = Timer::new("phase");` records elapsed time into
+/// the global `armor_timer_us` histogram on drop, and additionally prints
+/// it when `ARMOR_TIMING=1`.
 pub struct Timer {
     label: String,
     start: Instant,
@@ -27,110 +31,42 @@ impl Timer {
 
 impl Drop for Timer {
     fn drop(&mut self) {
+        crate::obs::global()
+            .histogram(
+                "armor_timer_us",
+                &[("label", &self.label)],
+                "Timer-scoped wall time (microseconds), labeled by scope.",
+            )
+            .record(self.start.elapsed().as_micros() as u64);
         if !self.quiet {
             eprintln!("[timing] {}: {:.2} ms", self.label, self.elapsed_ms());
         }
     }
 }
 
-/// Accumulating statistics over f64 samples (used by the bench harness and
-/// the coordinator's per-layer metrics).
-#[derive(Clone, Debug, Default)]
-pub struct Stats {
-    samples: Vec<f64>,
-}
-
-impl Stats {
-    pub fn push(&mut self, x: f64) {
-        self.samples.push(x);
-    }
-    pub fn len(&self) -> usize {
-        self.samples.len()
-    }
-    pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
-    }
-    pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
-    }
-    pub fn std(&self) -> f64 {
-        if self.samples.len() < 2 {
-            return 0.0;
-        }
-        let m = self.mean();
-        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
-            / (self.samples.len() - 1) as f64)
-            .sqrt()
-    }
-    pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
-    }
-    pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
-    }
-    /// Percentile via nearest-rank on a sorted copy; `p` in [0, 100].
-    /// Sorting uses `f64::total_cmp` so a NaN sample (e.g. a ratio over an
-    /// empty denominator pushed by a caller) sorts deterministically to an
-    /// end instead of panicking the whole report inside `partial_cmp`.
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
-        let mut v = self.samples.clone();
-        v.sort_by(f64::total_cmp);
-        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        v[rank.min(v.len() - 1)]
-    }
-}
+/// Re-exported for compatibility: `Stats` moved behind `obs::` (the single
+/// percentile implementation for benches and the serve report).
+pub use crate::obs::Stats;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn stats_basic() {
-        let mut s = Stats::default();
-        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
-            s.push(x);
-        }
-        assert!((s.mean() - 3.0).abs() < 1e-12);
-        assert_eq!(s.min(), 1.0);
-        assert_eq!(s.max(), 5.0);
-        assert_eq!(s.percentile(50.0), 3.0);
-        assert_eq!(s.percentile(0.0), 1.0);
-        assert_eq!(s.percentile(100.0), 5.0);
-        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
-    }
-
-    #[test]
-    fn empty_stats_are_nan() {
-        let s = Stats::default();
-        assert!(s.mean().is_nan());
-        assert!(s.percentile(50.0).is_nan());
-    }
-
-    /// Regression: a NaN sample used to panic `percentile` via
-    /// `partial_cmp(..).unwrap()`. With `total_cmp` the positive-bit NaN
-    /// sorts past +inf, so low/mid percentiles stay finite and p100 is the
-    /// NaN itself rather than a crash.
-    #[test]
-    fn percentile_tolerates_nan_samples() {
-        let mut s = Stats::default();
-        for x in [2.0, f64::NAN, 1.0, 3.0, 0.5] {
-            s.push(x);
-        }
-        assert_eq!(s.percentile(0.0), 0.5);
-        assert_eq!(s.percentile(50.0), 2.0);
-        assert!(s.percentile(100.0).is_nan());
-    }
-
-    #[test]
     fn timer_measures_something() {
         let t = Timer::new("test");
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn timer_records_into_global_histogram() {
+        {
+            let _t = Timer::new("timer-unit-test");
+        }
+        let reg = crate::obs::global();
+        let h = reg.histogram("armor_timer_us", &[("label", "timer-unit-test")], "");
+        assert!(h.count() >= 1);
+        assert!(reg.render_prometheus().contains("armor_timer_us_bucket{label=\"timer-unit-test\""));
     }
 }

@@ -1,0 +1,76 @@
+//! Trace-timeline validation: every Chrome trace the serve engine emits —
+//! in-process here, or a file produced by `armor serve --trace` when CI
+//! points `ARMOR_TRACE_FILE` at one — must load as trace-event JSON and
+//! pass the structural checks in `armor::obs::validate_trace` (known
+//! phases, finite monotonic timestamps per (pid, tid), balanced B/E
+//! stacks, non-negative span durations).
+
+use armor::model::{CompiledModel, GptConfig, GptModel};
+use armor::obs::{validate_trace, TraceRecorder};
+use armor::serve::{Engine, EngineConfig};
+use armor::util::rng::Pcg64;
+
+fn tiny_engine() -> Engine {
+    let cfg = GptConfig { d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_seq: 48, ..GptConfig::tiny() };
+    let mut rng = Pcg64::seed_from_u64(11);
+    let model = GptModel::random_init(&cfg, &mut rng);
+    let compiled = CompiledModel::compile(&model, None).unwrap();
+    Engine::new(compiled, EngineConfig { max_batch: 3, ..EngineConfig::default() })
+        .expect("tiny engine config")
+}
+
+/// A traced drain over real traffic produces a loadable, well-formed
+/// timeline containing the step spans and their nested phases.
+#[test]
+fn traced_serve_drain_validates() {
+    let mut engine = tiny_engine();
+    let trace = TraceRecorder::new();
+    engine.set_trace(trace.clone());
+    let mut rng = Pcg64::seed_from_u64(12);
+    for _ in 0..4 {
+        let prompt: Vec<u16> = (0..10).map(|_| rng.next_below(256) as u16).collect();
+        engine.submit(&prompt, 6);
+    }
+    let report = engine.drain();
+    assert_eq!(report.requests.len(), 4);
+
+    let text = trace.to_json().to_string_compact();
+    let summary = validate_trace(&text).expect("engine trace is structurally valid");
+    assert!(summary.spans > 0, "traced drain recorded no spans");
+    for needle in ["\"step\"", "\"prefill\"", "\"decode\"", "\"attention\"", "\"retire\""] {
+        assert!(text.contains(needle), "trace missing {needle} events");
+    }
+}
+
+/// A zero-request drain must still write a valid (empty) timeline — the
+/// `--trace` flag cannot depend on traffic having arrived.
+#[test]
+fn empty_drain_trace_validates() {
+    let mut engine = tiny_engine();
+    let trace = TraceRecorder::new();
+    engine.set_trace(trace.clone());
+    let report = engine.drain();
+    assert!(report.requests.is_empty());
+    let summary =
+        validate_trace(&trace.to_json().to_string_compact()).expect("empty trace is valid");
+    assert_eq!(summary.events, 0);
+}
+
+/// CI hook: when `ARMOR_TRACE_FILE` names a trace written by
+/// `armor serve --trace`, validate that exact artifact. Skips (with a
+/// notice) when the variable is unset so plain `cargo test` is unaffected.
+#[test]
+fn trace_file_from_env_validates() {
+    let Ok(path) = std::env::var("ARMOR_TRACE_FILE") else {
+        eprintln!("[skip] ARMOR_TRACE_FILE not set — nothing to validate");
+        return;
+    };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading ARMOR_TRACE_FILE {path}: {e}"));
+    let summary = validate_trace(&text).expect("serve --trace artifact is structurally valid");
+    assert!(summary.events > 0, "serve --trace artifact {path} recorded no events");
+    eprintln!(
+        "[trace] {path}: {} events ({} spans, {} instants, {} counter samples) valid",
+        summary.events, summary.spans, summary.instants, summary.counters
+    );
+}
