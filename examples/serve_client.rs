@@ -1,0 +1,171 @@
+//! Walkthrough: the live HTTP/1.1 serving front-end, exercised over a real
+//! loopback socket — every route the versioned wire contract (`API.md`)
+//! documents, including an error case.
+//!
+//!     cargo run --release --example serve_client
+//!
+//! Steps:
+//!   1. compile a tiny ARMOR-pruned model and lift the engine onto an
+//!      `EngineService` worker thread (what `armor serve --listen` does)
+//!   2. bind `HttpServer` on an ephemeral loopback port
+//!   3. `GET /healthz` — liveness
+//!   4. `POST /v1/generate` — a chunked-transfer token stream, one JSON
+//!      event per chunk, terminal `{"done":true,"stats":{...}}`
+//!   5. `GET /v1/stats` — live counters re-derived from the same registry
+//!   6. `GET /metrics` — the Prometheus exposition
+//!   7. a malformed request — the structured `400` error envelope
+//!   8. graceful shutdown: draining flips `/healthz` to `503` and refuses
+//!      new generates, then the final drain report covers the session
+
+use armor::armor::ArmorConfig;
+use armor::baselines::Method;
+use armor::coordinator::{calibrate, prune_model, PruneJob};
+use armor::model::{CompiledModel, GptConfig, GptModel};
+use armor::serve::http::{client, HttpServer};
+use armor::serve::{Engine, EngineConfig, EngineService};
+use armor::sparsity::Pattern;
+use armor::util::json::Json;
+use armor::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn main() -> armor::Result<()> {
+    let mut rng = Pcg64::seed_from_u64(0);
+
+    // 1. a tiny ARMOR-pruned model behind a service worker thread
+    let cfg = GptConfig::tiny();
+    let model = GptModel::random_init(&cfg, &mut rng);
+    let calib: Vec<Vec<u16>> =
+        (0..4).map(|_| (0..48).map(|_| rng.next_below(256) as u16).collect()).collect();
+    let stats = calibrate(&model, &calib, false);
+    let job = PruneJob {
+        method: Method::Armor(ArmorConfig { d_block: 32, n_iters: 20, ..Default::default() }),
+        pattern: Pattern::TwoFour,
+        seed: 0,
+        use_xla: false,
+    };
+    let (pruned, report) = prune_model(&model, &stats, &job, None);
+    let compiled = CompiledModel::compile(&pruned, Some(&report))?;
+    let service = Arc::new(EngineService::spawn(Engine::new(
+        compiled,
+        EngineConfig { max_batch: 4, ..EngineConfig::default() },
+    )?));
+
+    // 2. a live server on an ephemeral loopback port
+    let server = HttpServer::bind(Arc::clone(&service), "127.0.0.1:0")?;
+    let addr = server.local_addr();
+    println!("serving on http://{addr}\n");
+
+    // 3. GET /healthz
+    let health = client::get(addr, "/healthz")?;
+    println!("GET /healthz           -> {} {}", health.status, health.body_text());
+    assert_eq!(health.status, 200);
+
+    // 4. POST /v1/generate — stream tokens as they decode
+    let body = r#"{"prompt":[3,1,4,1,5,9,2,6],"max_new":12,"priority":0}"#;
+    println!("POST /v1/generate      <- {body}");
+    let mut first_chunk = true;
+    let resp = client::post_stream(addr, "/v1/generate", body, |chunk| {
+        if first_chunk {
+            println!("  streamed chunks (one JSON event each):");
+            first_chunk = false;
+        }
+        print!("    {}", String::from_utf8_lossy(chunk));
+    })?;
+    assert_eq!(resp.status, 200);
+    assert!(resp.chunks.len() >= 2, "at least one token event plus the terminal Done");
+    let last = String::from_utf8_lossy(resp.chunks.last().unwrap()).into_owned();
+    let done = Json::parse(last.trim()).expect("terminal event is JSON");
+    assert_eq!(done.get("done").as_bool(), Some(true));
+    let n_gen = done.get("stats").get("n_generated").as_usize().unwrap();
+    println!("  -> {} token events, request id {}", n_gen, resp.header("x-request-id").unwrap());
+
+    // 5. GET /v1/stats — same registry the engine thread writes
+    let stats = client::get(addr, "/v1/stats")?;
+    assert_eq!(stats.status, 200);
+    let parsed = Json::parse(&stats.body_text()).expect("stats body is JSON");
+    println!(
+        "\nGET /v1/stats          -> {} requests={} generated_tokens={}",
+        stats.status,
+        parsed.get("requests").as_usize().unwrap(),
+        parsed.get("generated_tokens").as_usize().unwrap(),
+    );
+    assert_eq!(parsed.get("generated_tokens").as_usize(), Some(n_gen));
+
+    // 6. GET /metrics — Prometheus text exposition of the same counters
+    let metrics = client::get(addr, "/metrics")?;
+    assert_eq!(metrics.status, 200);
+    let line = metrics
+        .body_text()
+        .lines()
+        .find(|l| l.starts_with("armor_generated_tokens_total"))
+        .expect("counter present in exposition")
+        .to_string();
+    println!("GET /metrics           -> {} e.g. `{line}`", metrics.status);
+
+    // 7. the error envelope: a generate with no prompt field is a 400
+    let bad = client::post(addr, "/v1/generate", r#"{"max_new":4}"#)?;
+    let envelope = Json::parse(&bad.body_text()).expect("error body is JSON");
+    println!(
+        "POST bad generate      -> {} reason={}",
+        bad.status,
+        envelope.get("error").get("reason").as_str().unwrap(),
+    );
+    assert_eq!(bad.status, 400);
+
+    // 8. graceful shutdown: draining refuses new work, then the report.
+    // Shutdown stops accepting, so the 503 is observable on connections
+    // that already exist (API.md §9) — open a keep-alive probe first.
+    let mut probe = std::net::TcpStream::connect(addr)?;
+    probe.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    server.begin_shutdown();
+    let (status, body) = keepalive_get(&mut probe, addr, "/healthz")?;
+    println!("\nGET /healthz draining  -> {status} {body}");
+    assert_eq!(status, 503);
+    let report = server.shutdown().expect("first shutdown returns the session report");
+    println!("\nfinal drain report covers the whole session:");
+    print!("{}", report.render());
+    assert_eq!(report.generated_tokens, n_gen);
+    Ok(())
+}
+
+/// One `GET` on an already-open keep-alive connection, reading a
+/// `Content-Length`-framed response: `(status, body)`.
+fn keepalive_get(
+    stream: &mut std::net::TcpStream,
+    addr: std::net::SocketAddr,
+    path: &str,
+) -> armor::Result<(u16, String)> {
+    use std::io::{Read, Write};
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\n\r\n").as_bytes())
+        .map_err(|e| armor::err!("probe write: {e}"))?;
+    let mut buf = Vec::new();
+    loop {
+        if let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+            let status: u16 = head
+                .split(' ')
+                .nth(1)
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| armor::err!("malformed probe status line"))?;
+            let need: usize = head
+                .lines()
+                .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string))
+                .and_then(|v| v.trim().parse().ok())
+                .ok_or_else(|| armor::err!("probe response has no Content-Length"))?;
+            let mut body = buf[head_end + 4..].to_vec();
+            while body.len() < need {
+                let mut chunk = [0u8; 1024];
+                let n = stream.read(&mut chunk).map_err(|e| armor::err!("probe read: {e}"))?;
+                armor::ensure!(n > 0, "probe connection closed mid-body");
+                body.extend_from_slice(&chunk[..n]);
+            }
+            body.truncate(need);
+            return Ok((status, String::from_utf8_lossy(&body).into_owned()));
+        }
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).map_err(|e| armor::err!("probe read: {e}"))?;
+        armor::ensure!(n > 0, "probe connection closed before response head");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}

@@ -15,7 +15,8 @@ use armor::coordinator::{calibrate, prune_model, PruneJob};
 use armor::data::{generate_corpus, sample_calibration, tokenize, CorpusSpec, Split};
 use armor::eval::{evaluate_tasks, perplexity};
 use armor::model::{CompiledModel, GptModel};
-use armor::serve::{Engine, EngineConfig, SchedPolicy, PRIORITY_LANES};
+use armor::serve::http::{install_shutdown_signals, HttpServer};
+use armor::serve::{Engine, EngineConfig, EngineService, SchedPolicy, PRIORITY_LANES};
 use armor::sparsity::Pattern;
 use armor::util::cli::{usage, Args, OptSpec};
 use armor::util::rng::Pcg64;
@@ -75,6 +76,7 @@ fn print_usage() {
                 OptSpec { name: "metrics-every", help: "serve: print a [metrics] snapshot line every N engine steps", default: None },
                 OptSpec { name: "no-metrics", help: "serve: disable timing histograms/gauges (counters stay on)", default: None },
                 OptSpec { name: "metrics-out", help: "serve: write the Prometheus exposition to this path after the drain", default: None },
+                OptSpec { name: "listen", help: "serve: run a live HTTP/1.1 server on ADDR (e.g. 127.0.0.1:8080) instead of the synthetic burst; see API.md", default: None },
             ]
         )
     );
@@ -414,6 +416,39 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
         prefill_chunk.map_or("unbounded".to_string(), |c| c.to_string()),
         deadline.map_or("none".to_string(), |d| format!("{:.0} ms", d.as_secs_f64() * 1e3)),
     );
+
+    // --listen switches modes: instead of replaying a synthetic burst and
+    // exiting, lift the engine onto a service worker thread and front it
+    // with the live HTTP/1.1 server until SIGINT/SIGTERM (contract: API.md)
+    if let Some(listen) = args.get("listen") {
+        armor::ensure!(
+            !args.flag("compare"),
+            "--compare times the synthetic burst; it does not apply under --listen"
+        );
+        let service = std::sync::Arc::new(EngineService::spawn(engine));
+        let server = HttpServer::bind(std::sync::Arc::clone(&service), &listen)?;
+        let stop = install_shutdown_signals();
+        println!("[serve] listening on http://{}  (ctrl-c or SIGTERM drains)", server.local_addr());
+        println!("[serve] routes: GET /healthz | GET /metrics | GET /v1/stats | POST /v1/generate");
+        while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        println!("[serve] shutdown signal received; draining in-flight requests");
+        if let Some(report) = server.shutdown() {
+            print!("{}", report.render());
+        }
+        if let Some((path, rec)) = trace {
+            rec.write_to(Path::new(&path))?;
+            println!("[serve] trace: {} events written to {path}", rec.event_count());
+        }
+        if let Some(path) = args.get("metrics-out") {
+            std::fs::write(&path, service.render_prometheus())
+                .map_err(|e| armor::err!("writing --metrics-out {path}: {e}"))?;
+            println!("[serve] metrics: Prometheus exposition written to {path}");
+        }
+        return Ok(());
+    }
+
     for (i, p) in prompts.iter().enumerate() {
         // spread the high-priority fraction evenly through the burst so
         // lanes interleave instead of front-loading one class

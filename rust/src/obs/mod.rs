@@ -7,9 +7,9 @@
 //! - [`MetricsRegistry`]: named [`Counter`]s, [`Gauge`]s, and fixed
 //!   log2-bucket [`Histogram`]s. The hot path is one relaxed atomic add
 //!   per event (two for histograms) through pre-registered `Arc` handles —
-//!   no lock, no allocation after registration. [`MetricsRegistry::
-//!   render_prometheus`] emits the text exposition the future HTTP
-//!   front-end will serve at `/metrics`.
+//!   no lock, no allocation after registration.
+//!   [`MetricsRegistry::render_prometheus`] emits the text exposition the
+//!   HTTP front-end serves at `GET /metrics` (see API.md).
 //! - [`TraceRecorder`]: Chrome trace-event-format JSON timeline
 //!   (`armor serve --trace <path>`): complete `X` spans per engine step
 //!   with nested admission/prefill/decode/attention/retire spans, `i`
@@ -24,6 +24,8 @@
 //! process-global registry here ([`global`]) backs ambient instruments
 //! like [`crate::util::timer::Timer`], which records every timed scope
 //! into an `armor_timer_us` histogram labeled by scope name.
+
+#![warn(missing_docs)]
 
 mod registry;
 mod stats;

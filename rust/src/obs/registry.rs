@@ -14,12 +14,15 @@ use std::sync::{Arc, Mutex};
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Add 1 (one relaxed atomic add).
     pub fn inc(&self) {
         self.add(1);
     }
+    /// Add `n` (one relaxed atomic add).
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -35,6 +38,7 @@ impl Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// Overwrite with `v`.
     pub fn set(&self, v: f64) {
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
@@ -43,6 +47,7 @@ impl Gauge {
         debug_assert!(v >= 0.0);
         self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
@@ -73,12 +78,15 @@ impl Histogram {
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
+    /// Sum of all samples.
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
+    /// Mean sample; `NaN` when no samples have been recorded.
     pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -128,6 +136,7 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// An empty registry.
     pub fn new() -> MetricsRegistry {
         MetricsRegistry::default()
     }
@@ -166,6 +175,8 @@ impl MetricsRegistry {
         }
     }
 
+    /// Get or register a gauge. Panics if the (name, labels) series was
+    /// already registered as a different metric type.
     pub fn gauge(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Gauge> {
         match self.get_or_insert(name, labels, help, || Metric::Gauge(Arc::new(Gauge::default()))) {
             Metric::Gauge(g) => g,
@@ -173,6 +184,8 @@ impl MetricsRegistry {
         }
     }
 
+    /// Get or register a histogram. Panics if the (name, labels) series was
+    /// already registered as a different metric type.
     pub fn histogram(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Histogram> {
         match self
             .get_or_insert(name, labels, help, || Metric::Histogram(Arc::new(Histogram::default())))

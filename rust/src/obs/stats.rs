@@ -10,21 +10,26 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Add one sample.
     pub fn push(&mut self, x: f64) {
         self.samples.push(x);
     }
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
+    /// No samples yet.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
+    /// Arithmetic mean; `NaN` when empty.
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Sample standard deviation; 0 with fewer than two samples.
     pub fn std(&self) -> f64 {
         if self.samples.len() < 2 {
             return 0.0;
@@ -34,9 +39,11 @@ impl Stats {
             / (self.samples.len() - 1) as f64)
             .sqrt()
     }
+    /// Smallest sample; `+inf` when empty.
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
+    /// Largest sample; `-inf` when empty.
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }

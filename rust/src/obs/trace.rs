@@ -52,6 +52,7 @@ impl Default for TraceRecorder {
 }
 
 impl TraceRecorder {
+    /// An empty recorder whose clock starts now.
     pub fn new() -> TraceRecorder {
         TraceRecorder {
             inner: Arc::new(TraceInner { t0: Instant::now(), events: Mutex::new(Vec::new()) }),
@@ -105,6 +106,7 @@ impl TraceRecorder {
         });
     }
 
+    /// Events recorded so far (spans, instants, and counter samples).
     pub fn event_count(&self) -> usize {
         self.inner.events.lock().unwrap().len()
     }
@@ -159,9 +161,13 @@ impl TraceRecorder {
 /// Summary returned by a successful [`validate_trace`] pass.
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct TraceSummary {
+    /// Total events validated (all phases, metadata excluded).
     pub events: usize,
+    /// Complete (`X`) spans.
     pub spans: usize,
+    /// Instant (`i`/`I`) events.
     pub instants: usize,
+    /// Counter (`C`) samples.
     pub counters: usize,
 }
 

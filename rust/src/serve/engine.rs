@@ -41,7 +41,8 @@ use crate::serve::{
     PRIORITY_LANES,
 };
 use crate::util::json::Json;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Engine tuning knobs.
@@ -92,11 +93,36 @@ impl Default for EngineConfig {
     }
 }
 
+/// Streaming event for one request, delivered over the channel returned by
+/// [`Engine::submit_stream`]. Tokens are sent the moment the engine step
+/// that produced them runs (prefill completion for the first token, each
+/// batched decode for the rest); the terminal [`TokenEvent::Done`] is sent
+/// exactly once, at retirement, carrying the request's final accounting.
+/// Dropping the receiver never stalls the engine — events for a
+/// disconnected client are discarded and generation runs to completion.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// One generated token, in order.
+    Token {
+        /// 0-based position within the generated continuation.
+        index: usize,
+        /// The generated token id.
+        token: u16,
+    },
+    /// Terminal event: the request retired. Boxed to keep the common
+    /// `Token` variant small; `stats.generated` repeats the full
+    /// continuation already streamed token-by-token.
+    Done(Box<RequestStats>),
+}
+
 /// Completed-request accounting.
 #[derive(Clone, Debug)]
 pub struct RequestStats {
+    /// The id `submit`/`submit_with`/`submit_stream` returned.
     pub id: RequestId,
+    /// Prompt length after clamping to the servable window.
     pub prompt_len: usize,
+    /// Tokens generated (equals the clamped `max_new`).
     pub n_generated: usize,
     /// prompt tokens served from the prefix cache instead of prefill
     pub reused_tokens: usize,
@@ -117,7 +143,9 @@ pub struct RequestStats {
 /// Aggregate outcome of a drain.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
+    /// Per-request accounting, id-ordered.
     pub requests: Vec<RequestStats>,
+    /// Wall-clock span of the accounting window, in milliseconds.
     pub wall_ms: f64,
     /// prompt tokens processed by prefill (prefix-cache hits excluded)
     pub prefill_tokens: usize,
@@ -125,6 +153,7 @@ pub struct ServeReport {
     pub generated_tokens: usize,
     /// decode steps executed and the largest batch observed
     pub decode_steps: usize,
+    /// Largest decode batch observed in the window.
     pub peak_batch: usize,
     /// most prompt tokens prefilled within any single engine step — bounded
     /// by `--prefill-chunk` when set (the chunk-budget invariant)
@@ -487,6 +516,9 @@ pub struct Engine {
     trace: Option<TraceRecorder>,
     base: CounterBase,
     src: SourceCounters,
+    /// per-request streaming channels ([`Engine::submit_stream`]); an entry
+    /// is removed when its request retires (after the `Done` event is sent)
+    sinks: HashMap<RequestId, mpsc::Sender<TokenEvent>>,
 }
 
 impl Engine {
@@ -544,9 +576,11 @@ impl Engine {
             trace: None,
             base: CounterBase::default(),
             src: SourceCounters::default(),
+            sinks: HashMap::new(),
         })
     }
 
+    /// The compiled model the engine serves.
     pub fn model(&self) -> &CompiledModel {
         &self.model
     }
@@ -566,6 +600,15 @@ impl Engine {
     /// share counters.
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.metrics.registry
+    }
+
+    /// A shareable handle to the engine's registry. The counters and gauges
+    /// behind it are plain atomics, so a front-end thread can render
+    /// `/metrics` or a live stats snapshot while the engine thread steps —
+    /// this is how the HTTP server serves observability routes without
+    /// going through the engine's command channel.
+    pub fn metrics_handle(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.metrics.registry)
     }
 
     /// Prometheus text exposition of every serve-plane series — the payload
@@ -614,12 +657,61 @@ impl Engine {
     /// urgent, clamped to the lane count); `deadline` is the soft
     /// completion budget [`SchedPolicy::Deadline`] orders by — misses are
     /// counted in the [`ServeReport`] under every policy.
+    /// Doc example (tiny random model, priority lane 1, 50 ms soft
+    /// deadline):
+    ///
+    /// ```
+    /// use armor::model::{CompiledModel, GptConfig, GptModel};
+    /// use armor::serve::{Engine, EngineConfig};
+    /// use armor::util::rng::Pcg64;
+    /// use std::time::Duration;
+    ///
+    /// let cfg = GptConfig { d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32,
+    ///                       max_seq: 32, ..GptConfig::tiny() };
+    /// let model = GptModel::random_init(&cfg, &mut Pcg64::seed_from_u64(0));
+    /// let compiled = CompiledModel::compile(&model, None).unwrap();
+    /// let mut engine = Engine::new(compiled, EngineConfig::default()).unwrap();
+    /// let id = engine.submit_with(&[1, 2, 3], 4, 1, Some(Duration::from_millis(50)));
+    /// let report = engine.drain();
+    /// assert_eq!(report.requests.len(), 1);
+    /// assert_eq!(report.requests[0].id, id);
+    /// assert_eq!(report.requests[0].n_generated, 4);
+    /// ```
     pub fn submit_with(
         &mut self,
         prompt: &[u16],
         max_new: usize,
         priority: u8,
         deadline: Option<Duration>,
+    ) -> RequestId {
+        self.submit_opts(prompt, max_new, priority, deadline, None)
+    }
+
+    /// [`Engine::submit_with`], plus a streaming channel: tokens arrive as
+    /// [`TokenEvent::Token`] the moment the step that produced them runs,
+    /// and retirement delivers a terminal [`TokenEvent::Done`] with the
+    /// request's [`RequestStats`]. The receiver can be moved to another
+    /// thread (the HTTP front-end blocks a connection handler on it);
+    /// dropping it discards subsequent events without stalling the engine.
+    pub fn submit_stream(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> (RequestId, mpsc::Receiver<TokenEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit_opts(prompt, max_new, priority, deadline, Some(tx));
+        (id, rx)
+    }
+
+    fn submit_opts(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        priority: u8,
+        deadline: Option<Duration>,
+        sink: Option<mpsc::Sender<TokenEvent>>,
     ) -> RequestId {
         let window = self.pool.budget_max_len();
         let start = prompt.len().saturating_sub(window);
@@ -638,7 +730,7 @@ impl Engine {
             self.metrics.requests.inc();
             self.metrics.ttft_us.record(0);
             self.metrics.latency_us.record(0);
-            self.finished.push(RequestStats {
+            let stats = RequestStats {
                 id,
                 prompt_len: prompt.len(),
                 n_generated: 0,
@@ -649,11 +741,21 @@ impl Engine {
                 ttft_ms: 0.0,
                 latency_ms: 0.0,
                 generated: Vec::new(),
-            });
+            };
+            if let Some(tx) = sink {
+                let _ = tx.send(TokenEvent::Done(Box::new(stats.clone())));
+            }
+            self.finished.push(stats);
             return id;
         }
         let max_new = max_new.clamp(1, window + 1 - prompt.len());
-        self.sched.enqueue_with(prompt, max_new, priority, deadline.map(|d| Instant::now() + d))
+        let id = self
+            .sched
+            .enqueue_with(prompt, max_new, priority, deadline.map(|d| Instant::now() + d));
+        if let Some(tx) = sink {
+            self.sinks.insert(id, tx);
+        }
+        id
     }
 
     /// Requests not yet completed (waiting or in flight).
@@ -829,6 +931,9 @@ impl Engine {
                 seq.last_token = first;
                 seq.first_token_at = Some(Instant::now());
                 seq.phase = SeqPhase::Decoding;
+                if let Some(tx) = self.sinks.get(&seq.id) {
+                    let _ = tx.send(TokenEvent::Token { index: 0, token: first });
+                }
                 m.generated_tokens.inc();
                 produced += 1;
             } else {
@@ -885,6 +990,12 @@ impl Engine {
                 let next = argmax(logits.row(row)) as u16;
                 seq.generated.push(next);
                 seq.last_token = next;
+                if let Some(tx) = self.sinks.get(&seq.id) {
+                    let _ = tx.send(TokenEvent::Token {
+                        index: seq.generated.len() - 1,
+                        token: next,
+                    });
+                }
             }
             m.generated_tokens.add(bsz as u64);
             produced += bsz;
@@ -902,10 +1013,10 @@ impl Engine {
         // --- end-of-step bookkeeping: fold source counters into the
         //     registry, sample depth gauges / counter tracks ---
         self.sync_sources();
-        if self.metrics_on {
-            m.queue_depth.set(self.sched.pending_len() as f64);
-            m.active_seqs.set(self.sched.active_len() as f64);
-        }
+        // depth gauges are two relaxed stores — kept on even with metrics
+        // off so a live `/v1/stats` snapshot always sees current depths
+        m.queue_depth.set(self.sched.pending_len() as f64);
+        m.active_seqs.set(self.sched.active_len() as f64);
         if let Some(tr) = &trace {
             tr.counter(
                 "queue",
@@ -1028,7 +1139,7 @@ impl Engine {
             m.requests.inc();
             m.ttft_us.record((ttft * 1e3) as u64);
             m.latency_us.record((latency_ms * 1e3) as u64);
-            self.finished.push(RequestStats {
+            let stats = RequestStats {
                 id: seq.id,
                 prompt_len: seq.prompt.len(),
                 n_generated: seq.generated.len(),
@@ -1041,7 +1152,11 @@ impl Engine {
                 ttft_ms: ttft,
                 latency_ms,
                 generated: seq.generated,
-            });
+            };
+            if let Some(tx) = self.sinks.remove(&seq.id) {
+                let _ = tx.send(TokenEvent::Done(Box::new(stats.clone())));
+            }
+            self.finished.push(stats);
         }
         end_phase(
             "retire",

@@ -1,0 +1,190 @@
+//! Minimal blocking HTTP/1.1 loopback client.
+//!
+//! Exists so the integration test, the socket-TTFT bench, and the
+//! `serve_client` example all exercise the real wire path without three
+//! hand-rolled copies of chunked-transfer decoding. One request per
+//! connection (`Connection: close`), blocking reads, strict parsing of
+//! the server's own output — deliberately *not* a general-purpose client.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A fully-received response, de-chunked.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Headers in arrival order, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (chunk payloads concatenated when chunked).
+    pub body: Vec<u8>,
+    /// Individual chunk payloads, in arrival order; empty when the
+    /// response was not chunked.
+    pub chunks: Vec<Vec<u8>>,
+}
+
+impl HttpResponse {
+    /// First header value for `name` (lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy).
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// `GET path` and read the whole response.
+pub fn get(addr: SocketAddr, path: &str) -> crate::Result<HttpResponse> {
+    request(addr, "GET", path, None, |_| {})
+}
+
+/// `POST path` with a JSON body and read the whole response.
+pub fn post(addr: SocketAddr, path: &str, body: &str) -> crate::Result<HttpResponse> {
+    request(addr, "POST", path, Some(body), |_| {})
+}
+
+/// `POST path` with a JSON body, invoking `on_chunk` with each chunk
+/// payload the moment it is received — the hook socket-level TTFT
+/// measurement hangs off (first callback = first streamed token on the
+/// wire).
+pub fn post_stream(
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+    on_chunk: impl FnMut(&[u8]),
+) -> crate::Result<HttpResponse> {
+    request(addr, "POST", path, Some(body), on_chunk)
+}
+
+/// One full request/response exchange on a fresh connection.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    mut on_chunk: impl FnMut(&[u8]),
+) -> crate::Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| crate::err!("connect {}: {}", addr, e))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .map_err(|e| crate::err!("set_read_timeout: {}", e))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).map_err(|e| crate::err!("write request: {}", e))?;
+    if let Some(b) = body {
+        stream.write_all(b.as_bytes()).map_err(|e| crate::err!("write body: {}", e))?;
+    }
+    read_response(&mut stream, &mut on_chunk)
+}
+
+fn read_response(
+    stream: &mut TcpStream,
+    on_chunk: &mut impl FnMut(&[u8]),
+) -> crate::Result<HttpResponse> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        if !fill(stream, &mut buf)? {
+            crate::bail!("connection closed before response head completed");
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| crate::err!("response head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    // "HTTP/1.1 200 OK"
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| crate::err!("malformed status line: {:?}", status_line))?;
+    // interim responses (100 Continue) carry no body; read the next head
+    if status == 100 {
+        // nothing buffered beyond the interim head for our server
+        return read_response(stream, on_chunk);
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((n, v)) = line.split_once(':') {
+            headers.push((n.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let find = |name: &str| {
+        headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.clone())
+    };
+    let mut pos = head_end + 4;
+    let chunked = find("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    let mut chunks: Vec<Vec<u8>> = Vec::new();
+    let body = if chunked {
+        loop {
+            // parse as many complete chunks as the buffer holds
+            let Some(line_end) = find_crlf(&buf[pos..]) else {
+                if !fill(stream, &mut buf)? {
+                    crate::bail!("connection closed mid-chunk-stream");
+                }
+                continue;
+            };
+            let size_str = std::str::from_utf8(&buf[pos..pos + line_end])
+                .map_err(|_| crate::err!("chunk size line is not UTF-8"))?;
+            let size = usize::from_str_radix(size_str.trim(), 16)
+                .map_err(|_| crate::err!("bad chunk size: {:?}", size_str))?;
+            if size == 0 {
+                break;
+            }
+            let start = pos + line_end + 2;
+            if buf.len() < start + size + 2 {
+                if !fill(stream, &mut buf)? {
+                    crate::bail!("connection closed mid-chunk");
+                }
+                continue;
+            }
+            let payload = buf[start..start + size].to_vec();
+            on_chunk(&payload);
+            chunks.push(payload);
+            pos = start + size + 2;
+        }
+        chunks.concat()
+    } else {
+        let need = find("content-length")
+            .and_then(|v| v.parse::<usize>().ok())
+            .ok_or_else(|| crate::err!("response has neither chunked coding nor Content-Length"))?;
+        while buf.len() < pos + need {
+            if !fill(stream, &mut buf)? {
+                crate::bail!("connection closed before body completed");
+            }
+        }
+        buf[pos..pos + need].to_vec()
+    };
+    Ok(HttpResponse { status, headers, body, chunks })
+}
+
+/// Read once into `buf`; `false` on EOF.
+fn fill(stream: &mut TcpStream, buf: &mut Vec<u8>) -> crate::Result<bool> {
+    let mut chunk = [0u8; 4096];
+    match stream.read(&mut chunk) {
+        Ok(0) => Ok(false),
+        Ok(n) => {
+            buf.extend_from_slice(&chunk[..n]);
+            Ok(true)
+        }
+        Err(e) => Err(crate::err!("read: {}", e)),
+    }
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
+}

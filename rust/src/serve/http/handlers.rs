@@ -1,0 +1,342 @@
+//! Route handlers and response writing.
+//!
+//! Plain routes (`/healthz`, `/metrics`, `/v1/stats`) build a [`Response`]
+//! and send it with a `Content-Length`. The streaming route
+//! (`POST /v1/generate`) owns its socket: it writes a chunked-transfer
+//! head, then one JSON event per chunk as the engine produces tokens —
+//! `{"index":i,"token":t}` per token, a terminal
+//! `{"done":true,"stats":{...}}`, then the zero-length chunk that ends the
+//! stream. Every non-2xx body is the `API.md` error envelope:
+//! `{"error":{"code":u16,"reason":slug,"message":text}}`.
+
+use crate::serve::engine::{RequestStats, TokenEvent};
+use crate::serve::http::parser::{Request, Version};
+use crate::serve::service::{EngineService, GenerateParams};
+use crate::util::json::Json;
+use std::io::Write;
+use std::time::Duration;
+
+/// A fully-buffered HTTP response (everything except the generate stream).
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Extra headers (e.g. `Allow` on a 405).
+    pub headers: Vec<(&'static str, String)>,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response (compact emission).
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: v.to_string_compact().into_bytes(),
+        }
+    }
+
+    /// The structured error envelope: `{"error":{"code","reason","message"}}`.
+    /// `message` may echo hostile request data — the JSON emitter escapes
+    /// control characters, so the envelope always stays valid JSON.
+    pub fn error(status: u16, reason: &str, message: &str) -> Response {
+        let env = Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::Num(status as f64)),
+                ("reason", Json::Str(reason.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        )]);
+        Response::json(status, &env)
+    }
+
+    /// Serialize with status line, `Content-Length`, and optional
+    /// `Connection: close`.
+    pub fn write_to<W: Write>(&self, w: &mut W, close: bool) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, status_text(self.status))?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        if close {
+            w.write_all(b"Connection: close\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// `GET /healthz`: `200 {"status":"ok"}` while serving, `503
+/// {"status":"draining"}` once shutdown begins (load balancers stop
+/// routing on the status flip).
+pub fn handle_healthz(svc: &EngineService) -> Response {
+    if svc.draining() {
+        Response::json(503, &Json::obj(vec![("status", Json::Str("draining".into()))]))
+    } else {
+        Response::json(200, &Json::obj(vec![("status", Json::Str("ok".into()))]))
+    }
+}
+
+/// `GET /metrics`: the live Prometheus text exposition.
+pub fn handle_metrics(svc: &EngineService) -> Response {
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        headers: Vec::new(),
+        body: svc.render_prometheus().into_bytes(),
+    }
+}
+
+/// `GET /v1/stats`: the live registry-derived stats snapshot.
+pub fn handle_stats(svc: &EngineService) -> Response {
+    Response::json(200, &svc.stats().to_json())
+}
+
+/// Validate a `POST /v1/generate` body into [`GenerateParams`].
+/// Required: `prompt` (array of integers in `0..=65535`), `max_new`
+/// (non-negative integer). Optional: `priority` (integer in `0..=255`,
+/// default 0), `deadline_ms` (positive number). Unknown fields are
+/// ignored. Every rejection is a 400 envelope naming the offending field.
+pub fn parse_generate(body: &[u8]) -> Result<GenerateParams, Response> {
+    let bad = |msg: &str| Err(Response::error(400, "bad_request", msg));
+    let Ok(text) = std::str::from_utf8(body) else {
+        return bad("body is not valid UTF-8");
+    };
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return bad(&format!("body is not valid JSON: {e}")),
+    };
+    if v.as_obj().is_none() {
+        return bad("body must be a JSON object");
+    }
+    let Some(prompt_field) = v.get("prompt").as_arr() else {
+        return bad("\"prompt\" must be an array of token ids");
+    };
+    let mut prompt = Vec::with_capacity(prompt_field.len());
+    for (i, t) in prompt_field.iter().enumerate() {
+        match t.as_usize().filter(|&t| t <= u16::MAX as usize) {
+            Some(t) => prompt.push(t as u16),
+            None => return bad(&format!("\"prompt\"[{i}] must be an integer in 0..=65535")),
+        }
+    }
+    let Some(max_new) = v.get("max_new").as_usize() else {
+        return bad("\"max_new\" must be a non-negative integer");
+    };
+    let priority = match v.get("priority") {
+        Json::Null => 0,
+        j => match j.as_usize().filter(|&p| p <= u8::MAX as usize) {
+            Some(p) => p as u8,
+            None => return bad("\"priority\" must be an integer in 0..=255"),
+        },
+    };
+    let deadline = match v.get("deadline_ms") {
+        Json::Null => None,
+        j => match j.as_f64().filter(|&ms| ms.is_finite() && ms > 0.0) {
+            Some(ms) => Some(Duration::from_secs_f64(ms / 1e3)),
+            None => return bad("\"deadline_ms\" must be a positive number"),
+        },
+    };
+    Ok(GenerateParams { prompt, max_new, priority, deadline })
+}
+
+/// `POST /v1/generate`: validate, submit, and stream the continuation.
+/// HTTP/1.1 connections get chunked transfer coding with one JSON event
+/// per chunk; HTTP/1.0 (no chunked coding) gets the same NDJSON event
+/// lines buffered into a single `Content-Length` body. A write failure
+/// (client went away) just drops the receiver — the engine finishes the
+/// request regardless; disconnect does not cancel generation.
+pub fn handle_generate<S: Write>(
+    stream: &mut S,
+    req: &Request,
+    svc: &EngineService,
+) -> std::io::Result<()> {
+    let close = req.wants_close();
+    let params = match parse_generate(&req.body) {
+        Ok(p) => p,
+        Err(resp) => return resp.write_to(stream, close),
+    };
+    let (id, rx) = match svc.generate(params) {
+        Ok(pair) => pair,
+        Err(e) => return Response::error(503, "draining", &e.to_string()).write_to(stream, close),
+    };
+
+    if req.version == Version::Http10 {
+        // chunked coding needs 1.1: buffer the whole event stream instead
+        let mut body = Vec::new();
+        for ev in rx.iter() {
+            let done = matches!(ev, TokenEvent::Done(_));
+            body.extend_from_slice(event_line(&ev).as_bytes());
+            if done {
+                break;
+            }
+        }
+        let resp = Response {
+            status: 200,
+            content_type: "application/x-ndjson",
+            headers: vec![("X-Request-Id", id.0.to_string())],
+            body,
+        };
+        return resp.write_to(stream, close);
+    }
+
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nCache-Control: no-store\r\nX-Request-Id: {}\r\n{}\r\n",
+        id.0,
+        if close { "Connection: close\r\n" } else { "" },
+    )?;
+    stream.flush()?;
+    for ev in rx.iter() {
+        let done = matches!(ev, TokenEvent::Done(_));
+        write_chunk(stream, event_line(&ev).as_bytes())?;
+        if done {
+            break;
+        }
+    }
+    // zero-length chunk: well-formed termination even if the engine thread
+    // disappeared without a Done (the client sees a complete frame either way)
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+/// One wire frame per event, newline-terminated (NDJSON inside the chunk).
+fn event_line(ev: &TokenEvent) -> String {
+    let mut line = match ev {
+        TokenEvent::Token { index, token } => Json::obj(vec![
+            ("index", Json::Num(*index as f64)),
+            ("token", Json::Num(*token as f64)),
+        ])
+        .to_string_compact(),
+        TokenEvent::Done(stats) => Json::obj(vec![
+            ("done", Json::Bool(true)),
+            ("stats", stats_json(stats)),
+        ])
+        .to_string_compact(),
+    };
+    line.push('\n');
+    line
+}
+
+/// The `stats` object of the terminal event (`generated` is omitted — the
+/// tokens were already streamed one event at a time).
+fn stats_json(s: &RequestStats) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(s.id.0 as f64)),
+        ("prompt_len", Json::Num(s.prompt_len as f64)),
+        ("n_generated", Json::Num(s.n_generated as f64)),
+        ("reused_tokens", Json::Num(s.reused_tokens as f64)),
+        ("priority", Json::Num(s.priority as f64)),
+        ("deadline_ms", s.deadline_ms.map_or(Json::Null, Json::Num)),
+        ("deadline_missed", Json::Bool(s.deadline_missed)),
+        ("ttft_ms", Json::Num(s.ttft_ms)),
+        ("latency_ms", Json::Num(s.latency_ms)),
+    ])
+}
+
+fn write_chunk<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n", payload.len())?;
+    w.write_all(payload)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err(body: &str) -> String {
+        let resp = parse_generate(body.as_bytes()).expect_err("should reject");
+        assert_eq!(resp.status, 400);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).expect("envelope is JSON");
+        assert_eq!(v.get("error").get("code").as_usize(), Some(400));
+        assert_eq!(v.get("error").get("reason").as_str(), Some("bad_request"));
+        v.get("error").get("message").as_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn generate_body_happy_path() {
+        let p = parse_generate(
+            br#"{"prompt":[1,2,65535],"max_new":8,"priority":2,"deadline_ms":125.5}"#,
+        )
+        .unwrap();
+        assert_eq!(p.prompt, vec![1, 2, 65535]);
+        assert_eq!(p.max_new, 8);
+        assert_eq!(p.priority, 2);
+        assert_eq!(p.deadline, Some(Duration::from_secs_f64(0.1255)));
+        let p = parse_generate(br#"{"prompt":[],"max_new":0}"#).unwrap();
+        assert!(p.prompt.is_empty());
+        assert_eq!(p.priority, 0);
+        assert_eq!(p.deadline, None);
+    }
+
+    #[test]
+    fn generate_body_rejections_name_the_field() {
+        assert!(parse_err("not json").contains("not valid JSON"));
+        assert!(parse_err("[1,2]").contains("JSON object"));
+        assert!(parse_err(r#"{"max_new":4}"#).contains("\"prompt\""));
+        assert!(parse_err(r#"{"prompt":[1,70000],"max_new":4}"#).contains("\"prompt\"[1]"));
+        assert!(parse_err(r#"{"prompt":[1,-2],"max_new":4}"#).contains("\"prompt\"[1]"));
+        assert!(parse_err(r#"{"prompt":[1,2]}"#).contains("\"max_new\""));
+        assert!(parse_err(r#"{"prompt":[1],"max_new":1.5}"#).contains("\"max_new\""));
+        assert!(parse_err(r#"{"prompt":[1],"max_new":2,"priority":300}"#).contains("\"priority\""));
+        assert!(
+            parse_err(r#"{"prompt":[1],"max_new":2,"deadline_ms":-5}"#).contains("\"deadline_ms\"")
+        );
+    }
+
+    #[test]
+    fn error_envelope_escapes_hostile_echoes() {
+        // a message echoing raw request bytes must still emit valid JSON
+        let resp = Response::error(400, "bad_request", "bad header: \"\u{1}\u{0}\nx\"");
+        let text = std::str::from_utf8(&resp.body).unwrap();
+        assert!(text.bytes().all(|b| b >= 0x20), "control bytes leaked: {text:?}");
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("error").get("code").as_usize(), Some(400));
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        let mut resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]));
+        resp.headers.push(("Allow", "GET".to_string()));
+        resp.write_to(&mut out, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Allow: GET\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn chunk_framing_is_wellformed() {
+        let mut out = Vec::new();
+        write_chunk(&mut out, b"{\"token\":7}\n").unwrap();
+        assert_eq!(out, b"c\r\n{\"token\":7}\n\r\n");
+    }
+}

@@ -1,0 +1,31 @@
+//! Hermetic std-only HTTP/1.1 front-end for the serve engine.
+//!
+//! `armor serve --listen ADDR` turns the synthetic-drain CLI into a live
+//! server built from four pieces, all on `std::net` (the crate is
+//! dependency-free by design):
+//!
+//! - [`parser`](self): incremental request parsing with structured 4xx
+//!   rejections ([`read_request`]);
+//! - [`route`]: the static `(method, path)` table — `GET /healthz`,
+//!   `GET /metrics`, `GET /v1/stats`, `POST /v1/generate`;
+//! - handlers: buffered JSON responses plus the chunked-transfer token
+//!   stream (one JSON event per chunk);
+//! - [`HttpServer`]: the nonblocking accept loop, thread-per-connection
+//!   keep-alive handling, and the graceful shutdown sequence driven by
+//!   [`install_shutdown_signals`].
+//!
+//! The wire contract — every route, field, status code, the chunk
+//! framing, the error envelope, and drain semantics — is versioned in
+//! `API.md`; `DESIGN.md` §9 covers the thread/channel topology underneath
+//! ([`crate::serve::EngineService`]).
+
+pub mod client;
+mod handlers;
+mod parser;
+mod router;
+mod server;
+
+pub use handlers::{parse_generate, status_text, Response};
+pub use parser::{read_request, Parsed, ParseError, Request, Version, MAX_BODY_BYTES, MAX_HEAD_BYTES};
+pub use router::{route, Route, RouteResult};
+pub use server::{install_shutdown_signals, HttpServer};

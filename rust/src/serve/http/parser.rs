@@ -1,0 +1,398 @@
+//! Incremental HTTP/1.1 request parser.
+//!
+//! Reads one request from a blocking stream: request line, headers, then a
+//! `Content-Length` body. Malformed input never panics and never tears the
+//! connection silently — every rejection carries the status code and
+//! machine-readable reason the handler layer wraps in the JSON error
+//! envelope (`API.md`). Chunked *request* bodies are refused with `501`
+//! (responses stream chunked; requests are small JSON documents).
+
+use std::io::{Read, Write};
+
+/// Hard cap on the request line + headers, bytes. Overflow → `431`.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Hard cap on a declared `Content-Length` body, bytes. Overflow → `413`.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// HTTP version of a parsed request. Only 1.0 and 1.1 are accepted
+/// (anything else is rejected with `505` before a [`Request`] exists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Version {
+    /// HTTP/1.0 — connections close after one response unless the client
+    /// sent `Connection: keep-alive`; streaming routes refuse it (chunked
+    /// transfer coding is a 1.1 feature).
+    Http10,
+    /// HTTP/1.1 — persistent connections, chunked responses.
+    Http11,
+}
+
+/// One parsed request. Header names are lowercased at parse time; the
+/// target is split into `path` and the raw query string.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method, as sent (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target with any `?query` suffix removed.
+    pub path: String,
+    /// The raw query string after `?`, if present (unused by current
+    /// routes, preserved for forward compatibility).
+    pub query: Option<String>,
+    /// Negotiated HTTP version.
+    pub version: Version,
+    /// Headers in arrival order, names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// The `Content-Length` body (empty when none was declared).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (lowercase), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection must close after this exchange:
+    /// `Connection: close`, or HTTP/1.0 without an explicit keep-alive.
+    pub fn wants_close(&self) -> bool {
+        let conn = self.header("connection").map(|v| v.to_ascii_lowercase());
+        match self.version {
+            Version::Http11 => conn.as_deref() == Some("close"),
+            Version::Http10 => conn.as_deref() != Some("keep-alive"),
+        }
+    }
+}
+
+/// Structured parse rejection: the HTTP status to answer with, a stable
+/// machine-readable `reason` slug for the error envelope, and a
+/// human-readable message.
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    /// HTTP status code (400, 413, 431, 501, 505).
+    pub status: u16,
+    /// Stable slug (`bad_request`, `payload_too_large`, ...).
+    pub reason: &'static str,
+    /// Human-readable detail, safe to echo (the JSON emitter escapes it).
+    pub message: String,
+}
+
+impl ParseError {
+    fn new(status: u16, reason: &'static str, message: impl Into<String>) -> ParseError {
+        ParseError { status, reason, message: message.into() }
+    }
+}
+
+/// Outcome of reading one request off a connection.
+#[derive(Debug)]
+pub enum Parsed {
+    /// A complete, well-formed request.
+    Request(Box<Request>),
+    /// The peer closed (or timed out) before sending a request — the
+    /// normal end of a keep-alive connection; nothing to answer.
+    Closed,
+    /// Malformed input; answer with the embedded status and close.
+    Error(ParseError),
+}
+
+/// Read exactly one request from `stream`. Blocking; respects the caps
+/// above. Requires `Write` access only to emit the `100 Continue` interim
+/// response when a client sends `Expect: 100-continue` before its body.
+pub fn read_request<S: Read + Write>(stream: &mut S) -> Parsed {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(i) = find_head_end(&buf) {
+            break i;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parsed::Error(ParseError::new(
+                431,
+                "headers_too_large",
+                format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+            ));
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => return Parsed::Closed,
+            Ok(0) => {
+                return Parsed::Error(ParseError::new(
+                    400,
+                    "bad_request",
+                    "connection closed mid-request",
+                ))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            // read timeout or reset: nothing sensible to answer
+            Err(_) => return Parsed::Closed,
+        }
+    };
+
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => {
+            return Parsed::Error(ParseError::new(
+                400,
+                "bad_request",
+                "request head is not valid UTF-8",
+            ))
+        }
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let (method, path, query, version) = match parse_request_line(request_line) {
+        Ok(t) => t,
+        Err(e) => return Parsed::Error(e),
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            return Parsed::Error(ParseError::new(
+                400,
+                "bad_request",
+                "obsolete header line folding is not supported",
+            ));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Parsed::Error(ParseError::new(
+                400,
+                "bad_request",
+                format!("malformed header line: {line:?}"),
+            ));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, path, query, version, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Parsed::Error(ParseError::new(
+            501,
+            "not_implemented",
+            "chunked request bodies are not supported; send Content-Length",
+        ));
+    }
+    let content_length = match req.header("content-length") {
+        None => 0,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return Parsed::Error(ParseError::new(
+                    400,
+                    "bad_request",
+                    format!("unparsable Content-Length: {v:?}"),
+                ))
+            }
+        },
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Parsed::Error(ParseError::new(
+            413,
+            "payload_too_large",
+            format!("Content-Length {content_length} exceeds {MAX_BODY_BYTES} bytes"),
+        ));
+    }
+    if content_length > 0
+        && req
+            .header("expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+        && stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err()
+    {
+        return Parsed::Closed;
+    }
+
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return Parsed::Error(ParseError::new(
+                    400,
+                    "bad_request",
+                    "connection closed before the declared body arrived",
+                ))
+            }
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(_) => return Parsed::Closed,
+        }
+    }
+    body.truncate(content_length);
+    req.body = body;
+    Parsed::Request(Box::new(req))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+type RequestLine = (String, String, Option<String>, Version);
+
+fn parse_request_line(line: &str) -> Result<RequestLine, ParseError> {
+    let mut parts = line.split(' ');
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(ParseError::new(
+            400,
+            "bad_request",
+            format!("malformed request line: {line:?}"),
+        ));
+    };
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ParseError::new(
+            400,
+            "bad_request",
+            format!("malformed method: {method:?}"),
+        ));
+    }
+    if !target.starts_with('/') {
+        return Err(ParseError::new(
+            400,
+            "bad_request",
+            format!("request target must be an absolute path, got {target:?}"),
+        ));
+    }
+    let version = match version {
+        "HTTP/1.1" => Version::Http11,
+        "HTTP/1.0" => Version::Http10,
+        other => {
+            return Err(ParseError::new(
+                505,
+                "http_version_not_supported",
+                format!("unsupported protocol version: {other:?}"),
+            ))
+        }
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok((method.to_string(), path, query, version))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory Read+Write stand-in for a socket.
+    struct Pipe {
+        input: std::io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl Pipe {
+        fn new(input: &[u8]) -> Pipe {
+            Pipe { input: std::io::Cursor::new(input.to_vec()), output: Vec::new() }
+        }
+    }
+
+    impl Read for Pipe {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for Pipe {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.output.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn parse(raw: &[u8]) -> Parsed {
+        read_request(&mut Pipe::new(raw))
+    }
+
+    #[test]
+    fn parses_get_with_headers_and_query() {
+        let Parsed::Request(r) =
+            parse(b"GET /v1/stats?pretty=1 HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n")
+        else {
+            panic!("expected a request")
+        };
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/stats");
+        assert_eq!(r.query.as_deref(), Some("pretty=1"));
+        assert_eq!(r.version, Version::Http11);
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(!r.wants_close());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_split_across_reads() {
+        // Cursor hands everything over in one read; the split-read path is
+        // exercised by the loopback integration test over real sockets.
+        let raw = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 11\r\n\r\n{\"a\":[1,2]}";
+        let Parsed::Request(r) = parse(raw) else { panic!("expected a request") };
+        assert_eq!(r.body, b"{\"a\":[1,2]}");
+    }
+
+    #[test]
+    fn connection_close_and_http10_semantics() {
+        let Parsed::Request(r) = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n") else {
+            panic!()
+        };
+        assert!(r.wants_close());
+        let Parsed::Request(r) = parse(b"GET / HTTP/1.0\r\n\r\n") else { panic!() };
+        assert_eq!(r.version, Version::Http10);
+        assert!(r.wants_close(), "HTTP/1.0 defaults to close");
+        let Parsed::Request(r) = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n") else {
+            panic!()
+        };
+        assert!(!r.wants_close());
+    }
+
+    #[test]
+    fn structured_errors_carry_status() {
+        let expect = |raw: &[u8], status: u16, reason: &str| {
+            let Parsed::Error(e) = parse(raw) else {
+                panic!("expected an error for {raw:?}")
+            };
+            assert_eq!(e.status, status, "for {raw:?}");
+            assert_eq!(e.reason, reason, "for {raw:?}");
+        };
+        expect(b"garbage\r\n\r\n", 400, "bad_request");
+        expect(b"get / HTTP/1.1\r\n\r\n", 400, "bad_request"); // lowercase method
+        expect(b"GET noslash HTTP/1.1\r\n\r\n", 400, "bad_request");
+        expect(b"GET / HTTP/2.0\r\n\r\n", 505, "http_version_not_supported");
+        expect(b"GET / HTTP/1.1\r\nbroken line\r\n\r\n", 400, "bad_request");
+        expect(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400, "bad_request");
+        expect(
+            b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+            413,
+            "payload_too_large",
+        );
+        expect(
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            501,
+            "not_implemented",
+        );
+        expect(b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\nab", 400, "bad_request");
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(vec![b'x'; MAX_HEAD_BYTES + 16]);
+        let Parsed::Error(e) = parse(&raw) else { panic!("expected 431") };
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_an_error() {
+        assert!(matches!(parse(b""), Parsed::Closed));
+        assert!(matches!(parse(b"GET / HT"), Parsed::Error(_)), "mid-request EOF is a 400");
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let mut pipe =
+            Pipe::new(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nExpect: 100-continue\r\n\r\nok");
+        let Parsed::Request(r) = read_request(&mut pipe) else { panic!() };
+        assert_eq!(r.body, b"ok");
+        assert_eq!(pipe.output, b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+}

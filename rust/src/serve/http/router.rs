@@ -1,0 +1,88 @@
+//! Route table: `(method, path)` → handler dispatch.
+//!
+//! One static table is the whole routing layer — the versioned API surface
+//! (`API.md`) is exactly these entries. Unknown paths are `404`; known
+//! paths with the wrong method are `405` carrying the `Allow` header the
+//! spec requires.
+
+/// The routes the server exposes. See `API.md` for the wire contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /healthz` — liveness/readiness probe.
+    Healthz,
+    /// `GET /metrics` — Prometheus text exposition.
+    Metrics,
+    /// `GET /v1/stats` — live JSON stats snapshot.
+    Stats,
+    /// `POST /v1/generate` — streaming token generation.
+    Generate,
+}
+
+/// Dispatch outcome for a `(method, path)` pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteResult {
+    /// A served route.
+    Ok(Route),
+    /// No route at this path → `404`.
+    NotFound,
+    /// Path exists, method doesn't → `405` with this `Allow` value.
+    MethodNotAllowed {
+        /// The methods the path does serve (the `Allow` header value).
+        allow: &'static str,
+    },
+}
+
+const TABLE: &[(&str, &str, Route)] = &[
+    ("GET", "/healthz", Route::Healthz),
+    ("GET", "/metrics", Route::Metrics),
+    ("GET", "/v1/stats", Route::Stats),
+    ("POST", "/v1/generate", Route::Generate),
+];
+
+/// Resolve a request's method + path (query already stripped) against the
+/// route table.
+pub fn route(method: &str, path: &str) -> RouteResult {
+    let mut allow: Option<&'static str> = None;
+    for (m, p, r) in TABLE {
+        if *p == path {
+            if *m == method {
+                return RouteResult::Ok(*r);
+            }
+            allow = Some(m);
+        }
+    }
+    match allow {
+        Some(allow) => RouteResult::MethodNotAllowed { allow },
+        None => RouteResult::NotFound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_documented_route_resolves() {
+        assert_eq!(route("GET", "/healthz"), RouteResult::Ok(Route::Healthz));
+        assert_eq!(route("GET", "/metrics"), RouteResult::Ok(Route::Metrics));
+        assert_eq!(route("GET", "/v1/stats"), RouteResult::Ok(Route::Stats));
+        assert_eq!(route("POST", "/v1/generate"), RouteResult::Ok(Route::Generate));
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow() {
+        assert_eq!(route("POST", "/metrics"), RouteResult::MethodNotAllowed { allow: "GET" });
+        assert_eq!(
+            route("GET", "/v1/generate"),
+            RouteResult::MethodNotAllowed { allow: "POST" }
+        );
+        assert_eq!(route("DELETE", "/healthz"), RouteResult::MethodNotAllowed { allow: "GET" });
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        assert_eq!(route("GET", "/"), RouteResult::NotFound);
+        assert_eq!(route("GET", "/v1/nope"), RouteResult::NotFound);
+        assert_eq!(route("POST", "/v2/generate"), RouteResult::NotFound);
+    }
+}

@@ -1,0 +1,225 @@
+//! Listener and accept loop: [`HttpServer`] plus the SIGINT/SIGTERM hook.
+//!
+//! The listener runs nonblocking on its own thread, polling a stop flag
+//! between accepts so shutdown never blocks on a quiet socket; each
+//! accepted connection gets a thread running the keep-alive request loop
+//! (the engine itself stays on its single worker thread — connection
+//! threads only parse, validate, and block on their private event
+//! channels, so "thread per connection" costs one mostly-parked thread per
+//! live client). Shutdown sequence: stop accepting → drain the engine
+//! service (in-flight requests finish, new ones get `503`) → wait a
+//! bounded window for connection handlers to flush their final chunks.
+
+use crate::serve::engine::ServeReport;
+use crate::serve::http::handlers::{self, Response};
+use crate::serve::http::parser::{read_request, Parsed};
+use crate::serve::http::router::{route, Route, RouteResult};
+use crate::serve::service::EngineService;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Stop-flag poll interval of the nonblocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+/// Per-connection read timeout: an idle keep-alive connection is dropped
+/// after this long so it cannot pin a thread forever.
+const IDLE_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Bounded wait for connection handlers to flush after the engine drains.
+const DRAIN_CONN_WAIT: Duration = Duration::from_secs(5);
+
+/// A live HTTP/1.1 front-end over an [`EngineService`]. Bound and
+/// accepting as soon as [`HttpServer::bind`] returns; serving ends with
+/// [`HttpServer::shutdown`], which returns the engine's final drain
+/// report.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+    service: Arc<EngineService>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`; port 0 picks an ephemeral
+    /// port — read it back from [`HttpServer::local_addr`]) and start
+    /// accepting on a background thread.
+    pub fn bind(service: Arc<EngineService>, addr: &str) -> crate::Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| crate::err!("bind {}: {}", addr, e))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| crate::err!("local_addr: {}", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::err!("set_nonblocking: {}", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(AtomicUsize::new(0));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let service = Arc::clone(&service);
+            std::thread::Builder::new()
+                .name("armor-http-accept".to_string())
+                .spawn(move || accept_loop(listener, &stop, &conns, &service))
+                .map_err(|e| crate::err!("spawn accept thread: {}", e))?
+        };
+        Ok(HttpServer { local_addr, stop, conns, service, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Connections currently open (accepted and not yet closed).
+    pub fn active_connections(&self) -> usize {
+        self.conns.load(Ordering::SeqCst)
+    }
+
+    /// Non-blocking first half of shutdown: stop accepting new
+    /// connections and flip the service into draining (in-flight requests
+    /// keep streaming; new `POST /v1/generate` submissions get `503`).
+    /// Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.service.begin_shutdown();
+    }
+
+    /// Complete a graceful shutdown: begin it (if not already begun), join
+    /// the accept thread, drain the engine — every in-flight request
+    /// finishes and its terminal chunk is produced — then wait a bounded
+    /// window for connection handlers to flush. Returns the engine's final
+    /// [`ServeReport`] covering the whole serving session (`None` if
+    /// something already collected it).
+    pub fn shutdown(&self) -> Option<ServeReport> {
+        self.begin_shutdown();
+        if let Some(h) = self.accept.lock().expect("accept handle poisoned").take() {
+            let _ = h.join();
+        }
+        let report = self.service.shutdown();
+        let deadline = Instant::now() + DRAIN_CONN_WAIT;
+        while self.conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        report
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: &AtomicBool,
+    conns: &Arc<AtomicUsize>,
+    service: &Arc<EngineService>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // the listener is nonblocking; the accepted stream must not be
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(IDLE_READ_TIMEOUT));
+                let _ = stream.set_nodelay(true);
+                conns.fetch_add(1, Ordering::SeqCst);
+                let conns = Arc::clone(conns);
+                let service = Arc::clone(service);
+                let spawned = std::thread::Builder::new()
+                    .name("armor-http-conn".to_string())
+                    .spawn(move || {
+                        handle_connection(stream, &service);
+                        conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            // WouldBlock: no pending connection — poll the stop flag.
+            // Any other accept error (EMFILE, reset): back off the same way
+            // rather than spinning or killing the listener.
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Keep-alive request loop for one connection: parse → route → respond,
+/// until the peer closes, an error poisons framing, or a response asked
+/// for `Connection: close`.
+fn handle_connection(mut stream: TcpStream, service: &EngineService) {
+    loop {
+        let req = match read_request(&mut stream) {
+            Parsed::Closed => return,
+            Parsed::Error(e) => {
+                // after a malformed head the byte stream can't be trusted
+                // to frame another request: answer and close
+                let _ = Response::error(e.status, e.reason, &e.message)
+                    .write_to(&mut stream, true);
+                return;
+            }
+            Parsed::Request(r) => r,
+        };
+        let close = req.wants_close();
+        let io = match route(&req.method, &req.path) {
+            RouteResult::Ok(Route::Healthz) => {
+                handlers::handle_healthz(service).write_to(&mut stream, close)
+            }
+            RouteResult::Ok(Route::Metrics) => {
+                handlers::handle_metrics(service).write_to(&mut stream, close)
+            }
+            RouteResult::Ok(Route::Stats) => {
+                handlers::handle_stats(service).write_to(&mut stream, close)
+            }
+            RouteResult::Ok(Route::Generate) => {
+                handlers::handle_generate(&mut stream, &req, service)
+            }
+            RouteResult::NotFound => {
+                Response::error(404, "not_found", &format!("no route for {}", req.path))
+                    .write_to(&mut stream, close)
+            }
+            RouteResult::MethodNotAllowed { allow } => {
+                let mut resp = Response::error(
+                    405,
+                    "method_not_allowed",
+                    &format!("{} does not accept {}", req.path, req.method),
+                );
+                resp.headers.push(("Allow", allow.to_string()));
+                resp.write_to(&mut stream, close)
+            }
+        };
+        if io.is_err() || close {
+            return;
+        }
+    }
+}
+
+/// Process-wide shutdown flag flipped by the signal handler.
+static SHUTDOWN_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    // the only async-signal-safe thing to do: one atomic store
+    SHUTDOWN_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip (and return) the process-wide
+/// shutdown flag — `armor serve --listen` polls it and runs a graceful
+/// [`HttpServer::shutdown`] when it goes high. Uses a two-line `signal(2)`
+/// FFI declaration because the crate is std-only (std already links libc;
+/// there is no `libc` crate to depend on).
+#[cfg(unix)]
+pub fn install_shutdown_signals() -> &'static AtomicBool {
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
+    }
+    &SHUTDOWN_FLAG
+}
+
+/// Non-unix fallback: no signal hook (std-only); the returned flag only
+/// flips via [`HttpServer::begin_shutdown`] or an embedder.
+#[cfg(not(unix))]
+pub fn install_shutdown_signals() -> &'static AtomicBool {
+    &SHUTDOWN_FLAG
+}

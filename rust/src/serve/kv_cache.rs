@@ -51,9 +51,13 @@ use std::sync::Arc;
 /// only), with copy-on-write on subsequent appends.
 #[derive(Clone, Debug)]
 pub struct KvCache {
+    /// Model width — each cached K/V row holds `d_model` values.
     pub d_model: usize,
+    /// Context window bound (positional-embedding table size).
     pub max_seq: usize,
+    /// Attention heads per layer (one page chain per `(layer, head)`).
     pub n_heads: usize,
+    /// Values per head per row (`d_model / n_heads`).
     pub head_dim: usize,
     page_positions: usize,
     /// tokens fully processed (all layers appended + committed)
@@ -94,6 +98,7 @@ impl KvCache {
         self.len
     }
 
+    /// No positions cached yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -104,6 +109,7 @@ impl KvCache {
         self.max_seq - self.len
     }
 
+    /// Transformer layers this cache spans.
     pub fn n_layers(&self) -> usize {
         self.filled.len()
     }
@@ -139,6 +145,27 @@ impl KvCache {
     /// whole pages are shared by refcount; the trailing partial page (if
     /// `n` is not page-aligned) is shared too and copied on first write by
     /// either side. O(pages) refcount bumps, no K/V copies.
+    ///
+    /// ```
+    /// use armor::model::GptConfig;
+    /// use armor::serve::KvPool;
+    ///
+    /// let cfg = GptConfig { d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16,
+    ///                       max_seq: 8, ..GptConfig::tiny() };
+    /// let pool = KvPool::new(&cfg, 2, None).unwrap(); // 2-position pages
+    /// let mut cache = pool.new_cache();
+    /// for t in 0..4 {
+    ///     let row = vec![t as f32; 8];
+    ///     cache.append(0, &row, &row);
+    ///     cache.advance(1);
+    /// }
+    /// // fork the first 3 positions: 2 pages per chain, zero K/V copies
+    /// let fork = cache.fork_prefix(3);
+    /// assert_eq!(fork.len(), 3);
+    /// // both sides reference the same pool pages until one writes into
+    /// // the shared trailing page (copy-on-write at divergence)
+    /// assert_eq!(pool.cow_copies(), 0);
+    /// ```
     pub fn fork_prefix(&self, n: usize) -> KvCache {
         assert!(n <= self.len, "fork_prefix({n}) beyond committed length {}", self.len);
         let pages = n.div_ceil(self.page_positions);
@@ -264,8 +291,24 @@ impl KvCache {
 /// attention kernel streams. A q8 run carries one scale per position
 /// (`k_scales[j]` covers K codes `[j·head_dim, (j+1)·head_dim)`).
 pub enum PageRun<'a> {
-    F32 { k: &'a [f32], v: &'a [f32] },
-    Q8 { k: &'a [i8], v: &'a [i8], k_scales: &'a [f32], v_scales: &'a [f32] },
+    /// Full-precision K/V rows, `head_dim` floats per position.
+    F32 {
+        /// K rows, position-major.
+        k: &'a [f32],
+        /// V rows, position-major.
+        v: &'a [f32],
+    },
+    /// Int8-quantized K/V codes with one dequant scale per position.
+    Q8 {
+        /// K codes, position-major.
+        k: &'a [i8],
+        /// V codes, position-major.
+        v: &'a [i8],
+        /// Per-position K scales (`k_scales.len()` = positions in the run).
+        k_scales: &'a [f32],
+        /// Per-position V scales.
+        v_scales: &'a [f32],
+    },
 }
 
 impl PageRun<'_> {

@@ -45,8 +45,10 @@ pub const DEFAULT_PAGE_POSITIONS: usize = 32;
 /// with the codes by construction, and there is no re-seal pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum KvQuant {
+    /// Full-precision f32 pages.
     #[default]
     F32,
+    /// Int8 codes with one f32 scale per position per K/V plane.
     Q8,
 }
 
@@ -254,6 +256,7 @@ impl KvPool {
         page_bytes_for(self.state.quant, self.state.page_positions, self.state.head_dim)
     }
 
+    /// Positions each page holds (`armor serve --page-size`).
     pub fn page_positions(&self) -> usize {
         self.state.page_positions
     }
@@ -283,6 +286,7 @@ impl KvPool {
         (pages_per_chain * self.state.page_positions).min(self.state.max_seq)
     }
 
+    /// Admission budget in pages (`usize::MAX` = unbounded).
     pub fn capacity_pages(&self) -> usize {
         self.state.capacity_pages
     }

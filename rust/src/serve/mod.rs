@@ -34,17 +34,28 @@
 //! [`Engine::set_trace`] attaches a Chrome trace-event timeline of the
 //! drain (`armor serve --trace`). See `DESIGN.md` §8 for the contract.
 //!
+//! Above the engine sits the service plane: [`EngineService`] lifts the
+//! step loop onto a dedicated worker thread (submissions over a channel,
+//! per-request [`TokenEvent`] streams, graceful drain), and [`http`] fronts
+//! it with a std-only HTTP/1.1 server — `armor serve --listen ADDR` —
+//! whose wire contract is versioned in `API.md` (`DESIGN.md` §9 for the
+//! ownership/shutdown model).
+//!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
 //! dense-recompute vs KV-cached-compressed comparison and the
 //! prefix-sharing sweep.
 
+#![warn(missing_docs)]
+
 mod engine;
+pub mod http;
 mod kv_cache;
 mod kv_pool;
 mod prefix;
 mod scheduler;
+mod service;
 
-pub use engine::{Engine, EngineConfig, RequestStats, ServeReport};
+pub use engine::{Engine, EngineConfig, RequestStats, ServeReport, TokenEvent};
 pub use kv_cache::{KvCache, PageRun, PanelRuns};
 pub use kv_pool::{KvPool, KvQuant, DEFAULT_PAGE_POSITIONS};
 pub use prefix::{PrefixRegistry, DEFAULT_PREFIX_ENTRIES};
@@ -52,3 +63,4 @@ pub use scheduler::{
     ActiveSeq, GenRequest, RequestId, SchedPolicy, Scheduler, SeqPhase, AGING_TICKS,
     PRIORITY_LANES,
 };
+pub use service::{EngineService, GenerateParams, StatsSnapshot};

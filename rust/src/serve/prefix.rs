@@ -66,6 +66,8 @@ fn fnv1a(tokens: &[u16]) -> u64 {
 }
 
 impl PrefixRegistry {
+    /// A registry retaining up to `max_entries` prefix chains against
+    /// `pool`'s budget.
     pub fn new(pool: KvPool, max_entries: usize) -> PrefixRegistry {
         PrefixRegistry {
             pool,
@@ -199,10 +201,12 @@ impl PrefixRegistry {
         while self.evict_lru() {}
     }
 
+    /// Retained prefix entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Nothing retained.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -219,10 +223,12 @@ impl PrefixRegistry {
         self.entries.iter().map(|e| e.reserved_pages).sum()
     }
 
+    /// Lookups that attached to a retained chain.
     pub fn hits(&self) -> usize {
         self.hits
     }
 
+    /// Lookups that found no reusable chain.
     pub fn misses(&self) -> usize {
         self.misses
     }

@@ -56,6 +56,7 @@ impl SchedPolicy {
         }
     }
 
+    /// The flag spelling [`SchedPolicy::parse`] accepts (reports, logs).
     pub fn label(&self) -> &'static str {
         match self {
             SchedPolicy::Fifo => "fifo",
@@ -74,7 +75,10 @@ pub const AGING_TICKS: u64 = 4;
 
 /// Opaque handle returned by `Engine::submit`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct RequestId(pub u64);
+pub struct RequestId(
+    /// Monotonic submission counter (also the `X-Request-Id` wire value).
+    pub u64,
+);
 
 /// The earliest-deadline-first sort key shared by queue selection and the
 /// engine's prefill-budget ordering: earliest `(deadline, id)` first,
@@ -91,8 +95,11 @@ pub(crate) fn edf_key(
 /// model's context window by the engine).
 #[derive(Clone, Debug)]
 pub struct GenRequest {
+    /// The id issued at enqueue time.
     pub id: RequestId,
+    /// Prompt token ids (already window-clamped).
     pub prompt: Vec<u16>,
+    /// Continuation length to generate (already window-clamped).
     pub max_new: usize,
     /// lane under [`SchedPolicy::Priority`] (0 = most urgent); recorded in
     /// the final [`RequestStats`](crate::serve::RequestStats) either way
@@ -100,6 +107,7 @@ pub struct GenRequest {
     /// soft completion deadline ([`SchedPolicy::Deadline`] orders by it;
     /// the engine counts misses at retirement under every policy)
     pub deadline: Option<Instant>,
+    /// Submission timestamp (latency and TTFT measure from here).
     pub submitted: Instant,
     /// scheduler tick at which the request entered its current lane
     /// (aging bookkeeping — see [`Scheduler::tick`])
@@ -121,18 +129,24 @@ pub enum SeqPhase {
 
 /// One in-flight sequence: its KV cache plus generation progress.
 pub struct ActiveSeq {
+    /// The id issued at enqueue time.
     pub id: RequestId,
+    /// Paged KV cache backing this sequence's attention context.
     pub cache: KvCache,
     /// the (clamped) prompt — kept whole so chunked prefill can resume and
     /// the prefix registry can retain the page-aligned prefix at the end
     pub prompt: Vec<u16>,
+    /// Continuation length to generate (already window-clamped).
     pub max_new: usize,
+    /// Lifecycle phase: chunked prefill or token-per-step decode.
     pub phase: SeqPhase,
+    /// Priority lane the request was submitted at (0 = most urgent).
     pub priority: u8,
     /// scheduler tick at admission — the engine ages the *in-flight*
     /// prefill-budget order from it ([`ActiveSeq::effective_priority`]),
     /// extending the queue's anti-starvation guarantee to the chunk budget
     pub admitted_tick: u64,
+    /// Soft completion deadline carried over from the queue entry.
     pub deadline: Option<Instant>,
     /// worst-case page demand reserved against the pool at admission;
     /// returned via `KvPool::release` when the sequence retires
@@ -143,7 +157,9 @@ pub struct ActiveSeq {
     pub generated: Vec<u16>,
     /// most recent token — the next decode step's input
     pub last_token: u16,
+    /// Submission timestamp (latency and TTFT measure from here).
     pub submitted: Instant,
+    /// When the first generated token landed (TTFT), once it has.
     pub first_token_at: Option<Instant>,
 }
 
@@ -172,6 +188,7 @@ impl ActiveSeq {
 
 /// Policy-ordered admission + in-flight batch bookkeeping.
 pub struct Scheduler {
+    /// In-flight batch slot cap (`armor serve --batch`).
     pub max_batch: usize,
     policy: SchedPolicy,
     next_id: u64,
@@ -181,14 +198,17 @@ pub struct Scheduler {
     promotions: u64,
     /// `lanes[0]` first; Fifo and Deadline keep everything in `lanes[0]`
     lanes: Vec<VecDeque<GenRequest>>,
+    /// The in-flight batch, admission-ordered.
     pub active: Vec<ActiveSeq>,
 }
 
 impl Scheduler {
+    /// A FIFO scheduler with `max_batch` in-flight slots.
     pub fn new(max_batch: usize) -> Scheduler {
         Scheduler::with_policy(max_batch, SchedPolicy::Fifo)
     }
 
+    /// A scheduler with an explicit admission policy.
     pub fn with_policy(max_batch: usize, policy: SchedPolicy) -> Scheduler {
         assert!(max_batch > 0, "batch must admit at least one sequence");
         Scheduler {
@@ -202,6 +222,7 @@ impl Scheduler {
         }
     }
 
+    /// The configured admission policy.
     pub fn policy(&self) -> SchedPolicy {
         self.policy
     }
@@ -349,10 +370,12 @@ impl Scheduler {
         done
     }
 
+    /// Requests waiting for admission across every lane.
     pub fn pending_len(&self) -> usize {
         self.lanes.iter().map(|q| q.len()).sum()
     }
 
+    /// Sequences currently in the in-flight batch.
     pub fn active_len(&self) -> usize {
         self.active.len()
     }

@@ -1,0 +1,454 @@
+//! Long-running engine service: the step loop on a dedicated thread.
+//!
+//! [`Engine`] is single-threaded by design — one `&mut self` step loop, no
+//! locks on the hot path. [`EngineService`] turns it into something many
+//! connection handlers can share: `spawn` moves the engine onto a named
+//! worker thread, submissions travel over an mpsc command channel, and each
+//! request hands its caller a private [`TokenEvent`] receiver that the
+//! engine fills as tokens decode (the "waker" is the channel itself — a
+//! blocked `recv` wakes exactly when its token is produced).
+//!
+//! Observability never crosses the command channel: `spawn` clones the
+//! engine's [`MetricsRegistry`] handle first, so `/metrics` and
+//! [`EngineService::stats`] read the same atomics the engine thread writes.
+//! That is the §9 invariant — the live stats route, the Prometheus
+//! exposition, and the final drain [`ServeReport`] are all views of one set
+//! of registry counters and can never disagree.
+//!
+//! Shutdown is a three-state machine (see `DESIGN.md` §9): **serving** →
+//! [`EngineService::begin_shutdown`] flips the `draining` flag (new
+//! `generate` calls fail fast; commands already in the channel still admit)
+//! → the worker finishes every in-flight request, sends each terminal
+//! [`TokenEvent::Done`], and returns the drain report → **stopped**, which
+//! [`EngineService::shutdown`] observes by joining the thread.
+
+use crate::obs::MetricsRegistry;
+use crate::serve::engine::{Engine, ServeReport, TokenEvent};
+use crate::serve::RequestId;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One generation request as submitted over the service boundary —
+/// the channel-friendly owned form of the [`Engine::submit_with`]
+/// arguments.
+#[derive(Clone, Debug)]
+pub struct GenerateParams {
+    /// Prompt token ids (clamped to the servable window by the engine).
+    pub prompt: Vec<u16>,
+    /// Continuation length to generate (engine-clamped; 0 completes
+    /// immediately with an empty continuation).
+    pub max_new: usize,
+    /// Priority lane, 0 = most urgent (used by `--policy priority`).
+    pub priority: u8,
+    /// Soft completion deadline (used by `--policy deadline`; misses are
+    /// counted, not enforced).
+    pub deadline: Option<Duration>,
+}
+
+type SubmitReply = (RequestId, mpsc::Receiver<TokenEvent>);
+
+enum Cmd {
+    Generate(GenerateParams, mpsc::Sender<SubmitReply>),
+    Shutdown,
+}
+
+/// Thread-safe handle to an engine running on its own worker thread.
+/// Cheap to share behind an `Arc`; every method takes `&self`.
+pub struct EngineService {
+    cmd_tx: mpsc::Sender<Cmd>,
+    registry: Arc<MetricsRegistry>,
+    draining: Arc<AtomicBool>,
+    started: Instant,
+    worker: Mutex<Option<JoinHandle<ServeReport>>>,
+}
+
+impl EngineService {
+    /// Move `engine` onto a dedicated worker thread and return the shared
+    /// handle. The engine steps only while work is outstanding; an idle
+    /// worker blocks on the command channel and costs nothing.
+    pub fn spawn(engine: Engine) -> EngineService {
+        let registry = engine.metrics_handle();
+        let draining = Arc::new(AtomicBool::new(false));
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let flag = Arc::clone(&draining);
+        let worker = std::thread::Builder::new()
+            .name("armor-engine".to_string())
+            .spawn(move || run(engine, cmd_rx, flag))
+            .expect("spawn engine worker thread");
+        EngineService {
+            cmd_tx,
+            registry,
+            draining,
+            started: Instant::now(),
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Submit a generation request. Returns the request id plus the
+    /// streaming receiver ([`TokenEvent::Token`] per token, terminal
+    /// [`TokenEvent::Done`]). Fails once draining has begun — the HTTP
+    /// layer maps that to `503 draining`.
+    pub fn generate(&self, params: GenerateParams) -> crate::Result<SubmitReply> {
+        crate::ensure!(!self.draining(), "service is draining; not admitting new requests");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.cmd_tx
+            .send(Cmd::Generate(params, reply_tx))
+            .map_err(|_| crate::err!("engine worker has stopped"))?;
+        // the worker absorbs queued commands between steps, so this blocks
+        // for at most one engine step; an Err means the worker drained and
+        // exited with our command still queued
+        reply_rx
+            .recv()
+            .map_err(|_| crate::err!("service is draining; not admitting new requests"))
+    }
+
+    /// Whether shutdown has begun (new submissions are being refused).
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// The shared metrics registry — same atomics the engine thread
+    /// writes; safe to render from any thread at any time.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Prometheus text exposition of the live registry (the `/metrics`
+    /// payload).
+    pub fn render_prometheus(&self) -> String {
+        self.registry.render_prometheus()
+    }
+
+    /// Live stats snapshot re-derived from the registry (the `/v1/stats`
+    /// payload).
+    pub fn stats(&self) -> StatsSnapshot {
+        let c = |name: &str| self.registry.counter_value(name, &[]).unwrap_or_default();
+        let g = |name: &str| self.registry.gauge_value(name, &[]).unwrap_or_default();
+        StatsSnapshot {
+            draining: self.draining(),
+            uptime_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            requests: c("armor_requests_total"),
+            prefill_tokens: c("armor_prefill_tokens_total"),
+            generated_tokens: c("armor_generated_tokens_total"),
+            decode_steps: c("armor_decode_steps_total"),
+            deadline_misses: c("armor_deadline_misses_total"),
+            prefix_hits: c("armor_prefix_hits_total"),
+            prefix_misses: c("armor_prefix_misses_total"),
+            prefix_hit_tokens: c("armor_prefix_hit_tokens_total"),
+            prefix_evictions: c("armor_prefix_evictions_total"),
+            kv_pages_alloc: c("armor_kv_pages_alloc_total"),
+            kv_pages_freed: c("armor_kv_pages_freed_total"),
+            kv_cow_copies: c("armor_kv_cow_copies_total"),
+            sched_promotions: c("armor_sched_promotions_total"),
+            queue_depth: g("armor_queue_depth") as u64,
+            active_seqs: g("armor_active_seqs") as u64,
+            window_peak_batch: g("armor_peak_batch") as u64,
+            window_max_step_prefill: g("armor_max_step_prefill") as u64,
+            window_kv_resident_bytes: g("armor_kv_resident_bytes_peak") as u64,
+            window_kv_reserved_bytes: g("armor_kv_reserved_bytes_peak") as u64,
+            window_kv_shared_bytes: g("armor_kv_shared_bytes_peak") as u64,
+            window_wall_ms: g("armor_serve_wall_ms"),
+        }
+    }
+
+    /// Flip the service into draining without blocking: new `generate`
+    /// calls fail from this point on; in-flight requests keep decoding to
+    /// completion on the worker. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        // wake a worker that is blocked idle on the command channel
+        let _ = self.cmd_tx.send(Cmd::Shutdown);
+    }
+
+    /// Begin (if not begun) and complete shutdown: blocks until every
+    /// in-flight request has retired and its `Done` event is sent, then
+    /// returns the worker's final drain [`ServeReport`] covering the whole
+    /// serving session. `None` if the worker was already joined.
+    pub fn shutdown(&self) -> Option<ServeReport> {
+        self.begin_shutdown();
+        let worker = self.worker.lock().expect("worker handle poisoned").take()?;
+        Some(worker.join().expect("engine worker panicked"))
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        // don't leak a parked worker thread if the handle is dropped
+        // without an explicit shutdown
+        self.draining.store(true, Ordering::SeqCst);
+        let _ = self.cmd_tx.send(Cmd::Shutdown);
+        if let Ok(mut w) = self.worker.lock() {
+            if let Some(h) = w.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The worker thread body: absorb queued commands (blocking only when
+/// idle), step while work is outstanding, exit once draining *and* idle.
+fn run(mut engine: Engine, cmd_rx: mpsc::Receiver<Cmd>, draining: Arc<AtomicBool>) -> ServeReport {
+    loop {
+        loop {
+            let busy = engine.outstanding() > 0 || draining.load(Ordering::SeqCst);
+            let cmd = if busy {
+                match cmd_rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        draining.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            } else {
+                // idle and serving: park until the next command
+                match cmd_rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        draining.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            };
+            match cmd {
+                Cmd::Generate(p, reply) => {
+                    let pair = engine.submit_stream(&p.prompt, p.max_new, p.priority, p.deadline);
+                    // a caller that gave up waiting just drops the reply
+                    // receiver; the request still runs and retires
+                    let _ = reply.send(pair);
+                }
+                Cmd::Shutdown => draining.store(true, Ordering::SeqCst),
+            }
+        }
+        if engine.outstanding() > 0 {
+            engine.step();
+        } else if draining.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    engine.drain()
+}
+
+/// Live service stats re-derived from the metrics registry: lifetime
+/// counter totals, current depth gauges, and the last drain window's peak
+/// gauges. This is the `/v1/stats` wire shape (see `API.md`).
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    /// Shutdown has begun; new submissions are refused.
+    pub draining: bool,
+    /// Milliseconds since the service was spawned.
+    pub uptime_ms: f64,
+    /// Completed generation requests (lifetime).
+    pub requests: u64,
+    /// Prompt tokens prefilled, prefix-cache hits excluded (lifetime).
+    pub prefill_tokens: u64,
+    /// Tokens generated (lifetime).
+    pub generated_tokens: u64,
+    /// Batched decode passes executed (lifetime).
+    pub decode_steps: u64,
+    /// Completed requests that blew their soft deadline (lifetime).
+    pub deadline_misses: u64,
+    /// Admissions that attached to a retained prefix chain (lifetime).
+    pub prefix_hits: u64,
+    /// Prefix lookups that found no reusable chain (lifetime).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from the prefix cache (lifetime).
+    pub prefix_hit_tokens: u64,
+    /// Prefix chains evicted (lifetime).
+    pub prefix_evictions: u64,
+    /// KV pool pages allocated (lifetime).
+    pub kv_pages_alloc: u64,
+    /// KV pool pages freed (lifetime).
+    pub kv_pages_freed: u64,
+    /// Copy-on-write page copies (lifetime).
+    pub kv_cow_copies: u64,
+    /// Anti-starvation lane promotions (lifetime).
+    pub sched_promotions: u64,
+    /// Requests currently waiting for admission.
+    pub queue_depth: u64,
+    /// Sequences currently in the in-flight batch.
+    pub active_seqs: u64,
+    /// Largest decode batch of the last drain window.
+    pub window_peak_batch: u64,
+    /// Most prompt tokens prefilled in one step of the last drain window.
+    pub window_max_step_prefill: u64,
+    /// Peak resident KV bytes of the last drain window.
+    pub window_kv_resident_bytes: u64,
+    /// Peak reserved KV bytes of the last drain window.
+    pub window_kv_reserved_bytes: u64,
+    /// Peak sharing-avoided KV bytes of the last drain window.
+    pub window_kv_shared_bytes: u64,
+    /// Wall milliseconds of the last drain window.
+    pub window_wall_ms: f64,
+}
+
+impl StatsSnapshot {
+    /// The `/v1/stats` JSON body: lifetime totals at the top level, the
+    /// last drain window's peaks under `"last_window"`.
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        let window = Json::obj(vec![
+            ("peak_batch", n(self.window_peak_batch)),
+            ("max_step_prefill", n(self.window_max_step_prefill)),
+            ("kv_resident_bytes", n(self.window_kv_resident_bytes)),
+            ("kv_reserved_bytes", n(self.window_kv_reserved_bytes)),
+            ("kv_shared_bytes", n(self.window_kv_shared_bytes)),
+            ("wall_ms", Json::Num(self.window_wall_ms)),
+        ]);
+        Json::obj(vec![
+            ("draining", Json::Bool(self.draining)),
+            ("uptime_ms", Json::Num(self.uptime_ms)),
+            ("requests", n(self.requests)),
+            ("prefill_tokens", n(self.prefill_tokens)),
+            ("generated_tokens", n(self.generated_tokens)),
+            ("decode_steps", n(self.decode_steps)),
+            ("deadline_misses", n(self.deadline_misses)),
+            ("prefix_hits", n(self.prefix_hits)),
+            ("prefix_misses", n(self.prefix_misses)),
+            ("prefix_hit_tokens", n(self.prefix_hit_tokens)),
+            ("prefix_evictions", n(self.prefix_evictions)),
+            ("kv_pages_alloc", n(self.kv_pages_alloc)),
+            ("kv_pages_freed", n(self.kv_pages_freed)),
+            ("kv_cow_copies", n(self.kv_cow_copies)),
+            ("sched_promotions", n(self.sched_promotions)),
+            ("queue_depth", n(self.queue_depth)),
+            ("active_seqs", n(self.active_seqs)),
+            ("last_window", window),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CompiledModel, GptConfig, GptModel};
+    use crate::serve::EngineConfig;
+    use crate::util::rng::Pcg64;
+
+    fn small_model() -> CompiledModel {
+        let cfg = GptConfig {
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            ..GptConfig::tiny()
+        };
+        let mut rng = Pcg64::seed_from_u64(0);
+        CompiledModel::compile(&GptModel::random_init(&cfg, &mut rng), None).unwrap()
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_below(256) as u16).collect()
+    }
+
+    fn params(prompt: Vec<u16>, max_new: usize) -> GenerateParams {
+        GenerateParams { prompt, max_new, priority: 0, deadline: None }
+    }
+
+    /// Concurrent streams through the service produce exactly the tokens a
+    /// direct single-threaded engine run produces, events arrive in index
+    /// order, and the final drain report covers every request.
+    #[test]
+    fn streamed_service_matches_direct_engine() {
+        let compiled = small_model();
+        let cfg = EngineConfig { max_batch: 3, ..EngineConfig::default() };
+        let prompts: Vec<Vec<u16>> = (0..4).map(|i| toks(4 + i, 300 + i as u64)).collect();
+        let max_new = [5usize, 3, 7, 4];
+
+        let mut direct = Engine::new(compiled.clone(), cfg).unwrap();
+        for (p, &n) in prompts.iter().zip(&max_new) {
+            direct.submit(p, n);
+        }
+        let mut expect: Vec<Vec<u16>> =
+            direct.drain().requests.iter().map(|r| r.generated.clone()).collect();
+        expect.sort();
+
+        let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()));
+        let handles: Vec<_> = prompts
+            .iter()
+            .zip(&max_new)
+            .map(|(p, &n)| {
+                let svc = Arc::clone(&service);
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let (_, rx) = svc.generate(params(p, n)).unwrap();
+                    let mut got = Vec::new();
+                    loop {
+                        match rx.recv().expect("stream ended without Done") {
+                            TokenEvent::Token { index, token } => {
+                                assert_eq!(index, got.len(), "events out of order");
+                                got.push(token);
+                            }
+                            TokenEvent::Done(stats) => {
+                                assert_eq!(stats.generated, got, "Done stats disagree");
+                                return got;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut streamed: Vec<Vec<u16>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        streamed.sort();
+        assert_eq!(streamed, expect, "service streams diverged from direct engine");
+
+        let report = service.shutdown().expect("first shutdown yields the report");
+        assert_eq!(report.requests.len(), 4);
+        assert_eq!(report.generated_tokens, max_new.iter().sum::<usize>());
+        assert!(service.draining());
+        assert!(service.shutdown().is_none(), "second shutdown is a no-op");
+        assert!(service.generate(params(vec![1, 2], 3)).is_err(), "draining refuses work");
+    }
+
+    /// The stats snapshot is the registry: totals match the drain report
+    /// and the depth gauges return to zero once idle.
+    #[test]
+    fn stats_snapshot_tracks_registry() {
+        let service = EngineService::spawn(
+            Engine::new(small_model(), EngineConfig::default()).unwrap(),
+        );
+        let (_, rx) = service.generate(params(toks(5, 7), 4)).unwrap();
+        let mut done = None;
+        for ev in rx.iter() {
+            if let TokenEvent::Done(stats) = ev {
+                done = Some(stats);
+                break;
+            }
+        }
+        assert_eq!(done.unwrap().n_generated, 4);
+        // Done is sent mid-step (at retire); the counters behind it are
+        // already committed, so a snapshot taken now is exact on totals
+        let stats = service.stats();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.generated_tokens, 4);
+        assert!(!stats.draining);
+        let report = service.shutdown().unwrap();
+        assert_eq!(report.requests.len(), 1);
+        assert_eq!(report.generated_tokens, 4);
+        // after the worker joined, the end-of-step gauges are final
+        let fin = service.stats();
+        assert_eq!(fin.queue_depth, 0);
+        assert_eq!(fin.active_seqs, 0);
+        assert!(fin.draining);
+        let json = fin.to_json().to_string_compact();
+        let parsed = Json::parse(&json).expect("stats JSON round-trips");
+        assert_eq!(parsed.get("generated_tokens").as_usize(), Some(4));
+        assert_eq!(parsed.get("draining").as_bool(), Some(true));
+        assert!(parsed.get("last_window").as_obj().is_some());
+    }
+
+    /// Shutting down an idle service is clean: empty report, no hang.
+    #[test]
+    fn idle_shutdown_is_clean() {
+        let service =
+            EngineService::spawn(Engine::new(small_model(), EngineConfig::default()).unwrap());
+        let report = service.shutdown().unwrap();
+        assert!(report.requests.is_empty());
+        assert_eq!(report.generated_tokens, 0);
+    }
+}

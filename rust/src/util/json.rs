@@ -123,7 +123,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/±inf have no JSON representation — `{n}` would
+                    // print literal `NaN`/`inf` and corrupt the wire
+                    // stream; emit `null` (what JSON.stringify does)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = fmt::Write::write_fmt(out, format_args!("{}", *n as i64));
                 } else {
                     let _ = fmt::Write::write_fmt(out, format_args!("{n}"));
@@ -497,6 +502,44 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    /// Non-finite numbers must never reach the wire as literal `NaN`/`inf`
+    /// (invalid JSON): they emit as `null`. Percentiles over an empty
+    /// sample are NaN, so `/v1/stats` can legitimately hit this.
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string_compact(), "null");
+        let doc = Json::obj(vec![("p50", Json::Num(f64::NAN)), ("n", Json::Num(3.0))]);
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("p50"), &Json::Null);
+        assert_eq!(parsed.get("n").as_usize(), Some(3));
+    }
+
+    /// A streamed generate event whose strings carry hostile token text —
+    /// raw control characters, quotes, backslashes — must emit as a single
+    /// line of valid JSON (the chunked wire protocol frames one event per
+    /// chunk, so an unescaped newline or control byte would split a frame
+    /// or corrupt it).
+    #[test]
+    fn wire_events_roundtrip_hostile_token_text() {
+        let hostile = "tok \u{0}\u{1}\u{1f} \" \\ \n\r\t end";
+        let event = Json::obj(vec![
+            ("done", Json::Bool(true)),
+            ("text", Json::Str(hostile.to_string())),
+            ("p99", Json::Num(f64::NAN)),
+        ]);
+        let line = event.to_string_compact();
+        assert!(
+            line.bytes().all(|b| b >= 0x20),
+            "raw control byte leaked into the wire frame: {line:?}"
+        );
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("text").as_str(), Some(hostile));
+        assert_eq!(parsed.get("done").as_bool(), Some(true));
+        assert_eq!(parsed.get("p99"), &Json::Null);
     }
 
     #[test]

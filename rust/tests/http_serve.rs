@@ -1,0 +1,317 @@
+//! Loopback integration tests for the HTTP/1.1 serving front-end.
+//!
+//! Everything runs against a real `HttpServer` bound to an ephemeral
+//! loopback port — the same listener/parser/handler path `armor serve
+//! --listen` uses — with `armor::serve::http::client` on the other end of
+//! the socket. Covers the `API.md` acceptance list: streamed tokens are
+//! bit-identical to a direct `Engine` run, `/metrics` and `/v1/stats` stay
+//! valid mid-stream, malformed requests get structured 4xx envelopes,
+//! keep-alive serves sequential requests, and graceful shutdown drains
+//! in-flight streams to a clean chunked termination while refusing new
+//! work with `503`.
+
+use armor::model::{CompiledModel, GptConfig, GptModel};
+use armor::serve::http::{client, HttpServer, MAX_BODY_BYTES};
+use armor::serve::{Engine, EngineConfig, EngineService};
+use armor::util::json::Json;
+use armor::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn small_model() -> CompiledModel {
+    let cfg = GptConfig {
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        ..GptConfig::tiny()
+    };
+    let mut rng = Pcg64::seed_from_u64(0);
+    CompiledModel::compile(&GptModel::random_init(&cfg, &mut rng), None).unwrap()
+}
+
+fn toks(n: usize, seed: u64) -> Vec<u16> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_below(256) as u16).collect()
+}
+
+fn serve(compiled: CompiledModel, cfg: EngineConfig) -> (HttpServer, SocketAddr) {
+    let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()));
+    let server = HttpServer::bind(service, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    (server, addr)
+}
+
+fn gen_body(prompt: &[u16], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(r#"{{"prompt":[{}],"max_new":{max_new}}}"#, toks.join(","))
+}
+
+/// Extract the generated token values from a streamed response, asserting
+/// index order and that the terminal event agrees.
+fn streamed_tokens(resp: &client::HttpResponse) -> Vec<u16> {
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("application/x-ndjson"));
+    let mut got: Vec<u16> = Vec::new();
+    let mut done = false;
+    for chunk in &resp.chunks {
+        let ev = Json::parse(std::str::from_utf8(chunk).unwrap().trim()).expect("event is JSON");
+        if ev.get("done").as_bool() == Some(true) {
+            assert_eq!(
+                ev.get("stats").get("n_generated").as_usize(),
+                Some(got.len()),
+                "terminal stats disagree with the streamed event count"
+            );
+            done = true;
+        } else {
+            assert_eq!(ev.get("index").as_usize(), Some(got.len()), "events out of order");
+            got.push(ev.get("token").as_usize().unwrap() as u16);
+        }
+    }
+    assert!(done, "stream ended without a terminal done event");
+    got
+}
+
+/// One request over an already-open keep-alive connection; reads exactly
+/// one `Content-Length`-framed response and leaves the stream usable.
+fn keepalive_roundtrip(stream: &mut TcpStream, head: &str) -> (u16, String) {
+    stream.write_all(head.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed before response head");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head_text = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status: u16 =
+        head_text.split(' ').nth(1).and_then(|s| s.parse().ok()).expect("status line");
+    let need: usize = head_text
+        .lines()
+        .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("keep-alive responses are Content-Length framed");
+    let mut pos = head_end + 4;
+    while buf.len() < pos + need {
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    pos += need;
+    (status, String::from_utf8_lossy(&buf[pos - need..pos]).into_owned())
+}
+
+/// Concurrent streams over real sockets produce exactly the tokens a
+/// direct single-threaded engine run produces.
+#[test]
+fn streamed_tokens_match_direct_engine() {
+    let compiled = small_model();
+    let cfg = EngineConfig { max_batch: 3, ..EngineConfig::default() };
+    let prompts: Vec<Vec<u16>> = (0..4).map(|i| toks(4 + i, 900 + i as u64)).collect();
+    let max_new = [6usize, 3, 8, 5];
+
+    let mut direct = Engine::new(compiled.clone(), cfg).unwrap();
+    for (p, &n) in prompts.iter().zip(&max_new) {
+        direct.submit(p, n);
+    }
+    let mut expect: Vec<Vec<u16>> =
+        direct.drain().requests.iter().map(|r| r.generated.clone()).collect();
+    expect.sort();
+
+    let (server, addr) = serve(compiled, cfg);
+    let handles: Vec<_> = prompts
+        .iter()
+        .zip(&max_new)
+        .map(|(p, &n)| {
+            let body = gen_body(p, n);
+            std::thread::spawn(move || {
+                let resp = client::post_stream(addr, "/v1/generate", &body, |_| {}).unwrap();
+                assert!(resp.header("x-request-id").is_some());
+                streamed_tokens(&resp)
+            })
+        })
+        .collect();
+    let mut streamed: Vec<Vec<u16>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    streamed.sort();
+    assert_eq!(streamed, expect, "wire streams diverged from the direct engine");
+
+    let report = server.shutdown().expect("shutdown returns the session report");
+    assert_eq!(report.requests.len(), 4);
+    assert_eq!(report.generated_tokens, max_new.iter().sum::<usize>());
+}
+
+/// `/metrics` and `/v1/stats` answer from other connections while a
+/// generate stream is mid-flight, and both payloads stay well-formed.
+#[test]
+fn metrics_and_stats_are_live_mid_stream() {
+    let (server, addr) = serve(small_model(), EngineConfig::default());
+    let (probe_tx, probe_rx) = mpsc::channel();
+    let mut probed = false;
+    let resp = client::post_stream(addr, "/v1/generate", &gen_body(&toks(4, 42), 24), |_| {
+        // first streamed token: the request is provably mid-flight — hit
+        // the observability routes on fresh connections right now
+        if !probed {
+            probed = true;
+            let metrics = client::get(addr, "/metrics").unwrap();
+            let stats = client::get(addr, "/v1/stats").unwrap();
+            probe_tx.send((metrics, stats)).unwrap();
+        }
+    })
+    .unwrap();
+    let tokens = streamed_tokens(&resp);
+    assert_eq!(tokens.len(), 24);
+
+    let (metrics, stats) = probe_rx.recv().unwrap();
+    assert_eq!(metrics.status, 200);
+    assert_eq!(metrics.header("content-type"), Some("text/plain; version=0.0.4"));
+    let text = metrics.body_text();
+    assert!(text.lines().any(|l| l.starts_with("# TYPE armor_requests_total counter")));
+    assert!(
+        text.lines().all(|l| l.is_empty() || l.starts_with('#') || l.starts_with("armor_")),
+        "exposition has non-comment, non-sample lines"
+    );
+    assert_eq!(stats.status, 200);
+    let v = Json::parse(&stats.body_text()).expect("mid-stream stats body is JSON");
+    assert_eq!(v.get("draining").as_bool(), Some(false));
+    assert!(v.get("last_window").as_obj().is_some());
+
+    // after the stream retires, totals catch up on the same registry
+    let after = Json::parse(&client::get(addr, "/v1/stats").unwrap().body_text()).unwrap();
+    assert_eq!(after.get("requests").as_usize(), Some(1));
+    assert_eq!(after.get("generated_tokens").as_usize(), Some(24));
+    server.shutdown();
+}
+
+/// Malformed requests get the structured error envelope with the right
+/// status: 400 (bad body), 404, 405 (+Allow), 413, and a garbage request
+/// line.
+#[test]
+fn malformed_requests_get_structured_errors() {
+    let (server, addr) = serve(small_model(), EngineConfig::default());
+    let envelope = |resp: &client::HttpResponse, code: usize, reason: &str| {
+        let v = Json::parse(&resp.body_text()).expect("error body is the JSON envelope");
+        assert_eq!(v.get("error").get("code").as_usize(), Some(code));
+        assert_eq!(v.get("error").get("reason").as_str(), Some(reason));
+        assert!(!v.get("error").get("message").as_str().unwrap().is_empty());
+    };
+
+    let resp = client::post(addr, "/v1/generate", r#"{"max_new":4}"#).unwrap();
+    assert_eq!(resp.status, 400);
+    envelope(&resp, 400, "bad_request");
+
+    let resp = client::get(addr, "/v1/nope").unwrap();
+    assert_eq!(resp.status, 404);
+    envelope(&resp, 404, "not_found");
+
+    let resp = client::post(addr, "/healthz", "{}").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("GET"));
+    envelope(&resp, 405, "method_not_allowed");
+
+    // an oversized declared body is refused from the headers alone
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        MAX_BODY_BYTES + 1
+    );
+    stream.write_all(head.as_bytes()).unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 413 "), "got: {raw:?}");
+    assert!(raw.contains("payload_too_large"));
+    assert!(raw.contains("Connection: close"));
+
+    // a garbage request line is a 400 and the connection closes
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400 "), "got: {raw:?}");
+    assert!(raw.contains("bad_request"));
+    server.shutdown();
+}
+
+/// One keep-alive connection serves sequential requests; responses are
+/// framed so the next request parses cleanly.
+#[test]
+fn keep_alive_serves_sequential_requests() {
+    let (server, addr) = serve(small_model(), EngineConfig::default());
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    let (status, body) = keepalive_roundtrip(&mut stream, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\""));
+
+    let (status, body) = keepalive_roundtrip(&mut stream, "GET /v1/stats HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(Json::parse(&body).is_ok());
+
+    // a 404 keeps the connection alive too — framing survives errors
+    let (status, _) = keepalive_roundtrip(&mut stream, "GET /missing HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 404);
+
+    let (status, body) = keepalive_roundtrip(&mut stream, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\""));
+    server.shutdown();
+}
+
+/// Graceful shutdown mid-stream: the in-flight stream runs to a clean
+/// chunked termination, while an already-open connection deterministically
+/// sees `503` on `/healthz` and on new generate submissions.
+#[test]
+fn graceful_shutdown_drains_in_flight_streams() {
+    let (server, addr) = serve(small_model(), EngineConfig::default());
+
+    // an existing keep-alive connection, opened while still serving
+    let mut probe = TcpStream::connect(addr).unwrap();
+    probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let (status, _) = keepalive_roundtrip(&mut probe, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+
+    let (first_tx, first_rx) = mpsc::channel();
+    let streamer = std::thread::spawn(move || {
+        let mut sent = false;
+        let resp = client::post_stream(addr, "/v1/generate", &gen_body(&toks(4, 7), 32), |_| {
+            if !sent {
+                sent = true;
+                first_tx.send(()).unwrap();
+            }
+        })
+        .unwrap();
+        streamed_tokens(&resp)
+    });
+    first_rx.recv().unwrap(); // the stream is provably mid-flight
+    server.begin_shutdown();
+
+    // the pre-existing connection keeps working and reports draining
+    let (status, body) = keepalive_roundtrip(&mut probe, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 503);
+    assert!(body.contains("draining"));
+    let gen = gen_body(&[1, 2, 3], 4);
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{gen}",
+        gen.len()
+    );
+    let (status, body) = keepalive_roundtrip(&mut probe, &head);
+    assert_eq!(status, 503, "draining must refuse new generates");
+    assert!(body.contains("\"draining\""));
+
+    // the in-flight stream still terminates cleanly with all its tokens
+    let report = server.shutdown().expect("shutdown returns the session report");
+    let tokens = streamer.join().unwrap();
+    assert_eq!(tokens.len(), 32);
+    assert_eq!(report.requests.len(), 1, "only the in-flight request completed");
+    assert_eq!(report.generated_tokens, 32);
+    assert!(server.shutdown().is_none(), "second shutdown is a no-op");
+}
