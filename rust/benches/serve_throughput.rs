@@ -33,6 +33,13 @@
 //! tok/s — the lock-free registry and in-memory trace buffer are designed
 //! to be invisible on the decode hot path (DESIGN.md §8).
 //!
+//! A speculative-decoding sweep replays single-stream traffic (batch 1,
+//! the shape batching cannot help) with `--spec` off and k ∈ {2, 4, 8}:
+//! int8-plane drafts on a CoW KV fork, one f32 batch verify per round.
+//! Outputs are hard-asserted bit-identical to the non-speculative path;
+//! the best k must reach >= 1.2x the spec-off decode tok/s, and each row
+//! records its draft acceptance rate (DESIGN.md §10).
+//!
 //! A final sweep pushes the same traffic shape through the live HTTP/1.1
 //! front-end over a loopback socket (`EngineService` + `HttpServer` +
 //! `serve::http::client`), timestamping the first streamed chunk of each
@@ -41,9 +48,10 @@
 //! on top of the engine's in-process TTFT.
 //!
 //! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
-//! artifact (CI's bench-smoke job uploads it as `BENCH_7.json`), including
+//! artifact (CI's bench-smoke job uploads it as `BENCH_8.json`), including
 //! prefix-hit rates, pool bytes, per-policy TTFT, the obs-overhead
-//! ratios, and the socket-TTFT percentiles alongside throughput.
+//! ratios, speculative acceptance rates, and the socket-TTFT percentiles
+//! alongside throughput.
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
@@ -615,6 +623,104 @@ fn main() {
     } else {
         println!(
             "WARN: obs overhead over budget (metrics {on_ratio:.3}x, +trace {trace_ratio:.3}x; want >= 0.97x)"
+        );
+    }
+
+    // --- speculative decoding: single-stream k sweep ---
+    // Batch 1 is the shape continuous batching cannot help — the matmuls
+    // are activation-bandwidth-starved at width 1. Self-drafting k tokens
+    // on the int8 plane and verifying them in one f32 batch step widens
+    // the verify matmul to k+1 rows, so accepted drafts amortize the f32
+    // pass. Outputs must stay bit-identical to the plain path (the accept
+    // rule re-derives every token from the same f32 argmax).
+    println!("\nspeculative decoding: single-stream (batch 1), q8 self-draft + f32 batch verify");
+    let spec_burst = traffic(&mut rng, 2, prompt_len);
+    let spec_new = scaled(48).max(8);
+    let run_spec = |spec: Option<usize>| -> (ServeReport, Vec<Vec<u16>>) {
+        let mut engine = Engine::new(
+            attn_compiled.clone(),
+            EngineConfig { max_batch: 1, spec, ..EngineConfig::default() },
+        )
+        .expect("spec engine config");
+        let ids: Vec<_> = spec_burst.iter().map(|p| engine.submit(p, spec_new)).collect();
+        let report = engine.drain();
+        let outs = ids
+            .iter()
+            .map(|id| {
+                report
+                    .requests
+                    .iter()
+                    .find(|r| r.id == *id)
+                    .expect("spec bench request completed")
+                    .generated
+                    .clone()
+            })
+            .collect();
+        (report, outs)
+    };
+    let (spec_off_rep, spec_off_out) = run_spec(None);
+    let spec_off_tps = spec_off_rep.tokens_per_sec();
+    let mut spec_rows = vec![TableRow::new(
+        "spec off",
+        vec![format!("{spec_off_tps:.1}"), "1.00x".to_string(), "-".to_string(), "-".to_string()],
+    )];
+    emit_json(
+        "serve_spec",
+        "off",
+        vec![("tok_s", Json::Num(spec_off_tps)), ("speedup_vs_off", Json::Num(1.0))],
+    );
+    let mut best_spec_speedup = 0.0f64;
+    for &k in &[2usize, 4, 8] {
+        let (rep, out) = run_spec(Some(k));
+        // correctness gate is hard, not a WARN: speculation that changes
+        // outputs is a bug, whatever it does to throughput
+        assert_eq!(
+            out, spec_off_out,
+            "speculative decode (k={k}) diverged from the plain f32 path"
+        );
+        assert!(rep.spec_rounds > 0, "spec k={k} ran no draft/verify rounds");
+        let tps = rep.tokens_per_sec();
+        let speedup = tps / spec_off_tps.max(1e-9);
+        best_spec_speedup = best_spec_speedup.max(speedup);
+        let acc = rep.acceptance_rate();
+        spec_rows.push(TableRow::new(
+            &format!("spec k={k}"),
+            vec![
+                format!("{tps:.1}"),
+                format!("{speedup:.2}x"),
+                format!("{:.0}%", acc * 100.0),
+                format!("{}", rep.spec_rounds),
+            ],
+        ));
+        emit_json(
+            "serve_spec",
+            &format!("k{k}"),
+            vec![
+                ("tok_s", Json::Num(tps)),
+                ("speedup_vs_off", Json::Num(speedup)),
+                ("acceptance_rate", Json::Num(acc)),
+                ("spec_rounds", Json::Num(rep.spec_rounds as f64)),
+                ("spec_drafted", Json::Num(rep.spec_drafted as f64)),
+                ("spec_accepted", Json::Num(rep.spec_accepted as f64)),
+                ("spec_fallbacks", Json::Num(rep.spec_fallbacks as f64)),
+            ],
+        );
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Speculative decoding, single stream (KV-cached 2:4, bit-identical outputs)",
+            &["tok/s (↑)", "vs spec-off", "acceptance (↑)", "rounds"],
+            &spec_rows
+        )
+    );
+    if best_spec_speedup >= 1.2 {
+        println!(
+            "OK: speculative decoding reaches {best_spec_speedup:.2}x single-stream decode throughput (>= 1.2x)"
+        );
+    } else {
+        println!(
+            "WARN: spec decode best speedup {best_spec_speedup:.2}x below the 1.2x single-stream gate"
         );
     }
 

@@ -69,6 +69,7 @@ fn print_usage() {
                 OptSpec { name: "priority-mix", help: "serve: fraction of requests submitted high-priority (rest low); needs --policy priority", default: Some("0.5") },
                 OptSpec { name: "deadline-ms", help: "serve: soft per-request deadline in ms (misses are counted, not dropped)", default: None },
                 OptSpec { name: "prefill-chunk", help: "serve: max prompt tokens prefilled per engine step (omit for unbounded)", default: None },
+                OptSpec { name: "spec", help: "serve: speculative decoding draft length K — int8 self-draft on a CoW KV fork, f32 batch verify, bit-identical outputs (omit to disable)", default: None },
                 OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
                 OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
@@ -372,6 +373,16 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             Some(chunk)
         }
     };
+    let spec = match args.get("spec") {
+        None => None,
+        Some(v) => {
+            let k: usize = v
+                .parse()
+                .map_err(|_| armor::err!("--spec must be an integer draft length, got '{v}'"))?;
+            armor::ensure!(k >= 1, "--spec must be >= 1 draft token (omit it to disable)");
+            Some(k)
+        }
+    };
     // validate flags against the serving model up front: bad values come
     // back as structured errors, never as panics inside the scheduler or
     // KvCache mid-burst
@@ -399,6 +410,7 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             kv_quant,
             policy,
             prefill_chunk,
+            spec,
             metrics: !args.flag("no-metrics"),
             metrics_every,
         },
@@ -411,10 +423,11 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
         (path, rec)
     });
     println!(
-        "[serve] policy {}  prefill chunk {}  deadline {}",
+        "[serve] policy {}  prefill chunk {}  deadline {}  spec {}",
         policy.label(),
         prefill_chunk.map_or("unbounded".to_string(), |c| c.to_string()),
         deadline.map_or("none".to_string(), |d| format!("{:.0} ms", d.as_secs_f64() * 1e3)),
+        spec.map_or("off".to_string(), |k| format!("k={k}")),
     );
 
     // --listen switches modes: instead of replaying a synthetic burst and

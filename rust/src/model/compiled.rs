@@ -245,6 +245,14 @@ pub struct CompiledModel {
     pub attn: AttnImpl,
     /// attention observability handles; `None` (the default) records nothing
     pub obs: Option<AttnObs>,
+    /// Optional second residency of the prunable linears — the int8 *draft*
+    /// plane for self-drafting speculative decoding ([`Self::draft_k`] /
+    /// [`Self::verify_k`]). Built once by [`Self::with_draft_plane`]; shares
+    /// the 2:4 metadata/wrapper layout with [`Self::linears`] (same
+    /// factorization, quantized value bytes), so draft and target agree on
+    /// everything but rounding. `None` (the default) means no draft plane is
+    /// resident and `draft_k` falls back to the target plane.
+    pub draft: Option<BTreeMap<String, ExecLinear>>,
 }
 
 impl CompiledModel {
@@ -292,6 +300,7 @@ impl CompiledModel {
             linears,
             attn: AttnImpl::default(),
             obs: None,
+            draft: None,
         })
     }
 
@@ -321,6 +330,31 @@ impl CompiledModel {
             self.linears.insert(name, lin.quantize(group)?);
         }
         Ok(self)
+    }
+
+    /// Build the dual-plane residency for speculative decoding
+    /// (builder-style): clone every exec linear and lower its 2:4 value
+    /// plane to int8 with per-`group` scales, holding the result alongside
+    /// the f32 target plane as [`Self::draft`]. Compile once, keep both —
+    /// draft and verify share the 2:4 metadata, block-diagonal wrappers,
+    /// embeddings, and LayerNorm tensors; only the core value bytes differ.
+    ///
+    /// On a model already lowered with `--quant q8`/`q8-kv` the clone
+    /// passes through [`ExecLinear::quantize`] unchanged, so the draft
+    /// plane *equals* the target plane: speculation still works (every
+    /// draft is accepted) and outputs stay identical to plain decode.
+    pub fn with_draft_plane(mut self, group: usize) -> crate::Result<CompiledModel> {
+        let mut draft = BTreeMap::new();
+        for (name, lin) in &self.linears {
+            draft.insert(name.clone(), lin.clone().quantize(group)?);
+        }
+        self.draft = Some(draft);
+        Ok(self)
+    }
+
+    /// Whether a draft plane is resident (see [`Self::with_draft_plane`]).
+    pub fn has_draft_plane(&self) -> bool {
+        self.draft.is_some()
     }
 
     /// Select the attention implementation (builder-style). The scalar
@@ -395,7 +429,15 @@ impl CompiledModel {
     }
 
     fn lin(&self, name: &str) -> &ExecLinear {
-        self.linears
+        Self::lin_in(&self.linears, name)
+    }
+
+    /// Plane-addressed linear lookup: the decode body is parameterized over
+    /// which residency it executes on (target [`Self::linears`] or the
+    /// speculative [`Self::draft`] plane), so both planes run the *same*
+    /// code path — one implementation, two weight residencies.
+    fn lin_in<'a>(plane: &'a BTreeMap<String, ExecLinear>, name: &str) -> &'a ExecLinear {
+        plane
             .get(name)
             .unwrap_or_else(|| panic!("compiled model linear '{name}' missing"))
     }
@@ -502,7 +544,7 @@ impl CompiledModel {
                     gelu_inplace(&mut h);
                     self.lin(&format!("l{l}.mlp.down")).apply(&h)
                 }
-                Some(moe) => self.moe_rows(l, &xn2, moe),
+                Some(moe) => self.moe_rows(&self.linears, l, &xn2, moe),
             };
             x = x.add(&mlp_out);
         }
@@ -583,6 +625,10 @@ impl CompiledModel {
     }
 
     /// Decode one token for one sequence; returns the next-token logits.
+    ///
+    /// Greedy consumers select the next token with [`argmax`] —
+    /// lowest-index-wins on ties, the determinism contract speculative
+    /// draft/verify agreement rests on (DESIGN.md §10).
     pub fn decode_step(&self, cache: &mut KvCache, token: u16) -> Vec<f32> {
         let logits = self.decode_batch(&mut [cache], &[token]);
         logits.row(0).to_vec()
@@ -595,8 +641,26 @@ impl CompiledModel {
     /// of `batch × n_heads` panel tasks over the head-major KV caches.
     /// Returns `batch × vocab` logits.
     ///
+    /// Every row is computed with per-row accumulation order independent of
+    /// the batch height, and greedy selection over a row is [`argmax`]'s
+    /// lowest-index-wins rule — together these make batched greedy decode
+    /// bit-identical to one-at-a-time greedy decode.
+    ///
     /// Lock-step constraint: see [`Self::prefill`] — edit both or neither.
     pub fn decode_batch(&self, caches: &mut [&mut KvCache], tokens: &[u16]) -> Matrix {
+        self.decode_batch_on(&self.linears, caches, tokens)
+    }
+
+    /// [`Self::decode_batch`] parameterized over the weight residency it
+    /// executes on: the f32 target plane (`&self.linears`) or the int8
+    /// draft plane (`self.draft`). One body, two planes — the speculative
+    /// path cannot drift from the production decode path.
+    fn decode_batch_on(
+        &self,
+        plane: &BTreeMap<String, ExecLinear>,
+        caches: &mut [&mut KvCache],
+        tokens: &[u16],
+    ) -> Matrix {
         let bsz = tokens.len();
         assert_eq!(caches.len(), bsz, "one cache per sequence");
         assert!(bsz > 0, "empty decode batch");
@@ -623,9 +687,9 @@ impl CompiledModel {
                 self.tensor(&format!("l{l}.ln1.g")),
                 self.tensor(&format!("l{l}.ln1.b")),
             );
-            let q = self.lin(&format!("l{l}.attn.wq")).apply(&xn);
-            let k = self.lin(&format!("l{l}.attn.wk")).apply(&xn);
-            let v = self.lin(&format!("l{l}.attn.wv")).apply(&xn);
+            let q = Self::lin_in(plane, &format!("l{l}.attn.wq")).apply(&xn);
+            let k = Self::lin_in(plane, &format!("l{l}.attn.wk")).apply(&xn);
+            let v = Self::lin_in(plane, &format!("l{l}.attn.wv")).apply(&xn);
             for i in 0..bsz {
                 caches[i].append(l, k.row(i), v.row(i));
             }
@@ -634,7 +698,7 @@ impl CompiledModel {
                 let n_ctx: Vec<usize> = pos.iter().map(|&p| p + 1).collect();
                 self.attend_ctx(&shared, l, &q, &n_ctx)
             };
-            let attn_out = self.lin(&format!("l{l}.attn.wo")).apply(&ctx);
+            let attn_out = Self::lin_in(plane, &format!("l{l}.attn.wo")).apply(&ctx);
             x = x.add(&attn_out);
 
             let xn2 = layer_norm(
@@ -644,11 +708,11 @@ impl CompiledModel {
             );
             let mlp_out = match self.cfg.moe {
                 None => {
-                    let mut h = self.lin(&format!("l{l}.mlp.up")).apply(&xn2);
+                    let mut h = Self::lin_in(plane, &format!("l{l}.mlp.up")).apply(&xn2);
                     gelu_inplace(&mut h);
-                    self.lin(&format!("l{l}.mlp.down")).apply(&h)
+                    Self::lin_in(plane, &format!("l{l}.mlp.down")).apply(&h)
                 }
-                Some(moe) => self.moe_rows(l, &xn2, moe),
+                Some(moe) => self.moe_rows(plane, l, &xn2, moe),
             };
             x = x.add(&mlp_out);
         }
@@ -660,9 +724,100 @@ impl CompiledModel {
         gemm_nt(&xf, self.tensor("tok_embed"))
     }
 
+    /// Draft `k` greedy tokens on the int8 plane against `fork` — a
+    /// throwaway [`KvCache::fork_prefix`] branch of the sequence's main
+    /// chain. Runs `k` single-token decode steps through
+    /// [`Self::decode_batch_on`] with the [`Self::draft`] residency (target
+    /// plane when none is resident), starting from `last_token` — the
+    /// sequence's most recent token, whose K/V is *not* yet in the cache.
+    ///
+    /// The fork's K/V is computed with draft weights and is never merged
+    /// back: the caller drops the fork after [`Self::verify_k`], whose f32
+    /// prefill writes the canonical K/V for every accepted position on the
+    /// main chain. Appends exactly `k` positions to `fork` (the k-th draft
+    /// token is returned but never cached), so the caller must ensure
+    /// `fork.len() + k <= max_seq`.
+    pub fn draft_k(&self, fork: &mut KvCache, last_token: u16, k: usize) -> Vec<u16> {
+        let plane = self.draft.as_ref().unwrap_or(&self.linears);
+        let mut drafts = Vec::with_capacity(k);
+        let mut tok = last_token;
+        for _ in 0..k {
+            let logits = self.decode_batch_on(plane, &mut [fork], &[tok]);
+            tok = argmax(logits.row(0)) as u16;
+            drafts.push(tok);
+        }
+        drafts
+    }
+
+    /// Verify `drafts` against the f32 target plane in **one batched step**
+    /// on the sequence's main chain, and roll the chain back to the last
+    /// accepted position. Returns `(emitted, accepted)`:
+    ///
+    /// - `emitted` — the tokens the sequence actually produces this round,
+    ///   in order: the accepted draft prefix, then one *correction* token
+    ///   (the target's own choice at the first mismatch) or — when every
+    ///   draft matched — one free *bonus* token from the final logits row.
+    ///   Always `accepted + 1` tokens, never empty: a fully rejected round
+    ///   still advances the sequence by the correction token, so
+    ///   speculation can never stall a sequence.
+    /// - `accepted` — how many drafts matched (`0..=drafts.len()`).
+    ///
+    /// Mechanism: one [`Self::prefill`] call over
+    /// `[last_token, drafts...]` processes all `k+1` positions as a ragged
+    /// self-batch against the main chain — logits row `i` is the target
+    /// distribution after input `i`, bit-identical (row for row) to the
+    /// sequential [`Self::decode_step`] outputs because every op in the
+    /// stack is per-row order-invariant (the chunked-prefill invariant).
+    /// Acceptance compares [`argmax`] (lowest-index-wins) per row, so the
+    /// emitted stream equals what plain greedy f32 decode would emit —
+    /// speculation changes wall-clock, never output.
+    ///
+    /// Rollback invariant: on entry `cache.len() == L` (the `last_token`
+    /// K/V not yet appended); on return `cache.len() == L + 1 + accepted`
+    /// and every position beyond was freed via [`KvCache::truncate`] — CoW
+    /// pages make that a refcount decrement, and any stale rows in the
+    /// trailing partial page are overwritten (scales recomputed) by the
+    /// next append. The caller must ensure `L + drafts.len() + 1 <=
+    /// max_seq`.
+    pub fn verify_k(
+        &self,
+        cache: &mut KvCache,
+        last_token: u16,
+        drafts: &[u16],
+    ) -> (Vec<u16>, usize) {
+        let start = cache.len();
+        let mut inputs = Vec::with_capacity(drafts.len() + 1);
+        inputs.push(last_token);
+        inputs.extend_from_slice(drafts);
+        let logits = self.prefill(cache, &inputs);
+        let mut emitted = Vec::with_capacity(drafts.len() + 1);
+        let mut accepted = 0usize;
+        for i in 0..logits.rows {
+            let t = argmax(logits.row(i)) as u16;
+            emitted.push(t);
+            if i < drafts.len() && t == drafts[i] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        let valid = start + 1 + accepted;
+        if valid < cache.len() {
+            cache.truncate(valid);
+        }
+        (emitted, accepted)
+    }
+
     /// Top-1 MoE over a batch of rows; mirrors `GptModel::moe_forward` with
-    /// the expert projections in execution form.
-    fn moe_rows(&self, l: usize, xn: &Matrix, moe: MoeConfig) -> Matrix {
+    /// the expert projections in execution form, drawn from `plane` (router
+    /// tensors are not prunable and always come from [`Self::tensors`]).
+    fn moe_rows(
+        &self,
+        plane: &BTreeMap<String, ExecLinear>,
+        l: usize,
+        xn: &Matrix,
+        moe: MoeConfig,
+    ) -> Matrix {
         let n = xn.rows;
         let router = self.tensor(&format!("l{l}.moe.router"));
         let logits = gemm_nt(xn, router);
@@ -694,9 +849,9 @@ impl CompiledModel {
             for (i, &t) in rows.iter().enumerate() {
                 xe.row_mut(i).copy_from_slice(xn.row(t));
             }
-            let mut h = self.lin(&format!("l{l}.moe.e{e}.up")).apply(&xe);
+            let mut h = Self::lin_in(plane, &format!("l{l}.moe.e{e}.up")).apply(&xe);
             gelu_inplace(&mut h);
-            let ye = self.lin(&format!("l{l}.moe.e{e}.down")).apply(&h);
+            let ye = Self::lin_in(plane, &format!("l{l}.moe.e{e}.down")).apply(&h);
             for (i, &t) in rows.iter().enumerate() {
                 let gate = assignment[t].1;
                 let orow = out.row_mut(t);
@@ -735,8 +890,17 @@ impl CompiledModel {
     }
 }
 
-/// Index of the maximum value (first occurrence wins); the single greedy
-/// tie-break rule shared by `GptModel::generate` and the serve engine.
+/// Index of the maximum value — **lowest index wins on ties** — the single
+/// greedy tie-break rule shared by `GptModel::generate`, the serve engine,
+/// and the speculative draft/verify loop ([`CompiledModel::draft_k`] /
+/// [`CompiledModel::verify_k`]).
+///
+/// The tie-break is load-bearing for speculative decoding: draft and verify
+/// must agree on which token a logits row selects whenever the rows agree
+/// numerically, or acceptance becomes nondeterministic. The strict `>`
+/// comparison keeps the first maximum encountered, scanning left to right,
+/// and treats NaN as never-greater (an all-NaN row yields index 0) — do not
+/// rewrite with `max_by`/partial-ord folds, which invert tie order.
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
     for (i, &v) in row.iter().enumerate() {
@@ -1148,6 +1312,109 @@ mod tests {
         // one attention trace span per layer, and the document validates
         assert_eq!(trace.event_count(), small_cfg().n_layers);
         crate::obs::validate_trace(&trace.to_json().to_string_compact()).unwrap();
+    }
+
+    /// Satellite regression: greedy tie-breaking is lowest-index-wins, the
+    /// determinism contract the speculative accept rule rests on. Tie
+    /// vectors must resolve to the first maximum, and NaN never wins.
+    #[test]
+    fn argmax_breaks_ties_lowest_index_first() {
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(argmax(&[0.0, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[-3.0, -3.0, -1.0, -1.0]), 2);
+        assert_eq!(argmax(&[0.5]), 0);
+        // negative zero ties positive zero bitwise-unequal but ==: first wins
+        assert_eq!(argmax(&[-0.0, 0.0]), 0);
+        // NaN is never greater than the incumbent
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+    }
+
+    /// Dual-plane residency: `with_draft_plane` holds an int8 copy of every
+    /// linear alongside the untouched f32 target plane, and on an
+    /// already-q8 model the draft plane degenerates to the target plane.
+    #[test]
+    fn draft_plane_is_quantized_copy_with_target_untouched() {
+        let (model, _) = pruned(Method::NoWagP, 100);
+        let compiled = CompiledModel::compile(&model, None)
+            .unwrap()
+            .with_draft_plane(DEFAULT_Q8_GROUP)
+            .unwrap();
+        assert!(compiled.has_draft_plane());
+        // target plane still f32 2:4
+        assert!(compiled.linears.values().all(|l| matches!(l, ExecLinear::Sparse24(_))));
+        let draft = compiled.draft.as_ref().unwrap();
+        assert_eq!(draft.len(), compiled.linears.len());
+        assert!(draft.values().all(|l| matches!(l, ExecLinear::Sparse24Q8(_))));
+        let target_bytes: usize = compiled.linears.values().map(|l| l.storage_bytes()).sum();
+        let draft_bytes: usize = draft.values().map(|l| l.storage_bytes()).sum();
+        assert!(draft_bytes * 10 < target_bytes * 4, "draft {draft_bytes} vs target {target_bytes}");
+
+        // on a q8-lowered model the draft clone passes through unchanged
+        let q8 = CompiledModel::compile_with_quant(&model, None, WeightQuant::q8())
+            .unwrap()
+            .with_draft_plane(DEFAULT_Q8_GROUP)
+            .unwrap();
+        assert!(q8.draft.as_ref().unwrap().values().all(|l| matches!(l, ExecLinear::Sparse24Q8(_))));
+    }
+
+    /// The speculative contract end to end at the model layer: a
+    /// draft-on-fork → verify-on-main loop emits a token stream bit-identical
+    /// to plain sequential greedy f32 decode, for every draft length,
+    /// leaving the main chain positioned exactly after the emitted tokens.
+    #[test]
+    fn speculative_rounds_match_sequential_greedy_decode() {
+        let (model, _) = pruned(Method::NoWagP, 105);
+        let compiled = CompiledModel::compile(&model, None)
+            .unwrap()
+            .with_draft_plane(DEFAULT_Q8_GROUP)
+            .unwrap();
+        let pool = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let prompt = toks(9, 106);
+        let n_new = 12usize;
+
+        // reference: plain sequential greedy decode on the target plane
+        let mut ref_cache = pool.new_cache();
+        let logits = compiled.prefill(&mut ref_cache, &prompt);
+        let mut want = vec![argmax(logits.row(logits.rows - 1)) as u16];
+        for _ in 1..n_new {
+            let l = compiled.decode_step(&mut ref_cache, *want.last().unwrap());
+            want.push(argmax(&l) as u16);
+        }
+
+        for k in [1usize, 2, 3, 5] {
+            let mut cache = pool.new_cache();
+            let logits = compiled.prefill(&mut cache, &prompt);
+            let mut got = vec![argmax(logits.row(logits.rows - 1)) as u16];
+            let mut rounds = 0usize;
+            while got.len() < n_new {
+                let remaining = n_new - got.len();
+                let len = cache.len();
+                let k_eff = k.min(remaining.saturating_sub(1)).min(
+                    compiled.cfg.max_seq - 1 - len,
+                );
+                let last = *got.last().unwrap();
+                if k_eff == 0 {
+                    let l = compiled.decode_step(&mut cache, last);
+                    got.push(argmax(&l) as u16);
+                    continue;
+                }
+                let mut fork = cache.fork_prefix(len);
+                let drafts = compiled.draft_k(&mut fork, last, k_eff);
+                drop(fork);
+                let (emitted, accepted) = compiled.verify_k(&mut cache, last, &drafts);
+                assert_eq!(emitted.len(), accepted + 1, "k={k} round {rounds}");
+                assert!(emitted.len() <= remaining);
+                got.extend_from_slice(&emitted);
+                // main chain sits exactly after the emitted tokens: the
+                // last emitted token's K/V is not yet appended
+                assert_eq!(cache.len(), prompt.len() + got.len() - 1, "k={k}");
+                rounds += 1;
+            }
+            assert_eq!(got, want, "k={k}: speculative stream drifted");
+            assert!(rounds > 0, "k={k}: speculation never ran");
+        }
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //! prefix-hit counters, deadline misses, and the per-step prefill bound
 //! actually observed.
 //!
+//! **Speculative decoding** ([`EngineConfig::spec`] / `armor serve --spec
+//! K`): each decoding sequence drafts up to K tokens greedily on the
+//! model's int8 weight plane over a copy-on-write KV fork, then verifies
+//! them in one f32 batch step on its main chain — the longest matched
+//! prefix is accepted, the rest rolls back for free (only trailing partial
+//! pages were copied), and every emitted token is bit-identical to the
+//! plain decode path. Fork growth is reserved against the page budget for
+//! exactly the fork's lifetime, accepted tokens stream as ordinary
+//! [`TokenEvent`]s, and the per-sequence draft length adapts to the
+//! observed acceptance.
+//!
 //! **Observability.** Every engine owns a [`MetricsRegistry`] (per-engine,
 //! not global, so parallel engines and tests never share counters). The
 //! counters behind the [`ServeReport`] totals are *always* recorded — the
@@ -67,6 +78,15 @@ pub struct EngineConfig {
     /// Per-step prefill budget in prompt tokens (`--prefill-chunk`);
     /// `None` = unbounded (a prompt prefills whole in its admission step).
     pub prefill_chunk: Option<usize>,
+    /// Speculative decoding draft cap (`armor serve --spec K`): each decode
+    /// round drafts up to K tokens greedily on the int8 weight plane over a
+    /// copy-on-write KV fork, then verifies them in one f32 batch step on
+    /// the main chain. `None` (the default) decodes one token per step.
+    /// Outputs are bit-identical to the non-speculative path — only
+    /// throughput changes — and the per-sequence draft length adapts within
+    /// `[1, K]` (halving on fully rejected rounds, doubling on fully
+    /// accepted ones) so worst-case overhead stays bounded.
+    pub spec: Option<usize>,
     /// Record wall-time histograms, gauges, and the attention-kernel series.
     /// The counters behind the [`ServeReport`] totals are recorded
     /// regardless — they are the report's source of truth. `armor serve
@@ -87,6 +107,7 @@ impl Default for EngineConfig {
             kv_quant: KvQuant::F32,
             policy: SchedPolicy::Fifo,
             prefill_chunk: None,
+            spec: None,
             metrics: true,
             metrics_every: 0,
         }
@@ -164,6 +185,15 @@ pub struct ServeReport {
     pub prefix_hits: usize,
     /// prompt tokens those hits skipped re-prefilling
     pub prefix_hit_tokens: usize,
+    /// speculative draft/verify rounds executed (0 unless `--spec` is on)
+    pub spec_rounds: usize,
+    /// draft tokens proposed on the int8 plane
+    pub spec_drafted: usize,
+    /// draft tokens accepted by f32 verification
+    pub spec_accepted: usize,
+    /// speculative rounds that fell back to a plain one-token decode (no
+    /// fork page budget, or no draft headroom left in the request)
+    pub spec_fallbacks: usize,
     /// peak unique pool pages held, in bytes (live memory)
     pub kv_resident_bytes: usize,
     /// peak worst-case page reservations, in bytes (the admission axis —
@@ -192,6 +222,16 @@ impl ServeReport {
             return 0.0;
         }
         self.generated_tokens as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// Fraction of drafted tokens that f32 verification accepted (`0.0`
+    /// when nothing was drafted). The speculative speedup knob: each round
+    /// emits `accepted + 1` tokens for one batched verify pass.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
     }
 
     /// Fraction of admissions served from the prefix cache.
@@ -267,6 +307,16 @@ impl ServeReport {
             self.prefix_hit_rate() * 100.0,
             self.prefix_hit_tokens
         ));
+        if self.spec_rounds > 0 || self.spec_fallbacks > 0 {
+            s.push_str(&format!(
+                "spec: rounds {}  drafted {}  accepted {} ({:.0}% acceptance)  fallbacks {}\n",
+                self.spec_rounds,
+                self.spec_drafted,
+                self.spec_accepted,
+                self.acceptance_rate() * 100.0,
+                self.spec_fallbacks
+            ));
+        }
         s.push_str(&format!(
             "kv pool peaks: resident {:.1} KiB  reserved {:.1} KiB  shared {:.1} KiB\n",
             self.kv_resident_bytes as f64 / 1024.0,
@@ -296,6 +346,10 @@ struct ServeMetrics {
     kv_pages_freed: Arc<Counter>,
     kv_cow_copies: Arc<Counter>,
     sched_promotions: Arc<Counter>,
+    spec_rounds: Arc<Counter>,
+    spec_drafted: Arc<Counter>,
+    spec_accepted: Arc<Counter>,
+    spec_fallbacks: Arc<Counter>,
     peak_batch: Arc<Gauge>,
     max_step_prefill: Arc<Gauge>,
     kv_resident_peak: Arc<Gauge>,
@@ -309,6 +363,8 @@ struct ServeMetrics {
     lookup_us: Arc<Histogram>,
     prefill_us: Arc<Histogram>,
     decode_us: Arc<Histogram>,
+    draft_us: Arc<Histogram>,
+    verify_us: Arc<Histogram>,
     retire_us: Arc<Histogram>,
     ttft_us: Arc<Histogram>,
     latency_us: Arc<Histogram>,
@@ -374,6 +430,26 @@ impl ServeMetrics {
                 &[],
                 "Anti-starvation lane promotions under the priority policy.",
             ),
+            spec_rounds: r.counter(
+                "armor_spec_rounds_total",
+                &[],
+                "Speculative draft/verify rounds executed.",
+            ),
+            spec_drafted: r.counter(
+                "armor_spec_drafted_total",
+                &[],
+                "Draft tokens proposed by the int8 plane.",
+            ),
+            spec_accepted: r.counter(
+                "armor_spec_accepted_total",
+                &[],
+                "Draft tokens accepted by f32 verification.",
+            ),
+            spec_fallbacks: r.counter(
+                "armor_spec_fallbacks_total",
+                &[],
+                "Speculative rounds that fell back to plain decode (no fork budget or draft headroom).",
+            ),
             peak_batch: r.gauge(
                 "armor_peak_batch",
                 &[],
@@ -415,6 +491,8 @@ impl ServeMetrics {
             lookup_us: phase("prefix_lookup"),
             prefill_us: phase("prefill"),
             decode_us: phase("decode"),
+            draft_us: phase("draft"),
+            verify_us: phase("verify"),
             retire_us: phase("retire"),
             ttft_us: r.histogram(
                 "armor_ttft_us",
@@ -443,6 +521,10 @@ struct CounterBase {
     deadline_misses: u64,
     prefix_hits: u64,
     prefix_hit_tokens: u64,
+    spec_rounds: u64,
+    spec_drafted: u64,
+    spec_accepted: u64,
+    spec_fallbacks: u64,
 }
 
 /// Last-synced values of the monotonic counters owned by the pool, prefix
@@ -495,6 +577,8 @@ pub struct Engine {
     prefix: PrefixRegistry,
     /// per-step prefill budget in prompt tokens (`usize::MAX` = unbounded)
     prefill_chunk: usize,
+    /// speculative draft cap per round (`None` = speculation off)
+    spec: Option<usize>,
     finished: Vec<RequestStats>,
     peak_batch: usize,
     max_step_prefill: usize,
@@ -542,6 +626,10 @@ impl Engine {
             cfg.prefill_chunk != Some(0),
             "prefill chunk must be >= 1 prompt token per step (omit it for unbounded)"
         );
+        crate::ensure!(
+            cfg.spec != Some(0),
+            "speculative draft length must be >= 1 token (omit --spec to disable)"
+        );
         let pool =
             KvPool::new_with_quant(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes, cfg.kv_quant)?;
         let prefix = if cfg.prefix_sharing {
@@ -557,12 +645,23 @@ impl Engine {
         } else {
             model
         };
+        // dual-plane residency: `--spec` drafts on an int8 copy of the
+        // execution plane, built once here (compile stays single-plane for
+        // everyone who doesn't speculate). An already-quantized model's
+        // linears pass through, making draft and target identical — still
+        // correct, with trivially full acceptance.
+        let model = if cfg.spec.is_some() && !model.has_draft_plane() {
+            model.with_draft_plane(crate::sparsity::DEFAULT_Q8_GROUP)?
+        } else {
+            model
+        };
         Ok(Engine {
             model,
             sched: Scheduler::with_policy(cfg.max_batch, cfg.policy),
             pool,
             prefix,
             prefill_chunk: cfg.prefill_chunk.unwrap_or(usize::MAX),
+            spec: cfg.spec,
             finished: Vec::new(),
             peak_batch: 0,
             max_step_prefill: 0,
@@ -862,6 +961,7 @@ impl Engine {
                 reused_tokens: 0,
                 generated: Vec::new(),
                 last_token: 0,
+                spec_k: self.spec.unwrap_or(0),
                 submitted: req.submitted,
                 first_token_at: None,
             });
@@ -963,48 +1063,56 @@ impl Engine {
             let decode_start = begin_phase(timing, &trace);
             self.peak_batch = self.peak_batch.max(bsz);
             m.decode_steps.inc();
-            let tokens: Vec<u16> = self
-                .sched
-                .active
-                .iter()
-                .filter(|s| s.phase == SeqPhase::Decoding)
-                .map(|s| s.last_token)
-                .collect();
-            let logits = {
-                let mut caches: Vec<&mut crate::serve::KvCache> = self
+            let emitted = if self.spec.is_some() {
+                self.spec_decode_round(&m, &trace, timing)
+            } else {
+                let tokens: Vec<u16> = self
+                    .sched
+                    .active
+                    .iter()
+                    .filter(|s| s.phase == SeqPhase::Decoding)
+                    .map(|s| s.last_token)
+                    .collect();
+                let logits = {
+                    let mut caches: Vec<&mut crate::serve::KvCache> = self
+                        .sched
+                        .active
+                        .iter_mut()
+                        .filter(|s| s.phase == SeqPhase::Decoding)
+                        .map(|s| &mut s.cache)
+                        .collect();
+                    self.model.decode_batch(&mut caches, &tokens)
+                };
+                for (row, seq) in self
                     .sched
                     .active
                     .iter_mut()
                     .filter(|s| s.phase == SeqPhase::Decoding)
-                    .map(|s| &mut s.cache)
-                    .collect();
-                self.model.decode_batch(&mut caches, &tokens)
-            };
-            for (row, seq) in self
-                .sched
-                .active
-                .iter_mut()
-                .filter(|s| s.phase == SeqPhase::Decoding)
-                .enumerate()
-            {
-                let next = argmax(logits.row(row)) as u16;
-                seq.generated.push(next);
-                seq.last_token = next;
-                if let Some(tx) = self.sinks.get(&seq.id) {
-                    let _ = tx.send(TokenEvent::Token {
-                        index: seq.generated.len() - 1,
-                        token: next,
-                    });
+                    .enumerate()
+                {
+                    let next = argmax(logits.row(row)) as u16;
+                    seq.generated.push(next);
+                    seq.last_token = next;
+                    if let Some(tx) = self.sinks.get(&seq.id) {
+                        let _ = tx.send(TokenEvent::Token {
+                            index: seq.generated.len() - 1,
+                            token: next,
+                        });
+                    }
                 }
-            }
-            m.generated_tokens.add(bsz as u64);
-            produced += bsz;
+                bsz
+            };
+            m.generated_tokens.add(emitted as u64);
+            produced += emitted;
             end_phase(
                 "decode",
                 decode_start,
                 &m.decode_us,
                 &trace,
-                vec![("batch".to_string(), Json::Num(bsz as f64))],
+                vec![
+                    ("batch".to_string(), Json::Num(bsz as f64)),
+                    ("produced".to_string(), Json::Num(emitted as f64)),
+                ],
             );
             self.sample_sharing();
             self.retire();
@@ -1052,6 +1160,130 @@ impl Engine {
             );
         }
         produced
+    }
+
+    /// One speculative round per decoding sequence: draft up to `spec_k`
+    /// tokens greedily on the int8 plane over a zero-suffix CoW fork of the
+    /// sequence's chain ([`CompiledModel::draft_k`]), then verify them in a
+    /// single f32 prefill batch on the main chain
+    /// ([`CompiledModel::verify_k`]) — rejected positions roll back inside
+    /// `verify_k`, so every emitted token equals what sequential decode
+    /// would have produced, bit for bit.
+    ///
+    /// Budget accounting: the fork's worst-case page growth
+    /// ([`KvPool::pages_for_fork_growth`]) is reserved before drafting and
+    /// released the moment the fork drops, keeping `--kv-budget-mb` a hard
+    /// bound; the verify pass itself needs no extra reservation because
+    /// `k <= remaining - 1` keeps its transient `k + 1`-position append
+    /// within the sequence's admission reservation. A sequence with no fork
+    /// budget or no draft headroom (one token left, or a full context
+    /// window) falls back to a plain one-token decode and counts a
+    /// `spec_fallbacks`.
+    ///
+    /// The per-sequence draft length adapts: a fully accepted round doubles
+    /// `spec_k` (capped at the configured `--spec K`), a fully rejected one
+    /// halves it (floor 1). Accepted tokens stream as ordinary
+    /// [`TokenEvent::Token`]s. Returns the tokens emitted this round.
+    fn spec_decode_round(
+        &mut self,
+        m: &ServeMetrics,
+        trace: &Option<TraceRecorder>,
+        timing: bool,
+    ) -> usize {
+        let max_k = self.spec.expect("speculative round without --spec");
+        let max_seq = self.model.cfg.max_seq;
+        let mut emitted_total = 0usize;
+        for i in 0..self.sched.active.len() {
+            if self.sched.active[i].phase != SeqPhase::Decoding {
+                continue;
+            }
+            let (id, len, k) = {
+                let seq = &self.sched.active[i];
+                let len = seq.cache.len();
+                // retire() ran before this round, so remaining >= 1; the
+                // round emits up to k + 1 tokens and verify transiently
+                // appends k + 1 positions, so cap k by both bounds
+                let remaining = seq.max_new - seq.generated.len();
+                let k = seq
+                    .spec_k
+                    .min(remaining.saturating_sub(1))
+                    .min((max_seq - 1).saturating_sub(len));
+                (seq.id, len, k)
+            };
+            let demand = self.pool.pages_for_fork_growth(len, k);
+            if k == 0 || !self.pool.try_reserve(demand) {
+                m.spec_fallbacks.inc();
+                let seq = &mut self.sched.active[i];
+                let logits = self.model.decode_batch(&mut [&mut seq.cache], &[seq.last_token]);
+                let next = argmax(logits.row(0)) as u16;
+                seq.generated.push(next);
+                seq.last_token = next;
+                if let Some(tx) = self.sinks.get(&seq.id) {
+                    let _ = tx.send(TokenEvent::Token {
+                        index: seq.generated.len() - 1,
+                        token: next,
+                    });
+                }
+                emitted_total += 1;
+                continue;
+            }
+            let draft_start = begin_phase(timing, trace);
+            let drafts = {
+                let seq = &mut self.sched.active[i];
+                let mut fork = seq.cache.fork_prefix(len);
+                self.model.draft_k(&mut fork, seq.last_token, k)
+                // fork drops here: its CoW pages return to the pool
+            };
+            self.pool.release(demand);
+            end_phase(
+                "draft",
+                draft_start,
+                &m.draft_us,
+                trace,
+                vec![
+                    ("id".to_string(), Json::Num(id.0 as f64)),
+                    ("k".to_string(), Json::Num(k as f64)),
+                ],
+            );
+            let verify_start = begin_phase(timing, trace);
+            let (tokens, accepted) = {
+                let seq = &mut self.sched.active[i];
+                self.model.verify_k(&mut seq.cache, seq.last_token, &drafts)
+            };
+            end_phase(
+                "verify",
+                verify_start,
+                &m.verify_us,
+                trace,
+                vec![
+                    ("id".to_string(), Json::Num(id.0 as f64)),
+                    ("accepted".to_string(), Json::Num(accepted as f64)),
+                ],
+            );
+            m.spec_rounds.inc();
+            m.spec_drafted.add(k as u64);
+            m.spec_accepted.add(accepted as u64);
+            let seq = &mut self.sched.active[i];
+            seq.spec_k = if accepted == k {
+                (seq.spec_k * 2).min(max_k)
+            } else if accepted == 0 {
+                (seq.spec_k / 2).max(1)
+            } else {
+                seq.spec_k
+            };
+            for t in tokens {
+                seq.generated.push(t);
+                seq.last_token = t;
+                if let Some(tx) = self.sinks.get(&seq.id) {
+                    let _ = tx.send(TokenEvent::Token {
+                        index: seq.generated.len() - 1,
+                        token: t,
+                    });
+                }
+                emitted_total += 1;
+            }
+        }
+        emitted_total
     }
 
     /// Fold the monotonic counters owned by the pool, prefix registry, and
@@ -1213,6 +1445,10 @@ impl Engine {
             deadline_misses: (m.deadline_misses.get() - base.deadline_misses) as usize,
             prefix_hits: (m.prefix_hits.get() - base.prefix_hits) as usize,
             prefix_hit_tokens: (m.prefix_hit_tokens.get() - base.prefix_hit_tokens) as usize,
+            spec_rounds: (m.spec_rounds.get() - base.spec_rounds) as usize,
+            spec_drafted: (m.spec_drafted.get() - base.spec_drafted) as usize,
+            spec_accepted: (m.spec_accepted.get() - base.spec_accepted) as usize,
+            spec_fallbacks: (m.spec_fallbacks.get() - base.spec_fallbacks) as usize,
             kv_resident_bytes,
             kv_reserved_bytes,
             kv_shared_bytes,
@@ -1226,6 +1462,10 @@ impl Engine {
             deadline_misses: m.deadline_misses.get(),
             prefix_hits: m.prefix_hits.get(),
             prefix_hit_tokens: m.prefix_hit_tokens.get(),
+            spec_rounds: m.spec_rounds.get(),
+            spec_drafted: m.spec_drafted.get(),
+            spec_accepted: m.spec_accepted.get(),
+            spec_fallbacks: m.spec_fallbacks.get(),
         };
         report
     }
@@ -1247,6 +1487,24 @@ mod tests {
     fn toks(n: usize, seed: u64) -> Vec<u16> {
         let mut rng = Pcg64::seed_from_u64(seed);
         (0..n).map(|_| rng.next_below(256) as u16).collect()
+    }
+
+    /// 2:4-pruned variant of [`small_model`]: its compiled linears carry a
+    /// real sparse value plane, so the `--spec` draft plane is genuinely
+    /// int8 (not a dense pass-through) and verification sees real
+    /// rejections.
+    fn pruned_small_model() -> CompiledModel {
+        use crate::baselines::Method;
+        use crate::coordinator::{calibrate, prune_model, PruneJob};
+        use crate::sparsity::Pattern;
+        let cfg = GptConfig { d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64, max_seq: 32, ..GptConfig::tiny() };
+        let mut rng = Pcg64::seed_from_u64(7);
+        let model = GptModel::random_init(&cfg, &mut rng);
+        let seqs: Vec<Vec<u16>> = (0..2).map(|i| toks(24, 40 + i as u64)).collect();
+        let stats = calibrate(&model, &seqs, false);
+        let job = PruneJob { method: Method::NoWagP, pattern: Pattern::TWO_FOUR, seed: 7, use_xla: false };
+        let (pruned, _) = prune_model(&model, &stats, &job, None);
+        CompiledModel::compile(&pruned, None).unwrap()
     }
 
     /// Continuous batching must not change what each request generates:
@@ -1677,6 +1935,14 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("prefill chunk"), "{err}");
+        let err = match Engine::new(
+            small_model(),
+            EngineConfig { spec: Some(0), ..EngineConfig::default() },
+        ) {
+            Ok(_) => panic!("spec 0 must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("speculative"), "{err}");
     }
 
     #[test]
@@ -1779,6 +2045,10 @@ mod tests {
         assert_eq!(c("armor_deadline_misses_total"), report.deadline_misses as u64);
         assert_eq!(c("armor_prefix_hits_total"), report.prefix_hits as u64);
         assert_eq!(c("armor_prefix_hit_tokens_total"), report.prefix_hit_tokens as u64);
+        assert_eq!(c("armor_spec_rounds_total"), report.spec_rounds as u64);
+        assert_eq!(c("armor_spec_drafted_total"), report.spec_drafted as u64);
+        assert_eq!(c("armor_spec_accepted_total"), report.spec_accepted as u64);
+        assert_eq!(c("armor_spec_fallbacks_total"), report.spec_fallbacks as u64);
         let g = |name: &str| reg.gauge_value(name, &[]).unwrap();
         assert_eq!(g("armor_peak_batch"), report.peak_batch as f64);
         assert_eq!(g("armor_max_step_prefill"), report.max_step_prefill as f64);
@@ -1828,6 +2098,10 @@ mod tests {
             ("armor_deadline_misses_total", report.deadline_misses),
             ("armor_prefix_hits_total", report.prefix_hits),
             ("armor_prefix_hit_tokens_total", report.prefix_hit_tokens),
+            ("armor_spec_rounds_total", report.spec_rounds),
+            ("armor_spec_drafted_total", report.spec_drafted),
+            ("armor_spec_accepted_total", report.spec_accepted),
+            ("armor_spec_fallbacks_total", report.spec_fallbacks),
             ("armor_peak_batch", report.peak_batch),
             ("armor_max_step_prefill", report.max_step_prefill),
             ("armor_kv_resident_bytes_peak", report.kv_resident_bytes),
@@ -1842,6 +2116,8 @@ mod tests {
         for needle in [
             "armor_step_us_count{plane=\"f32\"}",
             "armor_phase_us_bucket{phase=\"prefill\",plane=\"f32\",le=",
+            "armor_phase_us_bucket{phase=\"draft\",plane=\"f32\",le=",
+            "armor_phase_us_bucket{phase=\"verify\",plane=\"f32\",le=",
             "armor_attn_us_count{plane=\"f32\"}",
             "armor_attn_bytes_total{plane=\"f32\"}",
             "armor_ttft_us_count",
@@ -1927,5 +2203,176 @@ mod tests {
         );
         assert!(!text.contains("armor_attn_us"), "attention series must stay unregistered");
         assert!(engine.model().obs.is_none(), "no AttnObs attached with metrics off");
+    }
+
+    /// Tentpole invariant: speculation changes throughput, never output.
+    /// For every composition — draft lengths, chunked prefill, q8 KV
+    /// pages, priority scheduling — each continuation is bit-identical to
+    /// the same engine configuration with `spec: None`.
+    #[test]
+    fn speculative_serving_is_bit_identical_to_plain() {
+        let compiled = pruned_small_model();
+        let prompts: Vec<Vec<u16>> = (0..4).map(|i| toks(4 + 2 * i, 600 + i as u64)).collect();
+        let max_new = [9usize, 5, 12, 7];
+        let run = |cfg: EngineConfig| {
+            let mut e = Engine::new(compiled.clone(), cfg).unwrap();
+            for (p, &n) in prompts.iter().zip(&max_new) {
+                e.submit(p, n);
+            }
+            e.drain()
+        };
+        let base_cfg = EngineConfig { max_batch: 3, page_positions: 4, ..EngineConfig::default() };
+        for (label, cfg) in [
+            ("k2", EngineConfig { spec: Some(2), ..base_cfg }),
+            ("k4", EngineConfig { spec: Some(4), ..base_cfg }),
+            (
+                "k4-chunked-q8kv",
+                EngineConfig {
+                    spec: Some(4),
+                    prefill_chunk: Some(3),
+                    kv_quant: KvQuant::Q8,
+                    ..base_cfg
+                },
+            ),
+            (
+                "k8-priority",
+                EngineConfig { spec: Some(8), policy: SchedPolicy::Priority, ..base_cfg },
+            ),
+        ] {
+            let plain = run(EngineConfig { spec: None, ..cfg });
+            assert_eq!(plain.spec_rounds, 0, "{label}: plain run must not speculate");
+            let spec = run(cfg);
+            assert_eq!(spec.requests.len(), plain.requests.len());
+            for (s, p) in spec.requests.iter().zip(&plain.requests) {
+                assert_eq!(s.generated, p.generated, "{label}: request {:?} diverged", s.id);
+            }
+            assert!(spec.spec_rounds > 0, "{label}: speculation must have run");
+            assert!(spec.spec_drafted > 0 && spec.spec_accepted <= spec.spec_drafted);
+            let rate = spec.acceptance_rate();
+            assert!((0.0..=1.0).contains(&rate), "{label}: rate {rate}");
+            // every generated token is the prefill first token, an accepted
+            // draft, a verify correction/bonus (one per round), or a
+            // fallback decode — exact accounting, nothing double-counted
+            assert_eq!(
+                spec.generated_tokens,
+                spec.requests.len() + spec.spec_accepted + spec.spec_rounds + spec.spec_fallbacks,
+                "{label}: token accounting"
+            );
+        }
+    }
+
+    /// Satellite regression: fork rollback accounting. With a hard byte
+    /// budget, speculative fork growth must be reserved before drafting,
+    /// released exactly when each fork drops, and never push the pool past
+    /// the budget; after the drain every page and reservation is back.
+    #[test]
+    fn spec_fork_reservations_respect_budget_and_release_exactly() {
+        let compiled = pruned_small_model();
+        let probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        // one sequence's worst case (5 prompt + 8 new -> 12 positions -> 3
+        // pages x 4 chains) plus two extra pages per chain of fork headroom
+        let budget = (probe.pages_for_seq(12) + 2 * 4) * probe.page_bytes();
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig {
+                max_batch: 4,
+                page_positions: 4,
+                kv_budget_bytes: Some(budget),
+                prefix_sharing: false,
+                spec: Some(4),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        for i in 0..3 {
+            engine.submit(&toks(5, 700 + i), 8);
+        }
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 3, "queued spec requests still complete");
+        for r in &report.requests {
+            assert_eq!(r.n_generated, 8);
+        }
+        assert!(report.spec_rounds > 0, "headroom pages must let some rounds draft");
+        assert!(
+            report.kv_reserved_bytes <= budget,
+            "fork growth blew the byte budget: {} > {budget}",
+            report.kv_reserved_bytes
+        );
+        assert_eq!(engine.pool().pages_reserved(), 0, "fork reservations must be returned");
+        assert_eq!(engine.pool().pages_allocated(), 0, "fork pages must be freed");
+        // the report's spec totals are registry-derived like everything else
+        let reg = engine.metrics();
+        let c = |name: &str| reg.counter_value(name, &[]).unwrap();
+        assert_eq!(c("armor_spec_rounds_total"), report.spec_rounds as u64);
+        assert_eq!(c("armor_spec_drafted_total"), report.spec_drafted as u64);
+        assert_eq!(c("armor_spec_accepted_total"), report.spec_accepted as u64);
+        assert_eq!(c("armor_spec_fallbacks_total"), report.spec_fallbacks as u64);
+    }
+
+    /// Adaptive draft length and the streaming path. A dense model's draft
+    /// plane equals its target plane (dense linears pass through
+    /// quantization), so verification accepts every draft: acceptance is
+    /// exactly 1.0, adaptive k covers the continuation in far fewer rounds
+    /// than tokens, and the streamed events match the drained continuation
+    /// and the solo greedy path token for token.
+    #[test]
+    fn spec_adapts_k_and_streams_accepted_tokens() {
+        let compiled = small_model();
+        let mut engine = Engine::new(
+            compiled.clone(),
+            EngineConfig { spec: Some(4), ..EngineConfig::default() },
+        )
+        .unwrap();
+        let prompt = toks(5, 800);
+        let (id, rx) = engine.submit_stream(&prompt, 12, 0, None);
+        let report = engine.drain();
+        let r = &report.requests[0];
+        assert_eq!(r.id, id);
+        assert_eq!(r.n_generated, 12);
+        assert!(report.spec_drafted > 0);
+        assert_eq!(report.spec_accepted, report.spec_drafted, "identical planes accept all");
+        assert_eq!(report.acceptance_rate(), 1.0);
+        // 11 decode tokens at k=4: two full rounds of 5 plus a final
+        // one-token fallback — adaptive k must not degrade to 11 rounds
+        assert!(report.spec_rounds < 11, "adaptive k must batch: {} rounds", report.spec_rounds);
+        assert!(report.render().contains("acceptance"), "{}", report.render());
+        let mut streamed = Vec::new();
+        let mut done = false;
+        for ev in rx.try_iter() {
+            match ev {
+                TokenEvent::Token { index, token } => {
+                    assert_eq!(index, streamed.len(), "events arrive in order");
+                    streamed.push(token);
+                }
+                TokenEvent::Done(stats) => {
+                    assert_eq!(stats.n_generated, 12);
+                    done = true;
+                }
+            }
+        }
+        assert!(done, "terminal Done event must arrive");
+        assert_eq!(streamed, r.generated);
+        assert_eq!(r.generated, compiled.generate(&prompt, 12)[prompt.len()..].to_vec());
+    }
+
+    /// A traced speculative drain nests draft and verify spans inside the
+    /// decode span and still validates as a Chrome timeline.
+    #[test]
+    fn traced_spec_run_emits_draft_and_verify_spans() {
+        let mut engine = Engine::new(
+            small_model(),
+            EngineConfig { spec: Some(3), ..EngineConfig::default() },
+        )
+        .unwrap();
+        let trace = crate::obs::TraceRecorder::new();
+        engine.set_trace(trace.clone());
+        engine.submit(&toks(5, 810), 8);
+        let report = engine.drain();
+        assert!(report.spec_rounds > 0);
+        let text = trace.to_json().to_string_compact();
+        crate::obs::validate_trace(&text).unwrap();
+        for needle in ["\"name\":\"draft\"", "\"name\":\"verify\"", "\"name\":\"decode\""] {
+            assert!(text.contains(needle), "missing {needle} in trace:\n{text}");
+        }
     }
 }

@@ -111,7 +111,12 @@ pub fn handle_metrics(svc: &EngineService) -> Response {
     }
 }
 
-/// `GET /v1/stats`: the live registry-derived stats snapshot.
+/// `GET /v1/stats`: the live registry-derived stats snapshot. Everything
+/// in [`StatsSnapshot`](crate::serve::StatsSnapshot) flows through —
+/// including the `spec_*` speculation
+/// counters and `spec_acceptance_rate` when the engine runs with `--spec`
+/// (zeros otherwise) — because the body is the snapshot's own JSON shape,
+/// not a hand-maintained field list.
 pub fn handle_stats(svc: &EngineService) -> Response {
     Response::json(200, &svc.stats().to_json())
 }

@@ -182,6 +182,23 @@ impl KvCache {
         }
     }
 
+    /// Roll the cache back to its first `n` committed positions — the
+    /// speculative-decode rejection path ([`CompiledModel::verify_k`]
+    /// truncates the main chain past the last accepted token).
+    ///
+    /// Implemented as self-replacement with [`KvCache::fork_prefix`]: kept
+    /// pages survive by refcount (no K/V copies), trailing pages past the
+    /// cut are released to the pool when the old chains drop. Stale rows in
+    /// the trailing partial page beyond `n` are never read (attention is
+    /// bounded by the committed length) and the next [`KvCache::append`]
+    /// overwrites them — recomputing the q8 scale for rewritten positions,
+    /// so truncate-then-reappend is exact under q8 pools too.
+    ///
+    /// [`CompiledModel::verify_k`]: crate::model::CompiledModel::verify_k
+    pub fn truncate(&mut self, n: usize) {
+        *self = self.fork_prefix(n);
+    }
+
     #[inline]
     fn chain(&self, layer: usize, head: usize) -> &[Arc<Page>] {
         &self.chains[layer * self.n_heads + head]
@@ -548,6 +565,127 @@ mod tests {
         // memory accounting: q8 rows are 1 byte per value + 2 scales per head
         let per_pos = 8 * 2 + 2 * 2 * 4;
         assert_eq!(base.memory_bytes(), 2 * 4 * per_pos);
+    }
+
+    /// Satellite: the spec loop forks at the committed length every round —
+    /// a zero-length *suffix* fork (`fork_prefix(len)`) must share every
+    /// page, copy nothing, and read back identically.
+    #[test]
+    fn zero_length_suffix_fork_shares_everything() {
+        let pool = paged_pool();
+        let mut base = pool.new_cache();
+        fill(&mut base, 5); // pages per chain: [2,2,1] → 3 × 4 chains = 12
+        let allocated = pool.pages_allocated();
+        let fork = base.fork_prefix(base.len());
+        assert_eq!(fork.len(), 5);
+        assert_eq!(pool.pages_allocated(), allocated, "full-length fork allocates nothing");
+        assert_eq!(pool.cow_copies(), 0);
+        for t in 0..5 {
+            assert_eq!(&*fork.k_at(0, 0, t), &*base.k_at(0, 0, t));
+        }
+        // an empty cache forks to an empty cache
+        let empty = pool.new_cache();
+        let efork = empty.fork_prefix(0);
+        assert!(efork.is_empty());
+        assert_eq!(efork.pages_referenced(), 0);
+    }
+
+    /// Satellite: forking exactly at a page boundary shares only full pages
+    /// — appends on either side land on fresh/owned pages, so no CoW copy
+    /// ever happens.
+    #[test]
+    fn page_boundary_fork_appends_without_cow() {
+        let pool = paged_pool();
+        let mut base = pool.new_cache();
+        fill(&mut base, 4); // exactly 2 full pages per chain
+        let allocated = pool.pages_allocated();
+        let mut fork = base.fork_prefix(4); // boundary: no partial page shared
+        fill(&mut fork, 1); // fresh page per chain
+        fill(&mut base, 1); // base's position 4 page is solely owned
+        assert_eq!(pool.cow_copies(), 0, "boundary fork must never trigger CoW");
+        assert_eq!(pool.pages_allocated(), allocated + 8, "one fresh page per chain per side");
+        assert_eq!(&*fork.k_at(0, 0, 3), &*base.k_at(0, 0, 3));
+    }
+
+    /// Satellite: the per-step speculative fork/drop cycle must leave pool
+    /// accounting exactly flat — every CoW page and every draft page goes
+    /// back on drop, across many rounds, mid-page and at boundaries.
+    #[test]
+    fn repeated_fork_drop_cycles_leave_pool_flat() {
+        let pool = paged_pool();
+        let mut base = pool.new_cache();
+        fill(&mut base, 3); // mid-page: trailing partial page per chain
+        let allocated = pool.pages_allocated();
+        let resident = pool.resident_bytes();
+        for round in 0..10 {
+            let mut fork = base.fork_prefix(base.len());
+            fill(&mut fork, 2); // CoW the partial page + allocate the next
+            assert!(pool.pages_allocated() > allocated, "round {round}: fork drew pages");
+            drop(fork);
+            assert_eq!(pool.pages_allocated(), allocated, "round {round}: pages leaked");
+            assert_eq!(pool.resident_bytes(), resident, "round {round}: bytes leaked");
+        }
+        // same cycle at a page boundary (no CoW, pure fresh pages)
+        fill(&mut base, 1); // len 4 = 2 full pages
+        let allocated = pool.pages_allocated();
+        for round in 0..10 {
+            let mut fork = base.fork_prefix(4);
+            fill(&mut fork, 3);
+            drop(fork);
+            assert_eq!(pool.pages_allocated(), allocated, "boundary round {round}");
+        }
+    }
+
+    /// `truncate` is the verify-rejection rollback: it must free trailing
+    /// pages exactly, keep the prefix bit-identical, and allow re-append
+    /// over the stale tail — including on q8 pools, where rewritten
+    /// positions get fresh scales.
+    #[test]
+    fn truncate_frees_tail_and_reappends_exactly() {
+        let pool = paged_pool();
+        let mut c = pool.new_cache();
+        fill(&mut c, 7); // pages per chain: [2,2,2,1] → 4 × 4 = 16
+        assert_eq!(pool.pages_allocated(), 16);
+        c.truncate(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(pool.pages_allocated(), 8, "trailing pages freed");
+        for t in 0..3 {
+            assert_eq!(&*c.k_at(0, 0, t), &row(t)[0..4], "prefix pos {t} survived");
+        }
+        // re-append over the stale tail: reads back the fresh rows
+        fill(&mut c, 3);
+        for t in 0..6 {
+            assert_eq!(&*c.k_at(0, 0, t), &row(t)[0..4], "pos {t} after re-append");
+        }
+        // truncate to the committed length is a no-op
+        let allocated = pool.pages_allocated();
+        c.truncate(c.len());
+        assert_eq!((c.len(), pool.pages_allocated()), (6, allocated));
+        // truncate to zero releases everything
+        c.truncate(0);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.pages_referenced(), 0);
+
+        // q8 pool: a rewritten position's scale is recomputed, so the new
+        // (larger-magnitude) row survives the stale small-scale tail
+        use crate::serve::KvQuant;
+        let qpool = KvPool::new_with_quant(&cfg(), 2, None, KvQuant::Q8).unwrap();
+        let mut q = qpool.new_cache();
+        let small: Vec<f32> = vec![0.1; 8];
+        let big: Vec<f32> = vec![50.0; 8];
+        for r in [&small, &small, &small] {
+            for l in 0..2 {
+                q.append(l, r, r);
+            }
+            q.advance(1);
+        }
+        q.truncate(2); // position 2 becomes stale mid-page
+        for l in 0..2 {
+            q.append(l, &big, &big);
+        }
+        q.advance(1);
+        assert!((q.k_at(0, 0, 2)[0] - 50.0).abs() <= 50.0 / 254.0 + 1e-4);
+        assert!((q.k_at(0, 0, 1)[0] - 0.1).abs() <= 0.1 / 254.0 + 1e-7);
     }
 
     #[test]

@@ -276,6 +276,28 @@ impl KvPool {
         len.div_ceil(self.state.page_positions) * self.chains_per_seq()
     }
 
+    /// Worst-case *extra* page demand of appending `k` positions to a
+    /// `fork_prefix(len)` branch of a sequence committed at `len`: any
+    /// fresh pages the new positions spill into, plus — when `len` sits
+    /// mid-page — the one copy-on-write duplicate of the shared trailing
+    /// partial page that the fork's first append triggers, per chain.
+    ///
+    /// This is the speculative draft fork's budget unit: the engine
+    /// reserves exactly this before drafting `k` tokens on a fork and
+    /// releases exactly this when the fork drops, so speculation is
+    /// budget-accounted like any other KV demand and `--kv-budget-mb`
+    /// stays a hard bound with `--spec` on (satellite: fork rollback
+    /// accounting).
+    pub fn pages_for_fork_growth(&self, len: usize, k: usize) -> usize {
+        if k == 0 {
+            return 0;
+        }
+        let pp = self.state.page_positions;
+        let fresh = (len + k).div_ceil(pp) - len.div_ceil(pp);
+        let cow = usize::from(len % pp != 0);
+        (fresh + cow) * self.chains_per_seq()
+    }
+
     /// Longest sequence whose worst-case demand fits the whole budget —
     /// the engine clamps oversized requests to this (best-effort serving).
     pub fn budget_max_len(&self) -> usize {
@@ -294,6 +316,13 @@ impl KvPool {
     /// Live unique pages (a shared prefix counts once).
     pub fn pages_allocated(&self) -> usize {
         self.state.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Live unique page bytes ([`Self::pages_allocated`] ×
+    /// [`Self::page_bytes`]) — the "pool bytes" measure the fork/drop
+    /// leak tests and the engine's resident-KV gauge derive from.
+    pub fn resident_bytes(&self) -> usize {
+        self.pages_allocated() * self.page_bytes()
     }
 
     /// Lifetime page allocations (monotonic — includes pages since freed;
@@ -409,6 +438,27 @@ mod tests {
         let pool = KvPool::new(&cfg(), 4, Some(budget)).unwrap();
         assert_eq!(pool.capacity_pages(), 9);
         assert_eq!(pool.budget_max_len(), 8);
+    }
+
+    /// Fork-growth demand (the speculative draft fork's reservation unit):
+    /// mid-page forks pay one CoW page per chain, aligned forks none, and
+    /// spill pages count exactly.
+    #[test]
+    fn fork_growth_demand_arithmetic() {
+        let pool = KvPool::new(&cfg(), 4, None).unwrap(); // 4 chains
+        assert_eq!(pool.pages_for_fork_growth(3, 0), 0, "no drafts, no demand");
+        // mid-page, fits the partial page: CoW copy only
+        assert_eq!(pool.pages_for_fork_growth(3, 1), 4);
+        // mid-page, spills into one fresh page
+        assert_eq!(pool.pages_for_fork_growth(3, 2), 8);
+        assert_eq!(pool.pages_for_fork_growth(3, 5), 8);
+        assert_eq!(pool.pages_for_fork_growth(3, 6), 12);
+        // page-aligned fork: fresh pages only, never a CoW
+        assert_eq!(pool.pages_for_fork_growth(4, 1), 4);
+        assert_eq!(pool.pages_for_fork_growth(4, 4), 4);
+        assert_eq!(pool.pages_for_fork_growth(4, 5), 8);
+        // empty cache: first pages are fresh
+        assert_eq!(pool.pages_for_fork_growth(0, 3), 4);
     }
 
     #[test]

@@ -23,9 +23,11 @@
 //!   attention ([`crate::model::AttnKernel`]) streaming page runs over
 //!   every in-flight sequence — admits requests against the pool budget,
 //!   prefills prompts in `--prefill-chunk`-bounded pieces interleaved
-//!   with decode ([`SeqPhase`]), and reports latency, throughput, pool
-//!   bytes, prefix-hit counters, and deadline misses in a
-//!   [`ServeReport`].
+//!   with decode ([`SeqPhase`]), optionally speculates (`--spec K`:
+//!   int8-plane drafts on copy-on-write KV forks, one f32 batch verify,
+//!   bit-identical outputs), and reports latency, throughput, pool
+//!   bytes, prefix-hit counters, draft acceptance, and deadline misses
+//!   in a [`ServeReport`].
 //!
 //! Every engine carries its own [`crate::obs::MetricsRegistry`]: step
 //! counters are always on (the [`ServeReport`] is re-derived from them, so

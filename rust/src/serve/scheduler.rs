@@ -157,6 +157,11 @@ pub struct ActiveSeq {
     pub generated: Vec<u16>,
     /// most recent token — the next decode step's input
     pub last_token: u16,
+    /// adaptive speculative draft length for this sequence: the engine
+    /// halves it (floor 1) on a fully rejected round and doubles it (cap:
+    /// the configured `--spec K`) on a fully accepted one, so rejection
+    /// streaks bound the wasted draft work. `0` when speculation is off.
+    pub spec_k: usize,
     /// Submission timestamp (latency and TTFT measure from here).
     pub submitted: Instant,
     /// When the first generated token landed (TTFT), once it has.
@@ -407,6 +412,7 @@ mod tests {
             reused_tokens: 0,
             generated: vec![0; generated],
             last_token: 0,
+            spec_k: 0,
             submitted: Instant::now(),
             first_token_at: None,
         }

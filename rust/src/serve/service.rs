@@ -143,6 +143,10 @@ impl EngineService {
             kv_pages_freed: c("armor_kv_pages_freed_total"),
             kv_cow_copies: c("armor_kv_cow_copies_total"),
             sched_promotions: c("armor_sched_promotions_total"),
+            spec_rounds: c("armor_spec_rounds_total"),
+            spec_drafted: c("armor_spec_drafted_total"),
+            spec_accepted: c("armor_spec_accepted_total"),
+            spec_fallbacks: c("armor_spec_fallbacks_total"),
             queue_depth: g("armor_queue_depth") as u64,
             active_seqs: g("armor_active_seqs") as u64,
             window_peak_batch: g("armor_peak_batch") as u64,
@@ -267,6 +271,15 @@ pub struct StatsSnapshot {
     pub kv_cow_copies: u64,
     /// Anti-starvation lane promotions (lifetime).
     pub sched_promotions: u64,
+    /// Speculative draft/verify rounds executed (lifetime; 0 without
+    /// `--spec`).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed on the int8 plane (lifetime).
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by f32 verification (lifetime).
+    pub spec_accepted: u64,
+    /// Speculative rounds that fell back to plain decode (lifetime).
+    pub spec_fallbacks: u64,
     /// Requests currently waiting for admission.
     pub queue_depth: u64,
     /// Sequences currently in the in-flight batch.
@@ -290,6 +303,11 @@ impl StatsSnapshot {
     /// last drain window's peaks under `"last_window"`.
     pub fn to_json(&self) -> Json {
         let n = |v: u64| Json::Num(v as f64);
+        let acceptance = if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        };
         let window = Json::obj(vec![
             ("peak_batch", n(self.window_peak_batch)),
             ("max_step_prefill", n(self.window_max_step_prefill)),
@@ -314,6 +332,11 @@ impl StatsSnapshot {
             ("kv_pages_freed", n(self.kv_pages_freed)),
             ("kv_cow_copies", n(self.kv_cow_copies)),
             ("sched_promotions", n(self.sched_promotions)),
+            ("spec_rounds", n(self.spec_rounds)),
+            ("spec_drafted", n(self.spec_drafted)),
+            ("spec_accepted", n(self.spec_accepted)),
+            ("spec_fallbacks", n(self.spec_fallbacks)),
+            ("spec_acceptance_rate", Json::Num(acceptance)),
             ("queue_depth", n(self.queue_depth)),
             ("active_seqs", n(self.active_seqs)),
             ("last_window", window),
@@ -406,11 +429,18 @@ mod tests {
     }
 
     /// The stats snapshot is the registry: totals match the drain report
-    /// and the depth gauges return to zero once idle.
+    /// and the depth gauges return to zero once idle. Runs with `--spec` on
+    /// so the `spec_*` fields flow through `/v1/stats` too (a dense model's
+    /// draft plane equals its target, so outputs are unchanged and every
+    /// draft is accepted).
     #[test]
     fn stats_snapshot_tracks_registry() {
         let service = EngineService::spawn(
-            Engine::new(small_model(), EngineConfig::default()).unwrap(),
+            Engine::new(
+                small_model(),
+                EngineConfig { spec: Some(2), ..EngineConfig::default() },
+            )
+            .unwrap(),
         );
         let (_, rx) = service.generate(params(toks(5, 7), 4)).unwrap();
         let mut done = None;
@@ -435,11 +465,22 @@ mod tests {
         assert_eq!(fin.queue_depth, 0);
         assert_eq!(fin.active_seqs, 0);
         assert!(fin.draining);
+        assert!(fin.spec_drafted > 0, "spec engine must have drafted");
+        assert_eq!(fin.spec_accepted, fin.spec_drafted, "identical planes accept all");
         let json = fin.to_json().to_string_compact();
         let parsed = Json::parse(&json).expect("stats JSON round-trips");
         assert_eq!(parsed.get("generated_tokens").as_usize(), Some(4));
         assert_eq!(parsed.get("draining").as_bool(), Some(true));
         assert!(parsed.get("last_window").as_obj().is_some());
+        assert_eq!(parsed.get("spec_drafted").as_usize(), Some(fin.spec_drafted as usize));
+        assert_eq!(parsed.get("spec_accepted").as_usize(), Some(fin.spec_accepted as usize));
+        assert_eq!(parsed.get("spec_rounds").as_usize(), Some(fin.spec_rounds as usize));
+        assert_eq!(parsed.get("spec_fallbacks").as_usize(), Some(fin.spec_fallbacks as usize));
+        assert_eq!(
+            parsed.get("spec_acceptance_rate").as_f64(),
+            Some(1.0),
+            "identical planes -> full acceptance"
+        );
     }
 
     /// Shutting down an idle service is clean: empty report, no hang.

@@ -817,3 +817,96 @@ fn prop_priority_aging_prevents_starvation() {
         Ok(())
     });
 }
+
+struct SpecCase {
+    /// prompt + generation budget per request
+    reqs: Vec<(Vec<u16>, usize)>,
+    spec_k: usize,
+    page_positions: usize,
+    q8_kv: bool,
+}
+
+fn gen_spec_case(rng: &mut Pcg64) -> SpecCase {
+    let n = 1 + rng.next_below(3) as usize;
+    let reqs = (0..n)
+        .map(|_| {
+            let len = 2 + rng.next_below(24) as usize;
+            let prompt = (0..len).map(|_| rng.next_below(250) as u16).collect();
+            (prompt, 1 + rng.next_below(12) as usize)
+        })
+        .collect();
+    SpecCase {
+        reqs,
+        spec_k: 1 + rng.next_below(8) as usize,
+        page_positions: [2usize, 3, 4, 8][rng.next_below(4) as usize],
+        q8_kv: rng.next_below(2) == 1,
+    }
+}
+
+/// Speculative decoding is an acceleration, never a behavior change: for
+/// random prompt sets, draft lengths, page sizes, and KV dtypes, a 2:4
+/// pruned model served with `spec: Some(k)` — int8-plane drafts on a CoW
+/// KV fork, one f32 batch verify on the main chain — generates exactly
+/// the token streams of the plain one-token-per-step f32 engine. The
+/// pruned model is the adversarial case: its int8 draft plane genuinely
+/// disagrees with the f32 target on some steps, so acceptance < 100% and
+/// the rejection/rollback path is exercised, not just the happy path.
+#[test]
+fn prop_speculative_decode_bit_identical() {
+    use armor::serve::{Engine, EngineConfig, KvQuant};
+    let cfg = GptConfig {
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 48,
+        ..GptConfig::tiny()
+    };
+    let mut rng = Pcg64::seed_from_u64(0x5EC);
+    let model = GptModel::random_init(&cfg, &mut rng);
+    let seqs: Vec<Vec<u16>> = (0..2)
+        .map(|i| {
+            let mut r = Pcg64::seed_from_u64(0xCA11B + i);
+            (0..24).map(|_| r.next_below(250) as u16).collect()
+        })
+        .collect();
+    let stats = calibrate(&model, &seqs, false);
+    let job = PruneJob { method: Method::NoWagP, pattern: Pattern::TWO_FOUR, seed: 7, use_xla: false };
+    let (pruned, _) = prune_model(&model, &stats, &job, None);
+    let compiled = CompiledModel::compile(&pruned, None).unwrap();
+    forall("speculative decode parity", num_cases(8), gen_spec_case, |case| {
+        let base = EngineConfig {
+            max_batch: 2,
+            page_positions: case.page_positions,
+            kv_quant: if case.q8_kv { KvQuant::Q8 } else { KvQuant::F32 },
+            ..EngineConfig::default()
+        };
+        let run = |cfg: EngineConfig| -> Result<Vec<Vec<u16>>, String> {
+            let mut engine = Engine::new(compiled.clone(), cfg).map_err(|e| e.to_string())?;
+            let ids: Vec<_> =
+                case.reqs.iter().map(|(p, n)| engine.submit(p, *n)).collect();
+            let report = engine.drain();
+            ids.iter()
+                .map(|id| {
+                    report
+                        .requests
+                        .iter()
+                        .find(|r| r.id == *id)
+                        .map(|r| r.generated.clone())
+                        .ok_or_else(|| format!("request {id:?} never completed"))
+                })
+                .collect()
+        };
+        let plain = run(EngineConfig { spec: None, ..base })?;
+        let spec = run(EngineConfig { spec: Some(case.spec_k), ..base })?;
+        for (i, (p, s)) in plain.iter().zip(&spec).enumerate() {
+            if p != s {
+                return Err(format!(
+                    "k {} pages {} q8kv {}: request {i} diverged\n  plain {:?}\n  spec  {:?}",
+                    case.spec_k, case.page_positions, case.q8_kv, p, s
+                ));
+            }
+        }
+        Ok(())
+    });
+}
