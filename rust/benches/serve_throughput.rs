@@ -27,6 +27,12 @@
 //! bound: priority + chunking must cut short TTFT p99 without giving up
 //! more than 10% of FIFO's aggregate tok/s.
 //!
+//! A preemption sweep forces KV pressure — two low-priority long requests
+//! holding the whole page budget when a high-priority short burst lands —
+//! and replays it with `--no-preempt` semantics off vs on: outputs are
+//! hard-asserted bit-identical (preemption only replays, never resamples)
+//! and the short-request TTFT p99 must be strictly lower with preemption.
+//!
 //! A sweep measures observability overhead: the same burst with
 //! timing metrics off, on, and on + a Chrome trace recorder attached.
 //! Metrics-on and metrics+trace must hold >= 0.97x of the metrics-off
@@ -48,10 +54,10 @@
 //! on top of the engine's in-process TTFT.
 //!
 //! With `ARMOR_BENCH_JSON=<path>` every row is also appended to a JSON
-//! artifact (CI's bench-smoke job uploads it as `BENCH_8.json`), including
-//! prefix-hit rates, pool bytes, per-policy TTFT, the obs-overhead
-//! ratios, speculative acceptance rates, and the socket-TTFT percentiles
-//! alongside throughput.
+//! artifact (CI's bench-smoke job uploads it as `BENCH_9.json`), including
+//! prefix-hit rates, pool bytes, per-policy TTFT, preemption eviction and
+//! re-prefill counts, the obs-overhead ratios, speculative acceptance
+//! rates, and the socket-TTFT percentiles alongside throughput.
 
 use armor::armor::ArmorConfig;
 use armor::baselines::Method;
@@ -541,6 +547,130 @@ fn main() {
         println!("OK: chunked prefill holds {tps_ratio:.2}x of FIFO aggregate throughput (>= 0.9x)");
     } else {
         println!("WARN: chunked prefill regressed aggregate throughput to {tps_ratio:.2}x of FIFO (< 0.9x)");
+    }
+
+    // --- preemption under forced KV pressure: off vs on ---
+    // The robustness shape: two low-priority long requests are already in
+    // flight and between them hold the *entire* KV budget when a burst of
+    // high-priority shorts arrives. Without preemption the shorts wait for
+    // a long to finish and release its reservation; with it the engine
+    // evicts a long, re-admits it later via replay re-prefill, and the
+    // shorts' TTFT collapses. Outputs are hard-asserted bit-identical
+    // between the two rows — preemption is a latency knob, never a
+    // correctness knob (DESIGN.md §11).
+    println!("\npreemption: high-priority burst against a fully reserved KV budget, off vs on");
+    use armor::serve::KvPool;
+    let preempt_new = scaled(16).max(4);
+    let pre_short_new = scaled(8).max(4);
+    let pre_longs = traffic(&mut rng, 2, long_len);
+    let pre_shorts = traffic(&mut rng, scaled(8).max(4), short_len);
+    let probe = KvPool::new(&cfg, page_positions, None).expect("probe pool");
+    let worst_long =
+        probe.pages_for_seq((long_len + preempt_new - 1).min(cfg.max_seq));
+    // budget admits exactly the two longs; every short needs an eviction
+    // (preempt on) or a completed long (preempt off) to get pages
+    let pressure_budget = 2 * worst_long * probe.page_bytes();
+    let run_preempt = |preempt: bool| {
+        let mut engine = Engine::new(
+            attn_compiled.clone(),
+            EngineConfig {
+                max_batch,
+                page_positions,
+                kv_budget_bytes: Some(pressure_budget),
+                prefix_sharing: false,
+                policy: SchedPolicy::Priority,
+                prefill_chunk: Some(chunk),
+                preempt,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("preempt engine config");
+        let mut ids = Vec::new();
+        for p in &pre_longs {
+            ids.push(engine.submit_with(p, preempt_new, 3, None));
+        }
+        // put the longs provably in flight before the burst lands
+        for _ in 0..2 {
+            engine.step();
+        }
+        for p in &pre_shorts {
+            ids.push(engine.submit_with(p, pre_short_new, 0, None));
+        }
+        let report = engine.drain();
+        assert_eq!(engine.pool().pages_reserved(), 0, "preempt bench leaked a reservation");
+        let outs: Vec<Vec<u16>> = ids
+            .iter()
+            .map(|id| {
+                report
+                    .requests
+                    .iter()
+                    .find(|r| r.id == *id)
+                    .expect("preempt bench request completed")
+                    .generated
+                    .clone()
+            })
+            .collect();
+        (report, outs)
+    };
+    let (pre_off_rep, pre_off_out) = run_preempt(false);
+    let (pre_on_rep, pre_on_out) = run_preempt(true);
+    assert_eq!(pre_on_out, pre_off_out, "preemption changed a generated token");
+    assert_eq!(pre_off_rep.preempt_evictions, 0, "preempt off must never evict");
+    assert!(
+        pre_on_rep.preempt_evictions > 0,
+        "pressure budget failed to force an eviction — the sweep measured nothing"
+    );
+    let mut pre_rows = Vec::new();
+    for (case, rep) in [("preempt_off", &pre_off_rep), ("preempt_on", &pre_on_rep)] {
+        let p50 = rep.ttft_percentile_short(short_len, 50.0);
+        let p99 = rep.ttft_percentile_short(short_len, 99.0);
+        pre_rows.push(TableRow::new(
+            case,
+            vec![
+                format!("{:.1}", rep.tokens_per_sec()),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                format!("{}", rep.preempt_evictions),
+                format!("{}", rep.preempt_reprefill_tokens),
+            ],
+        ));
+        emit_json(
+            "serve_preempt",
+            case,
+            vec![
+                ("tok_s", Json::Num(rep.tokens_per_sec())),
+                ("ttft_short_p50_ms", Json::Num(p50)),
+                ("ttft_short_p99_ms", Json::Num(p99)),
+                ("requests", Json::Num(rep.requests.len() as f64)),
+                ("preempt_evictions", Json::Num(rep.preempt_evictions as f64)),
+                ("preempt_reprefill_tokens", Json::Num(rep.preempt_reprefill_tokens as f64)),
+            ],
+        );
+    }
+    println!(
+        "{}",
+        armor::coordinator::format_markdown_table(
+            "Preemption under forced KV pressure (KV-cached 2:4, bit-identical outputs)",
+            &[
+                "tok/s",
+                "short ttft p50 ms (↓)",
+                "short ttft p99 ms (↓)",
+                "evictions",
+                "re-prefill tok",
+            ],
+            &pre_rows
+        )
+    );
+    let off_p99 = pre_off_rep.ttft_percentile_short(short_len, 99.0);
+    let on_p99 = pre_on_rep.ttft_percentile_short(short_len, 99.0);
+    if on_p99 < off_p99 {
+        println!(
+            "OK: preemption cuts high-priority short TTFT p99 under pressure ({on_p99:.2} vs {off_p99:.2} ms)"
+        );
+    } else {
+        println!(
+            "WARN: preempt did not cut high-priority short TTFT p99 ({on_p99:.2} vs {off_p99:.2} ms)"
+        );
     }
 
     // --- observability overhead: metrics off / on / on + trace ---

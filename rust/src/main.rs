@@ -71,6 +71,10 @@ fn print_usage() {
                 OptSpec { name: "prefill-chunk", help: "serve: max prompt tokens prefilled per engine step (omit for unbounded)", default: None },
                 OptSpec { name: "spec", help: "serve: speculative decoding draft length K — int8 self-draft on a CoW KV fork, f32 batch verify, bit-identical outputs (omit to disable)", default: None },
                 OptSpec { name: "kv-budget-mb", help: "serve: KV pool budget in MiB (admission is page-budgeted; omit for unbounded)", default: None },
+                OptSpec { name: "no-preempt", help: "serve: disable budget-pressure preemption (urgent arrivals then wait instead of evicting in-flight work)", default: None },
+                OptSpec { name: "max-queue", help: "serve: bound on waiting requests; past it submissions get a structured 429 + Retry-After (omit for unbounded)", default: None },
+                OptSpec { name: "request-timeout-ms", help: "serve: hard per-request timeout from submission; expired requests abort with a terminal 'aborted' event (omit to disable)", default: None },
+                OptSpec { name: "cancel-on-disconnect", help: "serve: abort a request once every receiver of its token stream is gone, freeing its KV pages", default: None },
                 OptSpec { name: "no-prefix-share", help: "serve: disable prompt prefix-cache sharing", default: None },
                 OptSpec { name: "compare", help: "serve: also time the dense-recompute generate baseline", default: None },
                 OptSpec { name: "trace", help: "serve: write a Chrome trace-event timeline of the drain to this path", default: None },
@@ -383,6 +387,31 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             Some(k)
         }
     };
+    // robustness knobs (DESIGN.md §11): overload bound, hard timeout,
+    // disconnect cancellation; preemption is on unless --no-preempt
+    let max_queue = match args.get("max-queue") {
+        None => None,
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| armor::err!("--max-queue must be an integer, got '{v}'"))?;
+            armor::ensure!(n >= 1, "--max-queue must be >= 1 waiting request (omit for unbounded)");
+            Some(n)
+        }
+    };
+    let request_timeout = match args.get("request-timeout-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v
+                .parse()
+                .map_err(|_| armor::err!("--request-timeout-ms must be a number, got '{v}'"))?;
+            armor::ensure!(
+                ms > 0.0 && ms <= 1e12,
+                "--request-timeout-ms must be in (0, 1e12] ms, got {v}"
+            );
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+    };
     // validate flags against the serving model up front: bad values come
     // back as structured errors, never as panics inside the scheduler or
     // KvCache mid-burst
@@ -411,6 +440,10 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             policy,
             prefill_chunk,
             spec,
+            preempt: !args.flag("no-preempt"),
+            max_queue,
+            request_timeout,
+            cancel_on_disconnect: args.flag("cancel-on-disconnect"),
             metrics: !args.flag("no-metrics"),
             metrics_every,
         },
@@ -428,6 +461,14 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
         prefill_chunk.map_or("unbounded".to_string(), |c| c.to_string()),
         deadline.map_or("none".to_string(), |d| format!("{:.0} ms", d.as_secs_f64() * 1e3)),
         spec.map_or("off".to_string(), |k| format!("k={k}")),
+    );
+    println!(
+        "[serve] robustness: preempt {}  max-queue {}  request-timeout {}  cancel-on-disconnect {}",
+        if args.flag("no-preempt") { "off" } else { "on" },
+        max_queue.map_or("unbounded".to_string(), |n| n.to_string()),
+        request_timeout
+            .map_or("none".to_string(), |d| format!("{:.0} ms", d.as_secs_f64() * 1e3)),
+        if args.flag("cancel-on-disconnect") { "on" } else { "off" },
     );
 
     // --listen switches modes: instead of replaying a synthetic burst and

@@ -1,0 +1,230 @@
+//! Deterministic fault injection for chaos testing the serve plane.
+//!
+//! A [`FailPoints`] registry holds a probability per *named site* — a code
+//! location that has opted into injection (pool reservations, the service
+//! command loop). Each site draws from its own seeded splitmix64 stream, so
+//! a given `(spec, seed)` pair fires the exact same eval sequence on every
+//! run: chaos tests can replay a failure schedule bit-for-bit and assert
+//! that survivors produce identical outputs and that reservation accounting
+//! stays exact after every injected refusal.
+//!
+//! Configuration comes from the environment at engine construction:
+//!
+//! ```text
+//! ARMOR_FAILPOINTS=kv_alloc:0.05,svc_channel_stall:0.01
+//! ARMOR_FAILPOINT_SEED=1   # defaults to 0
+//! ```
+//!
+//! Sites are a closed set ([`FP_KV_ALLOC`], [`FP_SVC_CHANNEL_STALL`]);
+//! naming an unknown site is a structured error rather than a silent no-op,
+//! so a typo in a chaos harness cannot masquerade as a green run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Site name: KV pool page-budget reservations (`KvPool::try_reserve`
+/// callers in the engine — admission, re-admission, speculative forks).
+/// Firing refuses the reservation as if the budget were exhausted.
+pub const FP_KV_ALLOC: &str = "kv_alloc";
+
+/// Site name: the `EngineService` worker command loop. Firing stalls the
+/// loop briefly before the next step — a timing-only fault that must never
+/// change any output.
+pub const FP_SVC_CHANNEL_STALL: &str = "svc_channel_stall";
+
+/// Every site a spec may name, in exposition order.
+pub const FP_SITES: &[&str] = &[FP_KV_ALLOC, FP_SVC_CHANNEL_STALL];
+
+/// One armed site: a fire probability plus its private PRNG stream and
+/// eval/fire tallies.
+#[derive(Debug)]
+struct Site {
+    name: &'static str,
+    prob: f64,
+    state: AtomicU64,
+    evals: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// Seeded fault-injection registry (see module docs). Cheap to share
+/// behind an `Arc`; `should_fire` is a few relaxed atomics per eval.
+#[derive(Debug, Default)]
+pub struct FailPoints {
+    sites: Vec<Site>,
+}
+
+/// splitmix64 output mix: turns a sequential counter into a well-mixed
+/// 64-bit draw. Standard constants (Steele et al., "Fast Splittable
+/// Pseudorandom Number Generators").
+fn splitmix64(z: u64) -> u64 {
+    let mut z = z.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the site name, so each site gets a decorrelated stream from
+/// the same user seed.
+fn site_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl FailPoints {
+    /// Parse a `site:prob,site:prob` spec. Probabilities must be finite and
+    /// in `[0, 1]`; site names must come from [`FP_SITES`]. An empty spec is
+    /// a valid registry that never fires.
+    pub fn parse(spec: &str, seed: u64) -> crate::Result<FailPoints> {
+        let mut sites = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, prob) = part
+                .split_once(':')
+                .ok_or_else(|| crate::err!("failpoint entry {part:?} is not site:prob"))?;
+            let name = *FP_SITES
+                .iter()
+                .find(|s| **s == name.trim())
+                .ok_or_else(|| {
+                    crate::err!("unknown failpoint site {:?} (known: {FP_SITES:?})", name.trim())
+                })?;
+            let prob: f64 = prob
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("failpoint {name}: probability {prob:?} is not a number"))?;
+            crate::ensure!(
+                prob.is_finite() && (0.0..=1.0).contains(&prob),
+                "failpoint {name}: probability {prob} outside [0, 1]"
+            );
+            crate::ensure!(
+                sites.iter().all(|s: &Site| s.name != name),
+                "failpoint {name} specified twice"
+            );
+            sites.push(Site {
+                name,
+                prob,
+                state: AtomicU64::new(seed ^ site_hash(name)),
+                evals: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+            });
+        }
+        Ok(FailPoints { sites })
+    }
+
+    /// Build from `ARMOR_FAILPOINTS` / `ARMOR_FAILPOINT_SEED`. `Ok(None)`
+    /// when the spec variable is unset or empty; errors propagate so a
+    /// malformed spec fails loudly at engine construction.
+    pub fn from_env() -> crate::Result<Option<FailPoints>> {
+        let spec = match std::env::var("ARMOR_FAILPOINTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(None),
+        };
+        let seed = match std::env::var("ARMOR_FAILPOINT_SEED") {
+            Ok(s) => s
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("ARMOR_FAILPOINT_SEED {s:?} is not a u64"))?,
+            Err(_) => 0,
+        };
+        Self::parse(&spec, seed).map(Some)
+    }
+
+    /// Evaluate `site`: advance its stream one draw and report whether the
+    /// fault fires. Sites not named in the spec never fire (and are not
+    /// counted as evals). Deterministic for a fixed `(spec, seed)` and eval
+    /// order.
+    pub fn should_fire(&self, site: &str) -> bool {
+        let Some(s) = self.sites.iter().find(|s| s.name == site) else {
+            return false;
+        };
+        s.evals.fetch_add(1, Ordering::Relaxed);
+        let n = s.state.fetch_add(1, Ordering::Relaxed);
+        // top 53 bits → uniform draw in [0, 1)
+        let draw = (splitmix64(n) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let fire = draw < s.prob;
+        if fire {
+            s.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Times `site` has been evaluated.
+    pub fn evals(&self, site: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == site)
+            .map_or(0, |s| s.evals.load(Ordering::Relaxed))
+    }
+
+    /// Times `site` has fired.
+    pub fn fired(&self, site: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == site)
+            .map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// Armed sites in spec order: `(name, prob)`.
+    pub fn armed(&self) -> Vec<(&'static str, f64)> {
+        self.sites.iter().map(|s| (s.name, s.prob)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let a = FailPoints::parse("kv_alloc:0.3", 7).unwrap();
+        let b = FailPoints::parse("kv_alloc:0.3", 7).unwrap();
+        let sa: Vec<bool> = (0..256).map(|_| a.should_fire(FP_KV_ALLOC)).collect();
+        let sb: Vec<bool> = (0..256).map(|_| b.should_fire(FP_KV_ALLOC)).collect();
+        assert_eq!(sa, sb, "identical (spec, seed) must replay identically");
+        assert!(sa.iter().any(|&f| f), "p=0.3 over 256 evals should fire");
+        assert!(!sa.iter().all(|&f| f), "p=0.3 should not always fire");
+        assert_eq!(a.evals(FP_KV_ALLOC), 256);
+        assert_eq!(a.fired(FP_KV_ALLOC), sa.iter().filter(|&&f| f).count() as u64);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FailPoints::parse("kv_alloc:0.5", 1).unwrap();
+        let b = FailPoints::parse("kv_alloc:0.5", 2).unwrap();
+        let sa: Vec<bool> = (0..128).map(|_| a.should_fire(FP_KV_ALLOC)).collect();
+        let sb: Vec<bool> = (0..128).map(|_| b.should_fire(FP_KV_ALLOC)).collect();
+        assert_ne!(sa, sb, "different seeds should draw different schedules");
+    }
+
+    #[test]
+    fn probability_extremes_are_exact() {
+        let fp = FailPoints::parse("kv_alloc:0,svc_channel_stall:1", 0).unwrap();
+        assert!((0..64).all(|_| !fp.should_fire(FP_KV_ALLOC)), "p=0 never fires");
+        assert!((0..64).all(|_| fp.should_fire(FP_SVC_CHANNEL_STALL)), "p=1 always fires");
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire_or_count() {
+        let fp = FailPoints::parse("kv_alloc:1", 0).unwrap();
+        assert!(!fp.should_fire(FP_SVC_CHANNEL_STALL));
+        assert_eq!(fp.evals(FP_SVC_CHANNEL_STALL), 0);
+        let empty = FailPoints::parse("", 0).unwrap();
+        assert!(!empty.should_fire(FP_KV_ALLOC));
+    }
+
+    #[test]
+    fn malformed_specs_are_structured_errors() {
+        assert!(FailPoints::parse("bogus_site:0.5", 0).is_err(), "unknown site");
+        assert!(FailPoints::parse("kv_alloc", 0).is_err(), "missing probability");
+        assert!(FailPoints::parse("kv_alloc:nope", 0).is_err(), "non-numeric probability");
+        assert!(FailPoints::parse("kv_alloc:1.5", 0).is_err(), "probability above 1");
+        assert!(FailPoints::parse("kv_alloc:-0.1", 0).is_err(), "negative probability");
+        assert!(FailPoints::parse("kv_alloc:0.1,kv_alloc:0.2", 0).is_err(), "duplicate site");
+    }
+
+    #[test]
+    fn armed_lists_spec_order() {
+        let fp = FailPoints::parse("svc_channel_stall:0.25, kv_alloc:0.5", 3).unwrap();
+        assert_eq!(fp.armed(), vec![(FP_SVC_CHANNEL_STALL, 0.25), (FP_KV_ALLOC, 0.5)]);
+    }
+}

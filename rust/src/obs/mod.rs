@@ -27,10 +27,12 @@
 
 #![warn(missing_docs)]
 
+mod failpoint;
 mod registry;
 mod stats;
 mod trace;
 
+pub use failpoint::{FailPoints, FP_KV_ALLOC, FP_SITES, FP_SVC_CHANNEL_STALL};
 pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, HIST_BUCKETS};
 pub use stats::Stats;
 pub use trace::{validate_trace, TraceRecorder, TraceSummary};

@@ -45,14 +45,16 @@
 //! and counter tracks for queue depth and pool pages.
 
 use crate::model::{argmax, AttnObs, CompiledModel};
-use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, Stats, TraceRecorder};
+use crate::obs::{
+    Counter, FailPoints, Gauge, Histogram, MetricsRegistry, Stats, TraceRecorder, FP_KV_ALLOC,
+};
 use crate::serve::scheduler::{edf_key, ActiveSeq, Scheduler, SeqPhase};
 use crate::serve::{
     KvPool, KvQuant, PrefixRegistry, RequestId, SchedPolicy, DEFAULT_PREFIX_ENTRIES,
     PRIORITY_LANES,
 };
 use crate::util::json::Json;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -87,6 +89,31 @@ pub struct EngineConfig {
     /// `[1, K]` (halving on fully rejected rounds, doubling on fully
     /// accepted ones) so worst-case overhead stays bounded.
     pub spec: Option<usize>,
+    /// Preempt in-flight work under budget pressure (`--no-preempt` turns
+    /// it off): when the page budget rejects the selected head-of-queue,
+    /// evict the lowest-urgency in-flight sequence — strictly less urgent
+    /// than the candidate, in the same aged-lane / EDF order admission
+    /// uses — drop its KV chains, return its reservation exactly, and
+    /// re-admit it later by re-prefilling its recorded prompt + generated
+    /// tokens. Outputs are bit-identical to an uninterrupted run by
+    /// construction. Under [`SchedPolicy::Fifo`] this never fires (every
+    /// in-flight sequence outranks every waiting one).
+    pub preempt: bool,
+    /// Bound on the admission queue depth (`--max-queue`); a submission
+    /// past it is rejected with [`QueueFull`] (HTTP 429 + `Retry-After`
+    /// on the wire). `None` = unbounded.
+    pub max_queue: Option<usize>,
+    /// Hard per-request timeout measured from submission
+    /// (`--request-timeout-ms`): a request past it is aborted at the next
+    /// step boundary — queued, in-flight, or preempted — with a terminal
+    /// [`TokenEvent::Aborted`] instead of burning more tokens. `None` =
+    /// no hard timeout (soft deadlines then record `past_deadline_steps`).
+    pub request_timeout: Option<Duration>,
+    /// Abort a request at the next step boundary once every receiver of
+    /// its [`TokenEvent`] stream is dropped (`--cancel-on-disconnect`),
+    /// freeing its pages instead of generating for nobody. Requests
+    /// without a streaming channel are never cancelled.
+    pub cancel_on_disconnect: bool,
     /// Record wall-time histograms, gauges, and the attention-kernel series.
     /// The counters behind the [`ServeReport`] totals are recorded
     /// regardless — they are the report's source of truth. `armor serve
@@ -108,11 +135,42 @@ impl Default for EngineConfig {
             policy: SchedPolicy::Fifo,
             prefill_chunk: None,
             spec: None,
+            preempt: true,
+            max_queue: None,
+            request_timeout: None,
+            cancel_on_disconnect: false,
             metrics: true,
             metrics_every: 0,
         }
     }
 }
+
+/// Overload rejection from a bounded admission queue
+/// ([`EngineConfig::max_queue`] / `armor serve --max-queue`). The HTTP
+/// front-end renders it as a structured `429 Too Many Requests` envelope
+/// with a `Retry-After` header derived from [`QueueFull::retry_after_ms`].
+#[derive(Clone, Copy, Debug)]
+pub struct QueueFull {
+    /// Requests already waiting when the submission was rejected.
+    pub depth: usize,
+    /// The configured queue bound.
+    pub max_queue: usize,
+    /// Suggested client back-off: the engine's mean request latency so
+    /// far, clamped to `[100 ms, 10 s]` (1 s before any request retires).
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "queue full: {} requests waiting (max {}), retry in ~{} ms",
+            self.depth, self.max_queue, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// Streaming event for one request, delivered over the channel returned by
 /// [`Engine::submit_stream`]. Tokens are sent the moment the engine step
@@ -134,6 +192,13 @@ pub enum TokenEvent {
     /// `Token` variant small; `stats.generated` repeats the full
     /// continuation already streamed token-by-token.
     Done(Box<RequestStats>),
+    /// Terminal event: the request was aborted before completing — hard
+    /// timeout ([`EngineConfig::request_timeout`]) or client disconnect
+    /// ([`EngineConfig::cancel_on_disconnect`]). `stats.abort_reason`
+    /// says which; `stats.generated` holds whatever partial continuation
+    /// was streamed before the abort. Sent at most once, instead of
+    /// [`TokenEvent::Done`], and never both.
+    Aborted(Box<RequestStats>),
 }
 
 /// Completed-request accounting.
@@ -157,6 +222,9 @@ pub struct RequestStats {
     pub ttft_ms: f64,
     /// submit → last generated token
     pub latency_ms: f64,
+    /// why the request was aborted (`"timeout"` or `"disconnect"`);
+    /// `None` for a normally completed request
+    pub abort_reason: Option<&'static str>,
     /// the generated continuation (prompt excluded)
     pub generated: Vec<u16>,
 }
@@ -194,6 +262,22 @@ pub struct ServeReport {
     /// speculative rounds that fell back to a plain one-token decode (no
     /// fork page budget, or no draft headroom left in the request)
     pub spec_fallbacks: usize,
+    /// in-flight sequences evicted under budget pressure (preemption)
+    pub preempt_evictions: usize,
+    /// tokens re-prefilled when preempted sequences resumed (a subset of
+    /// `prefill_tokens` — the cost of the evictions)
+    pub preempt_reprefill_tokens: usize,
+    /// requests aborted by the `--request-timeout-ms` hard timeout
+    pub aborts_timeout: usize,
+    /// requests aborted because every stream receiver disconnected
+    /// (`--cancel-on-disconnect`)
+    pub aborts_disconnect: usize,
+    /// submissions rejected by the `--max-queue` bound (HTTP 429)
+    pub rejections_429: usize,
+    /// decode steps spent past a soft deadline when no hard timeout is set
+    /// (summed over missed requests; the per-request distribution is the
+    /// `armor_past_deadline_steps` histogram)
+    pub past_deadline_steps: usize,
     /// peak unique pool pages held, in bytes (live memory)
     pub kv_resident_bytes: usize,
     /// peak worst-case page reservations, in bytes (the admission axis —
@@ -317,6 +401,21 @@ impl ServeReport {
                 self.spec_fallbacks
             ));
         }
+        if self.preempt_evictions > 0
+            || self.aborts_timeout + self.aborts_disconnect > 0
+            || self.rejections_429 > 0
+            || self.past_deadline_steps > 0
+        {
+            s.push_str(&format!(
+                "robustness: preemptions {} ({} tok re-prefilled)  aborts {} timeout / {} disconnect  429 rejections {}  past-deadline steps {}\n",
+                self.preempt_evictions,
+                self.preempt_reprefill_tokens,
+                self.aborts_timeout,
+                self.aborts_disconnect,
+                self.rejections_429,
+                self.past_deadline_steps
+            ));
+        }
         s.push_str(&format!(
             "kv pool peaks: resident {:.1} KiB  reserved {:.1} KiB  shared {:.1} KiB\n",
             self.kv_resident_bytes as f64 / 1024.0,
@@ -350,6 +449,14 @@ struct ServeMetrics {
     spec_drafted: Arc<Counter>,
     spec_accepted: Arc<Counter>,
     spec_fallbacks: Arc<Counter>,
+    preempt_evictions: Arc<Counter>,
+    preempt_reprefill_tokens: Arc<Counter>,
+    aborts_timeout: Arc<Counter>,
+    aborts_disconnect: Arc<Counter>,
+    rejections_429: Arc<Counter>,
+    pool_release_underflow: Arc<Counter>,
+    failpoint_kv_alloc: Arc<Counter>,
+    past_deadline_steps_total: Arc<Counter>,
     peak_batch: Arc<Gauge>,
     max_step_prefill: Arc<Gauge>,
     kv_resident_peak: Arc<Gauge>,
@@ -358,6 +465,7 @@ struct ServeMetrics {
     serve_wall_ms: Arc<Gauge>,
     queue_depth: Arc<Gauge>,
     active_seqs: Arc<Gauge>,
+    preempted_seqs: Arc<Gauge>,
     step_us: Arc<Histogram>,
     admit_us: Arc<Histogram>,
     lookup_us: Arc<Histogram>,
@@ -368,6 +476,7 @@ struct ServeMetrics {
     retire_us: Arc<Histogram>,
     ttft_us: Arc<Histogram>,
     latency_us: Arc<Histogram>,
+    past_deadline_hist: Arc<Histogram>,
 }
 
 impl ServeMetrics {
@@ -450,6 +559,46 @@ impl ServeMetrics {
                 &[],
                 "Speculative rounds that fell back to plain decode (no fork budget or draft headroom).",
             ),
+            preempt_evictions: r.counter(
+                "armor_preempt_evictions_total",
+                &[],
+                "In-flight sequences evicted under budget pressure (preemption).",
+            ),
+            preempt_reprefill_tokens: r.counter(
+                "armor_preempt_reprefill_tokens_total",
+                &[],
+                "Tokens re-prefilled when preempted sequences resumed.",
+            ),
+            aborts_timeout: r.counter(
+                "armor_aborts_total",
+                &[("reason", "timeout")],
+                "Requests aborted before completion, by reason.",
+            ),
+            aborts_disconnect: r.counter(
+                "armor_aborts_total",
+                &[("reason", "disconnect")],
+                "Requests aborted before completion, by reason.",
+            ),
+            rejections_429: r.counter(
+                "armor_rejections_429_total",
+                &[],
+                "Submissions rejected by the --max-queue bound (HTTP 429).",
+            ),
+            pool_release_underflow: r.counter(
+                "armor_pool_release_underflow_total",
+                &[],
+                "Reservation releases exceeding the outstanding total (saturated; a bug signal, never a panic).",
+            ),
+            failpoint_kv_alloc: r.counter(
+                "armor_failpoint_fired_total",
+                &[("site", "kv_alloc")],
+                "Injected faults fired, by site (ARMOR_FAILPOINTS).",
+            ),
+            past_deadline_steps_total: r.counter(
+                "armor_past_deadline_steps_total",
+                &[],
+                "Decode steps spent past a soft deadline when no hard timeout is set (sum over requests).",
+            ),
             peak_batch: r.gauge(
                 "armor_peak_batch",
                 &[],
@@ -482,6 +631,11 @@ impl ServeMetrics {
             ),
             queue_depth: r.gauge("armor_queue_depth", &[], "Requests waiting for admission."),
             active_seqs: r.gauge("armor_active_seqs", &[], "Sequences in the in-flight batch."),
+            preempted_seqs: r.gauge(
+                "armor_preempted_seqs",
+                &[],
+                "Sequences parked by preemption, awaiting re-admission.",
+            ),
             step_us: r.histogram(
                 "armor_step_us",
                 &[("plane", plane)],
@@ -504,6 +658,11 @@ impl ServeMetrics {
                 &[],
                 "Submit to last generated token (microseconds).",
             ),
+            past_deadline_hist: r.histogram(
+                "armor_past_deadline_steps",
+                &[],
+                "Per-request decode steps past its soft deadline (recorded at retirement of missed requests when no hard timeout is set).",
+            ),
             registry: r,
         }
     }
@@ -525,6 +684,12 @@ struct CounterBase {
     spec_drafted: u64,
     spec_accepted: u64,
     spec_fallbacks: u64,
+    preempt_evictions: u64,
+    preempt_reprefill_tokens: u64,
+    aborts_timeout: u64,
+    aborts_disconnect: u64,
+    rejections_429: u64,
+    past_deadline_steps: u64,
 }
 
 /// Last-synced values of the monotonic counters owned by the pool, prefix
@@ -540,6 +705,26 @@ struct SourceCounters {
     pages_freed: usize,
     cow_copies: usize,
     promotions: u64,
+    release_underflows: usize,
+}
+
+/// The admission-order urgency key shared by preemption victim selection
+/// and preempted re-admission: **smaller = more urgent**, in exactly the
+/// order the scheduler admits — arrival id under FIFO, live aged lane under
+/// priority, the EDF key under deadline. Only one policy's variant is ever
+/// constructed per engine, so the cross-variant derive order never applies;
+/// within a policy, ids break every tie, giving a total order — preemption
+/// can therefore require a *strictly* less urgent victim and never thrash
+/// between equals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Urgency {
+    /// FIFO: arrival id (in-flight ids are always smaller than waiting
+    /// ones, so FIFO never preempts by construction).
+    Fifo(RequestId),
+    /// Priority: (aged lane, id) — the same aging clock as the queue.
+    Priority(u64, RequestId),
+    /// Deadline: the [`edf_key`] tuple (deadline-less last).
+    Deadline(bool, Option<Instant>, RequestId),
 }
 
 /// Phase-timing anchor: wall-clock start plus the trace-clock start
@@ -603,6 +788,22 @@ pub struct Engine {
     /// per-request streaming channels ([`Engine::submit_stream`]); an entry
     /// is removed when its request retires (after the `Done` event is sent)
     sinks: HashMap<RequestId, mpsc::Sender<TokenEvent>>,
+    /// preemption enabled ([`EngineConfig::preempt`])
+    preempt_on: bool,
+    /// admission-queue bound ([`EngineConfig::max_queue`])
+    max_queue: Option<usize>,
+    /// hard per-request timeout ([`EngineConfig::request_timeout`])
+    request_timeout: Option<Duration>,
+    /// abort on client disconnect ([`EngineConfig::cancel_on_disconnect`])
+    cancel_on_disconnect: bool,
+    /// sequences evicted under budget pressure, parked (no batch slot, no
+    /// pages, no reservation) until re-admission re-prefills them
+    preempted: Vec<ActiveSeq>,
+    /// requests whose stream send failed (receiver dropped) — aborted at
+    /// the next step boundary when `cancel_on_disconnect` is set
+    disconnected: HashSet<RequestId>,
+    /// deterministic fault injection (`ARMOR_FAILPOINTS`), off when `None`
+    failpoints: Option<Arc<FailPoints>>,
 }
 
 impl Engine {
@@ -630,6 +831,11 @@ impl Engine {
             cfg.spec != Some(0),
             "speculative draft length must be >= 1 token (omit --spec to disable)"
         );
+        crate::ensure!(
+            cfg.max_queue != Some(0),
+            "max queue must be >= 1 waiting request (omit --max-queue for unbounded)"
+        );
+        let failpoints = FailPoints::from_env()?.map(Arc::new);
         let pool =
             KvPool::new_with_quant(&model.cfg, cfg.page_positions, cfg.kv_budget_bytes, cfg.kv_quant)?;
         let prefix = if cfg.prefix_sharing {
@@ -676,6 +882,13 @@ impl Engine {
             base: CounterBase::default(),
             src: SourceCounters::default(),
             sinks: HashMap::new(),
+            preempt_on: cfg.preempt,
+            max_queue: cfg.max_queue,
+            request_timeout: cfg.request_timeout,
+            cancel_on_disconnect: cfg.cancel_on_disconnect,
+            preempted: Vec::new(),
+            disconnected: HashSet::new(),
+            failpoints,
         })
     }
 
@@ -736,6 +949,20 @@ impl Engine {
         self.trace.as_ref()
     }
 
+    /// Replace the fault-injection registry (chaos tests arm engines
+    /// explicitly with [`FailPoints::parse`]; `None` disarms — important
+    /// when `ARMOR_FAILPOINTS` is exported to a whole test run but a
+    /// baseline engine must stay clean).
+    pub fn set_failpoints(&mut self, fp: Option<FailPoints>) {
+        self.failpoints = fp.map(Arc::new);
+    }
+
+    /// The armed fault-injection registry, if any (the service worker
+    /// checks it for its own sites).
+    pub fn failpoints(&self) -> Option<&Arc<FailPoints>> {
+        self.failpoints.as_ref()
+    }
+
     /// Enqueue a generation request at default priority with no deadline —
     /// see [`Engine::submit_with`].
     pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> RequestId {
@@ -783,6 +1010,22 @@ impl Engine {
         priority: u8,
         deadline: Option<Duration>,
     ) -> RequestId {
+        self.try_submit_with(prompt, max_new, priority, deadline)
+            .expect("bounded queue rejected the submission; use try_submit_with with --max-queue")
+    }
+
+    /// [`Engine::submit_with`], surfacing the bounded-queue rejection
+    /// instead of panicking: with [`EngineConfig::max_queue`] set and the
+    /// queue at its bound, returns [`QueueFull`] (the overload signal the
+    /// HTTP front-end renders as 429). Never errs without a bound, or for
+    /// `max_new == 0` (which completes immediately, touching no queue).
+    pub fn try_submit_with(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<RequestId, QueueFull> {
         self.submit_opts(prompt, max_new, priority, deadline, None)
     }
 
@@ -798,10 +1041,22 @@ impl Engine {
         max_new: usize,
         priority: u8,
         deadline: Option<Duration>,
-    ) -> (RequestId, mpsc::Receiver<TokenEvent>) {
+    ) -> Result<(RequestId, mpsc::Receiver<TokenEvent>), QueueFull> {
         let (tx, rx) = mpsc::channel();
-        let id = self.submit_opts(prompt, max_new, priority, deadline, Some(tx));
-        (id, rx)
+        let id = self.submit_opts(prompt, max_new, priority, deadline, Some(tx))?;
+        Ok((id, rx))
+    }
+
+    /// Suggested client back-off for a [`QueueFull`] rejection: the mean
+    /// request latency observed so far, clamped to `[100 ms, 10 s]`
+    /// (1 s before any request has retired).
+    fn retry_after_ms(&self) -> u64 {
+        let mean_us = self.metrics.latency_us.mean();
+        if mean_us.is_finite() && mean_us > 0.0 {
+            ((mean_us / 1e3) as u64).clamp(100, 10_000)
+        } else {
+            1_000
+        }
     }
 
     fn submit_opts(
@@ -811,7 +1066,24 @@ impl Engine {
         priority: u8,
         deadline: Option<Duration>,
         sink: Option<mpsc::Sender<TokenEvent>>,
-    ) -> RequestId {
+    ) -> Result<RequestId, QueueFull> {
+        // overload control: a bounded queue sheds load at submission time
+        // (the only unbounded buffer in the serve plane), before any
+        // clamping or id issue — a rejected request leaves no trace but
+        // the 429 counter
+        if max_new > 0 {
+            if let Some(maxq) = self.max_queue {
+                let depth = self.sched.pending_len();
+                if depth >= maxq {
+                    self.metrics.rejections_429.inc();
+                    return Err(QueueFull {
+                        depth,
+                        max_queue: maxq,
+                        retry_after_ms: self.retry_after_ms(),
+                    });
+                }
+            }
+        }
         let window = self.pool.budget_max_len();
         let start = prompt.len().saturating_sub(window);
         let prompt: Vec<u16> = if prompt.is_empty() {
@@ -839,13 +1111,14 @@ impl Engine {
                 deadline_missed: false,
                 ttft_ms: 0.0,
                 latency_ms: 0.0,
+                abort_reason: None,
                 generated: Vec::new(),
             };
             if let Some(tx) = sink {
                 let _ = tx.send(TokenEvent::Done(Box::new(stats.clone())));
             }
             self.finished.push(stats);
-            return id;
+            return Ok(id);
         }
         let max_new = max_new.clamp(1, window + 1 - prompt.len());
         let id = self
@@ -854,12 +1127,12 @@ impl Engine {
         if let Some(tx) = sink {
             self.sinks.insert(id, tx);
         }
-        id
+        Ok(id)
     }
 
-    /// Requests not yet completed (waiting or in flight).
+    /// Requests not yet completed (waiting, in flight, or preempted).
     pub fn outstanding(&self) -> usize {
-        self.sched.pending_len() + self.sched.active_len()
+        self.sched.pending_len() + self.sched.active_len() + self.preempted.len()
     }
 
     /// Whether `id` has completed and awaits the next [`Engine::drain`].
@@ -926,45 +1199,113 @@ impl Engine {
         let step_start = begin_phase(timing, &trace);
         self.steps_seen += 1;
         self.sched.tick();
+        // abort expired / disconnected work first: their freed pages and
+        // batch slots are admissible in this very step
+        self.abort_expired(&m, &trace);
         let mut produced = 0usize;
 
-        // --- admission: budget-gated entry into free batch slots ---
+        // --- admission: budget-gated entry into free batch slots. The
+        //     queue head and the most urgent *preempted* sequence compete
+        //     for each slot in the policy's own urgency order; when the
+        //     budget rejects the winner, preemption may evict a strictly
+        //     less urgent in-flight victim to make room ---
         let admit_start = begin_phase(timing, &trace);
         let mut admitted = 0usize;
         loop {
-            let Some(req) = self.sched.peek_admittable() else { break };
-            let need = self.worst_case_len(req.prompt.len(), req.max_new);
+            if !self.sched.has_capacity() {
+                break;
+            }
+            let tick = self.sched.current_tick();
+            // Copy snapshots (urgency, prompt_len, max_new) so the queue /
+            // parked borrows end before any mutation below.
+            let head = self
+                .sched
+                .peek_admittable_with_lane()
+                .map(|(lane, r)| {
+                    (self.seq_urgency(lane as u64, r.deadline, r.id), r.prompt.len(), r.max_new)
+                });
+            let parked = self
+                .preempted
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    (
+                        self.seq_urgency(s.effective_priority(tick), s.deadline, s.id),
+                        i,
+                        s.prompt.len(),
+                        s.max_new,
+                    )
+                })
+                .min_by_key(|&(u, ..)| u);
+            let (urgency, parked_idx, prompt_len, max_new) = match (head, parked) {
+                (None, None) => break,
+                (Some((uh, pl, mn)), None) => (uh, None, pl, mn),
+                (None, Some((up, i, pl, mn))) => (up, Some(i), pl, mn),
+                (Some((uh, pl, mn)), Some((up, i, ppl, pmn))) => {
+                    // ids differ, so the total order never ties; <= is just
+                    // belt and braces favoring the fresh arrival
+                    if uh <= up {
+                        (uh, None, pl, mn)
+                    } else {
+                        (up, Some(i), ppl, pmn)
+                    }
+                }
+            };
+            // a preempted sequence's final cache length is unchanged by the
+            // detour (replay + remaining == prompt + max_new - 1), so the
+            // original worst case is its exact re-admission demand too
+            let need = self.worst_case_len(prompt_len, max_new);
             let demand = self.pool.pages_for_seq(need);
-            if !self.pool.try_reserve(demand) {
+            if !self.try_reserve_faulty(demand) {
                 // shed cold prefix chains before making the request queue —
                 // but only while eviction can actually cover the shortfall;
                 // otherwise keep the cache warm and wait for retirements
                 let eviction_helps =
                     demand <= self.pool.pages_free() + self.prefix.reserved_pages();
-                if !eviction_helps || !self.prefix.evict_lru() {
-                    break;
+                if eviction_helps && self.prefix.evict_lru() {
+                    continue;
                 }
-                continue;
+                if self.preempt_on && self.try_preempt(urgency, &m, &trace) {
+                    continue;
+                }
+                break;
             }
-            let req = self.sched.pop_admittable().expect("peeked request vanished");
-            let admitted_tick = self.sched.current_tick();
-            self.sched.admit(ActiveSeq {
-                id: req.id,
-                cache: self.pool.new_cache(),
-                prompt: req.prompt,
-                max_new: req.max_new,
-                phase: SeqPhase::Prefilling { next: 0 },
-                priority: req.priority,
-                admitted_tick,
-                deadline: req.deadline,
-                reserved_pages: demand,
-                reused_tokens: 0,
-                generated: Vec::new(),
-                last_token: 0,
-                spec_k: self.spec.unwrap_or(0),
-                submitted: req.submitted,
-                first_token_at: None,
-            });
+            match parked_idx {
+                None => {
+                    let req = self.sched.pop_admittable().expect("peeked request vanished");
+                    let admitted_tick = self.sched.current_tick();
+                    self.sched.admit(ActiveSeq {
+                        id: req.id,
+                        cache: self.pool.new_cache(),
+                        prompt: req.prompt,
+                        max_new: req.max_new,
+                        phase: SeqPhase::Prefilling { next: 0 },
+                        priority: req.priority,
+                        admitted_tick,
+                        deadline: req.deadline,
+                        reserved_pages: demand,
+                        reused_tokens: 0,
+                        generated: Vec::new(),
+                        last_token: 0,
+                        spec_k: self.spec.unwrap_or(0),
+                        submitted: req.submitted,
+                        first_token_at: None,
+                        replay: None,
+                        past_deadline_steps: 0,
+                    });
+                }
+                Some(i) => {
+                    // re-admission: a fresh reservation and an empty cache;
+                    // chunked prefill rebuilds the KV state from the
+                    // recorded replay (aging clock keeps its original
+                    // admitted_tick, so parking never resets urgency)
+                    let mut seq = self.preempted.swap_remove(i);
+                    seq.reserved_pages = demand;
+                    seq.cache = self.pool.new_cache();
+                    seq.phase = SeqPhase::Prefilling { next: 0 };
+                    self.sched.admit(seq);
+                }
+            }
             admitted += 1;
         }
         end_phase(
@@ -987,15 +1328,21 @@ impl Engine {
             let seq_start = begin_phase(timing, &trace);
             let seq = &mut self.sched.active[i];
             let SeqPhase::Prefilling { mut next } = seq.phase else { unreachable!() };
+            // a re-admitted preempted sequence prefills its recorded
+            // *replay* (prompt ++ generated minus the trailing token)
+            // instead of the prompt; chunking, prefix lookup, and
+            // registration treat the replay exactly like a fresh prompt
             if seq.cache.is_empty() {
                 // first touch: prefix-cache lookup. Deferred to here (not
                 // admission) so a prefix registered by an earlier request
                 // this same step is already visible.
                 debug_assert_eq!(next, 0);
                 let lookup_start = begin_phase(timing, &trace);
-                if let Some(c) = self.prefix.lookup(&seq.prompt) {
+                if let Some(c) = self.prefix.lookup(seq.replay.as_deref().unwrap_or(&seq.prompt)) {
                     next = c.len();
-                    seq.reused_tokens = next;
+                    if seq.replay.is_none() {
+                        seq.reused_tokens = next;
+                    }
                     seq.cache = c;
                     if let Some(tr) = &trace {
                         tr.instant(
@@ -1016,26 +1363,57 @@ impl Engine {
                     vec![("reused".to_string(), Json::Num(next as f64))],
                 );
             }
-            let n = (seq.prompt.len() - next).min(budget);
-            let logits = self.model.prefill(&mut seq.cache, &seq.prompt[next..next + n]);
+            let total = seq.replay.as_ref().map_or(seq.prompt.len(), Vec::len);
+            let n = (total - next).min(budget);
+            let logits = match &seq.replay {
+                Some(rp) => self.model.prefill(&mut seq.cache, &rp[next..next + n]),
+                None => self.model.prefill(&mut seq.cache, &seq.prompt[next..next + n]),
+            };
             next += n;
             budget -= n;
             spent += n;
             m.prefill_tokens.add(n as u64);
+            if seq.replay.is_some() {
+                m.preempt_reprefill_tokens.add(n as u64);
+            }
             let id = seq.id.0;
-            let done = next == seq.prompt.len();
+            let done = next == total;
             if done {
-                self.prefix.register(&seq.prompt, &seq.cache);
-                let first = argmax(logits.row(logits.rows - 1)) as u16;
-                seq.generated.push(first);
-                seq.last_token = first;
-                seq.first_token_at = Some(Instant::now());
-                seq.phase = SeqPhase::Decoding;
-                if let Some(tx) = self.sinks.get(&seq.id) {
-                    let _ = tx.send(TokenEvent::Token { index: 0, token: first });
+                match seq.replay.take() {
+                    Some(replay) => {
+                        // replay complete: the cache again holds prompt ++
+                        // generated[..m-1] with `last_token` the pending
+                        // decode input — resume decoding, emitting nothing
+                        // (every token here was already streamed before
+                        // the eviction)
+                        self.prefix.register(&replay, &seq.cache);
+                        seq.phase = SeqPhase::Decoding;
+                        if let Some(tr) = &trace {
+                            tr.instant(
+                                "reprefill_done",
+                                "engine",
+                                vec![("id".to_string(), Json::Num(id as f64))],
+                            );
+                        }
+                    }
+                    None => {
+                        self.prefix.register(&seq.prompt, &seq.cache);
+                        let first = argmax(logits.row(logits.rows - 1)) as u16;
+                        seq.generated.push(first);
+                        seq.last_token = first;
+                        seq.first_token_at = Some(Instant::now());
+                        seq.phase = SeqPhase::Decoding;
+                        if let Some(tx) = self.sinks.get(&seq.id) {
+                            if tx.send(TokenEvent::Token { index: 0, token: first }).is_err()
+                                && self.cancel_on_disconnect
+                            {
+                                self.disconnected.insert(seq.id);
+                            }
+                        }
+                        m.generated_tokens.inc();
+                        produced += 1;
+                    }
                 }
-                m.generated_tokens.inc();
-                produced += 1;
             } else {
                 seq.phase = SeqPhase::Prefilling { next };
             }
@@ -1094,10 +1472,13 @@ impl Engine {
                     seq.generated.push(next);
                     seq.last_token = next;
                     if let Some(tx) = self.sinks.get(&seq.id) {
-                        let _ = tx.send(TokenEvent::Token {
+                        let sent = tx.send(TokenEvent::Token {
                             index: seq.generated.len() - 1,
                             token: next,
                         });
+                        if sent.is_err() && self.cancel_on_disconnect {
+                            self.disconnected.insert(seq.id);
+                        }
                     }
                 }
                 bsz
@@ -1114,6 +1495,17 @@ impl Engine {
                     ("produced".to_string(), Json::Num(emitted as f64)),
                 ],
             );
+            // soft-deadline visibility: when no hard timeout is set, count
+            // the decode steps each sequence spends past its soft deadline
+            // (folded into the past-deadline histogram at retirement)
+            if self.request_timeout.is_none() {
+                let now = Instant::now();
+                for seq in self.sched.active.iter_mut() {
+                    if seq.phase == SeqPhase::Decoding && seq.deadline.is_some_and(|d| now > d) {
+                        seq.past_deadline_steps += 1;
+                    }
+                }
+            }
             self.sample_sharing();
             self.retire();
         }
@@ -1125,12 +1517,14 @@ impl Engine {
         // off so a live `/v1/stats` snapshot always sees current depths
         m.queue_depth.set(self.sched.pending_len() as f64);
         m.active_seqs.set(self.sched.active_len() as f64);
+        m.preempted_seqs.set(self.preempted.len() as f64);
         if let Some(tr) = &trace {
             tr.counter(
                 "queue",
                 vec![
                     ("pending".to_string(), self.sched.pending_len() as f64),
                     ("active".to_string(), self.sched.active_len() as f64),
+                    ("preempted".to_string(), self.preempted.len() as f64),
                 ],
             );
             tr.counter(
@@ -1211,7 +1605,7 @@ impl Engine {
                 (seq.id, len, k)
             };
             let demand = self.pool.pages_for_fork_growth(len, k);
-            if k == 0 || !self.pool.try_reserve(demand) {
+            if k == 0 || !self.try_reserve_faulty(demand) {
                 m.spec_fallbacks.inc();
                 let seq = &mut self.sched.active[i];
                 let logits = self.model.decode_batch(&mut [&mut seq.cache], &[seq.last_token]);
@@ -1219,10 +1613,13 @@ impl Engine {
                 seq.generated.push(next);
                 seq.last_token = next;
                 if let Some(tx) = self.sinks.get(&seq.id) {
-                    let _ = tx.send(TokenEvent::Token {
+                    let sent = tx.send(TokenEvent::Token {
                         index: seq.generated.len() - 1,
                         token: next,
                     });
+                    if sent.is_err() && self.cancel_on_disconnect {
+                        self.disconnected.insert(seq.id);
+                    }
                 }
                 emitted_total += 1;
                 continue;
@@ -1275,15 +1672,242 @@ impl Engine {
                 seq.generated.push(t);
                 seq.last_token = t;
                 if let Some(tx) = self.sinks.get(&seq.id) {
-                    let _ = tx.send(TokenEvent::Token {
+                    let sent = tx.send(TokenEvent::Token {
                         index: seq.generated.len() - 1,
                         token: t,
                     });
+                    if sent.is_err() && self.cancel_on_disconnect {
+                        self.disconnected.insert(seq.id);
+                    }
                 }
                 emitted_total += 1;
             }
         }
         emitted_total
+    }
+
+    /// The urgency key for one request under the engine's policy (see
+    /// [`Urgency`]): `aged_lane` is the live lane — the queue's current
+    /// lane for a waiting request, [`ActiveSeq::effective_priority`] for an
+    /// in-flight or parked one — so admission, victim selection, and
+    /// re-admission all rank by the same aging clock.
+    fn seq_urgency(&self, aged_lane: u64, deadline: Option<Instant>, id: RequestId) -> Urgency {
+        match self.sched.policy() {
+            SchedPolicy::Fifo => Urgency::Fifo(id),
+            SchedPolicy::Priority => Urgency::Priority(aged_lane, id),
+            SchedPolicy::Deadline => {
+                let (none, d, id) = edf_key(deadline, id);
+                Urgency::Deadline(none, d, id)
+            }
+        }
+    }
+
+    /// [`KvPool::try_reserve`] behind the `kv_alloc` failpoint: an armed
+    /// registry may deterministically refuse the reservation as if the
+    /// budget were exhausted (counted in `armor_failpoint_fired_total`).
+    /// Injected refusals only delay work — admission retries, speculation
+    /// falls back to plain decode, preemption stays output-identical — so
+    /// chaos runs must produce bit-identical outputs.
+    fn try_reserve_faulty(&self, demand: usize) -> bool {
+        if let Some(fp) = &self.failpoints {
+            if fp.should_fire(FP_KV_ALLOC) {
+                self.metrics.failpoint_kv_alloc.inc();
+                return false;
+            }
+        }
+        self.pool.try_reserve(demand)
+    }
+
+    /// Evict the least-urgent in-flight sequence to make room for a
+    /// strictly more urgent `candidate`: drop its KV chains, return its
+    /// reservation exactly, record the replay stream, and park it for
+    /// re-admission. Returns whether a victim was evicted. The strict
+    /// comparison (plus the id tiebreak inside [`Urgency`]) means two
+    /// sequences can never evict each other back and forth, and FIFO never
+    /// preempts at all (in-flight ids are always smaller).
+    fn try_preempt(
+        &mut self,
+        candidate: Urgency,
+        m: &ServeMetrics,
+        trace: &Option<TraceRecorder>,
+    ) -> bool {
+        let tick = self.sched.current_tick();
+        let key = |s: &ActiveSeq| self.seq_urgency(s.effective_priority(tick), s.deadline, s.id);
+        let Some(idx) = (0..self.sched.active.len()).max_by_key(|&i| key(&self.sched.active[i]))
+        else {
+            return false;
+        };
+        if key(&self.sched.active[idx]) <= candidate {
+            return false;
+        }
+        let mut seq = self.sched.active.remove(idx);
+        // drop the chains and the reservation *exactly*; a parked sequence
+        // holds no pages and no batch slot
+        self.pool.release(seq.reserved_pages);
+        seq.reserved_pages = 0;
+        seq.cache = self.pool.new_cache();
+        if seq.generated.is_empty() {
+            // preempted mid-prefill: nothing streamed yet, so the replay is
+            // just the prompt again (partial chunk progress is discarded
+            // with the cache, and the fresh prefix lookup re-counts reuse)
+            seq.replay = None;
+            seq.reused_tokens = 0;
+        } else {
+            // the cache held prompt ++ generated[..m-1]; `last_token` is
+            // the decode input not yet cached, so exactly that is replayed
+            let mut rp = seq.prompt.clone();
+            rp.extend_from_slice(&seq.generated[..seq.generated.len() - 1]);
+            seq.replay = Some(rp);
+        }
+        seq.phase = SeqPhase::Preempted;
+        m.preempt_evictions.inc();
+        if let Some(tr) = trace {
+            tr.instant(
+                "preempt",
+                "engine",
+                vec![
+                    ("id".to_string(), Json::Num(seq.id.0 as f64)),
+                    ("generated".to_string(), Json::Num(seq.generated.len() as f64)),
+                ],
+            );
+        }
+        self.preempted.push(seq);
+        true
+    }
+
+    /// The step-boundary abort pass: hard request timeouts
+    /// (`--request-timeout-ms`) across the queue, the in-flight batch, and
+    /// the parked set, then client-disconnect cancellation
+    /// (`--cancel-on-disconnect`) over the ids whose stream send failed.
+    /// Runs at the top of [`Engine::step`], so freed pages and batch slots
+    /// are admissible in the same step.
+    fn abort_expired(&mut self, m: &ServeMetrics, trace: &Option<TraceRecorder>) {
+        if let Some(timeout) = self.request_timeout {
+            let now = Instant::now();
+            let expired = move |submitted: Instant| now.duration_since(submitted) >= timeout;
+            // queued: aborted without ever holding a slot, pages, or a
+            // reservation
+            for req in self.sched.take_pending_where(|r| expired(r.submitted)) {
+                let seq = ActiveSeq {
+                    id: req.id,
+                    cache: self.pool.new_cache(),
+                    prompt: req.prompt,
+                    max_new: req.max_new,
+                    phase: SeqPhase::Preempted,
+                    priority: req.priority,
+                    admitted_tick: 0,
+                    deadline: req.deadline,
+                    reserved_pages: 0,
+                    reused_tokens: 0,
+                    generated: Vec::new(),
+                    last_token: 0,
+                    spec_k: 0,
+                    submitted: req.submitted,
+                    first_token_at: None,
+                    replay: None,
+                    past_deadline_steps: 0,
+                };
+                self.abort_seq(seq, "timeout", m, trace);
+            }
+            let mut i = 0;
+            while i < self.sched.active.len() {
+                if expired(self.sched.active[i].submitted) {
+                    let seq = self.sched.active.remove(i);
+                    self.abort_seq(seq, "timeout", m, trace);
+                } else {
+                    i += 1;
+                }
+            }
+            let mut i = 0;
+            while i < self.preempted.len() {
+                if expired(self.preempted[i].submitted) {
+                    let seq = self.preempted.swap_remove(i);
+                    self.abort_seq(seq, "timeout", m, trace);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if self.cancel_on_disconnect && !self.disconnected.is_empty() {
+            let gone = std::mem::take(&mut self.disconnected);
+            let mut i = 0;
+            while i < self.sched.active.len() {
+                if gone.contains(&self.sched.active[i].id) {
+                    let seq = self.sched.active.remove(i);
+                    self.abort_seq(seq, "disconnect", m, trace);
+                } else {
+                    i += 1;
+                }
+            }
+            let mut i = 0;
+            while i < self.preempted.len() {
+                if gone.contains(&self.preempted[i].id) {
+                    let seq = self.preempted.swap_remove(i);
+                    self.abort_seq(seq, "disconnect", m, trace);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Terminal abort accounting, shared by every abort path (queued,
+    /// in-flight, preempted): return the reservation, count the request as
+    /// completed — the drain invariant `finished.len() == requests delta`
+    /// includes aborts — record its latency, emit the trace instant and the
+    /// terminal [`TokenEvent::Aborted`], and file the partial stats.
+    fn abort_seq(
+        &mut self,
+        seq: ActiveSeq,
+        reason: &'static str,
+        m: &ServeMetrics,
+        trace: &Option<TraceRecorder>,
+    ) {
+        self.pool.release(seq.reserved_pages);
+        match reason {
+            "timeout" => m.aborts_timeout.inc(),
+            _ => m.aborts_disconnect.inc(),
+        }
+        m.requests.inc();
+        let now = Instant::now();
+        let ttft = seq
+            .first_token_at
+            .map(|t| t.duration_since(seq.submitted).as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let latency_ms = now.duration_since(seq.submitted).as_secs_f64() * 1e3;
+        m.ttft_us.record((ttft * 1e3) as u64);
+        m.latency_us.record((latency_ms * 1e3) as u64);
+        if let Some(tr) = trace {
+            tr.instant(
+                "abort",
+                "engine",
+                vec![
+                    ("id".to_string(), Json::Num(seq.id.0 as f64)),
+                    ("reason".to_string(), Json::Str(reason.to_string())),
+                ],
+            );
+        }
+        let stats = RequestStats {
+            id: seq.id,
+            prompt_len: seq.prompt.len(),
+            n_generated: seq.generated.len(),
+            reused_tokens: seq.reused_tokens,
+            priority: seq.priority,
+            deadline_ms: seq
+                .deadline
+                .map(|d| d.duration_since(seq.submitted).as_secs_f64() * 1e3),
+            // an abort is not a (late) completion — misses count completed
+            // requests only
+            deadline_missed: false,
+            ttft_ms: ttft,
+            latency_ms,
+            abort_reason: Some(reason),
+            generated: seq.generated,
+        };
+        if let Some(tx) = self.sinks.remove(&seq.id) {
+            let _ = tx.send(TokenEvent::Aborted(Box::new(stats.clone())));
+        }
+        self.finished.push(stats);
     }
 
     /// Fold the monotonic counters owned by the pool, prefix registry, and
@@ -1300,9 +1924,11 @@ impl Engine {
             pages_freed: self.pool.pages_freed_total(),
             cow_copies: self.pool.cow_copies(),
             promotions: self.sched.promotions(),
+            release_underflows: self.pool.release_underflows(),
         };
         let d = |new: usize, old: usize| new.saturating_sub(old) as u64;
         let m = &self.metrics;
+        m.pool_release_underflow.add(d(cur.release_underflows, self.src.release_underflows));
         m.prefix_hits.add(d(cur.prefix_hits, self.src.prefix_hits));
         m.prefix_misses.add(d(cur.prefix_misses, self.src.prefix_misses));
         m.prefix_hit_tokens.add(d(cur.prefix_reused, self.src.prefix_reused));
@@ -1359,6 +1985,12 @@ impl Engine {
             let missed = seq.deadline.is_some_and(|d| now > d);
             if missed {
                 m.deadline_misses.inc();
+                if self.request_timeout.is_none() {
+                    // how long the engine kept decoding past the soft
+                    // deadline — the waste a hard timeout would have cut
+                    m.past_deadline_steps_total.add(seq.past_deadline_steps);
+                    m.past_deadline_hist.record(seq.past_deadline_steps);
+                }
                 if let Some(tr) = &trace {
                     tr.instant(
                         "deadline_miss",
@@ -1383,6 +2015,7 @@ impl Engine {
                 deadline_missed: missed,
                 ttft_ms: ttft,
                 latency_ms,
+                abort_reason: None,
                 generated: seq.generated,
             };
             if let Some(tx) = self.sinks.remove(&seq.id) {
@@ -1411,7 +2044,7 @@ impl Engine {
     /// are published to their gauges here for the same reason.
     pub fn drain(&mut self) -> ServeReport {
         let t0 = self.window_start.take().unwrap_or_else(Instant::now);
-        while !self.sched.is_idle() {
+        while !self.sched.is_idle() || !self.preempted.is_empty() {
             self.step();
         }
         self.sync_sources();
@@ -1449,6 +2082,14 @@ impl Engine {
             spec_drafted: (m.spec_drafted.get() - base.spec_drafted) as usize,
             spec_accepted: (m.spec_accepted.get() - base.spec_accepted) as usize,
             spec_fallbacks: (m.spec_fallbacks.get() - base.spec_fallbacks) as usize,
+            preempt_evictions: (m.preempt_evictions.get() - base.preempt_evictions) as usize,
+            preempt_reprefill_tokens: (m.preempt_reprefill_tokens.get()
+                - base.preempt_reprefill_tokens) as usize,
+            aborts_timeout: (m.aborts_timeout.get() - base.aborts_timeout) as usize,
+            aborts_disconnect: (m.aborts_disconnect.get() - base.aborts_disconnect) as usize,
+            rejections_429: (m.rejections_429.get() - base.rejections_429) as usize,
+            past_deadline_steps: (m.past_deadline_steps_total.get() - base.past_deadline_steps)
+                as usize,
             kv_resident_bytes,
             kv_reserved_bytes,
             kv_shared_bytes,
@@ -1466,6 +2107,12 @@ impl Engine {
             spec_drafted: m.spec_drafted.get(),
             spec_accepted: m.spec_accepted.get(),
             spec_fallbacks: m.spec_fallbacks.get(),
+            preempt_evictions: m.preempt_evictions.get(),
+            preempt_reprefill_tokens: m.preempt_reprefill_tokens.get(),
+            aborts_timeout: m.aborts_timeout.get(),
+            aborts_disconnect: m.aborts_disconnect.get(),
+            rejections_429: m.rejections_429.get(),
+            past_deadline_steps: m.past_deadline_steps_total.get(),
         };
         report
     }
@@ -2049,6 +2696,21 @@ mod tests {
         assert_eq!(c("armor_spec_drafted_total"), report.spec_drafted as u64);
         assert_eq!(c("armor_spec_accepted_total"), report.spec_accepted as u64);
         assert_eq!(c("armor_spec_fallbacks_total"), report.spec_fallbacks as u64);
+        assert_eq!(c("armor_preempt_evictions_total"), report.preempt_evictions as u64);
+        assert_eq!(
+            c("armor_preempt_reprefill_tokens_total"),
+            report.preempt_reprefill_tokens as u64
+        );
+        assert_eq!(c("armor_rejections_429_total"), report.rejections_429 as u64);
+        assert_eq!(c("armor_past_deadline_steps_total"), report.past_deadline_steps as u64);
+        assert_eq!(
+            reg.counter_value("armor_aborts_total", &[("reason", "timeout")]),
+            Some(report.aborts_timeout as u64)
+        );
+        assert_eq!(
+            reg.counter_value("armor_aborts_total", &[("reason", "disconnect")]),
+            Some(report.aborts_disconnect as u64)
+        );
         let g = |name: &str| reg.gauge_value(name, &[]).unwrap();
         assert_eq!(g("armor_peak_batch"), report.peak_batch as f64);
         assert_eq!(g("armor_max_step_prefill"), report.max_step_prefill as f64);
@@ -2102,6 +2764,10 @@ mod tests {
             ("armor_spec_drafted_total", report.spec_drafted),
             ("armor_spec_accepted_total", report.spec_accepted),
             ("armor_spec_fallbacks_total", report.spec_fallbacks),
+            ("armor_preempt_evictions_total", report.preempt_evictions),
+            ("armor_preempt_reprefill_tokens_total", report.preempt_reprefill_tokens),
+            ("armor_rejections_429_total", report.rejections_429),
+            ("armor_past_deadline_steps_total", report.past_deadline_steps),
             ("armor_peak_batch", report.peak_batch),
             ("armor_max_step_prefill", report.max_step_prefill),
             ("armor_kv_resident_bytes_peak", report.kv_resident_bytes),
@@ -2122,6 +2788,11 @@ mod tests {
             "armor_attn_bytes_total{plane=\"f32\"}",
             "armor_ttft_us_count",
             "armor_latency_us_count",
+            "armor_aborts_total{reason=\"timeout\"} 0",
+            "armor_aborts_total{reason=\"disconnect\"} 0",
+            "armor_pool_release_underflow_total 0",
+            "armor_failpoint_fired_total{site=\"kv_alloc\"} 0",
+            "armor_past_deadline_steps_count",
         ] {
             assert!(text.contains(needle), "missing '{needle}' in exposition:\n{text}");
         }
@@ -2324,7 +2995,7 @@ mod tests {
         )
         .unwrap();
         let prompt = toks(5, 800);
-        let (id, rx) = engine.submit_stream(&prompt, 12, 0, None);
+        let (id, rx) = engine.submit_stream(&prompt, 12, 0, None).unwrap();
         let report = engine.drain();
         let r = &report.requests[0];
         assert_eq!(r.id, id);
@@ -2348,6 +3019,7 @@ mod tests {
                     assert_eq!(stats.n_generated, 12);
                     done = true;
                 }
+                TokenEvent::Aborted(stats) => panic!("unexpected abort: {stats:?}"),
             }
         }
         assert!(done, "terminal Done event must arrive");
@@ -2373,6 +3045,324 @@ mod tests {
         crate::obs::validate_trace(&text).unwrap();
         for needle in ["\"name\":\"draft\"", "\"name\":\"verify\"", "\"name\":\"decode\""] {
             assert!(text.contains(needle), "missing {needle} in trace:\n{text}");
+        }
+    }
+
+    /// Preemption under a one-sequence page budget: admitting a more urgent
+    /// request evicts the in-flight low-priority sequence, which later
+    /// re-admits via replay prefill — and every continuation still equals
+    /// the solo greedy path, with the pool fully returned after drain.
+    #[test]
+    fn preemption_is_bit_identical_and_restores_pool() {
+        let compiled = small_model();
+        let probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        // worst-case cache length is prompt + max_new - 1 = 11: budget
+        // exactly one such sequence, so the second admission must evict
+        let budget = probe.pages_for_seq(11) * probe.page_bytes();
+        let mut engine = Engine::new(
+            compiled.clone(),
+            EngineConfig {
+                max_batch: 4,
+                page_positions: 4,
+                kv_budget_bytes: Some(budget),
+                prefix_sharing: false,
+                policy: SchedPolicy::Priority,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let low_prompt = toks(4, 900);
+        let low = engine.submit_with(&low_prompt, 8, 3, None);
+        engine.step(); // admit + prefill the low-priority sequence
+        let hi_prompts: Vec<Vec<u16>> = (0..2).map(|i| toks(4, 910 + i as u64)).collect();
+        let hi: Vec<RequestId> =
+            hi_prompts.iter().map(|p| engine.submit_with(p, 8, 0, None)).collect();
+        let report = engine.drain();
+        assert!(
+            report.preempt_evictions >= 1,
+            "a one-sequence budget must force at least one eviction, got {}",
+            report.preempt_evictions
+        );
+        assert!(
+            report.preempt_reprefill_tokens > 0,
+            "re-admission must replay the evicted sequence's cache"
+        );
+        assert_eq!(report.requests.len(), 3);
+        for r in &report.requests {
+            let prompt = if r.id == low {
+                &low_prompt
+            } else {
+                &hi_prompts[hi.iter().position(|h| *h == r.id).unwrap()]
+            };
+            assert!(r.abort_reason.is_none());
+            assert_eq!(r.n_generated, 8);
+            assert_eq!(
+                r.generated,
+                compiled.generate(prompt, 8)[prompt.len()..].to_vec(),
+                "request {:?} diverged across preemption",
+                r.id
+            );
+        }
+        assert_eq!(engine.pool().pages_reserved(), 0, "reservations must return exactly");
+        assert_eq!(engine.pool().pages_allocated(), 0, "no page may leak across eviction");
+        assert_eq!(engine.pool().release_underflows(), 0);
+    }
+
+    /// The victim is always the *least* urgent in-flight sequence — never a
+    /// mid-priority one — and turning preemption off still completes the
+    /// same traffic with zero evictions (the urgent request just waits).
+    #[test]
+    fn preemption_picks_lowest_urgency_victim_only() {
+        let compiled = small_model();
+        let probe = KvPool::new(&compiled.cfg, 4, None).unwrap();
+        let budget = 2 * probe.pages_for_seq(11) * probe.page_bytes();
+        let mk = |preempt: bool| {
+            Engine::new(
+                compiled.clone(),
+                EngineConfig {
+                    max_batch: 4,
+                    page_positions: 4,
+                    kv_budget_bytes: Some(budget),
+                    prefix_sharing: false,
+                    policy: SchedPolicy::Priority,
+                    preempt,
+                    ..EngineConfig::default()
+                },
+            )
+            .unwrap()
+        };
+        let mut engine = mk(true);
+        let trace = crate::obs::TraceRecorder::new();
+        engine.set_trace(trace.clone());
+        let mid = engine.submit_with(&toks(4, 901), 8, 1, None);
+        let low = engine.submit_with(&toks(4, 902), 8, 3, None);
+        engine.step(); // both in flight, budget now exhausted
+        let hi = engine.submit_with(&toks(4, 903), 8, 0, None);
+        let report = engine.drain();
+        assert_eq!(report.preempt_evictions, 1, "exactly one eviction frees room");
+        assert_eq!(report.requests.len(), 3);
+        assert!(report.requests.iter().all(|r| r.n_generated == 8));
+        let text = trace.to_json().to_string_compact();
+        let at = text.find("\"preempt\"").expect("preempt instant in trace");
+        // the event's args follow its name within the same JSON object
+        let window = &text[at..text.len().min(at + 200)];
+        assert!(
+            window.contains(&format!("\"id\":{}", low.0)),
+            "victim must be the lane-3 sequence, not {:?}/{:?}; trace near preempt: {window}",
+            mid,
+            hi
+        );
+        // preemption off: same pressure, no evictions, everything completes
+        let mut engine = mk(false);
+        engine.submit_with(&toks(4, 901), 8, 1, None);
+        engine.submit_with(&toks(4, 902), 8, 3, None);
+        engine.step();
+        engine.submit_with(&toks(4, 903), 8, 0, None);
+        let report = engine.drain();
+        assert_eq!(report.preempt_evictions, 0);
+        assert_eq!(report.requests.len(), 3);
+        assert!(report.requests.iter().all(|r| r.n_generated == 8));
+    }
+
+    /// A bounded queue sheds load at submission time: past the bound,
+    /// `try_submit_with` returns the structured [`QueueFull`] rejection
+    /// (429 counter bumped, nothing enqueued) and reopens after a drain.
+    #[test]
+    fn bounded_queue_rejects_with_queue_full() {
+        let compiled = small_model();
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig { max_batch: 1, max_queue: Some(2), ..EngineConfig::default() },
+        )
+        .unwrap();
+        engine.try_submit_with(&toks(4, 920), 4, 0, None).unwrap();
+        engine.try_submit_with(&toks(4, 921), 4, 0, None).unwrap();
+        let err = engine.try_submit_with(&toks(4, 922), 4, 0, None).unwrap_err();
+        assert_eq!(err.depth, 2);
+        assert_eq!(err.max_queue, 2);
+        assert!((100..=10_000).contains(&err.retry_after_ms));
+        assert!(err.to_string().contains("queue full: 2 requests waiting (max 2)"));
+        assert!(
+            engine.submit_stream(&toks(4, 923), 4, 0, None).is_err(),
+            "streaming submissions hit the same bound"
+        );
+        let report = engine.drain();
+        assert_eq!(report.rejections_429, 2);
+        assert_eq!(report.requests.len(), 2, "rejected requests leave no trace");
+        assert!(report.render().contains("429 rejections 2"), "report:\n{}", report.render());
+        // the bound is on *waiting* requests: an empty queue accepts again
+        engine.try_submit_with(&toks(4, 924), 4, 0, None).unwrap();
+        let report = engine.drain();
+        assert_eq!(report.requests.len(), 1);
+        assert_eq!(report.rejections_429, 0, "the 429 window resets with the report");
+    }
+
+    /// A hard per-request timeout aborts at the next step boundary — both
+    /// the in-flight sequence (partial continuation already streamed) and
+    /// the still-queued one — with a terminal `Aborted` event whose stats
+    /// match exactly what was streamed, and the pool fully returned.
+    #[test]
+    fn request_timeout_aborts_with_terminal_event() {
+        let compiled = small_model();
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig {
+                max_batch: 1,
+                request_timeout: Some(Duration::from_millis(30)),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let (id, rx) = engine.submit_stream(&toks(4, 930), 8, 0, None).unwrap();
+        let queued = engine.submit(&toks(4, 931), 8);
+        engine.step(); // first request admitted + prefilled within budget
+        std::thread::sleep(Duration::from_millis(40));
+        let report = engine.drain();
+        assert_eq!(report.aborts_timeout, 2, "active and queued must both abort");
+        assert_eq!(report.requests.len(), 2, "aborted requests still report");
+        let mut streamed = Vec::new();
+        let mut aborted = None;
+        for ev in rx.try_iter() {
+            match ev {
+                TokenEvent::Token { index, token } => {
+                    assert_eq!(index, streamed.len());
+                    streamed.push(token);
+                }
+                TokenEvent::Aborted(stats) => {
+                    assert!(aborted.is_none(), "terminal event must be sent at most once");
+                    aborted = Some(stats);
+                }
+                TokenEvent::Done(_) => panic!("a timed-out request must not complete"),
+            }
+        }
+        let stats = aborted.expect("terminal Aborted event must arrive");
+        assert_eq!(stats.id, id);
+        assert_eq!(stats.abort_reason, Some("timeout"));
+        assert_eq!(stats.n_generated, streamed.len());
+        assert_eq!(stats.generated, streamed);
+        let q = report.requests.iter().find(|r| r.id == queued).unwrap();
+        assert_eq!(q.n_generated, 0, "the queued request never held a slot");
+        assert_eq!(q.abort_reason, Some("timeout"));
+        assert_eq!(engine.pool().pages_reserved(), 0);
+        assert_eq!(engine.pool().pages_allocated(), 0);
+        assert!(report.render().contains("aborts 2 timeout"), "report:\n{}", report.render());
+    }
+
+    /// `--cancel-on-disconnect`: once every receiver of a stream is gone,
+    /// the request aborts at the next step boundary and its pages free;
+    /// without the flag a dropped receiver never cancels anything. The
+    /// co-batched survivor generates identically either way.
+    #[test]
+    fn disconnect_cancels_at_step_boundary() {
+        let compiled = small_model();
+        let survivor_prompt = toks(5, 941);
+        let mut run = |cancel: bool| {
+            let mut engine = Engine::new(
+                compiled.clone(),
+                EngineConfig { cancel_on_disconnect: cancel, ..EngineConfig::default() },
+            )
+            .unwrap();
+            let (victim, rx) = engine.submit_stream(&toks(4, 940), 8, 0, None).unwrap();
+            let survivor = engine.submit(&survivor_prompt, 6);
+            engine.step(); // both prefill; first tokens send while rx lives
+            drop(rx); // client disconnects
+            engine.step(); // this decode's send fails -> marked disconnected
+            let report = engine.drain();
+            assert_eq!(engine.pool().pages_reserved(), 0);
+            assert_eq!(engine.pool().pages_allocated(), 0);
+            (victim, survivor, report)
+        };
+        let (victim, survivor, report) = run(true);
+        assert_eq!(report.aborts_disconnect, 1);
+        let v = report.requests.iter().find(|r| r.id == victim).unwrap();
+        assert_eq!(v.abort_reason, Some("disconnect"));
+        assert!(v.n_generated < 8, "must cancel before running to completion");
+        let s = report.requests.iter().find(|r| r.id == survivor).unwrap();
+        assert!(s.abort_reason.is_none());
+        assert_eq!(
+            s.generated,
+            compiled.generate(&survivor_prompt, 6)[survivor_prompt.len()..].to_vec(),
+            "survivor diverged across a co-batched cancellation"
+        );
+        let (victim, _, report) = run(false);
+        assert_eq!(report.aborts_disconnect, 0);
+        let v = report.requests.iter().find(|r| r.id == victim).unwrap();
+        assert_eq!(v.n_generated, 8, "without the flag generation runs to completion");
+        assert!(v.abort_reason.is_none());
+    }
+
+    /// Without a hard timeout, a soft-deadline overrun is *recorded*, not
+    /// punished: every decode step past the deadline counts into the
+    /// `past_deadline_steps` histogram. With a hard timeout configured the
+    /// abort path replaces that accounting entirely.
+    #[test]
+    fn past_deadline_steps_recorded_without_hard_timeout() {
+        let compiled = small_model();
+        let mut engine = Engine::new(compiled.clone(), EngineConfig::default()).unwrap();
+        engine.submit_with(&toks(4, 950), 10, 0, Some(Duration::ZERO));
+        let report = engine.drain();
+        // 10 tokens = 1 from prefill + 9 decode passes, all past a zero
+        // deadline
+        assert_eq!(report.past_deadline_steps, 9);
+        assert!(report.requests[0].deadline_missed);
+        assert_eq!(report.requests[0].n_generated, 10, "soft overrun still completes");
+        let text = engine.render_prometheus();
+        assert!(text.contains("armor_past_deadline_steps_total 9"), "exposition:\n{text}");
+        assert!(text.contains("armor_past_deadline_steps_count 1"), "exposition:\n{text}");
+        // a hard timeout aborts instead; the soft histogram stays empty
+        let mut engine = Engine::new(
+            compiled,
+            EngineConfig { request_timeout: Some(Duration::ZERO), ..EngineConfig::default() },
+        )
+        .unwrap();
+        engine.submit_with(&toks(4, 951), 10, 0, Some(Duration::ZERO));
+        let report = engine.drain();
+        assert_eq!(report.aborts_timeout, 1);
+        assert_eq!(report.past_deadline_steps, 0);
+        assert_eq!(report.requests[0].n_generated, 0);
+    }
+
+    /// Chaos invariant: injected `kv_alloc` refusals (which force spurious
+    /// preemptions and admission retries) change *when* work runs, never
+    /// *what* it produces — outputs stay bit-identical to a clean run and
+    /// the pool accounting ends flat.
+    #[test]
+    fn kv_alloc_failpoints_never_change_outputs() {
+        let compiled = small_model();
+        let prompts: Vec<Vec<u16>> = (0..4).map(|i| toks(4 + i, 960 + i as u64)).collect();
+        let run = |fp: Option<FailPoints>| {
+            let mut engine = Engine::new(
+                compiled.clone(),
+                EngineConfig {
+                    max_batch: 2,
+                    policy: SchedPolicy::Priority,
+                    ..EngineConfig::default()
+                },
+            )
+            .unwrap();
+            engine.set_failpoints(fp);
+            for (i, p) in prompts.iter().enumerate() {
+                engine.submit_with(p, 6, if i % 2 == 0 { 0 } else { 3 }, None);
+            }
+            let report = engine.drain();
+            assert_eq!(engine.pool().pages_reserved(), 0, "reservation accounting must stay exact");
+            assert_eq!(engine.pool().pages_allocated(), 0);
+            assert_eq!(engine.pool().release_underflows(), 0);
+            let evals = engine.failpoints().map_or(0, |fp| fp.evals(FP_KV_ALLOC));
+            (report, evals)
+        };
+        let (faulty, evals) = run(Some(FailPoints::parse("kv_alloc:0.4", 5).unwrap()));
+        let (clean, _) = run(None);
+        assert!(evals > 0, "every admission reservation must consult the failpoint");
+        assert_eq!(faulty.requests.len(), clean.requests.len());
+        for (f, c) in faulty.requests.iter().zip(&clean.requests) {
+            assert_eq!(f.id, c.id);
+            assert!(f.abort_reason.is_none());
+            assert_eq!(
+                f.generated, c.generated,
+                "request {:?}: injected allocation refusals changed the output",
+                f.id
+            );
         }
     }
 }

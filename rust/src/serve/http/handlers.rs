@@ -11,7 +11,7 @@
 
 use crate::serve::engine::{RequestStats, TokenEvent};
 use crate::serve::http::parser::{Request, Version};
-use crate::serve::service::{EngineService, GenerateParams};
+use crate::serve::service::{EngineService, GenerateError, GenerateParams};
 use crate::util::json::Json;
 use std::io::Write;
 use std::time::Duration;
@@ -81,6 +81,7 @@ pub fn status_text(code: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
@@ -171,9 +172,12 @@ pub fn parse_generate(body: &[u8]) -> Result<GenerateParams, Response> {
 /// `POST /v1/generate`: validate, submit, and stream the continuation.
 /// HTTP/1.1 connections get chunked transfer coding with one JSON event
 /// per chunk; HTTP/1.0 (no chunked coding) gets the same NDJSON event
-/// lines buffered into a single `Content-Length` body. A write failure
-/// (client went away) just drops the receiver — the engine finishes the
-/// request regardless; disconnect does not cancel generation.
+/// lines buffered into a single `Content-Length` body. A bounded-queue
+/// rejection is a `429` envelope with a `Retry-After` header; draining is
+/// a `503`. A write failure (client went away) just drops the receiver —
+/// without `--cancel-on-disconnect` the engine finishes the request
+/// regardless; with it, the engine aborts the request at the next step
+/// boundary and frees its pages.
 pub fn handle_generate<S: Write>(
     stream: &mut S,
     req: &Request,
@@ -186,14 +190,23 @@ pub fn handle_generate<S: Write>(
     };
     let (id, rx) = match svc.generate(params) {
         Ok(pair) => pair,
-        Err(e) => return Response::error(503, "draining", &e.to_string()).write_to(stream, close),
+        Err(GenerateError::QueueFull(q)) => {
+            let mut resp = Response::error(429, "overloaded", &q.to_string());
+            // Retry-After is whole seconds; round up so clients never
+            // retry before the suggested back-off has elapsed
+            resp.headers.push(("Retry-After", ((q.retry_after_ms + 999) / 1000).to_string()));
+            return resp.write_to(stream, close);
+        }
+        Err(e @ GenerateError::Draining) => {
+            return Response::error(503, "draining", &e.to_string()).write_to(stream, close)
+        }
     };
 
     if req.version == Version::Http10 {
         // chunked coding needs 1.1: buffer the whole event stream instead
         let mut body = Vec::new();
         for ev in rx.iter() {
-            let done = matches!(ev, TokenEvent::Done(_));
+            let done = matches!(ev, TokenEvent::Done(_) | TokenEvent::Aborted(_));
             body.extend_from_slice(event_line(&ev).as_bytes());
             if done {
                 break;
@@ -216,7 +229,7 @@ pub fn handle_generate<S: Write>(
     )?;
     stream.flush()?;
     for ev in rx.iter() {
-        let done = matches!(ev, TokenEvent::Done(_));
+        let done = matches!(ev, TokenEvent::Done(_) | TokenEvent::Aborted(_));
         write_chunk(stream, event_line(&ev).as_bytes())?;
         if done {
             break;
@@ -241,6 +254,15 @@ fn event_line(ev: &TokenEvent) -> String {
             ("stats", stats_json(stats)),
         ])
         .to_string_compact(),
+        TokenEvent::Aborted(stats) => Json::obj(vec![
+            ("aborted", Json::Bool(true)),
+            (
+                "reason",
+                stats.abort_reason.map_or(Json::Null, |r| Json::Str(r.to_string())),
+            ),
+            ("stats", stats_json(stats)),
+        ])
+        .to_string_compact(),
     };
     line.push('\n');
     line
@@ -259,6 +281,10 @@ fn stats_json(s: &RequestStats) -> Json {
         ("deadline_missed", Json::Bool(s.deadline_missed)),
         ("ttft_ms", Json::Num(s.ttft_ms)),
         ("latency_ms", Json::Num(s.latency_ms)),
+        (
+            "abort_reason",
+            s.abort_reason.map_or(Json::Null, |r| Json::Str(r.to_string())),
+        ),
     ])
 }
 
@@ -343,5 +369,30 @@ mod tests {
         let mut out = Vec::new();
         write_chunk(&mut out, b"{\"token\":7}\n").unwrap();
         assert_eq!(out, b"c\r\n{\"token\":7}\n\r\n");
+    }
+
+    #[test]
+    fn aborted_event_line_is_terminal_json() {
+        use crate::serve::RequestId;
+        let stats = RequestStats {
+            id: RequestId(3),
+            prompt_len: 4,
+            n_generated: 2,
+            reused_tokens: 0,
+            priority: 0,
+            deadline_ms: None,
+            deadline_missed: false,
+            ttft_ms: 1.0,
+            latency_ms: 2.0,
+            abort_reason: Some("timeout"),
+            generated: vec![5, 6],
+        };
+        let line = event_line(&TokenEvent::Aborted(Box::new(stats)));
+        assert!(line.ends_with('\n'), "NDJSON frames are newline-terminated");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("aborted").as_bool(), Some(true));
+        assert_eq!(v.get("reason").as_str(), Some("timeout"));
+        assert_eq!(v.get("stats").get("abort_reason").as_str(), Some("timeout"));
+        assert_eq!(v.get("stats").get("n_generated").as_usize(), Some(2));
     }
 }

@@ -131,6 +131,9 @@ pub(crate) struct PoolState {
     total_allocs: AtomicUsize,
     /// lifetime copy-on-write page copies (monotonic, subset of allocs)
     cow_copies: AtomicUsize,
+    /// lifetime over-releases caught by the saturating `release` (monotonic;
+    /// any nonzero value is an engine accounting bug made visible)
+    release_underflows: AtomicUsize,
 }
 
 impl PoolState {
@@ -231,6 +234,7 @@ impl KvPool {
                 peak_reserved: AtomicUsize::new(0),
                 total_allocs: AtomicUsize::new(0),
                 cow_copies: AtomicUsize::new(0),
+                release_underflows: AtomicUsize::new(0),
             }),
         })
     }
@@ -378,9 +382,35 @@ impl KvPool {
     }
 
     /// Return a reservation (request retired, prefix entry evicted).
+    ///
+    /// Saturates at zero: releasing more than is reserved clamps the count
+    /// and bumps [`Self::release_underflows`] instead of wrapping — a wrap
+    /// would read as a near-`usize::MAX` reservation and poison admission
+    /// for the life of the pool.
     pub fn release(&self, pages: usize) {
-        let prev = self.state.reserved.fetch_sub(pages, Ordering::Relaxed);
-        debug_assert!(prev >= pages, "released {pages} pages with only {prev} reserved");
+        let mut cur = self.state.reserved.load(Ordering::Relaxed);
+        loop {
+            match self.state.reserved.compare_exchange_weak(
+                cur,
+                cur.saturating_sub(pages),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(prev) => {
+                    if prev < pages {
+                        self.state.release_underflows.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Lifetime releases that exceeded the outstanding reservation and were
+    /// clamped (monotonic; surfaced as `armor_pool_release_underflow_total`).
+    pub fn release_underflows(&self) -> usize {
+        self.state.release_underflows.load(Ordering::Relaxed)
     }
 
     /// Peak live pages since the last call, then restart the peak window
@@ -488,6 +518,25 @@ mod tests {
         assert_eq!(pool.take_peak_reserved(), 8);
         // peak window restarted at the current level
         assert_eq!(pool.take_peak_reserved(), 7);
+    }
+
+    /// Regression: over-releasing must clamp to zero and count the event,
+    /// not wrap `reserved` to ~usize::MAX (which would refuse all admission
+    /// forever). The pool must remain fully usable afterwards.
+    #[test]
+    fn over_release_saturates_and_counts() {
+        let pool = KvPool::new(&cfg(), 4, Some(8 * 2 * 4 * 4 * 4)).unwrap();
+        assert!(pool.try_reserve(4));
+        pool.release(7); // 3 more than reserved
+        assert_eq!(pool.pages_reserved(), 0, "release saturates at zero");
+        assert_eq!(pool.release_underflows(), 1);
+        // the budget is intact: a full-capacity reserve still succeeds
+        assert!(pool.try_reserve(8));
+        assert!(!pool.try_reserve(1));
+        pool.release(8);
+        pool.release(1); // releasing with nothing reserved also counts
+        assert_eq!(pool.release_underflows(), 2);
+        assert_eq!(pool.pages_reserved(), 0);
     }
 
     #[test]

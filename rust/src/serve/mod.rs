@@ -41,7 +41,13 @@
 //! per-request [`TokenEvent`] streams, graceful drain), and [`http`] fronts
 //! it with a std-only HTTP/1.1 server — `armor serve --listen ADDR` —
 //! whose wire contract is versioned in `API.md` (`DESIGN.md` §9 for the
-//! ownership/shutdown model).
+//! ownership/shutdown model). The robustness layer (`DESIGN.md` §11)
+//! rides the same path: budget-pressure **preemption** with bit-identical
+//! re-admission ([`EngineConfig::preempt`]), **overload control** — a
+//! bounded queue surfacing [`QueueFull`] as HTTP 429 + `Retry-After`,
+//! hard per-request timeouts, client-disconnect cancellation — and a
+//! deterministic fault-injection harness
+//! ([`crate::obs::FailPoints`], `ARMOR_FAILPOINTS`) for chaos tests.
 //!
 //! See `DESIGN.md` §4 and `rust/benches/serve_throughput.rs` for the
 //! dense-recompute vs KV-cached-compressed comparison and the
@@ -57,7 +63,7 @@ mod prefix;
 mod scheduler;
 mod service;
 
-pub use engine::{Engine, EngineConfig, RequestStats, ServeReport, TokenEvent};
+pub use engine::{Engine, EngineConfig, QueueFull, RequestStats, ServeReport, TokenEvent};
 pub use kv_cache::{KvCache, PageRun, PanelRuns};
 pub use kv_pool::{KvPool, KvQuant, DEFAULT_PAGE_POSITIONS};
 pub use prefix::{PrefixRegistry, DEFAULT_PREFIX_ENTRIES};
@@ -65,4 +71,4 @@ pub use scheduler::{
     ActiveSeq, GenRequest, RequestId, SchedPolicy, Scheduler, SeqPhase, AGING_TICKS,
     PRIORITY_LANES,
 };
-pub use service::{EngineService, GenerateParams, StatsSnapshot};
+pub use service::{EngineService, GenerateError, GenerateParams, StatsSnapshot};

@@ -125,6 +125,12 @@ pub enum SeqPhase {
     Prefilling { next: usize },
     /// Prompt fully prefilled; one token per decode step.
     Decoding,
+    /// Evicted under budget pressure: KV chains dropped, reservation
+    /// returned. The sequence is parked outside the batch (it holds no
+    /// slot and no pages) until the engine re-admits it, re-entering
+    /// [`SeqPhase::Prefilling`] over its recorded prompt + generated
+    /// tokens.
+    Preempted,
 }
 
 /// One in-flight sequence: its KV cache plus generation progress.
@@ -166,6 +172,16 @@ pub struct ActiveSeq {
     pub submitted: Instant,
     /// When the first generated token landed (TTFT), once it has.
     pub first_token_at: Option<Instant>,
+    /// the token stream a preempted sequence must re-prefill to rebuild
+    /// its KV state: prompt ++ generated-so-far minus the trailing token
+    /// (which is `last_token`, not yet in the cache). `Some` only between
+    /// preemption and re-prefill completion; chunked prefill and the
+    /// prefix registry treat it exactly like a fresh prompt
+    pub replay: Option<Vec<u16>>,
+    /// decode steps taken after the soft deadline passed (recorded into
+    /// the `armor_past_deadline_steps` histogram at retirement — visible
+    /// waste when no `--request-timeout-ms` hard abort is set)
+    pub past_deadline_steps: u64,
 }
 
 impl ActiveSeq {
@@ -183,10 +199,12 @@ impl ActiveSeq {
     }
 
     /// Finished when the token budget is spent or the context window is
-    /// full. A prefilling sequence is never finished: `generated` is empty
-    /// and its cache may legitimately fill the window mid-prompt.
+    /// full. A prefilling sequence is never finished: its cache may
+    /// legitimately fill the window mid-prompt. A preempted sequence is
+    /// never finished either — it holds no cache and must re-prefill
+    /// first.
     pub fn finished(&self) -> bool {
-        !self.is_prefilling()
+        self.phase == SeqPhase::Decoding
             && (self.generated.len() >= self.max_new || self.cache.remaining() == 0)
     }
 }
@@ -343,8 +361,17 @@ impl Scheduler {
     /// being skipped when it does not fit, keeping admission
     /// starvation-free under every policy.
     pub fn peek_admittable(&self) -> Option<&GenRequest> {
+        self.peek_admittable_with_lane().map(|(_, r)| r)
+    }
+
+    /// [`Scheduler::peek_admittable`], also reporting the lane the selected
+    /// request currently occupies. Aging promotions move requests between
+    /// lanes, so under [`SchedPolicy::Priority`] this lane — not
+    /// [`GenRequest::priority`] — is the request's *live* urgency; the
+    /// engine's preemption victim check compares against it.
+    pub fn peek_admittable_with_lane(&self) -> Option<(usize, &GenRequest)> {
         if self.has_capacity() {
-            self.select().map(|(lane, i)| &self.lanes[lane][i])
+            self.select().map(|(lane, i)| (lane, &self.lanes[lane][i]))
         } else {
             None
         }
@@ -373,6 +400,29 @@ impl Scheduler {
             std::mem::take(&mut self.active).into_iter().partition(|s| s.finished());
         self.active = keep;
         done
+    }
+
+    /// Remove and return every waiting request matching `pred`, keeping
+    /// lane order among the survivors. The engine's hard-timeout abort
+    /// path: a queued request past `--request-timeout-ms` leaves the queue
+    /// without ever being admitted (or reserving pages).
+    pub fn take_pending_where(
+        &mut self,
+        mut pred: impl FnMut(&GenRequest) -> bool,
+    ) -> Vec<GenRequest> {
+        let mut out = Vec::new();
+        for lane in &mut self.lanes {
+            let mut keep = VecDeque::with_capacity(lane.len());
+            for r in lane.drain(..) {
+                if pred(&r) {
+                    out.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *lane = keep;
+        }
+        out
     }
 
     /// Requests waiting for admission across every lane.
@@ -415,6 +465,8 @@ mod tests {
             spec_k: 0,
             submitted: Instant::now(),
             first_token_at: None,
+            replay: None,
+            past_deadline_steps: 0,
         }
     }
 
@@ -460,6 +512,10 @@ mod tests {
         s.phase = SeqPhase::Decoding;
         s.generated.push(7);
         assert!(s.finished());
+        // a preempted sequence holds no cache — it must re-prefill, never
+        // retire, even with its token budget nominally spent
+        s.phase = SeqPhase::Preempted;
+        assert!(!s.finished(), "preempted must not retire");
     }
 
     #[test]

@@ -266,6 +266,78 @@ fn keep_alive_serves_sequential_requests() {
     server.shutdown();
 }
 
+/// A bounded queue surfaces overload over the wire: with `max_batch 1`
+/// and `max_queue 1`, the third concurrent generate gets the structured
+/// `429` envelope with a `Retry-After` header, while the two admitted
+/// streams run to completion untouched. The always-firing service-stall
+/// failpoint paces the worker to ~2 ms/step so request A provably
+/// outlives the poll-then-reject sequence below — the tiny model would
+/// otherwise drain in microseconds and race the rejection.
+#[test]
+fn overload_returns_429_with_retry_after() {
+    use armor::obs::FailPoints;
+    let mut engine = Engine::new(
+        small_model(),
+        EngineConfig { max_batch: 1, max_queue: Some(1), ..EngineConfig::default() },
+    )
+    .unwrap();
+    engine.set_failpoints(Some(FailPoints::parse("svc_channel_stall:1", 3).unwrap()));
+    let server =
+        HttpServer::bind(Arc::new(EngineService::spawn(engine)), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    // A occupies the single batch slot; wait for its first token so the
+    // admission is provable before B is submitted.
+    let (first_tx, first_rx) = mpsc::channel();
+    let a = std::thread::spawn(move || {
+        let mut sent = false;
+        let resp = client::post_stream(addr, "/v1/generate", &gen_body(&toks(4, 11), 24), |_| {
+            if !sent {
+                sent = true;
+                first_tx.send(()).unwrap();
+            }
+        })
+        .unwrap();
+        streamed_tokens(&resp).len()
+    });
+    first_rx.recv().unwrap();
+
+    // B fills the one queue slot; poll /v1/stats until the worker has
+    // absorbed it so the rejection below is deterministic.
+    let b = std::thread::spawn(move || {
+        let resp = client::post_stream(addr, "/v1/generate", &gen_body(&toks(5, 12), 3), |_| {}).unwrap();
+        streamed_tokens(&resp).len()
+    });
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let v = Json::parse(&client::get(addr, "/v1/stats").unwrap().body_text()).unwrap();
+        if v.get("queue_depth").as_usize() == Some(1) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "queued request never became visible");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let resp = client::post(addr, "/v1/generate", &gen_body(&toks(3, 13), 2)).unwrap();
+    assert_eq!(resp.status, 429);
+    let retry: u64 = resp
+        .header("retry-after")
+        .expect("429 carries Retry-After")
+        .parse()
+        .expect("Retry-After is integral seconds");
+    assert!(retry >= 1);
+    let v = Json::parse(&resp.body_text()).expect("429 body is the JSON envelope");
+    assert_eq!(v.get("error").get("code").as_usize(), Some(429));
+    assert_eq!(v.get("error").get("reason").as_str(), Some("overloaded"));
+    assert!(v.get("error").get("message").as_str().unwrap().contains("queue full"));
+
+    assert_eq!(a.join().unwrap(), 24, "admitted stream A must be untouched by the rejection");
+    assert_eq!(b.join().unwrap(), 3, "queued stream B must still complete");
+    let report = server.shutdown().expect("shutdown returns the session report");
+    assert_eq!(report.requests.len(), 2);
+    assert_eq!(report.rejections_429, 1);
+}
+
 /// Graceful shutdown mid-stream: the in-flight stream runs to a clean
 /// chunked termination, while an already-open connection deterministically
 /// sees `503` on `/healthz` and on new generate submissions.

@@ -910,3 +910,142 @@ fn prop_speculative_decode_bit_identical() {
         Ok(())
     });
 }
+
+struct PreemptCase {
+    /// low-urgency requests submitted first: (prompt, max_new)
+    init: Vec<(Vec<u16>, usize)>,
+    /// high-urgency burst submitted after a few steps
+    burst: Vec<(Vec<u16>, usize)>,
+    policy: armor::serve::SchedPolicy,
+    page_positions: usize,
+    /// page budget sized for this many worst-case sequences
+    budget_seqs: usize,
+    steps_before_burst: usize,
+    prefix_sharing: bool,
+}
+
+fn gen_preempt_case(rng: &mut Pcg64) -> PreemptCase {
+    use armor::serve::SchedPolicy;
+    let policy = match rng.next_below(4) {
+        0 => SchedPolicy::Fifo, // degenerate: in-flight always outranks waiting
+        1 | 2 => SchedPolicy::Priority,
+        _ => SchedPolicy::Deadline,
+    };
+    let reqs = |n: usize, rng: &mut Pcg64| -> Vec<(Vec<u16>, usize)> {
+        (0..n)
+            .map(|_| {
+                let len = 2 + rng.next_below(7) as usize;
+                let p = (0..len).map(|_| rng.next_below(250) as u16).collect();
+                (p, 4 + rng.next_below(7) as usize)
+            })
+            .collect()
+    };
+    let n_init = 1 + rng.next_below(2) as usize;
+    let n_burst = 1 + rng.next_below(3) as usize;
+    PreemptCase {
+        init: reqs(n_init, rng),
+        burst: reqs(n_burst, rng),
+        policy,
+        page_positions: [2usize, 3, 4, 8][rng.next_below(4) as usize],
+        budget_seqs: 1 + rng.next_below(2) as usize,
+        steps_before_burst: 1 + rng.next_below(2) as usize,
+        prefix_sharing: rng.next_below(2) == 1,
+    }
+}
+
+/// Preemption is a scheduling decision, never a behavior change: for random
+/// eviction-forcing budgets, policies, page sizes, and prompt sets, every
+/// request — evicted and re-admitted or not — generates exactly the tokens
+/// of an uninterrupted solo run, and the pool's reservation accounting ends
+/// flat. The case shape forces pressure: low-urgency requests admit first
+/// under a budget of 1–2 worst-case sequences, then a high-urgency burst
+/// arrives (priority lane 0 / tight EDF deadline) and must evict them.
+#[test]
+fn prop_preempt_resume_bit_identical() {
+    use armor::serve::{Engine, EngineConfig, KvPool, SchedPolicy};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+    let cfg = GptConfig {
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 32,
+        ..GptConfig::tiny()
+    };
+    let model = GptModel::random_init(&cfg, &mut Pcg64::seed_from_u64(0x9E));
+    let compiled = CompiledModel::compile(&model, None).unwrap();
+    let evictions = AtomicUsize::new(0);
+    forall("preempt/resume parity", num_cases(8), gen_preempt_case, |case| {
+        let probe = KvPool::new(&compiled.cfg, case.page_positions, None)
+            .map_err(|e| e.to_string())?;
+        let worst = case
+            .init
+            .iter()
+            .chain(&case.burst)
+            .map(|(p, n)| probe.pages_for_seq((p.len() + n - 1).min(compiled.cfg.max_seq)))
+            .max()
+            .unwrap();
+        let mut engine = Engine::new(
+            compiled.clone(),
+            EngineConfig {
+                max_batch: 4,
+                page_positions: case.page_positions,
+                kv_budget_bytes: Some(case.budget_seqs * worst * probe.page_bytes()),
+                prefix_sharing: case.prefix_sharing,
+                policy: case.policy,
+                ..EngineConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        // low urgency: worst priority lane, no deadline (EDF sorts last)
+        let mut ids = Vec::new();
+        for (p, n) in &case.init {
+            ids.push((engine.submit_with(p, *n, 3, None), p, *n));
+        }
+        for _ in 0..case.steps_before_burst {
+            engine.step();
+        }
+        // high urgency: lane 0 / tight deadline — must displace the above
+        for (p, n) in &case.burst {
+            ids.push((engine.submit_with(p, *n, 0, Some(Duration::from_millis(5))), p, *n));
+        }
+        let report = engine.drain();
+        evictions.fetch_add(report.preempt_evictions, Ordering::Relaxed);
+        for (id, prompt, max_new) in ids {
+            let r = report
+                .requests
+                .iter()
+                .find(|r| r.id == id)
+                .ok_or_else(|| format!("request {id:?} never completed"))?;
+            let solo = compiled.generate(prompt, max_new);
+            if r.generated[..] != solo[prompt.len()..] {
+                return Err(format!(
+                    "policy {:?} pages {} budget {}x: request {id:?} diverged after preemption",
+                    case.policy, case.page_positions, case.budget_seqs
+                ));
+            }
+            if r.abort_reason.is_some() {
+                return Err(format!("request {id:?} spuriously aborted"));
+            }
+        }
+        if !case.prefix_sharing {
+            // without retained prefix chains the pool must end exactly flat
+            if engine.pool().pages_reserved() != 0 || engine.pool().pages_allocated() != 0 {
+                return Err(format!(
+                    "pool not flat after drain: {} reserved, {} allocated",
+                    engine.pool().pages_reserved(),
+                    engine.pool().pages_allocated()
+                ));
+            }
+        }
+        if engine.pool().release_underflows() != 0 {
+            return Err("release underflow during preemption churn".into());
+        }
+        Ok(())
+    });
+    assert!(
+        evictions.load(Ordering::Relaxed) > 0,
+        "the case shape is eviction-forcing; at least one case must preempt"
+    );
+}
