@@ -48,7 +48,7 @@ fn main() -> armor::Result<()> {
     let service = Arc::new(EngineService::spawn(Engine::new(
         compiled,
         EngineConfig { max_batch: 4, ..EngineConfig::default() },
-    )?));
+    )?)?);
 
     // 2. a live server on an ephemeral loopback port
     let server = HttpServer::bind(Arc::clone(&service), "127.0.0.1:0")?;

@@ -867,10 +867,13 @@ fn main() {
     use std::sync::Arc;
     let http_burst = traffic(&mut rng, scaled(8).max(4), prompt_len);
     let http_new = scaled(16).max(4);
-    let service = Arc::new(EngineService::spawn(
-        Engine::new(attn_compiled.clone(), EngineConfig { max_batch, ..EngineConfig::default() })
-            .expect("http engine config"),
-    ));
+    let service = Arc::new(
+        EngineService::spawn(
+            Engine::new(attn_compiled.clone(), EngineConfig { max_batch, ..EngineConfig::default() })
+                .expect("http engine config"),
+        )
+        .expect("spawn engine service"),
+    );
     let server = HttpServer::bind(Arc::clone(&service), "127.0.0.1:0").expect("bind loopback");
     let addr = server.local_addr();
     let mut socket_ttft = Stats::default();

@@ -1,0 +1,172 @@
+//! Markdown-side extractors: the documented half of each cross-file
+//! contract (`API.md` §2 slugs, §8 metric series, the README flag tables
+//! and failpoint-site mentions).
+
+use std::path::Path;
+
+/// Everything `armor lint` needs from the two contract documents.
+#[derive(Clone, Debug, Default)]
+pub struct DocFacts {
+    /// Metric series names in API.md §8, with the 1-based line of first
+    /// mention.
+    pub api_metrics: Vec<(u32, String)>,
+    /// Reason slugs from the API.md §2 `Slugs in v1:` list.
+    pub api_slugs: Vec<(u32, String)>,
+    /// Full API.md text with backticks stripped — the haystack for
+    /// `"<status> <slug>"` envelope-pair checks.
+    pub api_flat: String,
+    /// Flag names from README `| `--flag …` |` table rows, with line.
+    pub readme_flags: Vec<(u32, String)>,
+    /// Raw README text — the haystack for failpoint-site mentions.
+    pub readme_text: String,
+}
+
+impl DocFacts {
+    /// Load and extract from `<root>/API.md` and `<root>/README.md`.
+    pub fn load(root: &Path) -> crate::Result<DocFacts> {
+        let api = std::fs::read_to_string(root.join("API.md"))
+            .map_err(|e| crate::err!("lint: reading API.md under {}: {e}", root.display()))?;
+        let readme = std::fs::read_to_string(root.join("README.md"))
+            .map_err(|e| crate::err!("lint: reading README.md under {}: {e}", root.display()))?;
+        Ok(DocFacts {
+            api_metrics: section_metric_names(&api),
+            api_slugs: slug_list(&api),
+            api_flat: api.replace('`', ""),
+            readme_flags: flag_table_rows(&readme),
+            readme_text: readme,
+        })
+    }
+}
+
+/// `armor_*` series names inside the `## 8.` section of API.md (scoping
+/// to §8 keeps incidental mentions elsewhere out of the contract).
+fn section_metric_names(api: &str) -> Vec<(u32, String)> {
+    let mut out: Vec<(u32, String)> = Vec::new();
+    let mut in_s8 = false;
+    for (idx, line) in api.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_s8 = line.starts_with("## 8");
+            continue;
+        }
+        if !in_s8 {
+            continue;
+        }
+        for name in armor_names(line) {
+            if !out.iter().any(|(_, n)| *n == name) {
+                out.push((idx as u32 + 1, name));
+            }
+        }
+    }
+    out
+}
+
+/// Scan one line for `armor_<lowercase/digit/underscore>+` names.
+fn armor_names(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = s[i..].find("armor_") {
+        let start = i + p;
+        let boundary =
+            start == 0 || !(b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_');
+        let mut e = start + "armor_".len();
+        while e < b.len() && (b[e].is_ascii_lowercase() || b[e].is_ascii_digit() || b[e] == b'_') {
+            e += 1;
+        }
+        // Require at least one body character: prose like `armor_*_us`
+        // names a family, not a series.
+        if boundary && e > start + "armor_".len() {
+            out.push(s[start..e].to_string());
+        }
+        i = e.max(start + 1);
+    }
+    out
+}
+
+/// The §2 reason-slug list: backticked tokens between `Slugs in v1:` and
+/// the sentence-ending period.
+fn slug_list(api: &str) -> Vec<(u32, String)> {
+    let lines: Vec<&str> = api.lines().collect();
+    let Some(start) = lines.iter().position(|l| l.contains("Slugs in v1:")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut in_tick = false;
+    let mut token = String::new();
+    for (idx, line) in lines.iter().enumerate().skip(start) {
+        let text = if idx == start {
+            let at = line.find("Slugs in v1:").map(|p| p + "Slugs in v1:".len());
+            &line[at.unwrap_or(0)..]
+        } else {
+            line
+        };
+        for ch in text.chars() {
+            match ch {
+                '`' => {
+                    if in_tick && !token.is_empty() {
+                        let ok = token.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+                            && token.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+                        if ok {
+                            out.push((idx as u32 + 1, token.clone()));
+                        }
+                    }
+                    token.clear();
+                    in_tick = !in_tick;
+                }
+                '.' if !in_tick => return out, // end of the list sentence
+                c if in_tick => token.push(c),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Flag names from README table rows of the form `| `--name …` | … |`.
+fn flag_table_rows(readme: &str) -> Vec<(u32, String)> {
+    let mut out: Vec<(u32, String)> = Vec::new();
+    for (idx, line) in readme.lines().enumerate() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("| `--") else { continue };
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+            .collect();
+        if !name.is_empty() && !out.iter().any(|(_, n)| *n == name) {
+            out.push((idx as u32 + 1, name));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_scope_to_section_8() {
+        let api = "# t\n## 7. Other\n`armor_elsewhere_total`\n## 8. `GET /metrics`\ncounters `armor_requests_total` and\n`armor_step_us{plane=\"f32\"}`; families like `armor_*_total` are prose.\n## 9. Next\n`armor_after_total`\n";
+        let got = section_metric_names(api);
+        let names: Vec<&str> = got.iter().map(|(_, n)| n.as_str()).collect();
+        assert_eq!(names, vec!["armor_requests_total", "armor_step_us"]);
+        assert_eq!(got[0].0, 5);
+    }
+
+    #[test]
+    fn slug_list_stops_at_sentence_end() {
+        let api = "## 2. Errors\nSlugs in v1: `bad_request`,\n`overloaded`. The `code` field repeats the status.\n";
+        let got = slug_list(api);
+        let names: Vec<&str> = got.iter().map(|(_, n)| n.as_str()).collect();
+        assert_eq!(names, vec!["bad_request", "overloaded"]);
+        assert_eq!(got[0].0, 2);
+        assert_eq!(got[1].0, 3);
+    }
+
+    #[test]
+    fn flag_rows_parse() {
+        let md = "| Flag | Default |\n| `--batch N` | 8 |\n| `--quant off\\|q8` | off |\nnot a row `--ghost`\n";
+        let got = flag_table_rows(md);
+        let names: Vec<&str> = got.iter().map(|(_, n)| n.as_str()).collect();
+        assert_eq!(names, vec!["batch", "quant"]);
+    }
+}

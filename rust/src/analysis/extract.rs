@@ -1,0 +1,247 @@
+//! Token-pattern extractors: the *facts* the rules check, separated from
+//! the verdicts `rules.rs` makes about them.
+//!
+//! Every extractor works on a [`Lexed`](crate::analysis::lexer::Lexed)
+//! token stream, so comments, strings, and doc-comment code examples can
+//! never produce a fact.
+
+use super::lexer::{Lexed, TokKind};
+
+/// True when `line` falls inside any inclusive `(start, end)` range.
+pub fn in_regions(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Panic-capable macros the engine-worker rule forbids.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that can legally precede `[` without forming an index
+/// expression (`return [..]`, `in [..]`, …).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "break", "continue", "crate", "dyn", "else", "enum", "extern", "fn", "for", "if",
+    "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref", "return",
+    "static", "struct", "super", "trait", "type", "unsafe", "use", "where", "while",
+];
+
+/// One panic-capable site: the rule it violates, its line, and a short
+/// rendering of the construct for the report.
+pub fn panic_sites(lx: &Lexed) -> Vec<(&'static str, u32, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        let tk = &t[i];
+        if tk.kind == TokKind::Ident {
+            if (tk.text == "unwrap" || tk.text == "expect")
+                && i > 0
+                && t[i - 1].punct('.')
+                && t.get(i + 1).is_some_and(|n| n.punct('('))
+            {
+                out.push(("PANIC_UNWRAP", tk.line, format!(".{}()", tk.text)));
+            }
+            if PANIC_MACROS.contains(&tk.text.as_str())
+                && t.get(i + 1).is_some_and(|n| n.punct('!'))
+            {
+                out.push(("PANIC_MACRO", tk.line, format!("{}!", tk.text)));
+            }
+        }
+        // `expr[…]` indexing: `[` directly after an identifier, a close
+        // paren, or a close bracket. Array literals/types, attributes, and
+        // macro brackets (`vec![…]`) are all preceded by punctuation or a
+        // keyword and never match.
+        if tk.punct('[') && i > 0 {
+            let p = &t[i - 1];
+            let indexee = (p.kind == TokKind::Ident && !NON_INDEX_KEYWORDS.contains(&p.text.as_str()))
+                || p.punct(')')
+                || p.punct(']');
+            if indexee {
+                let what = if p.kind == TokKind::Ident {
+                    format!("{}[…]", p.text)
+                } else {
+                    "(…)[…]".to_string()
+                };
+                out.push(("PANIC_INDEX", tk.line, what));
+            }
+        }
+    }
+    out
+}
+
+/// Lines of `unsafe` keywords (blocks, fns, impls).
+pub fn unsafe_sites(lx: &Lexed) -> Vec<u32> {
+    lx.tokens.iter().filter(|tk| tk.ident("unsafe")).map(|tk| tk.line).collect()
+}
+
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// `Ordering::<atomic variant>` uses. Matching on the atomic variants
+/// keeps `std::cmp::Ordering::{Less, Equal, Greater}` out of the audit.
+pub fn ordering_sites(lx: &Lexed) -> Vec<(u32, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(3) {
+        if t[i].ident("Ordering")
+            && t[i + 1].punct(':')
+            && t[i + 2].punct(':')
+            && t[i + 3].kind == TokKind::Ident
+            && ATOMIC_ORDERINGS.contains(&t[i + 3].text.as_str())
+        {
+            out.push((t[i + 3].line, t[i + 3].text.clone()));
+        }
+    }
+    out
+}
+
+/// `<registry>.counter("armor_…", …)` / `.gauge(` / `.histogram(` calls
+/// with a literal series name — the `MetricsRegistry` registration
+/// pattern. The `armor_` prefix scopes the contract to Prometheus series
+/// (Chrome-trace counters in `obs/trace.rs` use bare names).
+pub fn metric_registrations(lx: &Lexed) -> Vec<(u32, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 1..t.len() {
+        if t[i].kind == TokKind::Ident
+            && matches!(t[i].text.as_str(), "counter" | "gauge" | "histogram")
+            && t[i - 1].punct('.')
+            && t.get(i + 1).is_some_and(|n| n.punct('('))
+            && t.get(i + 2).is_some_and(|n| n.kind == TokKind::Str && n.text.starts_with("armor_"))
+        {
+            out.push((t[i].line, t[i + 2].text.clone()));
+        }
+    }
+    out
+}
+
+/// Literal `(status, "slug")` pairs from `Response::error(…)` and
+/// `ParseError::new(…)` call sites. Forwarding sites with non-literal
+/// arguments carry no new contract and are skipped.
+pub fn slug_sites(lx: &Lexed) -> Vec<(u32, u16, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(7) {
+        let head = (t[i].ident("Response") && t[i + 3].ident("error"))
+            || (t[i].ident("ParseError") && t[i + 3].ident("new"));
+        if head
+            && t[i + 1].punct(':')
+            && t[i + 2].punct(':')
+            && t[i + 4].punct('(')
+            && t[i + 5].kind == TokKind::Num
+            && t[i + 6].punct(',')
+            && t[i + 7].kind == TokKind::Str
+        {
+            if let Ok(status) = t[i + 5].text.parse::<u16>() {
+                out.push((t[i + 5].line, status, t[i + 7].text.clone()));
+            }
+        }
+    }
+    out
+}
+
+/// `const FP_*: &str = "site"` declarations in `obs/failpoint.rs` — the
+/// authoritative failpoint site list.
+pub fn failpoint_sites(lx: &Lexed) -> Vec<(u32, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(6) {
+        if t[i].ident("const")
+            && t[i + 1].kind == TokKind::Ident
+            && t[i + 1].text.starts_with("FP_")
+            && t[i + 2].punct(':')
+            && t[i + 3].punct('&')
+            && t[i + 4].ident("str")
+            && t[i + 5].punct('=')
+            && t[i + 6].kind == TokKind::Str
+        {
+            out.push((t[i + 6].line, t[i + 6].text.clone()));
+        }
+    }
+    out
+}
+
+/// Accessor methods of `util::cli::Args` whose first argument names a
+/// `--flag`.
+const FLAG_ACCESSORS: &[&str] = &["get", "get_or", "get_usize", "get_u64", "get_f32", "flag"];
+
+/// `args.<accessor>("name", …)` reads — the parsed-flag surface of
+/// `main.rs`. The receiver must literally be `args`, which keeps map/JSON
+/// `.get(…)` calls on other receivers out of the contract.
+pub fn flag_reads(lx: &Lexed) -> Vec<(u32, String)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(4) {
+        if t[i].ident("args")
+            && t[i + 1].punct('.')
+            && t[i + 2].kind == TokKind::Ident
+            && FLAG_ACCESSORS.contains(&t[i + 2].text.as_str())
+            && t[i + 3].punct('(')
+            && t[i + 4].kind == TokKind::Str
+        {
+            out.push((t[i + 4].line, t[i + 4].text.clone()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn panic_sites_find_all_three_families() {
+        let src = "fn f(v: &mut Vec<u32>) -> u32 {\n    let a = v.pop().unwrap();\n    let b = v.first().expect(\"x\");\n    if a > *b { panic!(\"boom\") }\n    unreachable!()\n}\n";
+        let got = panic_sites(&lex(src));
+        let rules: Vec<&str> = got.iter().map(|g| g.0).collect();
+        assert_eq!(rules, vec!["PANIC_UNWRAP", "PANIC_UNWRAP", "PANIC_MACRO", "PANIC_MACRO"]);
+        assert_eq!(got[0].1, 2);
+        assert_eq!(got[2].1, 4);
+    }
+
+    #[test]
+    fn indexing_heuristic_skips_types_literals_and_macros() {
+        let flagged = "fn f(v: &[u32], m: &M) -> u32 { v[0] + m.rows[1] + g(v)[2] }\n";
+        assert_eq!(panic_sites(&lex(flagged)).len(), 3);
+        let clean = "fn f(x: [u8; 4], v: &[u8]) -> Vec<u32> {\n    let a = [1, 2];\n    vec![a[..].len() as u32]\n}\n";
+        // Only `a[..]` indexes; the array type, literal, and `vec![` do not.
+        let got = panic_sites(&lex(clean));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].2, "a[…]");
+    }
+
+    #[test]
+    fn ordering_sites_skip_cmp_ordering() {
+        let src = "fn f() {\n    x.fetch_add(1, Ordering::Relaxed);\n    y.sort_by(|a, b| std::cmp::Ordering::Equal);\n    z.load(Ordering::SeqCst);\n}\n";
+        let got = ordering_sites(&lex(src));
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].0, got[0].1.as_str()), (2, "Relaxed"));
+        assert_eq!((got[1].0, got[1].1.as_str()), (4, "SeqCst"));
+    }
+
+    #[test]
+    fn metric_registrations_need_literal_armor_names() {
+        let src = "fn f(r: &R, tr: &T) {\n    let a = r.counter(\"armor_x_total\", &[], \"doc\");\n    let b = r.histogram(\n        \"armor_y_us\",\n        &[(\"k\", \"v\")],\n        \"doc\",\n    );\n    tr.counter(\"queue\", vec![]);\n    let c = r.gauge(name, &[], \"\");\n}\n";
+        let got = metric_registrations(&lex(src));
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].0, got[0].1.as_str()), (2, "armor_x_total"));
+        assert_eq!((got[1].0, got[1].1.as_str()), (4, "armor_y_us"));
+    }
+
+    #[test]
+    fn slug_sites_take_literal_pairs_only() {
+        let src = "fn f() {\n    Response::error(400, \"bad_request\", msg);\n    Response::error(e.status, e.reason, &e.message);\n    ParseError::new(\n        431,\n        \"headers_too_large\",\n        \"x\",\n    );\n}\n";
+        let got = slug_sites(&lex(src));
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].1, got[0].2.as_str()), (400, "bad_request"));
+        assert_eq!((got[1].1, got[1].2.as_str()), (431, "headers_too_large"));
+    }
+
+    #[test]
+    fn failpoint_and_flag_extraction() {
+        let fp = "pub const FP_KV_ALLOC: &str = \"kv_alloc\";\nconst OTHER: usize = 3;\n";
+        assert_eq!(failpoint_sites(&lex(fp)), vec![(1, "kv_alloc".to_string())]);
+        let fl = "fn f(args: &Args, j: &Json) {\n    let a = args.get_usize(\"batch\", 8);\n    let b = args.flag(\"compare\");\n    let c = j.get(\"batch\");\n}\n";
+        let got = flag_reads(&lex(fl));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].1, "batch");
+        assert_eq!(got[1].1, "compare");
+    }
+}

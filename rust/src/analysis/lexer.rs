@@ -1,0 +1,398 @@
+//! A minimal Rust lexer: token stream with line spans.
+//!
+//! Purpose-built for `armor lint` (see [`crate::analysis`]). It does not
+//! parse Rust — it tokenizes it faithfully enough to match short token
+//! patterns (`.unwrap(`, `Ordering::SeqCst`, `r.counter("armor_…")`) with
+//! correct line numbers, while *skipping* the places naive text scanning
+//! goes wrong: comments (including doc-comment code examples), string and
+//! char literals, raw strings, and lifetimes. std-only, like the rest of
+//! the crate.
+
+/// Token kind. Punctuation is one token per character; multi-character
+/// operators stay split because the rules only ever match short sequences
+/// (`:` `:` for a path separator, `!` after a macro name, and so on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Identifier name, decoded string value, numeric text, or the single
+    /// punctuation character.
+    pub text: String,
+    /// Line of the token's first character.
+    pub line: u32,
+}
+
+impl Token {
+    /// Is this the identifier `name`?
+    pub fn ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// Is this the punctuation character `ch`?
+    pub fn punct(&self, ch: char) -> bool {
+        self.kind == TokKind::Punct && self.text.chars().next() == Some(ch)
+    }
+}
+
+/// One comment (line or block) with its starting line. `trailing` records
+/// whether code tokens precede it on that line — the distinction the
+/// pragma scoping rules need.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Interior text: `//`/`/*` markers plus doc-comment decoration
+    /// stripped, surrounding whitespace trimmed.
+    pub text: String,
+    pub line: u32,
+    pub trailing: bool,
+}
+
+/// The lexer's output for one source file.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+    pub n_lines: u32,
+}
+
+/// Tokenize one Rust source file.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // Line of the most recent token — a comment on the same line is a
+    // trailing comment.
+    let mut last_code_line: u32 = 0;
+
+    let push = |out: &mut Lexed, kind: TokKind, text: String, line: u32| {
+        out.tokens.push(Token { kind, text, line });
+    };
+
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // Line comment (also `///` and `//!` doc comments).
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            let raw: String = b[start..i].iter().collect();
+            out.comments.push(Comment {
+                text: raw.trim_start_matches(['/', '!']).trim().to_string(),
+                line,
+                trailing: last_code_line == line,
+            });
+            continue;
+        }
+
+        // Block comment, nesting respected.
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let cline = line;
+            let trailing = last_code_line == line;
+            let start = i + 2;
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let end = if depth == 0 { i.saturating_sub(2) } else { i };
+            let raw: String = b[start..end.max(start)].iter().collect();
+            out.comments.push(Comment {
+                text: raw.trim_start_matches(['*', '!']).trim().to_string(),
+                line: cline,
+                trailing,
+            });
+            continue;
+        }
+
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#, b'…'.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && b.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = (c == 'r' || b.get(i + 1) == Some(&'r')) && b.get(j) == Some(&'"');
+            if is_raw {
+                let sline = line;
+                i = j + 1;
+                let start = i;
+                // Terminator: `"` followed by `hashes` hash marks.
+                'scan: while i < b.len() {
+                    if b[i] == '\n' {
+                        line += 1;
+                    } else if b[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && b.get(i + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            let text: String = b[start..i].iter().collect();
+                            push(&mut out, TokKind::Str, text, sline);
+                            i += 1 + hashes;
+                            last_code_line = line;
+                            break 'scan;
+                        }
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            if c == 'b' && b.get(i + 1) == Some(&'"') {
+                // Byte string: lex like a normal string from the quote.
+                i += 1;
+                // Falls through to the `"` branch below on the next loop
+                // turn; mark nothing yet.
+                continue;
+            }
+            if c == 'b' && b.get(i + 1) == Some(&'\'') {
+                i += 1;
+                continue; // byte char: handled by the `'` branch next turn
+            }
+            // Plain identifier starting with r/b — fall through.
+        }
+
+        // String literal.
+        if c == '"' {
+            let sline = line;
+            i += 1;
+            let mut s = String::new();
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    let e = b[i + 1];
+                    if e == '\n' {
+                        line += 1;
+                    }
+                    s.push(match e {
+                        'n' => '\n',
+                        't' => '\t',
+                        'r' => '\r',
+                        '0' => '\0',
+                        other => other,
+                    });
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                s.push(b[i]);
+                i += 1;
+            }
+            i += 1; // closing quote
+            push(&mut out, TokKind::Str, s, sline);
+            last_code_line = line;
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: consume through the closing quote.
+                i += 2;
+                while i < b.len() && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                push(&mut out, TokKind::Char, String::new(), line);
+                last_code_line = line;
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') {
+                push(&mut out, TokKind::Char, b[i + 1].to_string(), line);
+                i += 3;
+                last_code_line = line;
+                continue;
+            }
+            // Lifetime: `'ident` with no closing quote.
+            i += 1;
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            push(&mut out, TokKind::Lifetime, text, line);
+            last_code_line = line;
+            continue;
+        }
+
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            push(&mut out, TokKind::Ident, text, line);
+            last_code_line = line;
+            continue;
+        }
+
+        // Number. A decimal point is consumed only when a digit follows,
+        // so range expressions (`0..n`) stay separate tokens.
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            if b.get(i) == Some(&'.') && b.get(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                i += 1;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i].iter().collect();
+            push(&mut out, TokKind::Num, text, line);
+            last_code_line = line;
+            continue;
+        }
+
+        // Everything else: one punctuation token per character.
+        push(&mut out, TokKind::Punct, c.to_string(), line);
+        last_code_line = line;
+        i += 1;
+    }
+
+    out.n_lines = line;
+    out
+}
+
+/// Inclusive line ranges covered by `#[cfg(test)]`-gated items (a gated
+/// `mod` runs to its matching close brace; a gated `use` to its `;`).
+/// Every lint rule skips these — test code may unwrap freely.
+pub fn test_regions(lx: &Lexed) -> Vec<(u32, u32)> {
+    let t = &lx.tokens;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < t.len() {
+        let is_attr = t[i].punct('#')
+            && t[i + 1].punct('[')
+            && t[i + 2].ident("cfg")
+            && t[i + 3].punct('(')
+            && t[i + 4].ident("test")
+            && t[i + 5].punct(')')
+            && t[i + 6].punct(']');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start_line = t[i].line;
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut end_line = lx.n_lines; // unterminated item: runs to EOF
+        while j < t.len() {
+            if t[j].punct('{') {
+                depth += 1;
+            } else if t[j].punct('}') {
+                if depth <= 1 {
+                    end_line = t[j].line;
+                    break;
+                }
+                depth -= 1;
+            } else if depth == 0 && t[j].punct(';') {
+                end_line = t[j].line;
+                break;
+            }
+            j += 1;
+        }
+        out.push((start_line, end_line));
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let lx = lex("let x = 1; // y.unwrap()\nlet s = \"panic!\"; /* v[0] */\n");
+        assert!(!lx.tokens.iter().any(|t| t.ident("unwrap")));
+        assert!(!lx.tokens.iter().any(|t| t.ident("panic")));
+        assert!(!lx.tokens.iter().any(|t| t.punct('[')));
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].trailing);
+        assert_eq!(lx.tokens.iter().find(|t| t.kind == TokKind::Str).map(|t| t.text.as_str()), Some("panic!"));
+    }
+
+    #[test]
+    fn lines_and_spans_track() {
+        let lx = lex("a\nb\n  c\n");
+        let lines: Vec<u32> = lx.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }\n");
+        let lifetimes = lx.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = lx.tokens.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn raw_and_escaped_strings_lex() {
+        let lx = lex("let a = r#\"he \"quoted\" [0]\"#; let b = \"l1\\nl2\"; let c = 'q';\nlet d = 1;\n");
+        assert_eq!(lx.tokens.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+        assert!(!lx.tokens.iter().any(|t| t.punct('[')));
+        // The escaped newline inside `b` must not advance the line counter.
+        assert_eq!(lx.tokens.last().map(|t| t.line), Some(2));
+    }
+
+    #[test]
+    fn doc_comment_decoration_is_stripped() {
+        let lx = lex("/// leading doc\n//! inner doc\n// lint: allow(X) reason=\"y\"\n");
+        let texts: Vec<&str> = lx.comments.iter().map(|c| c.text.as_str()).collect();
+        assert_eq!(texts, vec!["leading doc", "inner doc", "lint: allow(X) reason=\"y\""]);
+    }
+
+    #[test]
+    fn cfg_test_region_is_found() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { v.pop().unwrap(); }\n}\nfn after() {}\n";
+        let lx = lex(src);
+        assert_eq!(test_regions(&lx), vec![(2, 5)]);
+    }
+
+    #[test]
+    fn cfg_test_on_use_runs_to_semicolon() {
+        let src = "#[cfg(test)]\nuse super::thing;\nfn live() {}\n";
+        let lx = lex(src);
+        assert_eq!(test_regions(&lx), vec![(1, 2)]);
+    }
+}

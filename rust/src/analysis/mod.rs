@@ -1,0 +1,48 @@
+//! `armor lint` — a hermetic, std-only static-analysis pass over the
+//! serve stack.
+//!
+//! Nine PRs in, the codebase carries several *cross-file* contracts that
+//! no compiler checks: the API.md wire schema (§2 error slugs, §8 metric
+//! series), the README flag tables and failpoint-site list, panic-freedom
+//! on the `armor-engine` worker thread, `// SAFETY:` discipline on
+//! `unsafe`, and justified memory orderings on the lock-free hot paths.
+//! This module machine-checks them:
+//!
+//! - [`lexer`] — a minimal Rust lexer (token stream with line spans) that
+//!   skips comments, strings, and doc-comment code examples;
+//! - [`pragma`] — inline `allow` pragmas with exact-once accounting;
+//! - [`extract`] — token-pattern extractors for the code-side facts;
+//! - [`docs`] — markdown extractors for the document-side facts;
+//! - [`rules`] — the rule engine, [`run`] being its entry point;
+//! - [`report`] — `file:line · RULE_ID · message` rendering plus the JSON
+//!   artifact CI uploads.
+//!
+//! The CLI surface is `armor lint [--fix-plan] [--json <path>] [--root
+//! <dir>]`, exiting non-zero when any violation survives its pragmas.
+
+pub mod docs;
+pub mod extract;
+pub mod lexer;
+pub mod pragma;
+pub mod report;
+pub mod rules;
+
+pub use report::{LintReport, PragmaUse, Violation};
+pub use rules::run;
+
+/// Every rule `armor lint` implements: `(RULE_ID, summary)`. Pragmas may
+/// name exactly these ids; anything else is a `PRAGMA_UNKNOWN` violation
+/// (typos must fail loudly, not silently suppress nothing).
+pub const RULES: &[(&str, &str)] = &[
+    ("PANIC_UNWRAP", ".unwrap()/.expect() in an engine-worker file"),
+    ("PANIC_MACRO", "panic!/unreachable!/todo!/unimplemented! in an engine-worker file"),
+    ("PANIC_INDEX", "[]-indexing in an engine-worker file"),
+    ("UNSAFE_SAFETY", "`unsafe` without a preceding // SAFETY: comment"),
+    ("ORDERING_COMMENT", "atomic Ordering:: use outside obs/ without a justifying comment"),
+    ("DRIFT_METRIC", "MetricsRegistry series vs API.md §8, both directions"),
+    ("DRIFT_SLUG", "(status, slug) error pairs vs API.md §2, both directions"),
+    ("DRIFT_FAILPOINT", "failpoint site strings vs the README"),
+    ("DRIFT_FLAG", "--flags parsed in main.rs vs the README flag tables, both directions"),
+    ("PRAGMA_MALFORMED", "allow pragma that does not parse"),
+    ("PRAGMA_UNKNOWN", "allow pragma naming a rule id that does not exist"),
+];

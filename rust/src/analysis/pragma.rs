@@ -1,0 +1,182 @@
+//! Parsing and scoping of inline lint-allow pragmas.
+//!
+//! Grammar (one comment, exact shape — anything else starting with the
+//! `lint:` marker is a malformed-pragma violation):
+//!
+//! ```text
+//! // lint: allow(RULE_ID) reason="non-empty justification"
+//! ```
+//!
+//! Scope:
+//!
+//! - **trailing** (code precedes it on the line): covers that line only;
+//! - **standalone** above a line that begins a `fn` item: covers the whole
+//!   function body (brace-matched);
+//! - **standalone** above any other line: covers that next code line only.
+//!
+//! Unknown rule ids are a hard error, not a silent no-op — a typo'd
+//! pragma must fail loudly (mirroring `obs/failpoint.rs`, where an
+//! unknown site name is a structured error).
+
+use super::lexer::{Comment, Lexed};
+
+/// One successfully parsed pragma with its resolved line coverage.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub rule: String,
+    pub reason: String,
+    /// Line of the pragma comment itself.
+    pub line: u32,
+    /// First and last covered line (inclusive).
+    pub start: u32,
+    pub end: u32,
+}
+
+/// A pragma that failed to parse or names a rule that does not exist.
+#[derive(Clone, Debug)]
+pub enum PragmaError {
+    Malformed { line: u32, detail: String },
+    UnknownRule { line: u32, rule: String },
+}
+
+/// Collect every pragma in a lexed file, resolving scopes against the
+/// token stream. `known_rules` is the registered rule-id table.
+pub fn collect(lx: &Lexed, known_rules: &[&str]) -> (Vec<Pragma>, Vec<PragmaError>) {
+    let mut pragmas = Vec::new();
+    let mut errors = Vec::new();
+    for c in &lx.comments {
+        let Some(rest) = c.text.strip_prefix("lint:") else { continue };
+        match parse_body(rest.trim()) {
+            Err(detail) => errors.push(PragmaError::Malformed { line: c.line, detail }),
+            Ok((rule, reason)) => {
+                if !known_rules.contains(&rule.as_str()) {
+                    errors.push(PragmaError::UnknownRule { line: c.line, rule });
+                    continue;
+                }
+                let (start, end) = scope_of(lx, c);
+                pragmas.push(Pragma { rule, reason, line: c.line, start, end });
+            }
+        }
+    }
+    (pragmas, errors)
+}
+
+/// Parse `allow(RULE_ID) reason="…"` (the part after the `lint:` marker).
+fn parse_body(s: &str) -> Result<(String, String), String> {
+    let Some(rest) = s.strip_prefix("allow(") else {
+        return Err("expected `allow(RULE_ID)`".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("unclosed `allow(`".to_string());
+    };
+    let rule = rest[..close].trim().to_string();
+    let id_ok = !rule.is_empty()
+        && rule.bytes().all(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_');
+    if !id_ok {
+        return Err(format!("`{rule}` is not a rule id (UPPER_SNAKE_CASE)"));
+    }
+    let tail = rest[close + 1..].trim();
+    let Some(r) = tail.strip_prefix("reason=\"") else {
+        return Err("missing `reason=\"…\"`".to_string());
+    };
+    let Some(endq) = r.rfind('"') else {
+        return Err("unclosed reason string".to_string());
+    };
+    let reason = r[..endq].trim().to_string();
+    if reason.is_empty() {
+        return Err("reason must be non-empty".to_string());
+    }
+    Ok((rule, reason))
+}
+
+/// Resolve the line range a pragma covers (see module docs).
+fn scope_of(lx: &Lexed, c: &Comment) -> (u32, u32) {
+    if c.trailing {
+        return (c.line, c.line);
+    }
+    let t = &lx.tokens;
+    let Some(first) = t.iter().position(|tk| tk.line > c.line) else {
+        return (c.line, c.line);
+    };
+    let target = t[first].line;
+    let line_has_fn = t[first..]
+        .iter()
+        .take_while(|tk| tk.line == target)
+        .any(|tk| tk.ident("fn"));
+    if line_has_fn {
+        let mut j = first;
+        while j < t.len() && !t[j].punct('{') {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        while j < t.len() {
+            if t[j].punct('{') {
+                depth += 1;
+            } else if t[j].punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    return (c.line, t[j].line);
+                }
+            }
+            j += 1;
+        }
+    }
+    (c.line, target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    const KNOWN: &[&str] = &["PANIC_UNWRAP", "PANIC_INDEX"];
+
+    #[test]
+    fn trailing_pragma_covers_its_line() {
+        let src = "fn f() {\n    let x = v.pop().unwrap(); // lint: allow(PANIC_UNWRAP) reason=\"checked\"\n}\n";
+        let (p, e) = collect(&lex(src), KNOWN);
+        assert!(e.is_empty());
+        assert_eq!((p[0].start, p[0].end), (2, 2));
+    }
+
+    #[test]
+    fn standalone_pragma_covers_next_line() {
+        let src = "fn f() {\n    // lint: allow(PANIC_UNWRAP) reason=\"checked\"\n    let x = v.pop().unwrap();\n    let y = v.pop().unwrap();\n}\n";
+        let (p, _) = collect(&lex(src), KNOWN);
+        assert_eq!((p[0].start, p[0].end), (2, 3));
+    }
+
+    #[test]
+    fn fn_pragma_covers_whole_body() {
+        let src = "// lint: allow(PANIC_INDEX) reason=\"bounds pre-checked\"\npub fn pick(v: &[u32], i: usize) -> u32 {\n    if i > 0 {\n        v[i]\n    } else {\n        v[0]\n    }\n}\n";
+        let (p, _) = collect(&lex(src), KNOWN);
+        assert_eq!((p[0].start, p[0].end), (1, 8));
+    }
+
+    #[test]
+    fn unknown_rule_is_an_error() {
+        let src = "// lint: allow(PANIC_UNWRP) reason=\"typo\"\nfn f() {}\n";
+        let (p, e) = collect(&lex(src), KNOWN);
+        assert!(p.is_empty());
+        assert!(matches!(&e[0], PragmaError::UnknownRule { rule, .. } if rule == "PANIC_UNWRP"));
+    }
+
+    #[test]
+    fn malformed_pragmas_are_errors() {
+        for bad in [
+            "// lint: allow(PANIC_UNWRAP)\nfn f() {}\n",
+            "// lint: allow(PANIC_UNWRAP) reason=\"\"\nfn f() {}\n",
+            "// lint: allowing stuff\nfn f() {}\n",
+        ] {
+            let (p, e) = collect(&lex(bad), KNOWN);
+            assert!(p.is_empty(), "{bad}");
+            assert!(matches!(&e[0], PragmaError::Malformed { .. }), "{bad}");
+        }
+    }
+
+    #[test]
+    fn ordinary_comments_are_ignored() {
+        let (p, e) = collect(&lex("// the linter counts allow pragmas\nfn f() {}\n"), KNOWN);
+        assert!(p.is_empty() && e.is_empty());
+    }
+}

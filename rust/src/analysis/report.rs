@@ -1,0 +1,164 @@
+//! Lint findings: the violation/pragma records, the human-readable
+//! rendering (`file:line · RULE_ID · message`), and the JSON artifact CI
+//! uploads.
+
+use crate::util::json::Json;
+
+/// One rule violation, anchored to a repo-relative file and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    /// Suggested remediation, shown under `--fix-plan`.
+    pub fix: String,
+}
+
+/// One `lint: allow(...)` pragma encountered, with whether it actually
+/// suppressed a violation.
+#[derive(Clone, Debug)]
+pub struct PragmaUse {
+    pub path: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// The result of one lint run over a repository tree.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub pragmas: Vec<PragmaUse>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// No violations — the tree honors every machine-checked contract.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Render the report. With `fix_plan`, each violation carries its
+    /// suggested remediation.
+    pub fn render(&self, fix_plan: bool) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!("{}:{} · {} · {}\n", v.path, v.line, v.rule, v.message));
+            if fix_plan && !v.fix.is_empty() {
+                s.push_str(&format!("    fix: {}\n", v.fix));
+            }
+        }
+        let used = self.pragmas.iter().filter(|p| p.used).count();
+        if !self.pragmas.is_empty() {
+            s.push_str(&format!(
+                "{} allow pragma(s) ({} active, {} unused):\n",
+                self.pragmas.len(),
+                used,
+                self.pragmas.len() - used
+            ));
+            for p in &self.pragmas {
+                let mark = if p.used { "" } else { " [unused]" };
+                s.push_str(&format!(
+                    "  {}:{} · allow({}) · {}{}\n",
+                    p.path, p.line, p.rule, p.reason, mark
+                ));
+            }
+        }
+        if self.clean() {
+            s.push_str(&format!(
+                "lint: clean ({} files scanned, {} pragma(s) honored)\n",
+                self.files_scanned, used
+            ));
+        } else {
+            s.push_str(&format!(
+                "lint: {} violation(s) across {} files scanned\n",
+                self.violations.len(),
+                self.files_scanned
+            ));
+        }
+        s
+    }
+
+    /// The machine-readable artifact (`armor lint --json <path>`).
+    pub fn to_json(&self) -> Json {
+        let violations = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("path", Json::Str(v.path.clone())),
+                    ("line", Json::Num(v.line as f64)),
+                    ("rule", Json::Str(v.rule.to_string())),
+                    ("message", Json::Str(v.message.clone())),
+                    ("fix", Json::Str(v.fix.clone())),
+                ])
+            })
+            .collect();
+        let pragmas = self
+            .pragmas
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("path", Json::Str(p.path.clone())),
+                    ("line", Json::Num(p.line as f64)),
+                    ("rule", Json::Str(p.rule.clone())),
+                    ("reason", Json::Str(p.reason.clone())),
+                    ("used", Json::Bool(p.used)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("clean", Json::Bool(self.clean())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("violations", Json::Arr(violations)),
+            ("pragmas", Json::Arr(pragmas)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            violations: vec![Violation {
+                path: "rust/src/serve/engine.rs".into(),
+                line: 42,
+                rule: "PANIC_UNWRAP",
+                message: ".unwrap() on the engine worker".into(),
+                fix: "return a structured error".into(),
+            }],
+            pragmas: vec![PragmaUse {
+                path: "rust/src/obs/registry.rs".into(),
+                line: 7,
+                rule: "PANIC_MACRO".into(),
+                reason: "documented API contract".into(),
+                used: true,
+            }],
+            files_scanned: 3,
+        }
+    }
+
+    #[test]
+    fn render_uses_the_contract_format() {
+        let r = sample();
+        let text = r.render(false);
+        assert!(text.contains("rust/src/serve/engine.rs:42 · PANIC_UNWRAP · .unwrap() on the engine worker"));
+        assert!(!text.contains("fix:"));
+        assert!(r.render(true).contains("    fix: return a structured error"));
+        assert!(text.contains("1 allow pragma(s) (1 active, 0 unused)"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("clean").as_bool(), Some(false));
+        let v = parsed.get("violations").as_arr().unwrap();
+        assert_eq!(v[0].get("rule").as_str(), Some("PANIC_UNWRAP"));
+        assert_eq!(v[0].get("line").as_usize(), Some(42));
+    }
+}

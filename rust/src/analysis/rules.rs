@@ -1,0 +1,355 @@
+//! The rule engine: walks `rust/src`, lexes every file, applies the four
+//! rule families, and cross-checks code facts against the contract
+//! documents. See DESIGN.md §12 for the contract each rule pins.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::docs::DocFacts;
+use super::extract;
+use super::lexer::{lex, test_regions};
+use super::pragma::{self, Pragma, PragmaError};
+use super::report::{LintReport, PragmaUse, Violation};
+use super::RULES;
+
+/// Files where the engine-worker panic-freedom rules apply: a panic on
+/// the `armor-engine` thread kills every in-flight stream, and the
+/// metrics registry sits on that same hot path.
+const PANIC_SCOPE: &[&str] = &[
+    "rust/src/serve/engine.rs",
+    "rust/src/serve/service.rs",
+    "rust/src/serve/scheduler.rs",
+    "rust/src/serve/kv_pool.rs",
+    "rust/src/serve/kv_cache.rs",
+    "rust/src/serve/prefix.rs",
+    "rust/src/obs/registry.rs",
+];
+
+/// Directory prefixes whose `MetricsRegistry` registrations participate
+/// in the API.md §8 exposition contract. `util/timer.rs` registers on the
+/// process-global registry (not the engine registry `/metrics` exposes)
+/// and stays out.
+const METRIC_SCOPE: &[&str] = &["rust/src/serve/", "rust/src/obs/", "rust/src/model/"];
+
+/// Files whose `(status, slug)` literals participate in the API.md §2
+/// envelope contract.
+const SLUG_SCOPE: &[&str] = &[
+    "rust/src/serve/http/handlers.rs",
+    "rust/src/serve/http/server.rs",
+    "rust/src/serve/http/parser.rs",
+];
+
+/// Run every rule over the repository rooted at `root`.
+pub fn run(root: &Path) -> crate::Result<LintReport> {
+    let docs = DocFacts::load(root)?;
+    let src_root = root.join("rust").join("src");
+    crate::ensure!(
+        src_root.is_dir(),
+        "lint: {} is not a repo root (missing rust/src)",
+        root.display()
+    );
+    let mut paths = Vec::new();
+    walk_rs(&src_root, &mut paths)?;
+
+    let rule_ids: Vec<&str> = RULES.iter().map(|r| r.0).collect();
+    let mut report = LintReport { files_scanned: paths.len(), ..LintReport::default() };
+    // Cross-file fact accumulators: (path, line, fact).
+    let mut registered: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    let mut code_slugs: Vec<(String, u32, u16, String)> = Vec::new();
+    let mut failpoints: Vec<(String, u32, String)> = Vec::new();
+    let mut flags: BTreeMap<String, (String, u32)> = BTreeMap::new();
+
+    for path in &paths {
+        let rel = rel_path(root, path);
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("lint: reading {rel}: {e}"))?;
+        let lx = lex(&src);
+        let tests = test_regions(&lx);
+        let (pragmas, perrs) = pragma::collect(&lx, &rule_ids);
+        let mut pused = vec![false; pragmas.len()];
+
+        for e in &perrs {
+            report.violations.push(match e {
+                PragmaError::Malformed { line, detail } => Violation {
+                    path: rel.clone(),
+                    line: *line,
+                    rule: "PRAGMA_MALFORMED",
+                    message: format!("malformed allow pragma: {detail}"),
+                    fix: "write `lint: allow(RULE_ID) reason=\"…\"` exactly".to_string(),
+                },
+                PragmaError::UnknownRule { line, rule } => Violation {
+                    path: rel.clone(),
+                    line: *line,
+                    rule: "PRAGMA_UNKNOWN",
+                    message: format!(
+                        "pragma names unknown rule `{rule}` and suppresses nothing"
+                    ),
+                    fix: format!("use one of: {}", rule_ids.join(", ")),
+                },
+            });
+        }
+
+        if PANIC_SCOPE.contains(&rel.as_str()) {
+            for (rule, line, what) in extract::panic_sites(&lx) {
+                if extract::in_regions(&tests, line) || allowed(&pragmas, &mut pused, rule, line)
+                {
+                    continue;
+                }
+                let (message, fix) = match rule {
+                    "PANIC_UNWRAP" => (
+                        format!("`{what}` can panic the engine worker"),
+                        "return crate::Result, or recover (poisoned locks: \
+                         lock().unwrap_or_else(|p| p.into_inner())), or justify with an \
+                         allow pragma"
+                            .to_string(),
+                    ),
+                    "PANIC_MACRO" => (
+                        format!("`{what}` can panic the engine worker"),
+                        "return a structured error, or justify with an allow pragma"
+                            .to_string(),
+                    ),
+                    _ => (
+                        format!("`{what}` indexing can panic the engine worker"),
+                        "use .get()/checked slicing, or a fn-scope allow pragma stating \
+                         the bounds argument"
+                            .to_string(),
+                    ),
+                };
+                report.violations.push(Violation { path: rel.clone(), line, rule, message, fix });
+            }
+        }
+
+        for line in extract::unsafe_sites(&lx) {
+            if extract::in_regions(&tests, line) {
+                continue;
+            }
+            let documented = lx
+                .comments
+                .iter()
+                .any(|c| c.text.contains("SAFETY:") && c.line <= line && c.line + 3 >= line);
+            if !documented && !allowed(&pragmas, &mut pused, "UNSAFE_SAFETY", line) {
+                report.violations.push(Violation {
+                    path: rel.clone(),
+                    line,
+                    rule: "UNSAFE_SAFETY",
+                    message: "`unsafe` without a `// SAFETY:` comment on the preceding lines"
+                        .to_string(),
+                    fix: "state the invariant that makes this sound in a `// SAFETY:` comment \
+                          directly above"
+                        .to_string(),
+                });
+            }
+        }
+
+        if !rel.starts_with("rust/src/obs/") {
+            for (line, ord) in extract::ordering_sites(&lx) {
+                if extract::in_regions(&tests, line) {
+                    continue;
+                }
+                let justified = lx
+                    .comments
+                    .iter()
+                    .any(|c| !c.text.is_empty() && c.line <= line && c.line + 2 >= line);
+                if !justified && !allowed(&pragmas, &mut pused, "ORDERING_COMMENT", line) {
+                    report.violations.push(Violation {
+                        path: rel.clone(),
+                        line,
+                        rule: "ORDERING_COMMENT",
+                        message: format!(
+                            "`Ordering::{ord}` without a justifying comment (same line or the \
+                             two above)"
+                        ),
+                        fix: "say why this ordering is sufficient (what the atomic \
+                              synchronizes, or why no ordering is needed)"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+
+        if METRIC_SCOPE.iter().any(|d| rel.starts_with(d)) {
+            for (line, name) in extract::metric_registrations(&lx) {
+                if !extract::in_regions(&tests, line) {
+                    registered.entry(name).or_insert((rel.clone(), line));
+                }
+            }
+        }
+        if SLUG_SCOPE.contains(&rel.as_str()) {
+            for (line, status, slug) in extract::slug_sites(&lx) {
+                if !extract::in_regions(&tests, line)
+                    && !code_slugs.iter().any(|(_, _, st, sl)| *st == status && *sl == slug)
+                {
+                    code_slugs.push((rel.clone(), line, status, slug));
+                }
+            }
+        }
+        if rel == "rust/src/obs/failpoint.rs" {
+            for (line, site) in extract::failpoint_sites(&lx) {
+                failpoints.push((rel.clone(), line, site));
+            }
+        }
+        if rel == "rust/src/main.rs" {
+            for (line, name) in extract::flag_reads(&lx) {
+                if !extract::in_regions(&tests, line) {
+                    flags.entry(name).or_insert((rel.clone(), line));
+                }
+            }
+        }
+
+        for (k, p) in pragmas.iter().enumerate() {
+            report.pragmas.push(PragmaUse {
+                path: rel.clone(),
+                line: p.line,
+                rule: p.rule.clone(),
+                reason: p.reason.clone(),
+                used: pused[k],
+            });
+        }
+    }
+
+    drift_checks(&mut report, &docs, &registered, &code_slugs, &failpoints, &flags);
+
+    report.violations.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+/// The cross-file half: code facts vs the contract documents.
+fn drift_checks(
+    report: &mut LintReport,
+    docs: &DocFacts,
+    registered: &BTreeMap<String, (String, u32)>,
+    code_slugs: &[(String, u32, u16, String)],
+    failpoints: &[(String, u32, String)],
+    flags: &BTreeMap<String, (String, u32)>,
+) {
+    // Metrics: registered ↔ API.md §8, both directions.
+    for (name, (path, line)) in registered {
+        if !docs.api_metrics.iter().any(|(_, n)| n == name) {
+            report.violations.push(Violation {
+                path: path.clone(),
+                line: *line,
+                rule: "DRIFT_METRIC",
+                message: format!("metric `{name}` is registered but not documented in API.md §8"),
+                fix: format!("add `{name}` to the API.md §8 series table"),
+            });
+        }
+    }
+    for (line, name) in &docs.api_metrics {
+        if !registered.contains_key(name) {
+            report.violations.push(Violation {
+                path: "API.md".to_string(),
+                line: *line,
+                rule: "DRIFT_METRIC",
+                message: format!("metric `{name}` is documented in §8 but never registered"),
+                fix: "register the series or drop it from the table".to_string(),
+            });
+        }
+    }
+
+    // Slugs: code (status, slug) pairs ↔ API.md §2, both directions.
+    for (path, line, status, slug) in code_slugs {
+        if !docs.api_slugs.iter().any(|(_, s)| s == slug) {
+            report.violations.push(Violation {
+                path: path.clone(),
+                line: *line,
+                rule: "DRIFT_SLUG",
+                message: format!("reason slug `{slug}` is not in the API.md §2 slug list"),
+                fix: format!("add `{slug}` to the `Slugs in v1:` list (or fix the call site)"),
+            });
+        } else if !docs.api_flat.contains(&format!("{status} {slug}")) {
+            report.violations.push(Violation {
+                path: path.clone(),
+                line: *line,
+                rule: "DRIFT_SLUG",
+                message: format!("status/slug pair `{status} {slug}` is not documented in API.md"),
+                fix: format!("document the `{status} {slug}` pairing in API.md"),
+            });
+        }
+    }
+    for (line, slug) in &docs.api_slugs {
+        if !code_slugs.iter().any(|(_, _, _, s)| s == slug) {
+            report.violations.push(Violation {
+                path: "API.md".to_string(),
+                line: *line,
+                rule: "DRIFT_SLUG",
+                message: format!("slug `{slug}` is documented in §2 but no handler emits it"),
+                fix: "emit it from a handler or drop it from the list".to_string(),
+            });
+        }
+    }
+
+    // Failpoints: every site string must be mentioned in the README.
+    for (path, line, site) in failpoints {
+        if !docs.readme_text.contains(site.as_str()) {
+            report.violations.push(Violation {
+                path: path.clone(),
+                line: *line,
+                rule: "DRIFT_FAILPOINT",
+                message: format!("failpoint site `{site}` is not mentioned in the README"),
+                fix: "document the site in the README fault-injection section".to_string(),
+            });
+        }
+    }
+
+    // Flags: parsed in main.rs ↔ README flag tables, both directions.
+    for (name, (path, line)) in flags {
+        if !docs.readme_flags.iter().any(|(_, f)| f == name) {
+            report.violations.push(Violation {
+                path: path.clone(),
+                line: *line,
+                rule: "DRIFT_FLAG",
+                message: format!("flag `--{name}` is parsed but missing from the README flag tables"),
+                fix: format!("add a `--{name}` row to the matching README table"),
+            });
+        }
+    }
+    for (line, name) in &docs.readme_flags {
+        if !flags.contains_key(name) {
+            report.violations.push(Violation {
+                path: "README.md".to_string(),
+                line: *line,
+                rule: "DRIFT_FLAG",
+                message: format!("flag `--{name}` is documented but never parsed in main.rs"),
+                fix: "parse the flag or drop the row".to_string(),
+            });
+        }
+    }
+}
+
+/// Does a pragma of `rule` cover `line`? Marks the pragma used.
+fn allowed(pragmas: &[Pragma], pused: &mut [bool], rule: &str, line: u32) -> bool {
+    for (k, p) in pragmas.iter().enumerate() {
+        if p.rule == rule && line >= p.start && line <= p.end {
+            pused[k] = true;
+            return true;
+        }
+    }
+    false
+}
+
+/// Collect `.rs` files under `dir`, depth-first, sorted for determinism.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| crate::err!("lint: reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes.
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}

@@ -24,6 +24,7 @@
 // numeric kernels; keep clippy's style lints from failing `-D warnings` CI.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod error;
 pub mod obs;
 pub mod util;

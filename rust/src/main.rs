@@ -8,6 +8,8 @@
 //!   serve        compile to execution form and replay synthetic traffic
 //!                through the KV-cached continuous-batching engine
 //!   inspect      list artifacts / model tensors
+//!   lint         static-analysis pass: panic-freedom, contract drift,
+//!                unsafe hygiene, ordering audit (DESIGN.md §12)
 
 use armor::armor::{ArmorConfig, ContinuousOpt, SelectionHeuristic};
 use armor::baselines::Method;
@@ -31,6 +33,7 @@ fn main() {
         Some("pipeline") => cmd_pipeline(&args),
         Some("serve") => cmd_serve(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print_usage();
             Ok(())
@@ -82,10 +85,13 @@ fn print_usage() {
                 OptSpec { name: "no-metrics", help: "serve: disable timing histograms/gauges (counters stay on)", default: None },
                 OptSpec { name: "metrics-out", help: "serve: write the Prometheus exposition to this path after the drain", default: None },
                 OptSpec { name: "listen", help: "serve: run a live HTTP/1.1 server on ADDR (e.g. 127.0.0.1:8080) instead of the synthetic burst; see API.md", default: None },
+                OptSpec { name: "fix-plan", help: "lint: print the suggested remediation under each violation", default: None },
+                OptSpec { name: "json", help: "lint: also write the machine-readable report to this path", default: None },
+                OptSpec { name: "root", help: "lint: repo root to scan (default: nearest ancestor with API.md and rust/src)", default: None },
             ]
         )
     );
-    println!("subcommands: gen-corpus | prune | eval | pipeline | serve | inspect");
+    println!("subcommands: gen-corpus | prune | eval | pipeline | serve | inspect | lint");
 }
 
 fn armor_cfg_from(args: &Args) -> ArmorConfig {
@@ -479,11 +485,13 @@ fn cmd_serve(args: &Args) -> armor::Result<()> {
             !args.flag("compare"),
             "--compare times the synthetic burst; it does not apply under --listen"
         );
-        let service = std::sync::Arc::new(EngineService::spawn(engine));
+        let service = std::sync::Arc::new(EngineService::spawn(engine)?);
         let server = HttpServer::bind(std::sync::Arc::clone(&service), &listen)?;
         let stop = install_shutdown_signals();
         println!("[serve] listening on http://{}  (ctrl-c or SIGTERM drains)", server.local_addr());
         println!("[serve] routes: GET /healthz | GET /metrics | GET /v1/stats | POST /v1/generate");
+        // SeqCst: pairs with the signal handler's store; a 100 ms poll
+        // loop has no ordering pressure worth a weaker pairing.
         while !stop.load(std::sync::atomic::Ordering::SeqCst) {
             std::thread::sleep(std::time::Duration::from_millis(100));
         }
@@ -569,4 +577,36 @@ fn cmd_inspect(args: &Args) -> armor::Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> armor::Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => find_repo_root()?,
+    };
+    let report = armor::analysis::run(&root)?;
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())
+            .map_err(|e| armor::err!("writing --json {path}: {e}"))?;
+    }
+    print!("{}", report.render(args.flag("fix-plan")));
+    armor::ensure!(report.clean(), "lint: {} violation(s)", report.violations.len());
+    Ok(())
+}
+
+/// The lint root: the nearest ancestor of the cwd holding both `API.md`
+/// and `rust/src`, so `cargo run -- lint` works from `rust/` or the repo
+/// root alike.
+fn find_repo_root() -> armor::Result<std::path::PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("API.md").is_file() && dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            armor::bail!(
+                "lint: no repo root (API.md + rust/src) above the current directory; pass --root"
+            );
+        }
+    }
 }

@@ -73,6 +73,7 @@ impl Histogram {
     }
 
     /// Record one sample: two relaxed atomic adds, no allocation.
+    // lint: allow(PANIC_INDEX) reason="bucket_index clamps to HIST_BUCKETS-1, so the index is total"
     pub fn record(&self, v: u64) {
         self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
@@ -96,6 +97,7 @@ impl Histogram {
         }
     }
     /// Per-bucket counts (non-cumulative), index 0 first.
+    // lint: allow(PANIC_INDEX) reason="from_fn yields i in 0..HIST_BUCKETS, the exact array length"
     pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
@@ -148,7 +150,9 @@ impl MetricsRegistry {
         help: &str,
         make: impl FnOnce() -> Metric,
     ) -> Metric {
-        let mut entries = self.entries.lock().unwrap();
+        // a poisoned registry mutex only means a panic elsewhere mid-push;
+        // the Vec is still structurally valid, so recover rather than cascade
+        let mut entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(e) = entries
             .iter()
             .find(|e| e.name == name && labels_eq(&e.labels, labels))
@@ -171,6 +175,7 @@ impl MetricsRegistry {
         match self.get_or_insert(name, labels, help, || Metric::Counter(Arc::new(Counter::default())))
         {
             Metric::Counter(c) => c,
+            // lint: allow(PANIC_MACRO) reason="documented API contract: re-registering a series as a different metric type is a caller bug"
             m => panic!("metric {name} registered as {}", m.type_name()),
         }
     }
@@ -180,6 +185,7 @@ impl MetricsRegistry {
     pub fn gauge(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Arc<Gauge> {
         match self.get_or_insert(name, labels, help, || Metric::Gauge(Arc::new(Gauge::default()))) {
             Metric::Gauge(g) => g,
+            // lint: allow(PANIC_MACRO) reason="documented API contract: re-registering a series as a different metric type is a caller bug"
             m => panic!("metric {name} registered as {}", m.type_name()),
         }
     }
@@ -191,13 +197,15 @@ impl MetricsRegistry {
             .get_or_insert(name, labels, help, || Metric::Histogram(Arc::new(Histogram::default())))
         {
             Metric::Histogram(h) => h,
+            // lint: allow(PANIC_MACRO) reason="documented API contract: re-registering a series as a different metric type is a caller bug"
             m => panic!("metric {name} registered as {}", m.type_name()),
         }
     }
 
     /// Current value of a registered counter series, if any.
     pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
-        let entries = self.entries.lock().unwrap();
+        // read-only view; poison recovery as in get_or_insert
+        let entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
         entries
             .iter()
             .find(|e| e.name == name && labels_eq(&e.labels, labels))
@@ -209,7 +217,8 @@ impl MetricsRegistry {
 
     /// Current value of a registered gauge series, if any.
     pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
-        let entries = self.entries.lock().unwrap();
+        // read-only view; poison recovery as in get_or_insert
+        let entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
         entries
             .iter()
             .find(|e| e.name == name && labels_eq(&e.labels, labels))
@@ -223,7 +232,8 @@ impl MetricsRegistry {
     /// (names sorted, series in registration order within a name),
     /// histograms as cumulative `_bucket{le=...}` plus `_sum` / `_count`.
     pub fn render_prometheus(&self) -> String {
-        let entries = self.entries.lock().unwrap();
+        // read-only view; poison recovery as in get_or_insert
+        let entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
         let mut names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
         names.sort_unstable();
         names.dedup();
@@ -231,6 +241,7 @@ impl MetricsRegistry {
         let mut out = String::new();
         for name in names {
             let group: Vec<&Entry> = entries.iter().filter(|e| e.name == name).collect();
+            // lint: allow(PANIC_INDEX) reason="name was drawn from entries, so its filter group is non-empty"
             let first = group[0];
             if !first.help.is_empty() {
                 out.push_str(&format!("# HELP {name} {}\n", first.help));

@@ -1003,6 +1003,7 @@ impl Engine {
     /// assert_eq!(report.requests[0].id, id);
     /// assert_eq!(report.requests[0].n_generated, 4);
     /// ```
+    // lint: allow(PANIC_UNWRAP) reason="documented API contract: the infallible wrapper panics on a bounded queue; fallible callers use try_submit_with"
     pub fn submit_with(
         &mut self,
         prompt: &[u16],
@@ -1059,6 +1060,7 @@ impl Engine {
         }
     }
 
+    // lint: allow(PANIC_INDEX) reason="start = len.saturating_sub(window) never exceeds prompt.len()"
     fn submit_opts(
         &mut self,
         prompt: &[u16],
@@ -1158,6 +1160,7 @@ impl Engine {
     /// older id wins the tie). EDF deliberately has no such guard: like the
     /// admission queue, deadline-less requests are best-effort under a
     /// saturating deadlined stream.
+    // lint: allow(PANIC_INDEX) reason="indices come from enumerating sched.active in this same fn"
     fn prefill_order(&self) -> Vec<usize> {
         let mut idx: Vec<usize> = self
             .sched
@@ -1192,6 +1195,7 @@ impl Engine {
     /// unconditional (they back the report), while the `begin_phase` /
     /// `end_phase` timing anchors collapse to `None` when neither metrics
     /// nor a trace is attached.
+    // lint: allow(PANIC_INDEX) reason="indices come from prefill_order over sched.active; prefill slices are chunk-clamped to the replay/prompt length"
     pub fn step(&mut self) -> usize {
         let m = self.metrics.clone();
         let trace = self.trace.clone();
@@ -1272,6 +1276,7 @@ impl Engine {
             }
             match parked_idx {
                 None => {
+                    // lint: allow(PANIC_UNWRAP) reason="pop follows the successful peek_admittable this same iteration with no queue mutation in between; bailing here would leak the page reservation"
                     let req = self.sched.pop_admittable().expect("peeked request vanished");
                     let admitted_tick = self.sched.current_tick();
                     self.sched.admit(ActiveSeq {
@@ -1327,6 +1332,7 @@ impl Engine {
             }
             let seq_start = begin_phase(timing, &trace);
             let seq = &mut self.sched.active[i];
+            // lint: allow(PANIC_MACRO) reason="prefill_order yields exactly the indices whose phase is Prefilling, checked immediately above in that fn"
             let SeqPhase::Prefilling { mut next } = seq.phase else { unreachable!() };
             // a re-admitted preempted sequence prefills its recorded
             // *replay* (prompt ++ generated minus the trailing token)
@@ -1578,13 +1584,16 @@ impl Engine {
     /// `spec_k` (capped at the configured `--spec K`), a fully rejected one
     /// halves it (floor 1). Accepted tokens stream as ordinary
     /// [`TokenEvent::Token`]s. Returns the tokens emitted this round.
+    // lint: allow(PANIC_INDEX) reason="i ranges over sched.active.len() and retire() does not run mid-round"
     fn spec_decode_round(
         &mut self,
         m: &ServeMetrics,
         trace: &Option<TraceRecorder>,
         timing: bool,
     ) -> usize {
-        let max_k = self.spec.expect("speculative round without --spec");
+        // guarded restructure: step() only enters here when --spec is set,
+        // but an emitted count of 0 is a correct no-op if that ever drifts
+        let Some(max_k) = self.spec else { return 0 };
         let max_seq = self.model.cfg.max_seq;
         let mut emitted_total = 0usize;
         for i in 0..self.sched.active.len() {
@@ -1725,6 +1734,7 @@ impl Engine {
     /// comparison (plus the id tiebreak inside [`Urgency`]) means two
     /// sequences can never evict each other back and forth, and FIFO never
     /// preempts at all (in-flight ids are always smaller).
+    // lint: allow(PANIC_INDEX) reason="idx is max_by_key over 0..active.len(); generated is non-empty for a Decoding victim"
     fn try_preempt(
         &mut self,
         candidate: Urgency,
@@ -1781,6 +1791,7 @@ impl Engine {
     /// (`--cancel-on-disconnect`) over the ids whose stream send failed.
     /// Runs at the top of [`Engine::step`], so freed pages and batch slots
     /// are admissible in the same step.
+    // lint: allow(PANIC_INDEX) reason="every while loop re-checks i < len each iteration before indexing; swap_remove only shrinks the tail"
     fn abort_expired(&mut self, m: &ServeMetrics, trace: &Option<TraceRecorder>) {
         if let Some(timeout) = self.request_timeout {
             let now = Instant::now();

@@ -99,6 +99,8 @@ impl HttpServer {
         }
         let report = self.service.shutdown();
         let deadline = Instant::now() + DRAIN_CONN_WAIT;
+        // SeqCst pairs with the handlers' fetch_sub: a handler observed
+        // done here stays done (this is a 10 ms poll, not a hot path)
         while self.conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(10));
         }
@@ -112,6 +114,8 @@ fn accept_loop(
     conns: &Arc<AtomicUsize>,
     service: &Arc<EngineService>,
 ) {
+    // stop/conns use SeqCst throughout: shutdown handshake correctness
+    // over accept-loop speed (one accept per connection, never hot)
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -119,6 +123,7 @@ fn accept_loop(
                 let _ = stream.set_nonblocking(false);
                 let _ = stream.set_read_timeout(Some(IDLE_READ_TIMEOUT));
                 let _ = stream.set_nodelay(true);
+                // count up before the handler exists (SeqCst, see loop head)
                 conns.fetch_add(1, Ordering::SeqCst);
                 let conns = Arc::clone(conns);
                 let service = Arc::clone(service);
@@ -126,9 +131,12 @@ fn accept_loop(
                     .name("armor-http-conn".to_string())
                     .spawn(move || {
                         handle_connection(stream, &service);
+                        // handler done: count down (SeqCst, see loop head)
                         conns.fetch_sub(1, Ordering::SeqCst);
                     });
                 if spawned.is_err() {
+                    // spawn failed, so the handler above never runs; undo
+                    // the optimistic count-up (SeqCst, see loop head)
                     conns.fetch_sub(1, Ordering::SeqCst);
                 }
             }
@@ -210,6 +218,9 @@ pub fn install_shutdown_signals() -> &'static AtomicBool {
     extern "C" {
         fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
     }
+    // SAFETY: signal(2) with valid signums and an async-signal-safe
+    // handler (on_shutdown_signal is exactly one atomic store); the
+    // returned previous handler is deliberately discarded.
     unsafe {
         signal(SIGINT, on_shutdown_signal);
         signal(SIGTERM, on_shutdown_signal);

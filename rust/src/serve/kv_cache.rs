@@ -166,6 +166,7 @@ impl KvCache {
     /// // the shared trailing page (copy-on-write at divergence)
     /// assert_eq!(pool.cow_copies(), 0);
     /// ```
+    // lint: allow(PANIC_INDEX) reason="pages = ceil(n / page_positions) with n <= len, so every chain holds at least pages entries"
     pub fn fork_prefix(&self, n: usize) -> KvCache {
         assert!(n <= self.len, "fork_prefix({n}) beyond committed length {}", self.len);
         let pages = n.div_ceil(self.page_positions);
@@ -200,6 +201,7 @@ impl KvCache {
     }
 
     #[inline]
+    // lint: allow(PANIC_INDEX) reason="layer and head are model-config coordinates; chains was sized n_layers * n_heads at construction"
     fn chain(&self, layer: usize, head: usize) -> &[Arc<Page>] {
         &self.chains[layer * self.n_heads + head]
     }
@@ -210,6 +212,7 @@ impl KvCache {
     /// before writing (CoW). On a q8 pool the head-slices are quantized
     /// here (one scale per slice, fixed at write time). Call for every
     /// layer, then commit the token(s) with [`KvCache::advance`].
+    // lint: allow(PANIC_INDEX) reason="layer indexes the construction-sized filled/chains tables; a fresh page is pushed before page_idx is read; rows are d_model = n_heads * head_dim wide"
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.d_model);
         debug_assert_eq!(v_row.len(), self.d_model);
@@ -245,6 +248,7 @@ impl KvCache {
     /// the last one. Appended-but-uncommitted rows are readable (a prefill
     /// chunk attends over rows it appended this step).
     #[inline]
+    // lint: allow(PANIC_INDEX) reason="layer is a model-config coordinate into the construction-sized filled table"
     pub fn panel_runs(&self, layer: usize, head: usize, n_ctx: usize) -> PanelRuns<'_> {
         debug_assert!(n_ctx <= self.filled[layer]);
         PanelRuns {
@@ -261,6 +265,7 @@ impl KvCache {
     /// from a q8 page. The scalar attention oracle reads through this, so
     /// "scalar over f32" stays the parity reference for every pool dtype.
     #[inline]
+    // lint: allow(PANIC_INDEX) reason="t < filled positions, so its page and in-page slice exist in the chain"
     pub fn k_at(&self, layer: usize, head: usize, t: usize) -> Cow<'_, [f32]> {
         let page = &self.chain(layer, head)[t / self.page_positions];
         let pos = t % self.page_positions;
@@ -277,6 +282,7 @@ impl KvCache {
     /// One head's V slice of position `t` (`head_dim` values) in f32 — see
     /// [`KvCache::k_at`].
     #[inline]
+    // lint: allow(PANIC_INDEX) reason="t < filled positions, so its page and in-page slice exist in the chain"
     pub fn v_at(&self, layer: usize, head: usize, t: usize) -> Cow<'_, [f32]> {
         let page = &self.chain(layer, head)[t / self.page_positions];
         let pos = t % self.page_positions;
@@ -352,6 +358,7 @@ impl<'a> Iterator for PanelRuns<'a> {
     type Item = PageRun<'a>;
 
     #[inline]
+    // lint: allow(PANIC_INDEX) reason="next_page only advances while positions remain, and run lengths are clamped to the page fill"
     fn next(&mut self) -> Option<PageRun<'a>> {
         if self.remaining == 0 {
             return None;

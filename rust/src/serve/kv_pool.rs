@@ -74,6 +74,7 @@ impl Page {
     /// Write one position's K and V head-slices, quantizing on the way in
     /// for q8 pages (the slice's scale is computed here, once, and never
     /// rewritten — appends only ever touch fresh position slots).
+    // lint: allow(PANIC_INDEX) reason="callers pass pos < page_positions and hd == head_dim, the dimensions the page vectors were sized with"
     pub(crate) fn write_position(&mut self, pos: usize, hd: usize, k_row: &[f32], v_row: &[f32]) {
         let off = pos * hd;
         match &mut self.vals {
@@ -95,6 +96,7 @@ impl Page {
 impl Clone for Page {
     fn clone(&self) -> Page {
         self.pool.note_alloc();
+        // stats counter, never synchronizes other memory: Relaxed suffices
         self.pool.cow_copies.fetch_add(1, Ordering::Relaxed);
         Page { vals: self.vals.clone(), pool: Arc::clone(&self.pool) }
     }
@@ -105,6 +107,7 @@ impl Clone for Page {
 /// shrinks — retiring a request frees exactly the pages nobody else shares.
 impl Drop for Page {
     fn drop(&mut self) {
+        // pure accounting decrement; readers tolerate momentary skew
         self.pool.allocated.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -138,9 +141,11 @@ pub(crate) struct PoolState {
 
 impl PoolState {
     fn note_alloc(&self) {
+        // all three are monotonic statistics read only by observability —
+        // they order nothing, so Relaxed is the whole contract
         let now = self.allocated.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_allocated.fetch_max(now, Ordering::Relaxed);
-        self.total_allocs.fetch_add(1, Ordering::Relaxed);
+        self.total_allocs.fetch_add(1, Ordering::Relaxed); // stats only, as above
     }
 }
 
@@ -242,6 +247,7 @@ impl KvPool {
     /// Unbounded pool with the default page size — the implicit backing of
     /// standalone `KvCache::new` callers (solo `generate`, tests).
     pub fn unbounded(cfg: &GptConfig) -> KvPool {
+        // lint: allow(PANIC_UNWRAP) reason="DEFAULT_PAGE_POSITIONS is a nonzero constant and no budget check runs without a budget; a non-divisible head config cannot have produced a model upstream"
         KvPool::new(cfg, DEFAULT_PAGE_POSITIONS, None).expect("unbounded pool on a valid config")
     }
 
@@ -361,7 +367,7 @@ impl KvPool {
     /// `false` — request must queue — when it does not fit.
     pub fn try_reserve(&self, pages: usize) -> bool {
         let cap = self.state.capacity_pages;
-        let mut cur = self.state.reserved.load(Ordering::Relaxed);
+        let mut cur = self.state.reserved.load(Ordering::Relaxed); // snapshot; the CAS revalidates
         loop {
             if pages > cap - cur.min(cap) {
                 return false;
@@ -369,10 +375,11 @@ impl KvPool {
             match self.state.reserved.compare_exchange_weak(
                 cur,
                 cur + pages,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
+                Ordering::Relaxed, // the counter is its own consistency domain
+                Ordering::Relaxed, // failure just re-reads; no ordering needed
             ) {
                 Ok(_) => {
+                    // peak tracking is stats-only: Relaxed
                     self.state.peak_reserved.fetch_max(cur + pages, Ordering::Relaxed);
                     return true;
                 }
@@ -393,11 +400,12 @@ impl KvPool {
             match self.state.reserved.compare_exchange_weak(
                 cur,
                 cur.saturating_sub(pages),
-                Ordering::Relaxed,
-                Ordering::Relaxed,
+                Ordering::Relaxed, // counter-only CAS, same as try_reserve
+                Ordering::Relaxed, // failure just re-reads; no ordering needed
             ) {
                 Ok(prev) => {
                     if prev < pages {
+                        // diagnostic counter: Relaxed suffices
                         self.state.release_underflows.fetch_add(1, Ordering::Relaxed);
                     }
                     return;
@@ -417,14 +425,14 @@ impl KvPool {
     /// from the current level (the engine snapshots this per drain).
     pub fn take_peak_allocated(&self) -> usize {
         let peak = self.state.peak_allocated.load(Ordering::Relaxed);
-        self.state.peak_allocated.store(self.pages_allocated(), Ordering::Relaxed);
+        self.state.peak_allocated.store(self.pages_allocated(), Ordering::Relaxed); // stats window reset
         peak
     }
 
     /// Peak reservation since the last call (see [`Self::take_peak_allocated`]).
     pub fn take_peak_reserved(&self) -> usize {
         let peak = self.state.peak_reserved.load(Ordering::Relaxed);
-        self.state.peak_reserved.store(self.pages_reserved(), Ordering::Relaxed);
+        self.state.peak_reserved.store(self.pages_reserved(), Ordering::Relaxed); // stats window reset
         peak
     }
 

@@ -86,6 +86,7 @@ impl PrefixRegistry {
         PrefixRegistry::new(pool, 0)
     }
 
+    // lint: allow(PANIC_INDEX) reason="callers pass indices they just enumerated from self.entries"
     fn touch(&mut self, idx: usize) {
         self.tick += 1;
         self.entries[idx].last_used = self.tick;
@@ -93,6 +94,7 @@ impl PrefixRegistry {
 
     /// Length of the longest page-aligned common prefix of `entry` and
     /// `prompt`, capped at `cap` positions.
+    // lint: allow(PANIC_INDEX) reason="l < lim <= min(entry.len(), prompt.len()) guards both reads"
     fn common_aligned(entry: &[u16], prompt: &[u16], cap: usize, pp: usize) -> usize {
         let lim = entry.len().min(prompt.len()).min(cap);
         let mut l = 0;
@@ -106,6 +108,7 @@ impl PrefixRegistry {
     /// with `prompt` (at least one full page), as a truncation-forked cache
     /// ready to prefill the suffix into; `None` counts as a miss. Reuse is
     /// capped at `prompt_len - 1`.
+    // lint: allow(PANIC_INDEX) reason="prompt.len() > pp is checked on entry, and idx comes from enumerating self.entries"
     pub fn lookup(&mut self, prompt: &[u16]) -> Option<KvCache> {
         let pp = self.pool.page_positions();
         if self.max_entries == 0 || prompt.len() <= pp {
@@ -137,6 +140,7 @@ impl PrefixRegistry {
     /// prefilled it (`cache.len() >= that prefix`). No-op if the prefix is
     /// empty, already covered by a retained entry, or the pool cannot spare
     /// the pages even after LRU eviction.
+    // lint: allow(PANIC_INDEX) reason="len is page-aligned and at most prompt.len(), with pp <= len checked before the slices"
     pub fn register(&mut self, prompt: &[u16], cache: &KvCache) {
         let pp = self.pool.page_positions();
         let len = prompt.len() / pp * pp;

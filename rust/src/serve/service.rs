@@ -94,8 +94,9 @@ pub struct EngineService {
 impl EngineService {
     /// Move `engine` onto a dedicated worker thread and return the shared
     /// handle. The engine steps only while work is outstanding; an idle
-    /// worker blocks on the command channel and costs nothing.
-    pub fn spawn(engine: Engine) -> EngineService {
+    /// worker blocks on the command channel and costs nothing. Errors if
+    /// the OS refuses the worker thread (the one fallible step).
+    pub fn spawn(engine: Engine) -> crate::Result<EngineService> {
         let registry = engine.metrics_handle();
         let draining = Arc::new(AtomicBool::new(false));
         let (cmd_tx, cmd_rx) = mpsc::channel();
@@ -103,14 +104,14 @@ impl EngineService {
         let worker = std::thread::Builder::new()
             .name("armor-engine".to_string())
             .spawn(move || run(engine, cmd_rx, flag))
-            .expect("spawn engine worker thread");
-        EngineService {
+            .map_err(|e| crate::err!("spawning the engine worker thread: {e}"))?;
+        Ok(EngineService {
             cmd_tx,
             registry,
             draining,
             started: Instant::now(),
             worker: Mutex::new(Some(worker)),
-        }
+        })
     }
 
     /// Submit a generation request. Returns the request id plus the
@@ -215,11 +216,15 @@ impl EngineService {
     /// Begin (if not begun) and complete shutdown: blocks until every
     /// in-flight request has retired and its `Done` event is sent, then
     /// returns the worker's final drain [`ServeReport`] covering the whole
-    /// serving session. `None` if the worker was already joined.
+    /// serving session. `None` if the worker was already joined — or if
+    /// the worker panicked (its report died with it; join never panics
+    /// the caller).
     pub fn shutdown(&self) -> Option<ServeReport> {
         self.begin_shutdown();
-        let worker = self.worker.lock().expect("worker handle poisoned").take()?;
-        Some(worker.join().expect("engine worker panicked"))
+        // A poisoned lock means some caller panicked holding it; the
+        // Option inside is still valid state, so recover and proceed.
+        let worker = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take()?;
+        worker.join().ok()
     }
 }
 
@@ -250,12 +255,17 @@ fn run(mut engine: Engine, cmd_rx: mpsc::Receiver<Cmd>, draining: Arc<AtomicBool
     );
     loop {
         loop {
+            // SeqCst on every `draining` access in this file: the flag is
+            // the shutdown handshake between caller threads and this
+            // worker, and correctness over a ~100 µs step loop is worth
+            // more than the fence it saves.
             let busy = engine.outstanding() > 0 || draining.load(Ordering::SeqCst);
             let cmd = if busy {
                 match cmd_rx.try_recv() {
                     Ok(c) => c,
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
+                        // every sender dropped: drain (SeqCst handshake)
                         draining.store(true, Ordering::SeqCst);
                         break;
                     }
@@ -265,6 +275,7 @@ fn run(mut engine: Engine, cmd_rx: mpsc::Receiver<Cmd>, draining: Arc<AtomicBool
                 match cmd_rx.recv() {
                     Ok(c) => c,
                     Err(_) => {
+                        // channel closed while parked: same drain path
                         draining.store(true, Ordering::SeqCst);
                         break;
                     }
@@ -277,6 +288,7 @@ fn run(mut engine: Engine, cmd_rx: mpsc::Receiver<Cmd>, draining: Arc<AtomicBool
                     // receiver; an accepted request still runs and retires
                     let _ = reply.send(pair);
                 }
+                // explicit shutdown command (SeqCst handshake, see above)
                 Cmd::Shutdown => draining.store(true, Ordering::SeqCst),
             }
         }
@@ -286,7 +298,7 @@ fn run(mut engine: Engine, cmd_rx: mpsc::Receiver<Cmd>, draining: Arc<AtomicBool
                 std::thread::sleep(Duration::from_millis(2));
             }
             engine.step();
-        } else if draining.load(Ordering::SeqCst) {
+        } else if draining.load(Ordering::SeqCst) { // idle + draining: exit (SeqCst handshake)
             break;
         }
     }
@@ -472,7 +484,7 @@ mod tests {
             direct.drain().requests.iter().map(|r| r.generated.clone()).collect();
         expect.sort();
 
-        let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()));
+        let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()).unwrap());
         let handles: Vec<_> = prompts
             .iter()
             .zip(&max_new)
@@ -523,7 +535,8 @@ mod tests {
                 EngineConfig { spec: Some(2), ..EngineConfig::default() },
             )
             .unwrap(),
-        );
+        )
+        .unwrap();
         let (_, rx) = service.generate(params(toks(5, 7), 4)).unwrap();
         let mut done = None;
         for ev in rx.iter() {
@@ -569,7 +582,8 @@ mod tests {
     #[test]
     fn idle_shutdown_is_clean() {
         let service =
-            EngineService::spawn(Engine::new(small_model(), EngineConfig::default()).unwrap());
+            EngineService::spawn(Engine::new(small_model(), EngineConfig::default()).unwrap())
+                .unwrap();
         let report = service.shutdown().unwrap();
         assert!(report.requests.is_empty());
         assert_eq!(report.generated_tokens, 0);

@@ -27,6 +27,8 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
+                // work-stealing cursor: fetch_add uniqueness is all we
+                // need; the scope join publishes the work itself
                 let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= n {
                     break;

@@ -130,7 +130,7 @@ fn chaos_service_streams_survive_injected_faults() {
     )
     .unwrap();
     engine.set_failpoints(Some(chaos_failpoints()));
-    let service = Arc::new(EngineService::spawn(engine));
+    let service = Arc::new(EngineService::spawn(engine).unwrap());
     let handles: Vec<_> = traffic()
         .into_iter()
         .map(|(prompt, max_new, priority)| {

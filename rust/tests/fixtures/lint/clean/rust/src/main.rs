@@ -1,0 +1,5 @@
+fn main() {
+    let args = Args::parse();
+    let batch = args.get_usize("batch", 8);
+    let _ = batch;
+}

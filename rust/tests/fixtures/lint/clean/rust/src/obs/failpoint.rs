@@ -1,0 +1,1 @@
+pub const FP_KV_ALLOC: &str = "kv_alloc";

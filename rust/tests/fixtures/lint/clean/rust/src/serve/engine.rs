@@ -1,0 +1,32 @@
+//! Clean engine fixture: pragmas honored, test code and doc examples
+//! exempt.
+//!
+//! ```
+//! let x = v.pop().unwrap(); // doc-comment example: never a violation
+//! ```
+
+pub fn admit(q: &mut Vec<u32>) -> u32 {
+    // lint: allow(PANIC_UNWRAP) reason="queue checked non-empty by the caller"
+    q.pop().unwrap()
+}
+
+// lint: allow(PANIC_INDEX) reason="i is clamped by the caller"
+pub fn pick(v: &[u32], i: usize) -> u32 {
+    v[i]
+}
+
+pub fn register(r: &Reg) {
+    let c = r.counter("armor_requests_total", &[], "Completed requests.");
+    let _ = c;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let mut v: Vec<u32> = vec![3];
+        assert_eq!(v[0], 3);
+        v.pop().unwrap();
+        panic!("test-side panics are fine");
+    }
+}

@@ -1,0 +1,3 @@
+pub fn bad(msg: &str) -> Response {
+    Response::error(400, "bad_request", msg)
+}

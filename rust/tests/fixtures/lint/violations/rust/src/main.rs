@@ -1,0 +1,6 @@
+fn main() {
+    let args = Args::parse();
+    let batch = args.get_usize("batch", 8);
+    let secret = args.flag("undocumented-flag");
+    let _ = (batch, secret);
+}

@@ -1,0 +1,1 @@
+pub const FP_TEST: &str = "test_site";

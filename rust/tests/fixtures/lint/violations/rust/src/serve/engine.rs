@@ -1,0 +1,10 @@
+pub fn broken(v: &mut Vec<u32>, i: usize) -> u32 {
+    let a = v.pop().unwrap();
+    let b = v[i];
+    panic!("kaboom {a} {b}");
+}
+
+pub fn register(r: &Reg) {
+    let c = r.counter("armor_undocumented_total", &[], "never documented");
+    let _ = c;
+}

@@ -1,0 +1,7 @@
+pub fn teapot() -> Response {
+    Response::error(418, "teapot", "short and stout")
+}
+
+pub fn bad(msg: &str) -> Response {
+    Response::error(400, "bad_request", msg)
+}

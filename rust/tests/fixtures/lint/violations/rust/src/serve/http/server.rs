@@ -1,0 +1,5 @@
+pub fn hook() {
+    unsafe {
+        install();
+    }
+}

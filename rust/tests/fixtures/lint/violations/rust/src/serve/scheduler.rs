@@ -1,0 +1,6 @@
+pub fn covered_then_not(v: &mut Vec<u32>) -> (u32, u32) {
+    // lint: allow(PANIC_UNWRAP) reason="first pop checked by the caller"
+    let a = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    (a, b)
+}

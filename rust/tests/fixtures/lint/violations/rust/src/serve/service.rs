@@ -1,0 +1,9 @@
+pub fn typod(v: &mut Vec<u32>) -> u32 {
+    // lint: allow(PANIC_UNWRP) reason="typo'd rule id suppresses nothing"
+    v.pop().unwrap()
+}
+
+pub fn malformed(v: &mut Vec<u32>) -> u32 {
+    // lint: allow(PANIC_UNWRAP)
+    v.pop().unwrap()
+}

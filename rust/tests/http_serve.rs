@@ -39,7 +39,7 @@ fn toks(n: usize, seed: u64) -> Vec<u16> {
 }
 
 fn serve(compiled: CompiledModel, cfg: EngineConfig) -> (HttpServer, SocketAddr) {
-    let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()));
+    let service = Arc::new(EngineService::spawn(Engine::new(compiled, cfg).unwrap()).unwrap());
     let server = HttpServer::bind(service, "127.0.0.1:0").unwrap();
     let addr = server.local_addr();
     (server, addr)
@@ -283,7 +283,8 @@ fn overload_returns_429_with_retry_after() {
     .unwrap();
     engine.set_failpoints(Some(FailPoints::parse("svc_channel_stall:1", 3).unwrap()));
     let server =
-        HttpServer::bind(Arc::new(EngineService::spawn(engine)), "127.0.0.1:0").unwrap();
+        HttpServer::bind(Arc::new(EngineService::spawn(engine).unwrap()), "127.0.0.1:0")
+            .unwrap();
     let addr = server.local_addr();
 
     // A occupies the single batch slot; wait for its first token so the

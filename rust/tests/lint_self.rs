@@ -1,0 +1,138 @@
+//! Self-tests for `armor lint` (DESIGN.md §12): per-rule fixture trees
+//! with known `(file, line)` anchors, exact-once pragma accounting, CLI
+//! exit codes and the JSON artifact, and — the strongest check — the
+//! repository tree itself as the largest clean fixture.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use armor::analysis::{run, LintReport, RULES};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join("lint").join(name)
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("the crate sits one level under the repo root")
+        .to_path_buf()
+}
+
+fn has(r: &LintReport, path: &str, line: u32, rule: &str) -> bool {
+    r.violations.iter().any(|v| v.path == path && v.line == line && v.rule == rule)
+}
+
+#[test]
+fn clean_fixture_lints_clean_with_pragmas_honored_exactly_once() {
+    let r = run(&fixture("clean")).expect("lint run");
+    assert!(r.clean(), "unexpected violations:\n{}", r.render(true));
+    // One standalone next-line pragma and one fn-scope pragma, each
+    // suppressing exactly the violation written under it.
+    assert_eq!(r.pragmas.len(), 2, "{:?}", r.pragmas);
+    assert!(r.pragmas.iter().all(|p| p.used), "unused pragma: {:?}", r.pragmas);
+    assert_eq!(r.pragmas.iter().filter(|p| p.rule == "PANIC_UNWRAP").count(), 1);
+    assert_eq!(r.pragmas.iter().filter(|p| p.rule == "PANIC_INDEX").count(), 1);
+}
+
+#[test]
+fn violations_fixture_fires_every_rule_at_its_known_span() {
+    let r = run(&fixture("violations")).expect("lint run");
+    let expected: &[(&str, u32, &str)] = &[
+        ("API.md", 5, "DRIFT_SLUG"),                        // ghost_slug never emitted
+        ("API.md", 13, "DRIFT_METRIC"),                     // documented, never registered
+        ("README.md", 6, "DRIFT_FLAG"),                     // --ghost-flag never parsed
+        ("rust/src/main.rs", 4, "DRIFT_FLAG"),              // parsed, undocumented
+        ("rust/src/obs/failpoint.rs", 1, "DRIFT_FAILPOINT"),
+        ("rust/src/serve/engine.rs", 2, "PANIC_UNWRAP"),
+        ("rust/src/serve/engine.rs", 3, "PANIC_INDEX"),
+        ("rust/src/serve/engine.rs", 4, "PANIC_MACRO"),
+        ("rust/src/serve/engine.rs", 8, "DRIFT_METRIC"),    // registered, undocumented
+        ("rust/src/serve/http/handlers.rs", 2, "DRIFT_SLUG"),
+        ("rust/src/serve/http/server.rs", 2, "UNSAFE_SAFETY"),
+        ("rust/src/serve/kv_pool.rs", 4, "ORDERING_COMMENT"),
+        ("rust/src/serve/scheduler.rs", 4, "PANIC_UNWRAP"), // pragma covers line 3 only
+        ("rust/src/serve/service.rs", 2, "PRAGMA_UNKNOWN"),
+        ("rust/src/serve/service.rs", 3, "PANIC_UNWRAP"),   // typo'd pragma suppressed nothing
+        ("rust/src/serve/service.rs", 7, "PRAGMA_MALFORMED"),
+        ("rust/src/serve/service.rs", 8, "PANIC_UNWRAP"),
+    ];
+    for &(path, line, rule) in expected {
+        assert!(has(&r, path, line, rule), "missing {path}:{line} {rule}; got:\n{}", r.render(false));
+    }
+    assert_eq!(r.violations.len(), expected.len(), "extra findings:\n{}", r.render(false));
+    // Every registered rule id fires somewhere in this fixture.
+    for (id, _) in RULES {
+        assert!(r.violations.iter().any(|v| v.rule == *id), "rule {id} never fired");
+    }
+    // The scheduler pragma was honored (for line 3) even though line 4
+    // still violated — scope is exactly one line, not "the rest of fn".
+    let sched: Vec<_> = r.pragmas.iter().filter(|p| p.path.ends_with("scheduler.rs")).collect();
+    assert_eq!(sched.len(), 1);
+    assert!(sched[0].used);
+    // Violations come out sorted by (path, line, rule) for stable diffs.
+    let keys: Vec<_> = r.violations.iter().map(|v| (v.path.clone(), v.line, v.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+}
+
+#[test]
+fn repository_tree_lints_clean() {
+    let r = run(&repo_root()).expect("lint run on the repo tree");
+    assert!(r.clean(), "the repo tree must lint clean:\n{}", r.render(true));
+    let unused: Vec<_> = r.pragmas.iter().filter(|p| !p.used).collect();
+    assert!(unused.is_empty(), "stale allow pragmas (delete them): {unused:?}");
+    assert!(r.files_scanned > 40, "suspiciously few files scanned: {}", r.files_scanned);
+}
+
+#[test]
+fn cli_exit_codes_and_json_artifact() {
+    let bin = env!("CARGO_BIN_EXE_armor");
+
+    let ok = Command::new(bin)
+        .arg("lint")
+        .arg("--root")
+        .arg(fixture("clean"))
+        .output()
+        .expect("spawn armor lint");
+    assert!(
+        ok.status.success(),
+        "clean fixture must exit 0:\n{}{}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&ok.stdout);
+    assert!(stdout.contains("lint: clean"), "{stdout}");
+    assert!(stdout.contains("2 pragma(s) honored"), "{stdout}");
+
+    let json_path = std::env::temp_dir().join("armor_lint_self_report.json");
+    let bad = Command::new(bin)
+        .arg("lint")
+        .arg("--fix-plan")
+        .arg("--json")
+        .arg(&json_path)
+        .arg("--root")
+        .arg(fixture("violations"))
+        .output()
+        .expect("spawn armor lint");
+    assert!(!bad.status.success(), "violations fixture must exit non-zero");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains(" · PANIC_UNWRAP · "), "{stdout}");
+    assert!(stdout.contains(" · DRIFT_METRIC · "), "{stdout}");
+    assert!(stdout.contains("fix: "), "--fix-plan must print remediations: {stdout}");
+
+    let raw = std::fs::read_to_string(&json_path).expect("--json artifact written");
+    let j = armor::util::json::Json::parse(&raw).expect("artifact parses");
+    assert_eq!(j.get("clean").as_bool(), Some(false));
+    let violations = j.get("violations").as_arr().expect("violations array");
+    assert_eq!(violations.len(), 17);
+    assert!(violations.iter().all(|v| {
+        v.get("path").as_str().is_some()
+            && v.get("line").as_usize().is_some()
+            && v.get("rule").as_str().is_some()
+            && v.get("message").as_str().is_some()
+            && v.get("fix").as_str().is_some()
+    }));
+    std::fs::remove_file(&json_path).ok();
+}
